@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Make `python/` importable so `pytest python/tests` works from the repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,68 @@
+//! Whole-model offline planning (the paper's §5.4 deployment flow): train
+//! predictors for a device, plan every layer of ResNet-18 and VGG16, print
+//! the per-layer decisions, and report the end-to-end speedup.
+//!
+//! ```bash
+//! cargo run --release --example model_planner [pixel4|pixel5|moto2022|oneplus11]
+//! ```
+
+use mobile_coexec::device::{Device, SyncMechanism};
+use mobile_coexec::models::{self, Layer};
+use mobile_coexec::partition::Planner;
+use mobile_coexec::scheduler::ModelScheduler;
+
+fn main() {
+    let device = match std::env::args().nth(1).as_deref() {
+        Some("pixel4") => Device::pixel4(),
+        Some("moto2022") => Device::moto2022(),
+        Some("oneplus11") => Device::oneplus11(),
+        _ => Device::pixel5(),
+    };
+    println!("planning for {} (GPU + 3 CPU threads)", device.name());
+    println!("training predictors ...");
+    let lp = Planner::train_for_kind(&device, "linear", 4000, 42);
+    let cp = Planner::train_for_kind(&device, "conv", 4000, 42);
+    let sched = ModelScheduler {
+        device: &device,
+        linear_planner: &lp,
+        conv_planner: &cp,
+        threads: 3,
+        mech: SyncMechanism::SvmPolling,
+    };
+
+    for model in [models::resnet18(), models::vgg16()] {
+        println!("\n=== {} ===", model.name);
+        let schedule = sched.plan(&model);
+        let mut coexec_layers = 0;
+        for (i, ls) in schedule.iter().enumerate() {
+            match (&ls.layer, &ls.plan) {
+                (Layer::Pool { .. }, _) => {
+                    println!("  [{i:2}] pool -> GPU (pinned)");
+                }
+                (_, Some(plan)) => {
+                    let op = ls.layer.op().unwrap();
+                    if plan.split.is_coexec() {
+                        coexec_layers += 1;
+                        println!(
+                            "  [{i:2}] {op} -> CPU {:4} | GPU {:4}  (pred {:.0} us)",
+                            plan.split.c_cpu, plan.split.c_gpu, plan.t_total_us
+                        );
+                    } else if plan.split.c_cpu > 0 {
+                        println!("  [{i:2}] {op} -> CPU only (pred {:.0} us)", plan.t_total_us);
+                    } else {
+                        println!("  [{i:2}] {op} -> GPU only (pred {:.0} us)", plan.t_total_us);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let r = sched.evaluate(&model);
+        println!(
+            "  co-executed layers: {coexec_layers}/{}\n  baseline {:.1} ms -> e2e {:.1} ms  ({:.2}x speedup)",
+            schedule.len(),
+            r.baseline_ms,
+            r.e2e_ms,
+            r.e2e_speedup()
+        );
+    }
+}

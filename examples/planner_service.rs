@@ -1,0 +1,31 @@
+//! Planning-as-a-service demo: start the TCP planner server for a device,
+//! fire a few client requests at it, print the replies.
+//!
+//! ```bash
+//! cargo run --release --example planner_service
+//! ```
+
+use mobile_coexec::device::Device;
+use mobile_coexec::server::{request, spawn_ephemeral, ServerState};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    println!("starting planner server for Moto 2022 (training predictors) ...");
+    let state = Arc::new(ServerState::new(Device::moto2022(), 2500, 42));
+    let addr = spawn_ephemeral(state)?;
+    println!("server on {addr}\n");
+
+    for line in [
+        "PING",
+        "PLAN linear 50 768 3072 3",    // ViT fc1
+        "PLAN linear 50 3072 768 3",    // ViT fc2
+        "PLAN conv 64 64 128 192 3 1 3", // Fig 6b conv
+        "RUN linear 50 768 3072 3",
+        "RUN conv 64 64 128 192 3 1 2",
+        "PLAN linear oops",
+    ] {
+        let reply = request(&addr, line)?;
+        println!("> {line}\n< {reply}");
+    }
+    Ok(())
+}

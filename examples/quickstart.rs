@@ -1,0 +1,50 @@
+//! Quickstart: plan and evaluate a co-execution strategy for one layer.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Trains latency predictors for the Pixel 5 model (the paper's §5.2
+//! offline step), plans the ViT-Base-32 flagship linear layer
+//! (50, 768) x (768, 3072), and compares the measured co-execution latency
+//! against GPU-only execution — the paper's headline workflow in ~40 lines.
+
+use mobile_coexec::device::{Device, Processor, SyncMechanism};
+use mobile_coexec::ops::{LinearConfig, OpConfig};
+use mobile_coexec::partition::{grid_search, Planner};
+
+fn main() {
+    let device = Device::pixel5();
+    println!("device: {}", device.name());
+
+    // 1. Offline: sample a training set, measure it, train augmented
+    //    GBDT predictors (paper §3.2 + §5.2).
+    println!("training predictors (offline, once per device) ...");
+    let planner = Planner::train_for_kind(&device, "linear", 4000, 42);
+
+    // 2. Plan the flagship op: fc1 of ViT-Base-32.
+    let op = OpConfig::Linear(LinearConfig::vit_fc1());
+    let plan = planner.plan_with_threads(&op, 3);
+    println!(
+        "plan for {op}: CPU {} channels | GPU {} channels (predicted {:.0} us)",
+        plan.split.c_cpu, plan.split.c_gpu, plan.t_total_us
+    );
+
+    // 3. Evaluate: measured co-execution vs GPU-only baseline.
+    let t_co = planner.measure_plan_us(&op, &plan, 32);
+    let t_gpu = device.measure_mean(&op, Processor::Gpu, 32);
+    let t_cpu3 = device.measure_mean(&op, Processor::Cpu(3), 32);
+    println!("GPU-only:  {t_gpu:.0} us");
+    println!("CPU-only (3 threads): {t_cpu3:.0} us");
+    println!("co-execution:         {t_co:.0} us  -> {:.2}x speedup", t_gpu / t_co);
+
+    // 4. Sanity: how close is the plan to the measured grid-search oracle?
+    let (oracle_split, t_oracle) = grid_search(&device, &op, 3, SyncMechanism::SvmPolling, 16);
+    println!(
+        "grid-search oracle: CPU {} | GPU {} at {t_oracle:.0} us ({:.2}x) — planner is within {:.1}%",
+        oracle_split.c_cpu,
+        oracle_split.c_gpu,
+        t_gpu / t_oracle,
+        (t_co / t_oracle - 1.0) * 100.0
+    );
+}

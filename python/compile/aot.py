@@ -1,0 +1,188 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles on the PJRT CPU
+client. HLO text — NOT ``lowered.compile().serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside the ``*.hlo.txt`` files we emit ``manifest.json`` describing each
+artifact (entry name, file, argument shapes, op metadata such as the split
+point c1 and partition side) — the Rust ``runtime::ArtifactRegistry`` is
+driven entirely by this manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big literals as
+    # `{...}`, which HloModuleProto::from_text_file silently parses as
+    # ZEROS (bit us on the Winograd transform matrices — 16x16 constants).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower(fn, shapes) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*shapes))
+
+
+# The splits shipped as AOT artifacts. 592 is the paper's own best CPU share
+# for the flagship ViT linear on OnePlus 11 (Section 3.2: 2480 GPU + 592
+# CPU); the others bracket it so the co-execution examples can sweep.
+LINEAR_SPLITS = (384, 592, 768, 1024, 1536)
+CONV_SPLITS = (48, 64, 96)
+
+
+def build_entries():
+    """(name, fn, shapes, meta) for every artifact."""
+    entries = []
+    lin_shapes = model.vit_linear_shapes()
+    entries.append(
+        (
+            "linear_full",
+            model.linear,
+            lin_shapes,
+            {
+                "op": "linear",
+                "l": model.VIT_L,
+                "cin": model.VIT_CIN,
+                "cout": model.VIT_COUT,
+            },
+        )
+    )
+    for c1 in LINEAR_SPLITS:
+        meta = {
+            "op": "linear",
+            "l": model.VIT_L,
+            "cin": model.VIT_CIN,
+            "cout": model.VIT_COUT,
+            "c1": c1,
+        }
+        entries.append(
+            (f"linear_part_c{c1}", model.linear_partitioned(c1), lin_shapes, meta)
+        )
+        for side in ("cpu", "gpu"):
+            entries.append(
+                (
+                    f"linear_{side}_c{c1}",
+                    model.linear_partition_slice(c1, side),
+                    lin_shapes,
+                    {**meta, "side": side},
+                )
+            )
+
+    conv_shapes = model.conv_shapes()
+    conv_meta = {
+        "op": "conv",
+        "h": model.CONV_H,
+        "w": model.CONV_W,
+        "cin": model.CONV_CIN,
+        "cout": model.CONV_COUT,
+        "k": 3,
+        "stride": 1,
+    }
+    entries.append(("conv3x3_full", model.conv3x3, conv_shapes, conv_meta))
+    entries.append(
+        (
+            "conv3x3_winograd",
+            model.conv3x3_winograd,
+            conv_shapes,
+            {**conv_meta, "impl": "winograd"},
+        )
+    )
+    for c1 in CONV_SPLITS:
+        meta = {**conv_meta, "c1": c1}
+        entries.append(
+            (f"conv3x3_part_c{c1}", model.conv_partitioned(c1), conv_shapes, meta)
+        )
+        for side in ("cpu", "gpu"):
+            entries.append(
+                (
+                    f"conv3x3_{side}_c{c1}",
+                    model.conv_partition_slice(c1, side),
+                    conv_shapes,
+                    {**meta, "side": side},
+                )
+            )
+
+    entries.append(
+        (
+            "vit_mlp_block_c592",
+            model.vit_mlp_block(592),
+            model.vit_block_shapes(),
+            {"op": "vit_mlp_block", "c1": 592},
+        )
+    )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="also write the first artifact to this path (Makefile stamp)",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    first_path = None
+    for name, fn, shapes, meta in build_entries():
+        text = lower(fn, shapes)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        if first_path is None:
+            first_path = path
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "args": [{"shape": list(s.shape), "dtype": "f32"} for s in shapes],
+                "meta": meta,
+            }
+        )
+        print(f"  {name}: {len(text)} chars, args={[tuple(s.shape) for s in shapes]}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # TSV twin for the Rust runtime (std-only, no JSON parser needed):
+    # name \t file \t 50x768|768x3072|3072 \t op=linear,c1=592,...
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# generated by python/compile/aot.py — see runtime::read_manifest\n")
+        for a in manifest["artifacts"]:
+            shapes = "|".join(
+                "x".join(str(d) for d in arg["shape"]) for arg in a["args"]
+            )
+            meta = ",".join(f"{k}={v}" for k, v in a["meta"].items())
+            f.write(f"{a['name']}\t{a['file']}\t{shapes}\t{meta}\n")
+
+    if args.out and first_path:
+        # Makefile freshness stamp: copy the first artifact to the stamp path.
+        with open(first_path) as src, open(args.out, "w") as dst:
+            dst.write(src.read())
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#   matmul    — MXU-tiled GEMM (linear layers; conv via im2col)
+#   conv2d    — im2col + GEMM (TFLite conv_generic analogue)
+#   winograd  — F(2x2,3x3) transform-domain GEMM (TFLite winograd analogue)
+#   ref       — pure-jnp oracles asserted by python/tests/
+from . import conv2d, matmul, ref, winograd  # noqa: F401

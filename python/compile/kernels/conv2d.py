@@ -1,0 +1,104 @@
+"""L1 Pallas conv2d — im2col layout prep (jnp) + Pallas GEMM hot-spot.
+
+TFLite's ``conv_generic`` OpenCL kernel is an implicit-GEMM over
+(spatial positions) x (K*K*Cin patches); the TPU-idiomatic equivalent is an
+explicit im2col (pure data movement, fused by XLA into the surrounding HLO)
+feeding the MXU-tiled Pallas GEMM from ``matmul.py``. The paper's
+output-channel partitioning (Section 2) then reduces to column-partitioning
+the GEMM's weight matrix — exactly the same split the linear layer uses,
+which is why the co-execution engine treats both uniformly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+
+def _im2col(x: jnp.ndarray, k: int, stride: int, padding: str) -> tuple[jnp.ndarray, int, int]:
+    """(N,H,W,Cin) -> (N*Ho*Wo, K*K*Cin) patch matrix (+ output spatial dims)."""
+    n, h, w, cin = x.shape
+    if padding == "SAME":
+        ho, wo = -(-h // stride), -(-w // stride)
+        pad_h = max((ho - 1) * stride + k - h, 0)
+        pad_w = max((wo - 1) * stride + k - w, 0)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2),
+                (0, 0),
+            ),
+        )
+    elif padding == "VALID":
+        ho, wo = (h - k) // stride + 1, (w - k) // stride + 1
+    else:
+        raise ValueError(f"bad padding {padding!r}")
+
+    # Gather K*K shifted views; XLA fuses these slices into one gather.
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(
+                jax.lax.slice(
+                    x,
+                    (0, di, dj, 0),
+                    (n, di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, cin),
+                    (1, stride, stride, 1),
+                )
+            )
+    patches = jnp.stack(cols, axis=3)  # (n, ho, wo, K*K, cin)
+    return patches.reshape(n * ho * wo, k * k * cin), ho, wo
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "block_m", "block_n"))
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    block_m: int = 256,
+    block_n: int = 256,
+) -> jnp.ndarray:
+    """Direct conv via im2col + Pallas GEMM. x:(N,H,W,Cin) w:(K,K,Cin,Cout).
+
+    Blocks sized for the CPU-PJRT testbed (256x256 tile + K=k*k*cin panels:
+    ~1.3 MiB VMEM at cin=128, k=3 — TPU-valid, few interpret grid steps)."""
+    n = x.shape[0]
+    k, _, cin, cout = w.shape
+    patches, ho, wo = _im2col(x, k, stride, padding)
+    wmat = w.reshape(k * k * cin, cout)
+    y = mm.matmul(patches, wmat, block_m=block_m, block_n=block_n)
+    return y.reshape(n, ho, wo, cout)
+
+
+def conv2d_partitioned(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    c1: int,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jnp.ndarray:
+    """Output-channel partitioned conv: kernels [0,c1) on CPU, rest on GPU.
+
+    The im2col patch matrix is computed once and shared by both partitions —
+    the analogue of the paper's shared input X in fine-grained SVM.
+    """
+    n = x.shape[0]
+    k, _, cin, cout = w.shape
+    assert 0 <= c1 <= cout
+    if c1 == 0 or c1 == cout:
+        return conv2d(x, w, stride=stride, padding=padding)
+    patches, ho, wo = _im2col(x, k, stride, padding)
+    wmat = w.reshape(k * k * cin, cout)
+    y_cpu = mm.matmul(patches, wmat[:, :c1])
+    y_gpu = mm.matmul(patches, wmat[:, c1:])
+    y = jnp.concatenate([y_cpu, y_gpu], axis=-1)
+    return y.reshape(n, ho, wo, cout)

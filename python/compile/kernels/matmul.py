@@ -1,0 +1,169 @@
+"""L1 Pallas GEMM kernels — the compute hot-spot of the paper's linear layer.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper drives a
+mobile OpenCL GPU where the delegate picks *workgroup* shapes; on TPU the
+analogous schedule is the HBM->VMEM ``BlockSpec``: we tile the output into
+(block_m x block_n) MXU-friendly tiles (multiples of 128 in the lane dim),
+stream full-K panels of X and W into VMEM per tile, and let the MXU consume
+bf16/f32 panels. ``interpret=True`` is mandatory on this CPU testbed — real
+TPU lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute.
+
+VMEM budget (documented for the perf model in DESIGN.md §Perf): a
+(block_m, K) X panel + (K, block_n) W panel + (block_m, block_n) output tile.
+For the flagship ViT shape (50, 768) x (768, 3072) with block 64x256 that is
+64*768*4 + 768*256*4 + 64*256*4 bytes ~= 1.0 MiB << 16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (block_m, block_n) output tile: full-K panels are resident in VMEM."""
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _matmul_kernel_bias(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32) + b_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    *,
+    block_m: int = 64,
+    block_n: int = 1024,
+) -> jnp.ndarray:
+    """Tiled Pallas GEMM: x:(M, K) @ w:(K, N) (+ b:(N,)) -> (M, N).
+
+    Default blocks are sized for the CPU-PJRT testbed (fewer grid steps =
+    fewer interpret-mode loop iterations; see EXPERIMENTS.md §Perf): a
+    64 x 1024 tile with K=768 is ~3.4 MiB of VMEM, still well inside a
+    TPU core's 16 MiB, so the schedule remains TPU-valid.
+
+    Shapes need not be multiples of the block sizes; the wrapper pads to the
+    block grid and slices the result (padding contributes zeros to the
+    contraction, so numerics are exact).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+
+    mp, np_ = _round_up(m, block_m), _round_up(n, block_n)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n))) if np_ != n else w
+
+    grid = (mp // block_m, np_ // block_n)
+    x_spec = pl.BlockSpec((block_m, k), lambda i, j: (i, 0))
+    w_spec = pl.BlockSpec((k, block_n), lambda i, j: (0, j))
+    o_spec = pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))
+
+    if b is None:
+        out = pl.pallas_call(
+            _matmul_kernel,
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, wp)
+    else:
+        bp = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+        b_spec = pl.BlockSpec((1, block_n), lambda i, j: (0, j))
+        out = pl.pallas_call(
+            _matmul_kernel_bias,
+            grid=grid,
+            in_specs=[x_spec, w_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, wp, bp.reshape(1, -1))
+    return out[:m, :n]
+
+
+def linear_partitioned(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    c1: int,
+    b: jnp.ndarray | None = None,
+    *,
+    block_m: int = 64,
+    block_n: int = 1024,
+) -> jnp.ndarray:
+    """The paper's output-channel partitioned linear layer (Section 2).
+
+    Channels [0, c1) are the "CPU" partition, [c1, Cout) the "GPU" partition;
+    each runs as an independent Pallas GEMM over its own weight slice (each
+    compute unit owns its weights — Fig. 4), and the results are concatenated
+    in the shared output buffer. Equal to ``matmul(x, w, b)`` exactly.
+    """
+    cout = w.shape[1]
+    assert 0 <= c1 <= cout
+    if c1 == 0 or c1 == cout:
+        return matmul(x, w, b, block_m=block_m, block_n=block_n)
+    b1 = b[:c1] if b is not None else None
+    b2 = b[c1:] if b is not None else None
+    y_cpu = matmul(x, w[:, :c1], b1, block_m=block_m, block_n=block_n)
+    y_gpu = matmul(x, w[:, c1:], b2, block_m=block_m, block_n=block_n)
+    return jnp.concatenate([y_cpu, y_gpu], axis=-1)
+
+
+def _matmul_kernel_ktiled(x_ref, w_ref, o_ref):
+    """K-tiled variant: accumulate into the output tile across the k grid dim.
+
+    Grid is (m, n, k) with k innermost ("arbitrary" semantics in interpret
+    mode): the output block for (i, j) is revisited for each k step.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul_ktiled(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = 64,
+    block_n: int = 256,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    """GEMM with an explicit K loop — bounds VMEM for very large Cin.
+
+    VMEM: block_m*block_k + block_k*block_n + block_m*block_n floats, i.e.
+    the footprint no longer grows with K (needed once Cin exceeds ~8k).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    mp, np_, kp = _round_up(m, block_m), _round_up(n, block_n), _round_up(k, block_k)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+    out = pl.pallas_call(
+        _matmul_kernel_ktiled,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

@@ -1,0 +1,152 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Each oracle mirrors one Pallas kernel in `kernels/` and defines the
+semantics the kernel must reproduce (asserted by pytest + hypothesis in
+``python/tests/``). These are also the L2 building blocks of the paper's
+partitioned operators:
+
+  * ``linear``            — Y = X W (+ b): the paper's linear layer.
+  * ``conv2d``            — NHWC direct convolution, SAME/VALID, stride S.
+  * ``winograd_conv3x3``  — F(2x2, 3x3) Winograd convolution, stride 1,
+                            the TFLite fast path the paper's Fig. 6b shows
+                            kernels switching into (Cout > 128).
+  * ``linear_partitioned``/``conv2d_partitioned`` — output-channel split
+    [0, c1) on "CPU" and [c1, Cout) on "GPU", concatenated: the identity
+    the co-execution engine relies on (Section 2 of the paper).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Linear layer: ``x @ w (+ b)`` with x:(L, Cin), w:(Cin, Cout)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def linear_partitioned(x, w, c1: int, b=None):
+    """Channel-partitioned linear: CPU gets w[:, :c1], GPU gets w[:, c1:].
+
+    Returns the concatenated output; must equal ``linear(x, w, b)``.
+    """
+    w_cpu, w_gpu = w[:, :c1], w[:, c1:]
+    if b is None:
+        y_cpu = linear(x, w_cpu)
+        y_gpu = linear(x, w_gpu)
+    else:
+        y_cpu = linear(x, w_cpu, b[:c1])
+        y_gpu = linear(x, w_gpu, b[c1:])
+    return jnp.concatenate([y_cpu, y_gpu], axis=-1)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, padding: str = "SAME") -> jnp.ndarray:
+    """Direct 2-D convolution.
+
+    x: (N, H, W, Cin)  w: (K, K, Cin, Cout)  -> (N, H', W', Cout)
+    Matches TFLite conv semantics (cross-correlation, NHWC).
+    """
+    from jax import lax
+
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def conv2d_partitioned(x, w, c1: int, stride: int = 1, padding: str = "SAME"):
+    """Output-channel partitioned conv: kernels [0,c1) on CPU, rest on GPU."""
+    y_cpu = conv2d(x, w[..., :c1], stride, padding)
+    y_gpu = conv2d(x, w[..., c1:], stride, padding)
+    return jnp.concatenate([y_cpu, y_gpu], axis=-1)
+
+
+# --- Winograd F(2x2, 3x3) -------------------------------------------------
+# Transform matrices (Lavin & Gray 2016). TFLite's winograd path uses
+# F(4x4,6x6); we implement the classic F(2x2,3x3) variant — same algorithmic
+# structure (input/filter transform, elementwise GEMM in transform domain,
+# output transform), smaller tiles.
+
+_B_T = np.array(
+    [
+        [1, 0, -1, 0],
+        [0, 1, 1, 0],
+        [0, -1, 1, 0],
+        [0, 1, 0, -1],
+    ],
+    dtype=np.float32,
+)
+_G = np.array(
+    [
+        [1, 0, 0],
+        [0.5, 0.5, 0.5],
+        [0.5, -0.5, 0.5],
+        [0, 0, 1],
+    ],
+    dtype=np.float32,
+)
+_A_T = np.array(
+    [
+        [1, 1, 1, 0],
+        [0, 1, -1, -1],
+    ],
+    dtype=np.float32,
+)
+
+
+def winograd_filter_transform(w: jnp.ndarray) -> jnp.ndarray:
+    """(3,3,Cin,Cout) -> (4,4,Cin,Cout): U = G g G^T per channel pair."""
+    g = jnp.asarray(_G)
+    return jnp.einsum("ab,bcio,dc->adio", g, w, g)
+
+
+def winograd_conv3x3(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Winograd F(2x2,3x3) convolution, stride 1, SAME padding.
+
+    x: (N, H, W, Cin) with H, W even; w: (3, 3, Cin, Cout).
+    Equivalent (up to fp error) to ``conv2d(x, w, 1, "SAME")``.
+    """
+    n, h, wd, cin = x.shape
+    assert h % 2 == 0 and wd % 2 == 0, "F(2x2,3x3) needs even spatial dims"
+    cout = w.shape[-1]
+    bt = jnp.asarray(_B_T)
+    at = jnp.asarray(_A_T)
+
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    th, tw = h // 2, wd // 2  # number of 2x2 output tiles
+
+    # Gather 4x4 input tiles with stride 2: (n, th, 4, tw, 4, cin)
+    i_idx = (jnp.arange(th) * 2)[:, None] + jnp.arange(4)[None, :]  # (th, 4)
+    j_idx = (jnp.arange(tw) * 2)[:, None] + jnp.arange(4)[None, :]  # (tw, 4)
+    tiles = xp[:, i_idx[:, :, None, None], j_idx[None, None, :, :], :]
+    tiles = jnp.transpose(tiles, (0, 1, 3, 2, 4, 5))  # (n, th, tw, 4, 4, cin)
+
+    # Input transform: V = B^T d B
+    v = jnp.einsum("ab,nijbcq,dc->nijadq", bt, tiles, bt)
+    # Filter transform: U = G g G^T  -> (4,4,cin,cout)
+    u = winograd_filter_transform(w)
+    # Transform-domain GEMM over cin
+    m = jnp.einsum("nijabq,abqo->nijabo", v, u)
+    # Output transform: Y = A^T m A  -> 2x2 tiles
+    y = jnp.einsum("xa,nijabo,yb->nijxyo", at, m, at)
+    # Scatter tiles back: (n, th, tw, 2, 2, cout) -> (n, h, w, cout)
+    y = jnp.transpose(y, (0, 1, 3, 2, 4, 5)).reshape(n, h, wd, cout)
+    return y
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2x2(x):
+    """2x2 max pooling, stride 2, NHWC (paper schedules pooling on GPU)."""
+    n, h, w, c = x.shape
+    return jnp.max(x.reshape(n, h // 2, 2, w // 2, 2, c), axis=(2, 4))

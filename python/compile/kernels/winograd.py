@@ -1,0 +1,124 @@
+"""L1 Pallas Winograd F(2x2,3x3) conv — the TFLite fast path of Fig. 6b.
+
+The paper shows TFLite switching 3x3 convolutions to a Winograd kernel once
+Cout exceeds ~128, creating the latency discontinuities its predictor must
+model. We implement the same algorithm: input/filter/output transforms plus
+the hot-spot — 16 independent transform-domain GEMMs (P x Cin) @ (Cin x
+Cout), one per transform position — as a single Pallas kernel with the
+transform position as the leading grid dimension.
+
+Implementation note: the transforms are expressed as *Kronecker-product
+2-D matmuls* (`vec_row(B^T d B) = (B^T (x) B^T) vec_row(d)`), not as
+multi-batch-dim einsums. The einsum formulation produces dot_generals that
+the ancient xla_extension 0.5.1 linked by the Rust PJRT runtime miscompiles
+(verified by stage-wise bisection; see DESIGN.md §Hardware-Adaptation).
+Plain reshapes + 2-D dots round-trip through HLO text correctly.
+
+VMEM per program: (block_p, Cin) V panel + (Cin, block_n) U panel +
+(block_p, block_n) M tile — identical budget analysis to matmul.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import _A_T, _B_T, _G
+
+# Kronecker transform matrices (row-major vec convention):
+#   vec_row(B^T d B) = (B^T (x) B^T) vec_row(d)
+_BT_KRON = np.kron(_B_T, _B_T).astype(np.float32)  # (16, 16)
+_AT_KRON = np.kron(_A_T, _A_T).astype(np.float32)  # (4, 16)
+_G_KRON = np.kron(_G, _G).astype(np.float32)  # (16, 9)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _wino_gemm_kernel(v_ref, u_ref, m_ref):
+    """One transform position t, one (block_p, block_n) tile of M[t] = V[t] @ U[t]."""
+    m_ref[...] = jnp.dot(v_ref[0], u_ref[0], preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "block_n"))
+def transform_domain_gemm(
+    v: jnp.ndarray, u: jnp.ndarray, *, block_p: int = 512, block_n: int = 256
+) -> jnp.ndarray:
+    """Batched GEMM over 16 transform positions: (16,P,Cin) @ (16,Cin,Cout)."""
+    t, p, cin = v.shape
+    _, _, cout = u.shape
+    pp, np_ = _round_up(p, block_p), _round_up(cout, block_n)
+    vp = jnp.pad(v, ((0, 0), (0, pp - p), (0, 0)))
+    up = jnp.pad(u, ((0, 0), (0, 0), (0, np_ - cout)))
+
+    grid = (t, pp // block_p, np_ // block_n)
+    out = pl.pallas_call(
+        _wino_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_p, cin), lambda tt, i, j: (tt, i, 0)),
+            pl.BlockSpec((1, cin, block_n), lambda tt, i, j: (tt, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_p, block_n), lambda tt, i, j: (tt, i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, pp, np_), jnp.float32),
+        interpret=True,
+    )(vp, up)
+    return out[:, :p, :cout]
+
+
+def winograd_filter_transform(w: jnp.ndarray) -> jnp.ndarray:
+    """(3,3,Cin,Cout) -> (16,Cin,Cout): U = (G (x) G) vec_row(g)."""
+    _, _, cin, cout = w.shape
+    wf = w.reshape(9, cin * cout)
+    u = jnp.asarray(_G_KRON) @ wf
+    return u.reshape(16, cin, cout)
+
+
+@jax.jit
+def winograd_conv3x3(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Winograd F(2x2,3x3), stride 1, SAME. x:(N,H,W,Cin) w:(3,3,Cin,Cout).
+
+    H and W must be even (tile size 2). Numerically ~1e-4 of the direct conv
+    (Winograd trades a few ULPs for 2.25x fewer multiplications — the same
+    trade TFLite makes, and the reason its kernel switch exists at all).
+    """
+    n, h, wd, cin = x.shape
+    cout = w.shape[-1]
+
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    th, tw = h // 2, wd // 2
+    p = n * th * tw
+
+    # Gather the 4x4 stride-2 input tiles as 16 strided slices.
+    slices = []
+    for a in range(4):
+        for b in range(4):
+            slices.append(
+                jax.lax.slice(
+                    xp,
+                    (0, a, b, 0),
+                    (n, a + 2 * (th - 1) + 1, b + 2 * (tw - 1) + 1, cin),
+                    (1, 2, 2, 1),
+                )
+            )
+    # tiles[(a*4+b), p*cin] = xp[n, 2ti+a, 2tj+b, c]
+    tiles = jnp.stack(slices, axis=0).reshape(16, p * cin)
+
+    # Input transform: one 16x16 matmul over all tiles/channels at once.
+    v = (jnp.asarray(_BT_KRON) @ tiles).reshape(16, p, cin)
+    # Filter transform -> (16, Cin, Cout)
+    u = winograd_filter_transform(w)
+
+    # Hot-spot: 16 GEMMs in Pallas.
+    m = transform_domain_gemm(v, u)  # (16, P, Cout)
+
+    # Output transform: 4x16 matmul, then scatter the 2x2 tiles back.
+    y = jnp.asarray(_AT_KRON) @ m.reshape(16, p * cout)  # (4, P*Cout)
+    y = y.reshape(2, 2, n, th, tw, cout)
+    y = jnp.transpose(y, (2, 3, 0, 4, 1, 5))  # (n, th, 2, tw, 2, cout)
+    return y.reshape(n, h, wd, cout)

@@ -1,0 +1,144 @@
+"""L2: partitioned-operator compute graphs, lowered once by aot.py.
+
+Each entry point is a jax function over concrete example shapes; aot.py
+lowers them to HLO text that the Rust runtime (rust/src/runtime/) loads via
+PJRT. The flagship shapes are the paper's running examples:
+
+  * ViT-Base-32 MLP linear: X(50, 768) @ W(768, 3072)   (Sections 1, 3)
+  * Fig. 6b conv: 3x3, input (64, 64, 128), stride 1
+  * a ViT encoder MLP block (linear -> GELU -> linear) to prove multi-op
+    graphs with a partitioned hot layer compose into one HLO module.
+
+Every partitioned entry point takes the full weight tensor and a *static*
+split point c1 (partition decisions are made offline by the Rust planner —
+Section 5.2 of the paper: "partitioning decisions can be made offline ...
+as part of the compilation process"), so each (op, split) pair is its own
+AOT artifact; the runtime caches one executable per artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as kconv
+from .kernels import matmul as kmm
+from .kernels import winograd as kwino
+
+
+# --- Linear -----------------------------------------------------------------
+
+def linear(x, w, b):
+    """Full linear layer on one device (baseline / exclusive execution)."""
+    return (kmm.matmul(x, w, b),)
+
+
+def linear_partitioned(c1: int):
+    """Returns fn(x, w, b) computing the c1-split partitioned linear layer."""
+
+    def fn(x, w, b):
+        return (kmm.linear_partitioned(x, w, c1, b),)
+
+    return fn
+
+
+def linear_partition_slice(c1: int, side: str):
+    """One side of the partition as its own artifact.
+
+    The Rust co-execution engine launches the two sides on separate worker
+    threads (the simulated "CPU" and "GPU"), so each side must be an
+    independently loadable executable. ``side`` selects which weight slice
+    this artifact consumes.
+    """
+    assert side in ("cpu", "gpu")
+
+    def fn(x, w, b):
+        if side == "cpu":
+            return (kmm.matmul(x, w[:, :c1], b[:c1]),)
+        return (kmm.matmul(x, w[:, c1:], b[c1:]),)
+
+    return fn
+
+
+# --- Conv -------------------------------------------------------------------
+
+def conv3x3(x, w):
+    """Fig. 6b conv, direct im2col path (TFLite conv_generic analogue)."""
+    return (kconv.conv2d(x, w, stride=1, padding="SAME"),)
+
+
+def conv3x3_winograd(x, w):
+    """Fig. 6b conv on the Winograd fast path (Cout > 128 in TFLite)."""
+    return (kwino.winograd_conv3x3(x, w),)
+
+
+def conv_partitioned(c1: int, stride: int = 1):
+    def fn(x, w):
+        return (kconv.conv2d_partitioned(x, w, c1, stride=stride, padding="SAME"),)
+
+    return fn
+
+
+def conv_partition_slice(c1: int, side: str, stride: int = 1):
+    assert side in ("cpu", "gpu")
+
+    def fn(x, w):
+        ws = w[..., :c1] if side == "cpu" else w[..., c1:]
+        return (kconv.conv2d(x, ws, stride=stride, padding="SAME"),)
+
+    return fn
+
+
+# --- ViT MLP block ----------------------------------------------------------
+
+def vit_mlp_block(c1: int):
+    """ViT-Base-32 encoder MLP: LN -> fc1(768->3072, partitioned at c1) ->
+    GELU -> fc2(3072->768), residual. The partitioned fc1 is the paper's
+    flagship op.
+    """
+
+    def fn(x, w1, b1, w2, b2):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        xn = (x - mu) * jax.lax.rsqrt(var + 1e-6)
+        h = kmm.linear_partitioned(xn, w1, c1, b1)
+        h = jax.nn.gelu(h)
+        y = kmm.matmul(h, w2, b2)
+        return (x + y,)
+
+    return fn
+
+
+# --- Example shapes (single source of truth for aot.py and tests) -----------
+
+VIT_L, VIT_CIN, VIT_COUT = 50, 768, 3072
+CONV_H = CONV_W = 64
+CONV_CIN, CONV_COUT = 128, 192
+
+
+def vit_linear_shapes():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((VIT_L, VIT_CIN), f32),
+        jax.ShapeDtypeStruct((VIT_CIN, VIT_COUT), f32),
+        jax.ShapeDtypeStruct((VIT_COUT,), f32),
+    )
+
+
+def conv_shapes(cout: int = CONV_COUT):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((1, CONV_H, CONV_W, CONV_CIN), f32),
+        jax.ShapeDtypeStruct((3, 3, CONV_CIN, cout), f32),
+    )
+
+
+def vit_block_shapes():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((VIT_L, VIT_CIN), f32),
+        jax.ShapeDtypeStruct((VIT_CIN, VIT_COUT), f32),
+        jax.ShapeDtypeStruct((VIT_COUT,), f32),
+        jax.ShapeDtypeStruct((VIT_COUT, VIT_CIN), f32),
+        jax.ShapeDtypeStruct((VIT_CIN,), f32),
+    )

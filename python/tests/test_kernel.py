@@ -1,0 +1,237 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes (including non-block-aligned ones) and the split
+point c1; numpy oracles pin semantics. This is the CORE correctness signal
+for the AOT artifacts the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as kconv
+from compile.kernels import matmul as kmm
+from compile.kernels import ref
+from compile.kernels import winograd as kwino
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def randn(r, *shape):
+    return jnp.asarray(r.standard_normal(shape, dtype=np.float32))
+
+
+# --- matmul -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (50, 768, 3072),  # flagship ViT linear
+        (64, 256, 256),  # block-aligned
+        (7, 13, 19),  # nothing aligned
+        (1, 1, 1),  # degenerate
+        (128, 32, 512),
+    ],
+)
+def test_matmul_matches_ref(m, k, n):
+    r = rng(m * 7 + k * 3 + n)
+    x, w = randn(r, m, k), randn(r, k, n)
+    got = kmm.matmul(x, w)
+    want = ref.linear(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_bias():
+    r = rng(1)
+    x, w, b = randn(r, 50, 768), randn(r, 768, 512), randn(r, 512)
+    np.testing.assert_allclose(
+        kmm.matmul(x, w, b), ref.linear(x, w, b), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_matmul_custom_blocks():
+    r = rng(2)
+    x, w = randn(r, 100, 300), randn(r, 300, 500)
+    got = kmm.matmul(x, w, block_m=32, block_n=128)
+    np.testing.assert_allclose(got, ref.linear(x, w), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_ktiled_matches_ref():
+    r = rng(3)
+    x, w = randn(r, 40, 1100), randn(r, 1100, 333)
+    got = kmm.matmul_ktiled(x, w, block_k=256)
+    np.testing.assert_allclose(got, ref.linear(x, w), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 128),
+    n=st.integers(1, 320),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_hypothesis(m, k, n, seed):
+    r = rng(seed)
+    x, w = randn(r, m, k), randn(r, k, n)
+    got = kmm.matmul(x, w, block_m=32, block_n=128)
+    np.testing.assert_allclose(got, ref.linear(x, w), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 256),
+    c1_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_linear_partition_identity(n, c1_frac, seed):
+    """Partitioned output == unpartitioned output for every split (Fig. 4)."""
+    r = rng(seed)
+    c1 = int(round(c1_frac * n))
+    x, w, b = randn(r, 17, 48), randn(r, 48, n), randn(r, n)
+    got = kmm.linear_partitioned(x, w, c1, b)
+    want = ref.linear(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+    # and the ref partition agrees with the fused ref
+    np.testing.assert_allclose(
+        ref.linear_partitioned(x, w, c1, b), want, rtol=1e-4, atol=1e-3
+    )
+
+
+# --- conv2d -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 3, 5, 7])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv2d_matches_lax(k, stride):
+    r = rng(k * 10 + stride)
+    x = randn(r, 2, 16, 16, 8)
+    w = randn(r, k, k, 8, 24)
+    got = kconv.conv2d(x, w, stride=stride, padding="SAME")
+    want = ref.conv2d(x, w, stride=stride, padding="SAME")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_conv2d_valid_padding():
+    r = rng(9)
+    x, w = randn(r, 1, 14, 14, 4), randn(r, 3, 3, 4, 6)
+    got = kconv.conv2d(x, w, stride=1, padding="VALID")
+    want = ref.conv2d(x, w, stride=1, padding="VALID")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_conv2d_fig6b_shape():
+    """The paper's Fig. 6b workload: 3x3 conv on (64, 64, 128)."""
+    r = rng(11)
+    x, w = randn(r, 1, 64, 64, 128), randn(r, 3, 3, 128, 160)
+    got = kconv.conv2d(x, w)
+    assert got.shape == (1, 64, 64, 160)
+    want = ref.conv2d(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    w_=st.integers(4, 20),
+    cin=st.integers(1, 16),
+    cout=st.integers(1, 40),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_hypothesis(h, w_, cin, cout, k, stride, seed):
+    r = rng(seed)
+    x = randn(r, 1, h, w_, cin)
+    w = randn(r, k, k, cin, cout)
+    got = kconv.conv2d(x, w, stride=stride, padding="SAME", block_m=32, block_n=64)
+    want = ref.conv2d(x, w, stride=stride, padding="SAME")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    cout=st.integers(2, 48),
+    c1_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_conv_partition_identity(cout, c1_frac, seed):
+    r = rng(seed)
+    c1 = int(round(c1_frac * cout))
+    x, w = randn(r, 1, 8, 8, 6), randn(r, 3, 3, 6, cout)
+    got = kconv.conv2d_partitioned(x, w, c1)
+    want = ref.conv2d(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# --- winograd ---------------------------------------------------------------
+
+
+def test_winograd_matches_direct():
+    r = rng(21)
+    x, w = randn(r, 1, 16, 16, 8), randn(r, 3, 3, 8, 32)
+    got = kwino.winograd_conv3x3(x, w)
+    want = ref.conv2d(x, w, stride=1, padding="SAME")
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_winograd_ref_matches_direct():
+    r = rng(22)
+    x, w = randn(r, 2, 10, 12, 5), randn(r, 3, 3, 5, 9)
+    got = ref.winograd_conv3x3(x, w)
+    want = ref.conv2d(x, w, stride=1, padding="SAME")
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_winograd_fig6b_switch_shape():
+    """Cout > 128 is where TFLite switches to winograd (Fig. 6b)."""
+    r = rng(23)
+    x, w = randn(r, 1, 32, 32, 16), randn(r, 3, 3, 16, 144)
+    got = kwino.winograd_conv3x3(x, w)
+    want = ref.conv2d(x, w)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    th=st.integers(2, 8),
+    tw=st.integers(2, 8),
+    cin=st.integers(1, 12),
+    cout=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_winograd_hypothesis(th, tw, cin, cout, seed):
+    r = rng(seed)
+    x = randn(r, 1, th * 2, tw * 2, cin)
+    w = randn(r, 3, 3, cin, cout)
+    got = kwino.winograd_conv3x3(x, w)
+    want = ref.conv2d(x, w)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_transform_domain_gemm():
+    r = rng(31)
+    v = randn(r, 16, 70, 24)
+    u = randn(r, 16, 24, 40)
+    got = kwino.transform_domain_gemm(v, u, block_p=32, block_n=32)
+    want = jnp.einsum("tpc,tco->tpo", v, u)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# --- misc ref ops -----------------------------------------------------------
+
+
+def test_maxpool():
+    r = rng(41)
+    x = randn(r, 1, 8, 8, 3)
+    got = ref.maxpool2x2(x)
+    assert got.shape == (1, 4, 4, 3)
+    xn = np.asarray(x)
+    want = xn.reshape(1, 4, 2, 4, 2, 3).max(axis=(2, 4))
+    np.testing.assert_allclose(got, want)

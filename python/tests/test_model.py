@@ -1,0 +1,107 @@
+"""L2 correctness: model entry points + AOT lowering round-trip sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def randn(r, *shape):
+    return jnp.asarray(r.standard_normal(shape, dtype=np.float32))
+
+
+def test_linear_entry_matches_ref():
+    r = rng(0)
+    x, w, b = randn(r, 50, 768), randn(r, 768, 3072), randn(r, 3072)
+    (got,) = model.linear(x, w, b)
+    np.testing.assert_allclose(got, ref.linear(x, w, b), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("c1", [0, 592, 1536, 3072])
+def test_linear_partitioned_entry(c1):
+    r = rng(c1 + 1)
+    x, w, b = randn(r, 50, 768), randn(r, 768, 3072), randn(r, 3072)
+    (got,) = model.linear_partitioned(c1)(x, w, b)
+    np.testing.assert_allclose(got, ref.linear(x, w, b), rtol=1e-4, atol=1e-3)
+
+
+def test_partition_slices_reassemble():
+    """cpu-slice ++ gpu-slice == full output — the identity the Rust
+    co-execution engine depends on when it merges worker results."""
+    r = rng(7)
+    c1 = 592
+    x, w, b = randn(r, 50, 768), randn(r, 768, 3072), randn(r, 3072)
+    (y_cpu,) = model.linear_partition_slice(c1, "cpu")(x, w, b)
+    (y_gpu,) = model.linear_partition_slice(c1, "gpu")(x, w, b)
+    assert y_cpu.shape == (50, c1) and y_gpu.shape == (50, 3072 - c1)
+    got = jnp.concatenate([y_cpu, y_gpu], axis=-1)
+    np.testing.assert_allclose(got, ref.linear(x, w, b), rtol=1e-4, atol=1e-3)
+
+
+def test_conv_slices_reassemble():
+    r = rng(8)
+    c1 = 64
+    x, w = randn(r, 1, 64, 64, 128), randn(r, 3, 3, 128, 192)
+    (y_cpu,) = model.conv_partition_slice(c1, "cpu")(x, w)
+    (y_gpu,) = model.conv_partition_slice(c1, "gpu")(x, w)
+    got = jnp.concatenate([y_cpu, y_gpu], axis=-1)
+    np.testing.assert_allclose(got, ref.conv2d(x, w), rtol=2e-4, atol=2e-4)
+
+
+def test_conv_winograd_entry_matches_direct():
+    r = rng(9)
+    x, w = randn(r, 1, 64, 64, 128), randn(r, 3, 3, 128, 192)
+    (direct,) = model.conv3x3(x, w)
+    (wino,) = model.conv3x3_winograd(x, w)
+    np.testing.assert_allclose(wino, direct, rtol=5e-3, atol=5e-3)
+
+
+def test_vit_mlp_block_partition_invariant():
+    """The block output must not depend on the split point."""
+    r = rng(10)
+    x = randn(r, 50, 768)
+    w1, b1 = randn(r, 768, 3072), randn(r, 3072)
+    w2, b2 = randn(r, 3072, 768), randn(r, 768)
+    (y_a,) = model.vit_mlp_block(592)(x, w1, b1, w2, b2)
+    (y_b,) = model.vit_mlp_block(3072)(x, w1, b1, w2, b2)
+    assert y_a.shape == (50, 768)
+    assert bool(jnp.all(jnp.isfinite(y_a)))
+    np.testing.assert_allclose(y_a, y_b, rtol=1e-4, atol=1e-4)
+
+
+# --- AOT lowering -----------------------------------------------------------
+
+
+def test_lower_linear_to_hlo_text():
+    text = aot.lower(model.linear, model.vit_linear_shapes())
+    assert text.startswith("HloModule")
+    assert "dot(" in text or "dot " in text
+
+
+def test_lower_partition_slice_to_hlo_text():
+    text = aot.lower(
+        model.linear_partition_slice(592, "gpu"), model.vit_linear_shapes()
+    )
+    assert text.startswith("HloModule")
+    # the gpu slice contracts 768 x 2480
+    assert "2480" in text
+
+
+def test_build_entries_complete():
+    entries = aot.build_entries()
+    names = [e[0] for e in entries]
+    assert "linear_full" in names
+    assert "conv3x3_winograd" in names
+    assert "vit_mlp_block_c592" in names
+    for c1 in aot.LINEAR_SPLITS:
+        assert f"linear_cpu_c{c1}" in names and f"linear_gpu_c{c1}" in names
+    assert len(names) == len(set(names)), "duplicate artifact names"

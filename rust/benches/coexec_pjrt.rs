@@ -1,0 +1,54 @@
+//! Bench: REAL co-execution over PJRT — the paper's runtime topology on
+//! this host. Measures wall time of the partitioned ViT linear layer
+//! through the AOT JAX/Pallas artifacts under both sync mechanisms, plus
+//! engine overhead (request round-trip minus compute).
+
+use mobile_coexec::benchutil::{bench, report_scalar};
+use mobile_coexec::coexec::CoexecEngine;
+use mobile_coexec::device::noise::SplitMix64;
+use mobile_coexec::device::SyncMechanism;
+
+fn main() {
+    let engine = match CoexecEngine::with_default_artifacts() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping coexec bench (artifacts not built?): {e}");
+            return;
+        }
+    };
+    let (l, cin, cout, c1) = (50usize, 768usize, 3072usize, 592usize);
+    let mut rng = SplitMix64::new(99);
+    let mut gen = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 0.2).collect()
+    };
+    let (x, w, b) = (gen(l * cin), gen(cin * cout), gen(cout));
+    let split = Some(("linear_cpu_c592".to_string(), "linear_gpu_c592".to_string()));
+
+    for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+        let mut walls = Vec::new();
+        let mut waits = Vec::new();
+        bench(&format!("coexec_vit_fc1_{mech:?}"), 3, 30, || {
+            let (_, r) = engine
+                .run_linear_keyed(&x, &w, &b, (l, cin, cout), c1, mech, split.clone(), Some(9))
+                .expect("run");
+            walls.push(r.wall_us);
+            waits.push(r.cpu.wait_us.min(r.gpu.wait_us));
+        });
+        report_scalar(
+            &format!("coexec_winner_wait_{mech:?}"),
+            "mean_us",
+            waits.iter().sum::<f64>() / waits.len() as f64,
+        );
+    }
+
+    // engine overhead: leader wall minus the slower side's compute
+    let mut overheads = Vec::new();
+    for _ in 0..30 {
+        let (_, r) = engine
+            .run_linear_keyed(&x, &w, &b, (l, cin, cout), c1, SyncMechanism::SvmPolling, split.clone(), Some(9))
+            .expect("run");
+        overheads.push(r.wall_us - r.cpu.exec_us.max(r.gpu.exec_us));
+    }
+    overheads.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    report_scalar("coexec_engine_overhead", "p50_us", overheads[overheads.len() / 2]);
+}

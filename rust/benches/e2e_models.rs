@@ -1,0 +1,33 @@
+//! Bench: Table 3's end-to-end model evaluation — latency and speedup per
+//! network/device, plus the scheduler's planning cost for a whole model.
+
+use mobile_coexec::benchutil::{bench, report_scalar};
+use mobile_coexec::device::{Device, SyncMechanism};
+use mobile_coexec::models::Model;
+use mobile_coexec::partition::Planner;
+use mobile_coexec::scheduler::ModelScheduler;
+
+fn main() {
+    let device = Device::pixel5();
+    eprintln!("training planners (offline step) ...");
+    let lp = Planner::train_for_kind(&device, "linear", 4000, 42);
+    let cp = Planner::train_for_kind(&device, "conv", 4000, 42);
+    let sched = ModelScheduler {
+        device: &device,
+        linear_planner: &lp,
+        conv_planner: &cp,
+        threads: 3,
+        mech: SyncMechanism::SvmPolling,
+    };
+    for model in Model::paper_models() {
+        let r = sched.evaluate(&model);
+        report_scalar(&format!("e2e_{}_baseline", model.name), "ms", r.baseline_ms);
+        report_scalar(&format!("e2e_{}_coexec", model.name), "ms", r.e2e_ms);
+        report_scalar(&format!("e2e_{}_speedup", model.name), "x", r.e2e_speedup());
+    }
+    // planning cost for a full model (paper: 3-4 ms per op, offline)
+    let vgg = mobile_coexec::models::vgg16();
+    bench("schedule_plan_vgg16", 1, 10, || {
+        std::hint::black_box(sched.plan(&vgg));
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerates paper Fig. 2 (CPU 1-3 threads vs GPU latency for
+//! linear ops with input shape (50, 3072), OnePlus 11) and times the
+//! simulator's measurement hot path.
+
+use mobile_coexec::benchutil::{bench, report_scalar};
+use mobile_coexec::device::{Device, Processor};
+use mobile_coexec::experiments::{figures, Scale};
+use mobile_coexec::ops::{LinearConfig, OpConfig};
+
+fn main() {
+    // the figure itself (writes results/fig2.csv)
+    let crossover = figures::fig2(Scale::full());
+    report_scalar("fig2_crossover_cout", "cout", crossover as f64);
+
+    // hot-path timing: one simulated measurement
+    let device = Device::oneplus11();
+    let op = OpConfig::Linear(LinearConfig::new(50, 3072, 512));
+    let mut trial = 0u64;
+    bench("device_measure_gpu", 100, 20_000, || {
+        trial += 1;
+        std::hint::black_box(device.measure(&op, Processor::Gpu, trial));
+    });
+    bench("device_measure_cpu3", 100, 20_000, || {
+        trial += 1;
+        std::hint::black_box(device.measure(&op, Processor::Cpu(3), trial));
+    });
+}

@@ -1,0 +1,41 @@
+//! Bench: GBDT predictor hot path — single-op latency prediction and full
+//! partition-plan costs. The paper plans one op in 3-4 ms; our budget in
+//! DESIGN.md §Perf is <10 µs per prediction and <5 ms per plan.
+
+use mobile_coexec::benchutil::bench;
+use mobile_coexec::dataset;
+use mobile_coexec::device::Device;
+use mobile_coexec::gbdt::{Gbdt, GbdtParams};
+use mobile_coexec::ops::{LinearConfig, OpConfig};
+use mobile_coexec::partition::Planner;
+use mobile_coexec::predictor::{gpu_features, FeatureMode};
+
+fn main() {
+    let device = Device::oneplus11();
+    let (train, _) = dataset::training_split("linear", 4000, 42);
+
+    // training throughput
+    let rows: Vec<Vec<f64>> = train
+        .iter()
+        .map(|op| gpu_features(&device, op, FeatureMode::Augmented))
+        .collect();
+    let ys: Vec<f64> = train.iter().map(|op| device.measure_gpu(op, 0).ln()).collect();
+    let params = GbdtParams::default();
+    bench("gbdt_train_3200rows_300trees", 0, 3, || {
+        std::hint::black_box(Gbdt::fit(&rows, &ys, &params));
+    });
+
+    // single prediction
+    let model = Gbdt::fit(&rows, &ys, &params);
+    let x = &rows[17];
+    bench("gbdt_predict_single", 1000, 200_000, || {
+        std::hint::black_box(model.predict(x));
+    });
+
+    // end-to-end plan (the paper's "3-4 ms" step)
+    let planner = Planner::train_for_kind(&device, "linear", 3000, 42);
+    let op = OpConfig::Linear(LinearConfig::vit_fc1());
+    bench("planner_plan_vit_fc1", 3, 50, || {
+        std::hint::black_box(planner.plan_with_threads(&op, 3));
+    });
+}

@@ -1,0 +1,23 @@
+//! Bench: partition-search scaling (Table 2's inner loop) — plan cost vs
+//! Cout, and the measured grid-search oracle cost it replaces.
+
+use mobile_coexec::benchutil::bench;
+use mobile_coexec::device::{Device, SyncMechanism};
+use mobile_coexec::ops::{LinearConfig, OpConfig};
+use mobile_coexec::partition::{grid_search, Planner};
+
+fn main() {
+    let device = Device::pixel5();
+    let planner = Planner::train_for_kind(&device, "linear", 3000, 42);
+    for cout in [512usize, 1024, 3072, 8192] {
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, cout));
+        bench(&format!("plan_cout{cout}"), 2, 30, || {
+            std::hint::black_box(planner.plan_with_threads(&op, 3));
+        });
+    }
+    // the oracle the planner replaces (simulated measurements, step 8)
+    let op = OpConfig::Linear(LinearConfig::new(50, 768, 3072));
+    bench("grid_search_oracle_cout3072", 1, 10, || {
+        std::hint::black_box(grid_search(&device, &op, 3, SyncMechanism::SvmPolling, 5));
+    });
+}

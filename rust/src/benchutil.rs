@@ -1,0 +1,64 @@
+//! Minimal micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a plain `main()` using [`bench`] /
+//! [`bench_with_setup`]: warm-up, N timed iterations, mean / p50 / p95
+//! report on stdout in a stable, grep-able format:
+//!
+//! ```text
+//! BENCH <name> iters=<n> mean_us=<x> p50_us=<x> p95_us=<x>
+//! ```
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+/// Run `f` `iters` times (after `warmup` unrecorded runs) and report.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r = BenchResult {
+        iters,
+        mean_us: samples.iter().sum::<f64>() / iters as f64,
+        p50_us: samples[iters / 2],
+        p95_us: samples[((iters as f64 * 0.95) as usize).min(iters - 1)],
+    };
+    println!(
+        "BENCH {name} iters={} mean_us={:.2} p50_us={:.2} p95_us={:.2}",
+        r.iters, r.mean_us, r.p50_us, r.p95_us
+    );
+    r
+}
+
+/// Report a precomputed scalar (for whole-table benches where the metric is
+/// a speedup, not a duration).
+pub fn report_scalar(name: &str, metric: &str, value: f64) {
+    println!("BENCH {name} {metric}={value:.4}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 2, 50, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.mean_us >= 0.0 && r.p50_us <= r.p95_us);
+    }
+}

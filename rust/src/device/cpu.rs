@@ -1,0 +1,155 @@
+//! XNNPACK-like mobile CPU cost model.
+//!
+//! The paper's CPU side runs XNNPACK GEMM/IGEMM micro-kernels (its §1:
+//! "high-performance implementations based on advanced SIMD instructions
+//! for ARM CPUs") with 1–3 threads pinned to the big cores. The model
+//! reproduces the structure that matters for partitioning decisions:
+//!
+//! * `mr x nr` micro-kernel tiling — work is the *padded* output tile grid,
+//!   so latency steps at tile boundaries (ceil effects);
+//! * thread scaling through a per-device efficiency table — mobile SoCs are
+//!   heterogeneous (1 prime + N gold + M silver), so the 3rd thread often
+//!   adds less than the 2nd (visible in the paper's Table 2 deltas);
+//! * a bandwidth floor and a small per-op launch overhead.
+
+use crate::ops::{ConvConfig, LinearConfig};
+
+/// XNNPACK f32 GEMM micro-kernel rows (e.g. `f32_gemm_6x8__neonfma`).
+pub const MR: usize = 6;
+/// XNNPACK f32 GEMM micro-kernel columns.
+pub const NR: usize = 8;
+
+/// One CPU cluster's parameters (calibrated per device, see `soc.rs`).
+#[derive(Debug, Clone)]
+pub struct CpuSpec {
+    /// Sustained f32 GMACs/s of one big-core thread on GEMM.
+    pub gmacs_per_thread: f64,
+    /// Cumulative scaling for 1..=3 threads (heterogeneous big.LITTLE:
+    /// `[1.0, ~1.9, ~2.2-2.8]`).
+    pub thread_efficiency: [f64; 3],
+    /// Effective memory bandwidth available to the CPU cluster, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Per-op launch overhead in microseconds (thread-pool wake + pack).
+    pub launch_us: f64,
+    /// Measurement noise sigma (multiplicative lognormal).
+    pub noise_sigma: f64,
+}
+
+impl CpuSpec {
+    fn rate_gmacs(&self, threads: usize) -> f64 {
+        assert!((1..=3).contains(&threads), "paper uses 1-3 CPU threads");
+        self.gmacs_per_thread * self.thread_efficiency[threads - 1]
+    }
+
+    /// GEMM over a padded `ceil(M/mr) x ceil(N/nr)` tile grid, with the tile
+    /// columns distributed across threads (XNNPACK parallelizes the `N`
+    /// dimension for inference GEMMs); ragged division leaves threads idle.
+    fn gemm_us(&self, m: usize, n: usize, k: usize, threads: usize) -> f64 {
+        let row_tiles = m.div_ceil(MR);
+        let col_tiles = n.div_ceil(NR);
+        // per-thread share of column tiles, ceil -> the slowest thread
+        // bounds the op's latency
+        let share = col_tiles.div_ceil(threads);
+        let slowest_macs = (row_tiles * MR * share * NR) as f64 * k as f64;
+        // thread_efficiency folds contention: the per-thread rate drops to
+        // eff/threads of the single-thread rate when `threads` run together.
+        let eff = self.thread_efficiency[threads - 1] / threads as f64;
+        slowest_macs / (self.gmacs_per_thread * 1e3 * eff)
+    }
+
+    /// Linear-layer latency (noiseless), microseconds.
+    pub fn linear_latency_us(&self, cfg: &LinearConfig, threads: usize) -> f64 {
+        let compute = self.gemm_us(cfg.l, cfg.cout, cfg.cin, threads);
+        let memory = cfg.bytes() / self.mem_bw_gbps * 1e-3;
+        self.launch_us + compute.max(memory)
+    }
+
+    /// Convolution latency (noiseless), microseconds.
+    ///
+    /// XNNPACK runs convs as indirect GEMM (IGEMM): `M = Hout*Wout`,
+    /// `K = k*k*cin`, `N = cout`, plus an indirection-buffer setup cost that
+    /// scales with the patch table size.
+    pub fn conv_latency_us(&self, cfg: &ConvConfig, threads: usize) -> f64 {
+        let m = cfg.out_positions();
+        let k = cfg.k * cfg.kw * cfg.cin;
+        let compute = self.gemm_us(m, cfg.cout, k, threads) * 1.08; // IGEMM overhead vs GEMM
+        let indirection = (m * cfg.k * cfg.kw * 8) as f64 / self.mem_bw_gbps * 1e-3;
+        let memory = cfg.bytes() / self.mem_bw_gbps * 1e-3;
+        self.launch_us + indirection * 0.25 + compute.max(memory)
+    }
+
+    /// Effective GMACs/s at a thread count (for docs/telemetry).
+    pub fn effective_gmacs(&self, threads: usize) -> f64 {
+        self.rate_gmacs(threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CpuSpec {
+        CpuSpec {
+            gmacs_per_thread: 20.0,
+            thread_efficiency: [1.0, 1.9, 2.6],
+            mem_bw_gbps: 15.0,
+            launch_us: 6.0,
+            noise_sigma: 0.0,
+        }
+    }
+
+    #[test]
+    fn more_threads_is_faster_but_sublinear() {
+        let s = spec();
+        let cfg = LinearConfig::new(50, 768, 3072);
+        let t1 = s.linear_latency_us(&cfg, 1);
+        let t2 = s.linear_latency_us(&cfg, 2);
+        let t3 = s.linear_latency_us(&cfg, 3);
+        assert!(t2 < t1 && t3 < t2);
+        assert!(t1 / t3 < 3.0, "3 threads must not be 3x ({})", t1 / t3);
+    }
+
+    #[test]
+    fn latency_scales_with_channels() {
+        let s = spec();
+        let half = s.linear_latency_us(&LinearConfig::new(50, 768, 1536), 1);
+        let full = s.linear_latency_us(&LinearConfig::new(50, 768, 3072), 1);
+        assert!(full > 1.8 * half && full < 2.2 * half);
+    }
+
+    #[test]
+    fn tile_ceil_steps() {
+        // crossing an NR boundary adds a full tile column of work
+        let s = spec();
+        let a = s.linear_latency_us(&LinearConfig::new(50, 768, 64), 1);
+        let b = s.linear_latency_us(&LinearConfig::new(50, 768, 65), 1);
+        let c = s.linear_latency_us(&LinearConfig::new(50, 768, 72), 1);
+        assert!(b > a);
+        // 65 channels already pays for the full 72-channel tile grid
+        assert!((b - c).abs() / c < 1e-9);
+    }
+
+    #[test]
+    fn conv_igemm_vs_linear_equivalence() {
+        // A 1x1 conv over P positions == linear with L = P (modulo the
+        // small IGEMM factor).
+        let s = spec();
+        let conv = ConvConfig::new(32, 32, 128, 256, 1, 1);
+        let lin = LinearConfig::new(32 * 32, 128, 256);
+        let tc = s.conv_latency_us(&conv, 2);
+        let tl = s.linear_latency_us(&lin, 2);
+        assert!((tc - tl).abs() / tl < 0.25, "conv {tc} vs linear {tl}");
+    }
+
+    #[test]
+    fn launch_floor() {
+        let s = spec();
+        assert!(s.linear_latency_us(&LinearConfig::new(1, 4, 4), 1) >= s.launch_us);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_threads_rejected() {
+        spec().effective_gmacs(0);
+    }
+}

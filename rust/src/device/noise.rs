@@ -1,0 +1,120 @@
+//! Deterministic measurement noise.
+//!
+//! Real phone measurements fluctuate (DVFS residue, scheduler jitter,
+//! thermal drift — the paper mitigates but cannot eliminate these, see its
+//! §5.1 and the confidence intervals of Fig. 2). The simulator reproduces
+//! this as *seeded multiplicative lognormal* noise so that (a) the GBDT
+//! predictors face a realistically noisy regression target and (b) every
+//! experiment is exactly reproducible.
+
+/// SplitMix64 — tiny, high-quality, seedable PRNG (public-domain algorithm).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive).
+    pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+/// FNV-1a hash — stable key derivation for per-measurement seeds.
+pub fn fnv1a(parts: &[u64]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &p in parts {
+        for b in p.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Multiplicative lognormal noise factor `exp(sigma * z)`, deterministic in
+/// the key. `sigma = 0` returns exactly 1.0.
+pub fn lognormal_factor(key: u64, sigma: f64) -> f64 {
+    if sigma == 0.0 {
+        return 1.0;
+    }
+    let z = SplitMix64::new(key).next_gaussian();
+    (sigma * z).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(SplitMix64::new(42).next_u64(), SplitMix64::new(42).next_u64());
+        assert_eq!(lognormal_factor(7, 0.05), lognormal_factor(7, 0.05));
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = SplitMix64::new(1);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let g = r.gen_range(3, 9);
+            assert!((3..=9).contains(&g));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = SplitMix64::new(123);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn lognormal_centered() {
+        let n = 10_000;
+        let mean: f64 =
+            (0..n).map(|i| lognormal_factor(fnv1a(&[i]), 0.02)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn zero_sigma_is_exact() {
+        assert_eq!(lognormal_factor(99, 0.0), 1.0);
+    }
+
+    #[test]
+    fn fnv_distinguishes() {
+        assert_ne!(fnv1a(&[1, 2]), fnv1a(&[2, 1]));
+        assert_ne!(fnv1a(&[0]), fnv1a(&[]));
+    }
+}

@@ -1,0 +1,205 @@
+//! The four evaluation devices (paper §5) as calibrated SoC models.
+//!
+//! Constants are calibrated so the *relative* CPU/GPU behaviour matches the
+//! paper's published observations (see DESIGN.md §Hardware-Adaptation):
+//!
+//! * Pixel 4 / Pixel 5 have a narrow CPU-GPU gap (big Table 2 speedups);
+//! * Moto Edge+ 2022 and OnePlus 11 have flagship GPUs that dwarf the CPU
+//!   (small speedups), with the OnePlus 11 gap the widest;
+//! * Pixel 4's CPU measurements are the noisiest (its 1-thread CPU MAPE in
+//!   Table 1 is 11.5%); Moto/OnePlus CPUs are very stable (2.4-3.1%);
+//! * the Moto sync constants are the paper's own §4/§5.5 numbers.
+
+use super::cpu::CpuSpec;
+use super::gpu::GpuSpec;
+use super::sync_model::SyncSpec;
+
+/// A complete mobile SoC model: CPU cluster + GPU + sync fabric.
+#[derive(Debug, Clone)]
+pub struct SocSpec {
+    pub name: &'static str,
+    pub cpu: CpuSpec,
+    pub gpu: GpuSpec,
+    pub sync: SyncSpec,
+}
+
+impl SocSpec {
+    /// Google Pixel 4 — Snapdragon 855 (1x A76 prime + 3x A76 gold,
+    /// Adreno 640). Narrow CPU/GPU gap, noisy CPU clocks.
+    pub fn pixel4() -> Self {
+        SocSpec {
+            name: "Pixel 4",
+            cpu: CpuSpec {
+                gmacs_per_thread: 13.0,
+                thread_efficiency: [1.0, 1.92, 2.75],
+                mem_bw_gbps: 12.0,
+                launch_us: 8.0,
+                noise_sigma: 0.075,
+            },
+            gpu: GpuSpec {
+                compute_units: 6,
+                wave_size: 64,
+                clock_ghz: 0.585,
+                macs_per_cu_cycle: 14.0,
+                mem_bw_gbps: 14.0,
+                dispatch_us: 90.0,
+                const_mem_kb: 32,
+                noise_sigma: 0.03,
+            },
+            sync: SyncSpec {
+                polling_linear_us: 8.5,
+                polling_conv_us: 6.8,
+                event_linear_us: 185.0,
+                event_conv_us: 160.0,
+                noise_sigma: 0.12,
+            },
+        }
+    }
+
+    /// Google Pixel 5 — Snapdragon 765G (2x A76 + 6x A55, Adreno 620).
+    /// The weakest GPU of the four: the best co-execution speedups.
+    pub fn pixel5() -> Self {
+        SocSpec {
+            name: "Pixel 5",
+            cpu: CpuSpec {
+                gmacs_per_thread: 12.5,
+                thread_efficiency: [1.0, 1.86, 2.18], // 3rd thread lands on an A55
+                mem_bw_gbps: 10.0,
+                launch_us: 8.0,
+                noise_sigma: 0.045,
+            },
+            gpu: GpuSpec {
+                compute_units: 4,
+                wave_size: 64,
+                clock_ghz: 0.625,
+                macs_per_cu_cycle: 13.5,
+                mem_bw_gbps: 10.0,
+                dispatch_us: 110.0,
+                const_mem_kb: 32,
+                noise_sigma: 0.028,
+            },
+            sync: SyncSpec {
+                polling_linear_us: 9.0,
+                polling_conv_us: 7.2,
+                event_linear_us: 205.0,
+                event_conv_us: 175.0,
+                noise_sigma: 0.12,
+            },
+        }
+    }
+
+    /// Motorola Edge+ 2022 — Snapdragon 8 Gen 1 (1x X2 + 3x A710,
+    /// Adreno 730). Sync constants are the paper's own measurements.
+    pub fn moto2022() -> Self {
+        SocSpec {
+            name: "Moto 2022",
+            cpu: CpuSpec {
+                gmacs_per_thread: 36.0,
+                thread_efficiency: [1.0, 1.9, 2.7],
+                mem_bw_gbps: 18.0,
+                launch_us: 5.0,
+                noise_sigma: 0.016,
+            },
+            gpu: GpuSpec {
+                compute_units: 8,
+                wave_size: 64,
+                clock_ghz: 0.82,
+                macs_per_cu_cycle: 36.0,
+                mem_bw_gbps: 33.0,
+                dispatch_us: 45.0,
+                const_mem_kb: 45,
+                noise_sigma: 0.03,
+            },
+            sync: SyncSpec {
+                polling_linear_us: 7.0, // paper §4
+                polling_conv_us: 5.4,   // paper §5.5
+                event_linear_us: 162.0, // paper §4
+                event_conv_us: 141.0,   // paper §5.5
+                noise_sigma: 0.12,
+            },
+        }
+    }
+
+    /// OnePlus 11 — Snapdragon 8 Gen 2 (1x X3 + 4x A715/A710, Adreno 740).
+    /// The widest CPU/GPU gap: the smallest co-execution speedups.
+    pub fn oneplus11() -> Self {
+        SocSpec {
+            name: "OnePlus 11",
+            cpu: CpuSpec {
+                gmacs_per_thread: 44.0,
+                thread_efficiency: [1.0, 1.9, 2.75],
+                mem_bw_gbps: 22.0,
+                launch_us: 4.0,
+                noise_sigma: 0.02,
+            },
+            gpu: GpuSpec {
+                compute_units: 12,
+                wave_size: 64,
+                clock_ghz: 0.68,
+                macs_per_cu_cycle: 49.0,
+                mem_bw_gbps: 45.0,
+                dispatch_us: 35.0,
+                const_mem_kb: 45,
+                noise_sigma: 0.028,
+            },
+            sync: SyncSpec {
+                polling_linear_us: 6.0,
+                polling_conv_us: 5.0,
+                event_linear_us: 140.0,
+                event_conv_us: 120.0,
+                noise_sigma: 0.12,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::LinearConfig;
+
+    #[test]
+    fn four_devices_distinct() {
+        let names: Vec<_> = [
+            SocSpec::pixel4(),
+            SocSpec::pixel5(),
+            SocSpec::moto2022(),
+            SocSpec::oneplus11(),
+        ]
+        .iter()
+        .map(|d| d.name)
+        .collect();
+        assert_eq!(names.len(), 4);
+        let dedup: std::collections::HashSet<_> = names.iter().collect();
+        assert_eq!(dedup.len(), 4);
+    }
+
+    #[test]
+    fn flagship_gpus_faster() {
+        // GPU-side ordering must match the paper: OnePlus 11 fastest,
+        // Pixel 5 slowest.
+        let cfg = LinearConfig::vit_fc1();
+        let lat = |s: SocSpec| s.gpu.linear_latency_us(&cfg).0;
+        let (p4, p5, moto, op11) = (
+            lat(SocSpec::pixel4()),
+            lat(SocSpec::pixel5()),
+            lat(SocSpec::moto2022()),
+            lat(SocSpec::oneplus11()),
+        );
+        assert!(op11 < moto && moto < p4 && p4 < p5, "{op11} {moto} {p4} {p5}");
+    }
+
+    #[test]
+    fn cpu_gpu_gap_ordering() {
+        // CPU3/GPU rate ratio: Pixel 5 narrowest gap, OnePlus 11 widest.
+        let ratio = |s: SocSpec| {
+            let cfg = LinearConfig::new(512, 1024, 1024);
+            let c = s.cpu.linear_latency_us(&cfg, 3);
+            let g = s.gpu.linear_latency_us(&cfg).0;
+            g / c // larger = CPU relatively stronger
+        };
+        let p5 = ratio(SocSpec::pixel5());
+        let op11 = ratio(SocSpec::oneplus11());
+        assert!(p5 > op11, "pixel5 {p5} vs oneplus {op11}");
+    }
+}

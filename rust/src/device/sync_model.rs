@@ -1,0 +1,71 @@
+//! Synchronization-overhead model (paper Section 4).
+//!
+//! Co-execution pays `T_overhead(c1, c2)` only when *both* devices receive
+//! work. The paper measures two mechanisms:
+//!
+//! * **EventWait** — the CPU blocks in `clWaitForEvents` and the GPU's
+//!   completion propagates through the OpenCL event machinery: ~162 µs per
+//!   linear op / ~141 µs per conv op on the Moto Edge+ 2022 (its §5.5),
+//!   plus coarse-grained SVM map/unmap for cache coherence.
+//! * **SvmPolling** — the paper's contribution: outputs live in
+//!   fine-grained SVM (hardware cache coherence, no map/unmap) and a tiny
+//!   polling kernel spins on `cpu_flag`/`gpu_flag`: ~7.0 µs linear /
+//!   ~5.4 µs conv on the same device.
+//!
+//! `rust/src/sync/` implements both mechanisms *for real* over two worker
+//! threads; this module carries the calibrated constants the simulator and
+//! the partition planner use.
+
+
+/// Which CPU-GPU rendezvous mechanism a co-execution uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SyncMechanism {
+    /// Fine-grained SVM + active polling (the paper's design).
+    SvmPolling,
+    /// Baseline: OpenCL user events + `clWaitForEvents` notification.
+    EventWait,
+}
+
+/// Per-device synchronization overhead constants (µs).
+#[derive(Debug, Clone)]
+pub struct SyncSpec {
+    pub polling_linear_us: f64,
+    pub polling_conv_us: f64,
+    pub event_linear_us: f64,
+    pub event_conv_us: f64,
+    /// Jitter sigma for the overhead itself (event delays vary a lot).
+    pub noise_sigma: f64,
+}
+
+impl SyncSpec {
+    /// Mean overhead for a mechanism and op kind ("linear" / "conv").
+    pub fn overhead_us(&self, mech: SyncMechanism, kind: &str) -> f64 {
+        match (mech, kind) {
+            (SyncMechanism::SvmPolling, "linear") => self.polling_linear_us,
+            (SyncMechanism::SvmPolling, _) => self.polling_conv_us,
+            (SyncMechanism::EventWait, "linear") => self.event_linear_us,
+            (SyncMechanism::EventWait, _) => self.event_conv_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polling_is_cheaper() {
+        let s = SyncSpec {
+            polling_linear_us: 7.0,
+            polling_conv_us: 5.4,
+            event_linear_us: 162.0,
+            event_conv_us: 141.0,
+            noise_sigma: 0.1,
+        };
+        assert!(
+            s.overhead_us(SyncMechanism::SvmPolling, "linear")
+                < s.overhead_us(SyncMechanism::EventWait, "linear") / 10.0
+        );
+        assert_eq!(s.overhead_us(SyncMechanism::EventWait, "conv"), 141.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Figure reproductions (paper Figs. 2, 3, 5, 6a, 6b, 7).
+
+use super::{print_table, write_csv, Scale};
+use crate::device::{Device, Processor};
+use crate::gbdt::GbdtParams;
+use crate::metrics::{ci95_halfwidth, mape, mean};
+use crate::ops::{ConvConfig, LinearConfig, OpConfig};
+use crate::predictor::{FeatureMode, GpuPredictor, LinearRegPredictor};
+
+fn measure_series(device: &Device, op: &OpConfig, proc: Processor, trials: u64) -> (f64, f64) {
+    let xs: Vec<f64> = (0..trials).map(|t| device.measure(op, proc, t)).collect();
+    (mean(&xs), ci95_halfwidth(&xs))
+}
+
+/// Fig. 2: CPU (1-3 threads) vs GPU latency for linear ops with input
+/// shape (50, 3072) and varying Cout (OnePlus 11). Returns the crossover
+/// Cout below which 3 CPU threads beat the GPU (the paper reports 425).
+pub fn fig2(scale: Scale) -> usize {
+    let device = Device::oneplus11();
+    let mut rows = Vec::new();
+    let mut crossover = 0usize;
+    for cout in (64..=1024).step_by(16) {
+        let op = OpConfig::Linear(LinearConfig::new(50, 3072, cout));
+        let (gpu, gpu_ci) = measure_series(&device, &op, Processor::Gpu, scale.trials.max(8));
+        let mut row = vec![cout.to_string(), format!("{gpu:.1}"), format!("{gpu_ci:.1}")];
+        let mut cpu3 = f64::MAX;
+        for t in 1..=3 {
+            let (c, ci) = measure_series(&device, &op, Processor::Cpu(t), scale.trials.max(8));
+            if t == 3 {
+                cpu3 = c;
+            }
+            row.push(format!("{c:.1}"));
+            row.push(format!("{ci:.1}"));
+        }
+        if cpu3 < gpu {
+            crossover = cout;
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Fig 2 — CPU vs GPU latency, linear (50, 3072) x Cout (OnePlus 11)",
+        &["cout", "gpu_us", "gpu_ci", "cpu1_us", "ci", "cpu2_us", "ci", "cpu3_us", "ci"],
+        &rows[..rows.len().min(12)],
+    );
+    println!("... ({} rows total; full series in results/fig2.csv)", rows.len());
+    println!("CPU-3 beats GPU for Cout <= {crossover} (paper: ~425)");
+    write_csv(
+        "fig2.csv",
+        &["cout", "gpu_us", "gpu_ci", "cpu1_us", "cpu1_ci", "cpu2_us", "cpu2_ci", "cpu3_us", "cpu3_ci"],
+        &rows,
+    );
+    crossover
+}
+
+/// Shared sweep for Figs. 3 and 5: GPU latency of linear (50, 768) x Cout,
+/// Cout in [2048, 2560] (OnePlus 11), plus predictions from a linear
+/// baseline, a basic GBDT, and the augmented GBDT.
+/// Returns (mape_linear, mape_basic, mape_augmented) over the sweep.
+pub fn fig3_fig5(scale: Scale) -> (f64, f64, f64) {
+    let device = Device::oneplus11();
+    let (train, _) = crate::dataset::training_split("linear", scale.train_n, 42);
+    let params = GbdtParams::default();
+    let basic = GpuPredictor::train(&device, &train, FeatureMode::Basic, &params);
+    let aug = GpuPredictor::train(&device, &train, FeatureMode::Augmented, &params);
+    let linreg = LinearRegPredictor::train(&device, &train);
+
+    let mut rows = Vec::new();
+    let (mut actuals, mut p_lin, mut p_basic, mut p_aug) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for cout in (2048..=2560).step_by(4) {
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, cout));
+        let (m, _) = measure_series(&device, &op, Processor::Gpu, scale.trials.max(8));
+        let (l, b, a) = (
+            linreg.predict_us(&op),
+            basic.predict_us(&device, &op),
+            aug.predict_us(&device, &op),
+        );
+        actuals.push(m);
+        p_lin.push(l);
+        p_basic.push(b);
+        p_aug.push(a);
+        rows.push(vec![
+            cout.to_string(),
+            format!("{m:.1}"),
+            format!("{l:.1}"),
+            format!("{b:.1}"),
+            format!("{a:.1}"),
+        ]);
+    }
+    let (ml, mb, ma) = (
+        mape(&actuals, &p_lin),
+        mape(&actuals, &p_basic),
+        mape(&actuals, &p_aug),
+    );
+    print_table(
+        "Figs 3+5 — GPU latency spikes vs predictors, linear (50,768)xCout (OnePlus 11)",
+        &["cout", "measured_us", "linear_model", "gbdt_basic", "gbdt_augmented"],
+        &rows[..rows.len().min(12)],
+    );
+    println!("... ({} rows; full series in results/fig3_fig5.csv)", rows.len());
+    println!(
+        "sweep MAPE: linear-model {:.1}% | basic GBDT {:.1}% | augmented GBDT {:.1}% (paper: augmented captures the spikes)",
+        ml * 100.0,
+        mb * 100.0,
+        ma * 100.0
+    );
+    write_csv(
+        "fig3_fig5.csv",
+        &["cout", "measured_us", "linear_model_us", "gbdt_basic_us", "gbdt_augmented_us"],
+        &rows,
+    );
+    (ml, mb, ma)
+}
+
+/// Fig. 6a: workgroup count vs latency for linear (50, 768) x Cout.
+/// Returns the Pearson correlation between workgroup count and latency.
+pub fn fig6a(scale: Scale) -> f64 {
+    let device = Device::oneplus11();
+    let mut rows = Vec::new();
+    let (mut lats, mut wgs) = (Vec::new(), Vec::new());
+    for cout in (512..=3072).step_by(8) {
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, cout));
+        let (m, _) = measure_series(&device, &op, Processor::Gpu, scale.trials.max(4));
+        let d = device.gpu_dispatch(&op);
+        lats.push(m);
+        wgs.push(d.wg_count as f64);
+        rows.push(vec![
+            cout.to_string(),
+            format!("{m:.1}"),
+            d.wg_count.to_string(),
+            format!("{}x{}", d.wg_x, d.wg_y),
+            d.waves.to_string(),
+        ]);
+    }
+    let r = pearson(&wgs, &lats);
+    print_table(
+        "Fig 6a — workgroup count vs latency, linear (50,768)xCout (OnePlus 11)",
+        &["cout", "latency_us", "workgroups", "wg_shape", "waves"],
+        &rows[..rows.len().min(12)],
+    );
+    println!("... ({} rows; results/fig6a.csv)", rows.len());
+    println!("corr(workgroups, latency) = {r:.3} (paper: 'strong correlation')");
+    write_csv("fig6a.csv", &["cout", "latency_us", "workgroups", "wg_shape", "waves"], &rows);
+    r
+}
+
+/// Fig. 6b: kernel switch for 3x3 convs on (64, 64, 128): the delegate
+/// moves to Winograd when Cout exceeds 128. Returns the switch Cout.
+pub fn fig6b(scale: Scale) -> usize {
+    let device = Device::oneplus11();
+    let mut rows = Vec::new();
+    let mut switch = 0usize;
+    let mut prev_kernel = None;
+    for cout in (32..=256).step_by(4) {
+        let cfg = ConvConfig::fig6b(cout);
+        let op = OpConfig::Conv(cfg);
+        let (m, _) = measure_series(&device, &op, Processor::Gpu, scale.trials.max(4));
+        let d = device.gpu_dispatch(&op);
+        if let Some(pk) = prev_kernel {
+            if pk != d.kernel && switch == 0 {
+                switch = cout;
+            }
+        }
+        prev_kernel = Some(d.kernel);
+        rows.push(vec![
+            cout.to_string(),
+            format!("{m:.1}"),
+            d.kernel.name().to_string(),
+        ]);
+    }
+    print_table(
+        "Fig 6b — kernel switch, 3x3 conv on (64,64,128) (OnePlus 11)",
+        &["cout", "latency_us", "kernel"],
+        &rows[..rows.len().min(12)],
+    );
+    println!("... ({} rows; results/fig6b.csv)", rows.len());
+    println!("kernel switches at Cout = {switch} (paper: winograd for Cout > 128)");
+    write_csv("fig6b.csv", &["cout", "latency_us", "kernel"], &rows);
+    switch
+}
+
+/// Fig. 7: GBDT gain importance, top-8 features (conv, Moto 2022).
+/// Returns the ranked (feature, share-of-gain) list.
+pub fn fig7(scale: Scale) -> Vec<(String, f64)> {
+    let device = Device::moto2022();
+    let (train, _) = crate::dataset::training_split("conv", scale.train_n, 42);
+    let p = GpuPredictor::train(&device, &train, FeatureMode::Augmented, &GbdtParams::default());
+    let mut imp = p.feature_importance("conv");
+    let total: f64 = imp.iter().map(|(_, g)| g).sum();
+    imp.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let rows: Vec<Vec<String>> = imp
+        .iter()
+        .take(8)
+        .map(|(n, g)| vec![n.clone(), format!("{:.1}%", g / total * 100.0)])
+        .collect();
+    print_table(
+        "Fig 7 — GBDT gain importance, top 8 (conv, Moto 2022)",
+        &["feature", "gain_share"],
+        &rows,
+    );
+    write_csv(
+        "fig7.csv",
+        &["feature", "gain_share"],
+        &imp.iter()
+            .map(|(n, g)| vec![n.clone(), format!("{}", g / total)])
+            .collect::<Vec<_>>(),
+    );
+    imp.into_iter().map(|(n, g)| (n, g / total)).collect()
+}
+
+fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    let (mx, my) = (mean(x), mean(y));
+    let cov: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let (vx, vy): (f64, f64) = (
+        x.iter().map(|a| (a - mx).powi(2)).sum(),
+        y.iter().map(|b| (b - my).powi(2)).sum(),
+    );
+    cov / (vx.sqrt() * vy.sqrt()).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6b_switch_at_128() {
+        let s = fig6b(Scale::quick());
+        assert_eq!(s, 132, "winograd must take over just past 128");
+    }
+
+    #[test]
+    fn fig6a_strong_correlation() {
+        let r = fig6a(Scale::quick());
+        assert!(r > 0.5, "workgroup/latency correlation too weak: {r}");
+    }
+
+    #[test]
+    fn pearson_sane() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-9);
+    }
+}

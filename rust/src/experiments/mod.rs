@@ -1,0 +1,117 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//!
+//! Each entry point prints a human-readable table to stdout and writes a
+//! CSV under `results/` so EXPERIMENTS.md can reference exact numbers.
+//! `Scale` trades fidelity for time: `full()` matches the paper's dataset
+//! sizes (12,500 training configs, 5-trial averaging); `quick()` is for
+//! tests and smoke runs.
+
+pub mod figures;
+pub mod tables;
+
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Experiment scale knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    /// Training configurations sampled per (device, op kind) — §5.2.
+    pub train_n: usize,
+    /// Repeated measurements averaged per data point.
+    pub trials: u64,
+    /// Fraction of the test grid evaluated by the measured grid-search
+    /// oracle (the paper uses 10%).
+    pub grid_frac: f64,
+    /// Fraction of the test grid used for the GBDT speedup columns
+    /// (1.0 = all 2,039 / 2,051 ops, like the paper).
+    pub test_frac: f64,
+}
+
+impl Scale {
+    /// The paper's §5.2/§5.3 settings.
+    pub fn full() -> Self {
+        Self { train_n: 12_500, trials: 5, grid_frac: 0.10, test_frac: 1.0 }
+    }
+
+    /// Fast smoke-run settings (CI, unit tests).
+    pub fn quick() -> Self {
+        Self { train_n: 1_500, trials: 3, grid_frac: 0.02, test_frac: 0.08 }
+    }
+
+    pub fn from_flag(quick: bool) -> Self {
+        if quick {
+            Self::quick()
+        } else {
+            Self::full()
+        }
+    }
+}
+
+/// Results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var_os("COEXEC_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"));
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    dir
+}
+
+/// Write a CSV with a header row.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> PathBuf {
+    let path = results_dir().join(name);
+    let mut f = std::fs::File::create(&path).expect("create csv");
+    writeln!(f, "{}", header.join(",")).unwrap();
+    for r in rows {
+        writeln!(f, "{}", r.join(",")).unwrap();
+    }
+    path
+}
+
+/// Print an aligned text table.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for r in rows {
+        println!("{}", fmt_row(r.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_presets() {
+        assert_eq!(Scale::full().train_n, 12_500);
+        assert!(Scale::quick().train_n < Scale::full().train_n);
+        assert_eq!(Scale::from_flag(true).trials, Scale::quick().trials);
+    }
+
+    #[test]
+    fn csv_written() {
+        let p = write_csv(
+            "test_write.csv",
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()]],
+        );
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

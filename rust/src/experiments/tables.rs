@@ -1,0 +1,369 @@
+//! Table reproductions (paper Tables 1-4 and the §4 sync-overhead claim).
+
+use super::{print_table, write_csv, Scale};
+use crate::dataset;
+use crate::device::{noise::SplitMix64, Device, Processor, SyncMechanism};
+use crate::gbdt::GbdtParams;
+use crate::metrics::mean;
+use crate::models::Model;
+use crate::ops::OpConfig;
+use crate::partition::{grid_search, Planner};
+use crate::predictor::{CpuPredictor, FeatureMode, GpuPredictor, PredictorSet};
+use crate::scheduler::ModelScheduler;
+
+/// Table 1: MAPE of GBDT predictors per device x op kind x processor.
+/// Returns rows of (device, kind, [gpu, cpu1, cpu2, cpu3]) MAPEs.
+pub fn table1(scale: Scale) -> Vec<(String, String, [f64; 4])> {
+    let devices = Device::all();
+    let params = GbdtParams::default();
+    let results = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for device in &devices {
+            let results = &results;
+            let params = &params;
+            s.spawn(move || {
+                for kind in ["linear", "conv"] {
+                    let (train, test) = dataset::training_split(kind, scale.train_n, 42);
+                    let gpu = GpuPredictor::train(device, &train, FeatureMode::Augmented, params);
+                    let mut mapes = [0.0f64; 4];
+                    mapes[0] = gpu.evaluate(device, &test);
+                    for t in 1..=3 {
+                        let cp = CpuPredictor::train(device, &train, t, params);
+                        mapes[t] = cp.evaluate(device, &test);
+                    }
+                    results.lock().unwrap().push((
+                        device.name().to_string(),
+                        kind.to_string(),
+                        mapes,
+                    ));
+                }
+            });
+        }
+    });
+    let mut rows_data = results.into_inner().unwrap();
+    rows_data.sort_by(|a, b| (order(&a.0), a.1.clone()).cmp(&(order(&b.0), b.1.clone())));
+    let rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|(d, k, m)| {
+            let mut r = vec![d.clone(), k.clone()];
+            r.extend(m.iter().map(|x| format!("{:.1}%", x * 100.0)));
+            r
+        })
+        .collect();
+    print_table(
+        "Table 1 — MAPEs of GBDT predictors",
+        &["device", "op", "GPU", "1 CPU", "2 CPUs", "3 CPUs"],
+        &rows,
+    );
+    write_csv("table1.csv", &["device", "op", "gpu", "cpu1", "cpu2", "cpu3"], &rows);
+    rows_data
+}
+
+fn order(name: &str) -> usize {
+    ["Pixel 4", "Pixel 5", "Moto 2022", "OnePlus 11"]
+        .iter()
+        .position(|&n| n == name)
+        .unwrap_or(9)
+}
+
+/// A (method, kind) speedup row of Table 2: speedups for 1..=3 threads.
+pub type SpeedupRow = [f64; 3];
+
+/// Table 2 result for one device.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub device: String,
+    pub gbdt_linear: SpeedupRow,
+    pub search_linear: SpeedupRow,
+    pub gbdt_conv: SpeedupRow,
+    pub search_conv: SpeedupRow,
+}
+
+/// Average speedup of the GBDT planner over a test set, vs GPU-only.
+fn gbdt_speedups(
+    device: &Device,
+    planner: &Planner,
+    ops: &[OpConfig],
+    threads: usize,
+    trials: u64,
+) -> f64 {
+    let speedups: Vec<f64> = ops
+        .iter()
+        .map(|op| {
+            let plan = planner.plan_with_threads(op, threads);
+            let t_co = planner.measure_plan_us(op, &plan, trials);
+            let t_gpu = device.measure_mean(op, Processor::Gpu, trials);
+            t_gpu / t_co
+        })
+        .collect();
+    mean(&speedups)
+}
+
+/// Average oracle speedup (measured grid search) over a subset of ops.
+fn search_speedups(device: &Device, ops: &[OpConfig], threads: usize, trials: u64) -> f64 {
+    let speedups: Vec<f64> = ops
+        .iter()
+        .map(|op| {
+            let (_, t_best) =
+                grid_search(device, op, threads, SyncMechanism::SvmPolling, trials);
+            let t_gpu = device.measure_mean(op, Processor::Gpu, trials);
+            t_gpu / t_best
+        })
+        .collect();
+    mean(&speedups)
+}
+
+fn take_frac<T: Clone>(items: &[T], frac: f64, seed: u64) -> Vec<T> {
+    let n = ((items.len() as f64 * frac).round() as usize).clamp(1, items.len());
+    let mut idx: Vec<usize> = (0..items.len()).collect();
+    let mut rng = SplitMix64::new(seed);
+    for i in 0..n {
+        let j = rng.gen_range(i, items.len() - 1);
+        idx.swap(i, j);
+    }
+    idx[..n].iter().map(|&i| items[i].clone()).collect()
+}
+
+/// Table 2: average co-execution speedups (GBDT planner vs grid-search
+/// oracle), per device / op kind / thread count.
+pub fn table2(scale: Scale) -> Vec<Table2Row> {
+    let linear_grid: Vec<OpConfig> = dataset::linear_test_grid()
+        .into_iter()
+        .map(OpConfig::Linear)
+        .collect();
+    let conv_grid: Vec<OpConfig> =
+        dataset::conv_test_grid().into_iter().map(OpConfig::Conv).collect();
+
+    let devices = Device::all();
+    let results = std::sync::Mutex::new(Vec::<Table2Row>::new());
+    std::thread::scope(|s| {
+        for device in &devices {
+            let (lg, cg) = (&linear_grid, &conv_grid);
+            let results = &results;
+            s.spawn(move || {
+                let lp = Planner::train_for_kind(device, "linear", scale.train_n, 42);
+                let cp = Planner::train_for_kind(device, "conv", scale.train_n, 42);
+                let l_test = take_frac(lg, scale.test_frac, 7);
+                let c_test = take_frac(cg, scale.test_frac, 8);
+                let l_oracle = take_frac(lg, scale.grid_frac, 9);
+                let c_oracle = take_frac(cg, scale.grid_frac, 10);
+                let mut row = Table2Row {
+                    device: device.name().to_string(),
+                    gbdt_linear: [0.0; 3],
+                    search_linear: [0.0; 3],
+                    gbdt_conv: [0.0; 3],
+                    search_conv: [0.0; 3],
+                };
+                for t in 1..=3 {
+                    row.gbdt_linear[t - 1] =
+                        gbdt_speedups(device, &lp, &l_test, t, scale.trials);
+                    row.search_linear[t - 1] =
+                        search_speedups(device, &l_oracle, t, scale.trials);
+                    row.gbdt_conv[t - 1] = gbdt_speedups(device, &cp, &c_test, t, scale.trials);
+                    row.search_conv[t - 1] =
+                        search_speedups(device, &c_oracle, t, scale.trials);
+                }
+                results.lock().unwrap().push(row);
+            });
+        }
+    });
+    let mut rows_data = results.into_inner().unwrap();
+    rows_data.sort_by_key(|r| order(&r.device));
+
+    let fmt = |s: &SpeedupRow| s.iter().map(|x| format!("{x:.2}x")).collect::<Vec<_>>();
+    let mut rows = Vec::new();
+    for r in &rows_data {
+        let mut a = vec![r.device.clone(), "GBDT".into()];
+        a.extend(fmt(&r.gbdt_linear));
+        a.extend(fmt(&r.gbdt_conv));
+        rows.push(a);
+        let mut b = vec![String::new(), "Search".into()];
+        b.extend(fmt(&r.search_linear));
+        b.extend(fmt(&r.search_conv));
+        rows.push(b);
+    }
+    print_table(
+        "Table 2 — average co-execution speedups (linear | conv, 1-3 CPU threads)",
+        &["device", "method", "lin-1t", "lin-2t", "lin-3t", "conv-1t", "conv-2t", "conv-3t"],
+        &rows,
+    );
+    write_csv(
+        "table2.csv",
+        &["device", "method", "lin1", "lin2", "lin3", "conv1", "conv2", "conv3"],
+        &rows,
+    );
+    rows_data
+}
+
+/// Table 3: end-to-end speedups (GPU + 3 CPU threads) for the four models.
+pub fn table3(scale: Scale) -> Vec<crate::scheduler::E2eReport> {
+    let devices = Device::all();
+    let reports = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for device in &devices {
+            let reports = &reports;
+            s.spawn(move || {
+                let lp = Planner::train_for_kind(device, "linear", scale.train_n, 42);
+                let cp = Planner::train_for_kind(device, "conv", scale.train_n, 42);
+                let sched = ModelScheduler {
+                    device,
+                    linear_planner: &lp,
+                    conv_planner: &cp,
+                    threads: 3,
+                    mech: SyncMechanism::SvmPolling,
+                };
+                let mut local = Vec::new();
+                for model in Model::paper_models() {
+                    local.push(sched.evaluate(&model));
+                }
+                reports.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut all = reports.into_inner().unwrap();
+    all.sort_by_key(|r| (order(r.device), r.model));
+
+    let rows: Vec<Vec<String>> = all
+        .iter()
+        .map(|r| {
+            vec![
+                r.device.to_string(),
+                r.model.to_string(),
+                format!("{:.1}", r.baseline_ms),
+                format!("{:.1}", r.individual_ms),
+                format!("{:.2}x", r.individual_speedup()),
+                format!("{:.1}", r.e2e_ms),
+                format!("{:.2}x", r.e2e_speedup()),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 3 — end-to-end speedups (GPU + 3 CPU threads)",
+        &["device", "model", "baseline_ms", "indiv_ms", "indiv_speedup", "e2e_ms", "e2e_speedup"],
+        &rows,
+    );
+    write_csv(
+        "table3.csv",
+        &["device", "model", "baseline_ms", "indiv_ms", "indiv_speedup", "e2e_ms", "e2e_speedup"],
+        &rows,
+    );
+    all
+}
+
+/// Table 4 (ablation, Moto 2022): full method vs w/o feature augmentation
+/// vs the event-wait sync baseline. Returns rows (label, linear 1-3t,
+/// conv 1-3t).
+pub fn table4(scale: Scale) -> Vec<(String, SpeedupRow, SpeedupRow)> {
+    let device = Device::moto2022();
+    let linear_grid: Vec<OpConfig> = take_frac(
+        &dataset::linear_test_grid().into_iter().map(OpConfig::Linear).collect::<Vec<_>>(),
+        scale.test_frac,
+        3,
+    );
+    let conv_grid: Vec<OpConfig> = take_frac(
+        &dataset::conv_test_grid().into_iter().map(OpConfig::Conv).collect::<Vec<_>>(),
+        scale.test_frac,
+        4,
+    );
+
+    let params = GbdtParams::default();
+    let mk_planner = |kind: &str, mode: FeatureMode, mech: SyncMechanism| {
+        let (train, _) = dataset::training_split(kind, scale.train_n, 42);
+        let preds = PredictorSet::train(&device, &train, mode, &params);
+        Planner::new(device.clone(), preds, mech)
+    };
+
+    let variants: Vec<(&str, FeatureMode, SyncMechanism)> = vec![
+        ("Ours", FeatureMode::Augmented, SyncMechanism::SvmPolling),
+        ("w/o Augmentation", FeatureMode::Basic, SyncMechanism::SvmPolling),
+        ("Original Overhead", FeatureMode::Augmented, SyncMechanism::EventWait),
+    ];
+
+    let mut out = Vec::new();
+    for (label, mode, mech) in variants {
+        let lp = mk_planner("linear", mode, mech);
+        let cp = mk_planner("conv", mode, mech);
+        let mut lin = [0.0; 3];
+        let mut conv = [0.0; 3];
+        for t in 1..=3 {
+            lin[t - 1] = gbdt_speedups(&device, &lp, &linear_grid, t, scale.trials);
+            conv[t - 1] = gbdt_speedups(&device, &cp, &conv_grid, t, scale.trials);
+        }
+        out.push((label.to_string(), lin, conv));
+    }
+
+    let rows: Vec<Vec<String>> = out
+        .iter()
+        .map(|(l, lin, conv)| {
+            let mut r = vec![l.clone()];
+            r.extend(lin.iter().map(|x| format!("{x:.2}x")));
+            r.extend(conv.iter().map(|x| format!("{x:.2}x")));
+            r
+        })
+        .collect();
+    print_table(
+        "Table 4 — ablation (Moto 2022): speedups (linear | conv, 1-3 threads)",
+        &["method", "lin-1t", "lin-2t", "lin-3t", "conv-1t", "conv-2t", "conv-3t"],
+        &rows,
+    );
+    write_csv(
+        "table4.csv",
+        &["method", "lin1", "lin2", "lin3", "conv1", "conv2", "conv3"],
+        &rows,
+    );
+    out
+}
+
+/// §4 / §5.5 sync-overhead claim: mean overhead per mechanism on the Moto
+/// 2022 model, plus the *real* host-measured rendezvous costs.
+pub fn sync_overhead_report() {
+    let device = Device::moto2022();
+    let mut rows = Vec::new();
+    for (kind, n_ops) in [("linear", dataset::LINEAR_TEST_COUNT), ("conv", dataset::CONV_TEST_COUNT)] {
+        for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+            rows.push(vec![
+                kind.to_string(),
+                format!("{mech:?}"),
+                format!("{:.1}", device.sync_overhead_us(mech, kind)),
+                n_ops.to_string(),
+            ]);
+        }
+    }
+    print_table(
+        "§4 — modelled sync overhead (Moto 2022)",
+        &["op", "mechanism", "mean_us", "ops"],
+        &rows,
+    );
+
+    let poll = crate::sync::measure_rendezvous_us(&crate::sync::PollingPair::new(), 500, 30.0);
+    let event = crate::sync::measure_rendezvous_us(&crate::sync::EventPair::new(), 500, 30.0);
+    let host_rows = vec![
+        vec!["polling".into(), format!("{:.2}", poll.mean_us), format!("{:.2}", poll.p50_us), format!("{:.2}", poll.p99_us)],
+        vec!["event".into(), format!("{:.2}", event.mean_us), format!("{:.2}", event.p50_us), format!("{:.2}", event.p99_us)],
+    ];
+    print_table(
+        "§4 — REAL host rendezvous overhead (two workers, 30us balanced work)",
+        &["mechanism", "mean_us", "p50_us", "p99_us"],
+        &host_rows,
+    );
+    write_csv("sync_overhead.csv", &["mechanism", "mean_us", "p50_us", "p99_us"], &host_rows);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_frac_bounds() {
+        let items: Vec<usize> = (0..100).collect();
+        assert_eq!(take_frac(&items, 0.1, 1).len(), 10);
+        assert_eq!(take_frac(&items, 0.0, 1).len(), 1);
+        assert_eq!(take_frac(&items, 1.0, 1).len(), 100);
+    }
+
+    #[test]
+    fn order_matches_paper() {
+        assert!(order("Pixel 4") < order("Pixel 5"));
+        assert!(order("Moto 2022") < order("OnePlus 11"));
+    }
+}

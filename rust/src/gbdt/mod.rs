@@ -1,0 +1,239 @@
+//! Gradient-boosted decision trees, from scratch.
+//!
+//! The paper trains LightGBM GBDTs (its §5.2) with Optuna hyperparameter
+//! search; this is the equivalent substrate: histogram-based regression
+//! trees, leaf-wise growth, shrinkage, row/feature subsampling, L1/L2
+//! regularization, gain-based feature importance (needed for Fig. 7), and
+//! a random-search tuner over the same ranges the paper lists.
+
+pub mod binning;
+pub mod tree;
+pub mod tuner;
+
+pub use tuner::{tune, TuneRange};
+
+use crate::device::noise::SplitMix64;
+use binning::BinnedMatrix;
+use tree::{Tree, TreeParams};
+
+/// Boosting hyperparameters (ranges follow the paper's §5.2).
+#[derive(Debug, Clone, Copy)]
+pub struct GbdtParams {
+    pub learning_rate: f64,
+    pub n_estimators: usize,
+    pub max_depth: usize,
+    pub max_leaves: usize,
+    pub min_samples_leaf: usize,
+    /// L1 regularization.
+    pub alpha: f64,
+    /// L2 regularization.
+    pub lambda: f64,
+    /// Row subsample ratio per tree (bagging).
+    pub subsample: f64,
+    /// Feature subsample ratio per tree.
+    pub feature_subsample: f64,
+    pub max_bins: usize,
+    pub seed: u64,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        Self {
+            learning_rate: 0.08,
+            n_estimators: 300,
+            max_depth: 12,
+            max_leaves: 96,
+            min_samples_leaf: 4,
+            alpha: 1e-4,
+            lambda: 1e-2,
+            subsample: 0.85,
+            feature_subsample: 0.9,
+            max_bins: 255,
+            seed: 7,
+        }
+    }
+}
+
+/// A fitted GBDT regressor.
+#[derive(Debug, Clone)]
+pub struct Gbdt {
+    pub base: f64,
+    pub learning_rate: f64,
+    pub trees: Vec<Tree>,
+    pub n_features: usize,
+}
+
+impl Gbdt {
+    /// Fit on a row-major feature matrix and targets.
+    pub fn fit(rows: &[Vec<f64>], targets: &[f64], params: &GbdtParams) -> Gbdt {
+        assert_eq!(rows.len(), targets.len());
+        assert!(!rows.is_empty());
+        let data = BinnedMatrix::fit(rows, params.max_bins);
+        let n = rows.len();
+        let n_features = rows[0].len();
+        let base = targets.iter().sum::<f64>() / n as f64;
+        let mut pred = vec![base; n];
+        let mut trees = Vec::with_capacity(params.n_estimators);
+        let mut rng = SplitMix64::new(params.seed);
+        let tp = TreeParams {
+            max_leaves: params.max_leaves,
+            max_depth: params.max_depth,
+            min_samples_leaf: params.min_samples_leaf,
+            lambda: params.lambda,
+            alpha: params.alpha,
+        };
+
+        let mut grad = vec![0.0f64; n];
+        for _ in 0..params.n_estimators {
+            for i in 0..n {
+                grad[i] = targets[i] - pred[i];
+            }
+            // row bagging
+            let rows_used: Vec<u32> = if params.subsample < 1.0 {
+                (0..n as u32)
+                    .filter(|_| rng.next_f64() < params.subsample)
+                    .collect()
+            } else {
+                (0..n as u32).collect()
+            };
+            if rows_used.len() < 2 * params.min_samples_leaf {
+                continue;
+            }
+            // feature bagging
+            let features: Vec<usize> = if params.feature_subsample < 1.0 {
+                let f: Vec<usize> = (0..n_features)
+                    .filter(|_| rng.next_f64() < params.feature_subsample)
+                    .collect();
+                if f.is_empty() {
+                    vec![rng.gen_range(0, n_features - 1)]
+                } else {
+                    f
+                }
+            } else {
+                (0..n_features).collect()
+            };
+
+            let t = Tree::fit(&data, &grad, &rows_used, &features, &tp);
+            if t.n_leaves() <= 1 {
+                break; // converged: no split improves
+            }
+            for i in 0..n {
+                pred[i] += params.learning_rate * t.predict(&rows[i]);
+            }
+            trees.push(t);
+        }
+        Gbdt { base, learning_rate: params.learning_rate, trees, n_features }
+    }
+
+    /// Predict a single row of raw features.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.n_features);
+        let mut y = self.base;
+        for t in &self.trees {
+            y += self.learning_rate * t.predict(x);
+        }
+        y
+    }
+
+    /// Predict many rows.
+    pub fn predict_batch(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict(r)).collect()
+    }
+
+    /// Gain importance per feature (paper Fig. 7: "total loss improvement
+    /// for all splits of a feature").
+    pub fn feature_importance(&self) -> Vec<f64> {
+        let mut imp = vec![0.0; self.n_features];
+        for t in &self.trees {
+            for (f, g) in t.feature_gain.iter().enumerate() {
+                imp[f] += g;
+            }
+        }
+        imp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic latency-like target: smooth trend + spiky term, mirroring
+    /// the structure the real predictors face.
+    fn synth(n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = SplitMix64::new(3);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.next_f64() * 100.0;
+            let b = rng.next_f64() * 10.0;
+            let c = rng.next_f64() * 5.0;
+            let target = 3.0 * a + b * b + if c > 2.5 { 40.0 } else { 0.0 };
+            rows.push(vec![a, b, c]);
+            y.push(target);
+        }
+        (rows, y)
+    }
+
+    #[test]
+    fn fits_nonlinear_function() {
+        let (rows, y) = synth(2000);
+        let model = Gbdt::fit(&rows, &y, &GbdtParams::default());
+        let pred = model.predict_batch(&rows);
+        let mape: f64 = rows
+            .iter()
+            .zip(&y)
+            .zip(&pred)
+            .map(|((_, &t), &p)| ((p - t) / t.max(1.0)).abs())
+            .sum::<f64>()
+            / rows.len() as f64;
+        assert!(mape < 0.05, "train MAPE {mape}");
+    }
+
+    #[test]
+    fn generalizes_to_held_out() {
+        let (rows, y) = synth(3000);
+        let (train_r, test_r) = rows.split_at(2400);
+        let (train_y, test_y) = y.split_at(2400);
+        let model = Gbdt::fit(train_r, train_y, &GbdtParams::default());
+        let mape: f64 = test_r
+            .iter()
+            .zip(test_y)
+            .map(|(r, &t)| ((model.predict(r) - t) / t.max(1.0)).abs())
+            .sum::<f64>()
+            / test_r.len() as f64;
+        assert!(mape < 0.10, "test MAPE {mape}");
+    }
+
+    #[test]
+    fn importance_finds_dominant_feature() {
+        let (rows, y) = synth(1500);
+        let model = Gbdt::fit(&rows, &y, &GbdtParams::default());
+        let imp = model.feature_importance();
+        // feature 0 (3*a over [0,100]) dominates the variance
+        assert!(imp[0] > imp[1] && imp[0] > imp[2], "{imp:?}");
+    }
+
+    #[test]
+    fn constant_target_predicts_constant() {
+        let rows: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let y = vec![5.0; 100];
+        let model = Gbdt::fit(&rows, &y, &GbdtParams::default());
+        assert!((model.predict(&[33.0]) - 5.0).abs() < 1e-6);
+        assert!(model.trees.len() <= 1);
+    }
+
+    #[test]
+    fn shrinkage_needs_more_trees() {
+        let (rows, y) = synth(800);
+        let slow = GbdtParams { learning_rate: 0.02, n_estimators: 10, ..Default::default() };
+        let fast = GbdtParams { learning_rate: 0.3, n_estimators: 10, ..Default::default() };
+        let err = |p: &GbdtParams| {
+            let m = Gbdt::fit(&rows, &y, p);
+            rows.iter()
+                .zip(&y)
+                .map(|(r, &t)| (m.predict(r) - t).powi(2))
+                .sum::<f64>()
+        };
+        assert!(err(&fast) < err(&slow));
+    }
+}

@@ -1,0 +1,298 @@
+//! A single histogram-based regression tree (leaf-wise growth).
+
+use super::binning::BinnedMatrix;
+
+/// Tree node: either an internal split or a leaf value.
+#[derive(Debug, Clone)]
+pub enum Node {
+    Split {
+        feature: usize,
+        /// Raw-value threshold: go left iff `x[feature] <= threshold`.
+        threshold: f64,
+        /// Bin-space threshold: go left iff `bin <= bin_threshold`.
+        bin_threshold: u8,
+        left: usize,
+        right: usize,
+    },
+    Leaf {
+        value: f64,
+    },
+}
+
+/// A fitted regression tree.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+    /// Gain contributed per feature by this tree's splits.
+    pub feature_gain: Vec<f64>,
+}
+
+/// Growth hyperparameters for one tree.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_leaves: usize,
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// L2 regularization on leaf sums.
+    pub lambda: f64,
+    /// L1 regularization on leaf sums (soft threshold).
+    pub alpha: f64,
+}
+
+struct Candidate {
+    node_slot: usize,
+    rows: Vec<u32>,
+    depth: usize,
+    sum_g: f64,
+    gain: f64,
+    split: Option<(usize, u8)>, // (feature, bin threshold)
+}
+
+fn leaf_value(sum_g: f64, n: usize, p: &TreeParams) -> f64 {
+    let num = sum_g.abs() - p.alpha;
+    if num <= 0.0 {
+        0.0
+    } else {
+        sum_g.signum() * num / (n as f64 + p.lambda)
+    }
+}
+
+fn score(sum_g: f64, n: f64, lambda: f64) -> f64 {
+    sum_g * sum_g / (n + lambda)
+}
+
+impl Tree {
+    /// Fit one tree to gradients (`grad[i]` = residual of row i) over the
+    /// rows in `row_set`, optionally restricted to `features`.
+    pub fn fit(
+        data: &BinnedMatrix,
+        grad: &[f64],
+        row_set: &[u32],
+        features: &[usize],
+        params: &TreeParams,
+    ) -> Tree {
+        let mut tree = Tree {
+            nodes: vec![Node::Leaf { value: 0.0 }],
+            feature_gain: vec![0.0; data.cols.len()],
+        };
+        let sum0: f64 = row_set.iter().map(|&r| grad[r as usize]).sum();
+        tree.nodes[0] = Node::Leaf { value: leaf_value(sum0, row_set.len(), params) };
+
+        let mut frontier: Vec<Candidate> = Vec::new();
+        let first =
+            Self::best_split(data, grad, row_set.to_vec(), features, params, 0, sum0, 0);
+        frontier.push(first);
+
+        let mut n_leaves = 1usize;
+        while n_leaves < params.max_leaves {
+            // leaf-wise: pick the frontier candidate with the highest gain
+            let (best_idx, _) = match frontier
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.split.is_some() && c.gain > 1e-12)
+                .max_by(|a, b| a.1.gain.partial_cmp(&b.1.gain).unwrap())
+            {
+                Some((i, c)) => (i, c.gain),
+                None => break,
+            };
+            let cand = frontier.swap_remove(best_idx);
+            let (feature, bin_thr) = cand.split.unwrap();
+
+            // partition rows
+            let col = &data.cols[feature];
+            let (mut left_rows, mut right_rows) = (Vec::new(), Vec::new());
+            for &r in &cand.rows {
+                if col[r as usize] <= bin_thr {
+                    left_rows.push(r);
+                } else {
+                    right_rows.push(r);
+                }
+            }
+            debug_assert!(!left_rows.is_empty() && !right_rows.is_empty());
+
+            let sum_l: f64 = left_rows.iter().map(|&r| grad[r as usize]).sum();
+            let sum_r = cand.sum_g - sum_l;
+
+            let left_slot = tree.nodes.len();
+            tree.nodes.push(Node::Leaf { value: leaf_value(sum_l, left_rows.len(), params) });
+            let right_slot = tree.nodes.len();
+            tree.nodes.push(Node::Leaf { value: leaf_value(sum_r, right_rows.len(), params) });
+            tree.nodes[cand.node_slot] = Node::Split {
+                feature,
+                threshold: data.bins[feature].threshold(bin_thr),
+                bin_threshold: bin_thr,
+                left: left_slot,
+                right: right_slot,
+            };
+            tree.feature_gain[feature] += cand.gain;
+            n_leaves += 1;
+
+            if cand.depth + 1 < params.max_depth {
+                frontier.push(Self::best_split(
+                    data, grad, left_rows, features, params, left_slot, sum_l,
+                    cand.depth + 1,
+                ));
+                frontier.push(Self::best_split(
+                    data, grad, right_rows, features, params, right_slot, sum_r,
+                    cand.depth + 1,
+                ));
+            }
+        }
+        tree
+    }
+
+    /// Histogram scan for the best split of one node.
+    #[allow(clippy::too_many_arguments)]
+    fn best_split(
+        data: &BinnedMatrix,
+        grad: &[f64],
+        rows: Vec<u32>,
+        features: &[usize],
+        params: &TreeParams,
+        node_slot: usize,
+        sum_g: f64,
+        depth: usize,
+    ) -> Candidate {
+        let n = rows.len();
+        let parent_score = score(sum_g, n as f64, params.lambda);
+        let mut best_gain = 0.0;
+        let mut best: Option<(usize, u8)> = None;
+
+        if n >= 2 * params.min_samples_leaf {
+            for &f in features {
+                let bins = &data.bins[f];
+                let nb = bins.n_bins();
+                if nb < 2 {
+                    continue;
+                }
+                let col = &data.cols[f];
+                let mut hist_g = vec![0.0f64; nb];
+                let mut hist_n = vec![0u32; nb];
+                for &r in &rows {
+                    let b = col[r as usize] as usize;
+                    hist_g[b] += grad[r as usize];
+                    hist_n[b] += 1;
+                }
+                let mut cum_g = 0.0;
+                let mut cum_n = 0u32;
+                for b in 0..nb - 1 {
+                    cum_g += hist_g[b];
+                    cum_n += hist_n[b];
+                    let n_l = cum_n as usize;
+                    let n_r = n - n_l;
+                    if n_l < params.min_samples_leaf || n_r < params.min_samples_leaf {
+                        continue;
+                    }
+                    let gain = score(cum_g, n_l as f64, params.lambda)
+                        + score(sum_g - cum_g, n_r as f64, params.lambda)
+                        - parent_score;
+                    if gain > best_gain {
+                        best_gain = gain;
+                        best = Some((f, b as u8));
+                    }
+                }
+            }
+        }
+        Candidate { node_slot, rows, depth, sum_g, gain: best_gain, split: best }
+    }
+
+    /// Predict from raw (un-binned) features.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right, .. } => {
+                    i = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Leaf { .. }))
+            .count()
+    }
+}
+
+fn _rows_from(n: usize) -> Vec<u32> {
+    (0..n as u32).collect()
+}
+
+impl Tree {
+    /// Convenience: fit on all rows / all features.
+    pub fn fit_all(data: &BinnedMatrix, grad: &[f64], params: &TreeParams) -> Tree {
+        let rows = _rows_from(data.n_rows);
+        let features: Vec<usize> = (0..data.cols.len()).collect();
+        Self::fit(data, grad, &rows, &features, params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> TreeParams {
+        TreeParams { max_leaves: 31, max_depth: 8, min_samples_leaf: 2, lambda: 1.0, alpha: 0.0 }
+    }
+
+    fn toy() -> (BinnedMatrix, Vec<f64>) {
+        // y = step function of x0 with an interaction on x1
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..200 {
+            let x0 = i as f64;
+            let x1 = (i % 7) as f64;
+            rows.push(vec![x0, x1]);
+            y.push(if x0 < 100.0 { 1.0 } else { 5.0 } + if x1 > 3.0 { 0.5 } else { 0.0 });
+        }
+        (BinnedMatrix::fit(&rows, 64), y)
+    }
+
+    #[test]
+    fn fits_step_function() {
+        let (data, y) = toy();
+        let tree = Tree::fit_all(&data, &y, &params());
+        assert!(tree.n_leaves() > 1, "no splits found");
+        let lo = tree.predict(&[50.0, 1.0]);
+        let hi = tree.predict(&[150.0, 1.0]);
+        assert!(hi - lo > 3.0, "lo {lo} hi {hi}");
+    }
+
+    #[test]
+    fn respects_max_leaves() {
+        let (data, y) = toy();
+        let p = TreeParams { max_leaves: 4, ..params() };
+        let tree = Tree::fit_all(&data, &y, &p);
+        assert!(tree.n_leaves() <= 4);
+    }
+
+    #[test]
+    fn importance_concentrates_on_x0() {
+        let (data, y) = toy();
+        let tree = Tree::fit_all(&data, &y, &params());
+        assert!(tree.feature_gain[0] > tree.feature_gain[1] * 5.0);
+    }
+
+    #[test]
+    fn pure_leaf_no_split() {
+        let rows: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64]).collect();
+        let y = vec![2.0; 50];
+        let data = BinnedMatrix::fit(&rows, 32);
+        let tree = Tree::fit_all(&data, &y, &params());
+        assert_eq!(tree.n_leaves(), 1);
+        assert!((tree.predict(&[25.0]) - 2.0 * 50.0 / (50.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn l1_shrinks_leaves() {
+        let rows: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y = vec![0.01; 10];
+        let data = BinnedMatrix::fit(&rows, 8);
+        let p = TreeParams { alpha: 1.0, ..params() };
+        let tree = Tree::fit_all(&data, &y, &p);
+        assert_eq!(tree.predict(&[3.0]), 0.0);
+    }
+}

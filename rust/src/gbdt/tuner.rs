@@ -1,0 +1,140 @@
+//! Random-search hyperparameter tuner (the paper uses Optuna; §5.2).
+//!
+//! Samples `n_trials` configurations from the paper's stated ranges
+//! (learning rate 0.01-0.2, estimators 100-1000, depth 5-20, leaves 16-512,
+//! L1/L2 1e-8..1, subsample 0.5-1), trains on the train split, scores MAPE
+//! on the validation split, and returns the best model + params. Trials run
+//! in parallel with rayon.
+
+use super::{Gbdt, GbdtParams};
+use crate::device::noise::SplitMix64;
+use crate::metrics::mape;
+
+/// Search ranges; defaults mirror the paper's §5.2.
+#[derive(Debug, Clone)]
+pub struct TuneRange {
+    pub learning_rate: (f64, f64),
+    pub n_estimators: (usize, usize),
+    pub max_depth: (usize, usize),
+    pub max_leaves: (usize, usize),
+    pub reg: (f64, f64),
+    pub subsample: (f64, f64),
+}
+
+impl Default for TuneRange {
+    fn default() -> Self {
+        Self {
+            learning_rate: (0.01, 0.2),
+            n_estimators: (100, 1000),
+            max_depth: (5, 20),
+            max_leaves: (16, 512),
+            reg: (1e-8, 1.0),
+            subsample: (0.5, 1.0),
+        }
+    }
+}
+
+fn sample(range: &TuneRange, rng: &mut SplitMix64, seed: u64) -> GbdtParams {
+    let logu = |lo: f64, hi: f64, r: &mut SplitMix64| {
+        (lo.ln() + (hi.ln() - lo.ln()) * r.next_f64()).exp()
+    };
+    GbdtParams {
+        learning_rate: logu(range.learning_rate.0, range.learning_rate.1, rng),
+        n_estimators: rng.gen_range(range.n_estimators.0, range.n_estimators.1),
+        max_depth: rng.gen_range(range.max_depth.0, range.max_depth.1),
+        max_leaves: rng.gen_range(range.max_leaves.0, range.max_leaves.1),
+        min_samples_leaf: rng.gen_range(2, 8),
+        alpha: logu(range.reg.0, range.reg.1, rng),
+        lambda: logu(range.reg.0, range.reg.1, rng),
+        subsample: range.subsample.0
+            + (range.subsample.1 - range.subsample.0) * rng.next_f64(),
+        feature_subsample: 0.7 + 0.3 * rng.next_f64(),
+        max_bins: 255,
+        seed,
+    }
+}
+
+/// Tune and return `(best_model, best_params, best_val_mape)`.
+///
+/// Targets may be in any space; `mape` is computed in that space, so pass
+/// raw latencies (not logs) for a latency-MAPE objective.
+pub fn tune(
+    train_x: &[Vec<f64>],
+    train_y: &[f64],
+    val_x: &[Vec<f64>],
+    val_y: &[f64],
+    range: &TuneRange,
+    n_trials: usize,
+    seed: u64,
+) -> (Gbdt, GbdtParams, f64) {
+    let mut rng = SplitMix64::new(seed);
+    let candidates: Vec<GbdtParams> = (0..n_trials)
+        .map(|i| sample(range, &mut rng, seed.wrapping_add(i as u64)))
+        .collect();
+
+    // Trials are independent: run them on scoped worker threads (rayon is
+    // unavailable offline; a chunked scope gives the same throughput here).
+    let workers = std::thread::available_parallelism().map_or(4, |n| n.get()).min(candidates.len().max(1));
+    let results: Vec<std::sync::Mutex<Vec<(Gbdt, GbdtParams, f64)>>> =
+        (0..workers).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    std::thread::scope(|scope| {
+        for (w, chunk) in candidates.chunks(candidates.len().div_ceil(workers)).enumerate() {
+            let slot = &results[w];
+            scope.spawn(move || {
+                let mut out = Vec::new();
+                for p in chunk {
+                    let model = Gbdt::fit(train_x, train_y, p);
+                    let pred = model.predict_batch(val_x);
+                    let err = mape(val_y, &pred);
+                    out.push((model, *p, err));
+                }
+                *slot.lock().unwrap() = out;
+            });
+        }
+    });
+    let scored: Vec<(Gbdt, GbdtParams, f64)> = results
+        .into_iter()
+        .flat_map(|m| m.into_inner().unwrap())
+        .collect();
+
+    scored
+        .into_iter()
+        .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+        .expect("n_trials >= 1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuner_beats_bad_default() {
+        let mut rng = SplitMix64::new(11);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..1200 {
+            let a = rng.next_f64() * 50.0 + 1.0;
+            let b = rng.next_f64() * 4.0;
+            xs.push(vec![a, b]);
+            ys.push(a * (1.0 + 0.3 * b.sin()) + 5.0);
+        }
+        let (tx, vx) = xs.split_at(900);
+        let (ty, vy) = ys.split_at(900);
+        let (_, params, err) = tune(tx, ty, vx, vy, &TuneRange::default(), 6, 1);
+        assert!(err < 0.08, "tuned val MAPE {err} with {params:?}");
+    }
+
+    #[test]
+    fn sample_respects_ranges() {
+        let mut rng = SplitMix64::new(2);
+        let range = TuneRange::default();
+        for i in 0..50 {
+            let p = sample(&range, &mut rng, i);
+            assert!(p.learning_rate >= 0.01 && p.learning_rate <= 0.2);
+            assert!(p.n_estimators >= 100 && p.n_estimators <= 1000);
+            assert!(p.max_depth >= 5 && p.max_depth <= 20);
+            assert!(p.max_leaves >= 16 && p.max_leaves <= 512);
+            assert!(p.subsample >= 0.5 && p.subsample <= 1.0);
+        }
+    }
+}

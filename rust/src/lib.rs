@@ -1,0 +1,63 @@
+//! # mobile-coexec
+//!
+//! Production-quality reproduction of *"Accelerating Mobile Inference
+//! through Fine-Grained CPU-GPU Co-Execution"* (Li, Paolieri, Golubchik —
+//! EPEW 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper speeds up single-layer inference on mobile SoCs by splitting
+//! the *output channels* of linear and convolutional layers between the CPU
+//! (XNNPACK, 1–3 threads) and the GPU (TFLite OpenCL delegate), driven by
+//! two contributions this crate implements end to end:
+//!
+//! 1. **White-box latency predictors** ([`predictor`], [`gbdt`]): GBDT
+//!    regressors whose input features include the GPU delegate's *dispatch
+//!    decisions* — selected kernel implementation (`conv_constant` /
+//!    `winograd` / `conv_generic`) and workgroup size/count — computed by
+//!    the same heuristics the delegate uses ([`device::gpu`]). These capture
+//!    the latency discontinuities that black-box (shape-only) models miss.
+//! 2. **Fine-grained SVM-style synchronization** ([`sync`]): the CPU and
+//!    GPU workers rendezvous through atomic flags in shared memory with
+//!    active polling, instead of event notification — reducing
+//!    per-layer synchronization overhead from ~160 µs to single-digit µs.
+//!
+//! On top of these sit the output-channel [`partition`] planner, the
+//! [`coexec`] engine (real two-worker execution over PJRT executables
+//! compiled ahead-of-time from JAX/Pallas — see `python/compile/`), a
+//! [`models`] zoo (VGG16, ResNet-18/34, Inception-v3, ViT-Base-32), the
+//! end-to-end [`scheduler`], the measurement [`device`] simulator standing
+//! in for the paper's four phones (see DESIGN.md §Hardware-Adaptation), the
+//! [`dataset`] generators of §5.2/§5.3, and the [`experiments`] harness
+//! that regenerates every table and figure of the paper.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use mobile_coexec::device::Device;
+//! use mobile_coexec::ops::{LinearConfig, OpConfig};
+//! use mobile_coexec::partition::Planner;
+//!
+//! let device = Device::pixel5();
+//! let op = OpConfig::Linear(LinearConfig { l: 50, cin: 768, cout: 3072 });
+//! let planner = Planner::train_for(&device, 3, 2000, 42); // 3 CPU threads
+//! let plan = planner.plan(&op);
+//! println!("CPU gets {} channels, GPU gets {}", plan.split.c_cpu, plan.split.c_gpu);
+//! ```
+
+pub mod benchutil;
+pub mod coexec;
+pub mod dataset;
+pub mod device;
+pub mod experiments;
+pub mod gbdt;
+pub mod metrics;
+pub mod models;
+pub mod ops;
+pub mod partition;
+pub mod predictor;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sync;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,217 @@
+//! `repro` — CLI for the mobile co-execution reproduction.
+//!
+//! Every figure/table of the paper maps to a subcommand (see DESIGN.md's
+//! experiment index):
+//!
+//! ```text
+//! repro fig   --id 2|3|5|6a|6b|7 [--quick]   regenerate a paper figure
+//! repro table --id 1|2|3|4       [--quick]   regenerate a paper table
+//! repro sync                                 §4 sync-overhead comparison
+//! repro plan  --device <name> --linear L,CIN,COUT [--threads N]
+//! repro coexec [--c1 N]                      REAL PJRT co-execution demo
+//! repro serve --device <name> [--addr A]     planning server
+//! repro all   [--quick]                      everything, in order
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline build has no clap.)
+
+use mobile_coexec::device::{Device, SyncMechanism};
+use mobile_coexec::experiments::{figures, tables, Scale};
+use mobile_coexec::ops::{LinearConfig, OpConfig};
+use mobile_coexec::partition::Planner;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let quick = args.iter().any(|a| a == "--quick");
+    let scale = Scale::from_flag(quick);
+    let get = |flag: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+
+    match cmd {
+        "fig" => {
+            let id = get("--id").unwrap_or_else(|| usage("fig needs --id"));
+            match id.as_str() {
+                "2" => {
+                    figures::fig2(scale);
+                }
+                "3" | "5" => {
+                    figures::fig3_fig5(scale);
+                }
+                "6a" => {
+                    figures::fig6a(scale);
+                }
+                "6b" => {
+                    figures::fig6b(scale);
+                }
+                "7" => {
+                    figures::fig7(scale);
+                }
+                other => usage(&format!("unknown figure id {other}")),
+            }
+        }
+        "table" => {
+            let id = get("--id").unwrap_or_else(|| usage("table needs --id"));
+            match id.as_str() {
+                "1" => {
+                    tables::table1(scale);
+                }
+                "2" => {
+                    tables::table2(scale);
+                }
+                "3" => {
+                    tables::table3(scale);
+                }
+                "4" => {
+                    tables::table4(scale);
+                }
+                other => usage(&format!("unknown table id {other}")),
+            }
+        }
+        "sync" => tables::sync_overhead_report(),
+        "plan" => {
+            let device = parse_device(&get("--device").unwrap_or_else(|| "pixel5".into()));
+            let dims = get("--linear").unwrap_or_else(|| "50,768,3072".into());
+            let d: Vec<usize> = dims.split(',').map(|s| s.parse().expect("dim")).collect();
+            let threads: usize =
+                get("--threads").map(|t| t.parse().expect("threads")).unwrap_or(3);
+            let op = OpConfig::Linear(LinearConfig::new(d[0], d[1], d[2]));
+            eprintln!("training planner for {} ...", device.name());
+            let planner = Planner::train_for_kind(&device, "linear", scale.train_n, 42);
+            let plan = planner.plan_with_threads(&op, threads);
+            let measured = planner.measure_plan_us(&op, &plan, 16);
+            let gpu_only =
+                device.measure_mean(&op, mobile_coexec::device::Processor::Gpu, 16);
+            println!(
+                "{op} on {} with {threads} CPU threads:\n  plan: CPU {} ch | GPU {} ch (predicted {:.1} us)\n  measured co-exec {:.1} us vs GPU-only {:.1} us -> {:.2}x speedup",
+                device.name(),
+                plan.split.c_cpu,
+                plan.split.c_gpu,
+                plan.t_total_us,
+                measured,
+                gpu_only,
+                gpu_only / measured
+            );
+        }
+        "coexec" => {
+            let c1: usize = get("--c1").map(|s| s.parse().expect("c1")).unwrap_or(592);
+            run_real_coexec(c1).unwrap_or_else(|e| {
+                eprintln!("coexec failed: {e:#}");
+                std::process::exit(1);
+            });
+        }
+        "serve" => {
+            let device = parse_device(&get("--device").unwrap_or_else(|| "pixel5".into()));
+            let addr = get("--addr").unwrap_or_else(|| "127.0.0.1:7077".into());
+            eprintln!("training planners (offline compilation step) ...");
+            let state = std::sync::Arc::new(mobile_coexec::server::ServerState::new(
+                device,
+                scale.train_n,
+                42,
+            ));
+            mobile_coexec::server::serve(state, &addr).expect("serve");
+        }
+        "all" => {
+            figures::fig2(scale);
+            figures::fig3_fig5(scale);
+            figures::fig6a(scale);
+            figures::fig6b(scale);
+            figures::fig7(scale);
+            tables::sync_overhead_report();
+            tables::table1(scale);
+            tables::table2(scale);
+            tables::table3(scale);
+            tables::table4(scale);
+            println!("\nall experiments done; CSVs in results/");
+        }
+        _ => {
+            println!(
+                "repro — CPU-GPU co-execution reproduction (EPEW 2025)\n\n\
+                 usage:\n  repro fig   --id 2|3|5|6a|6b|7 [--quick]\n  \
+                 repro table --id 1|2|3|4 [--quick]\n  repro sync\n  \
+                 repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N]\n  \
+                 repro coexec [--c1 N]\n  repro serve --device <name> [--addr HOST:PORT]\n  \
+                 repro all [--quick]"
+            );
+        }
+    }
+}
+
+fn parse_device(name: &str) -> Device {
+    match name.to_ascii_lowercase().as_str() {
+        "pixel4" => Device::pixel4(),
+        "pixel5" => Device::pixel5(),
+        "moto2022" | "moto" => Device::moto2022(),
+        "oneplus11" | "oneplus" => Device::oneplus11(),
+        other => usage(&format!("unknown device {other}")),
+    }
+}
+
+fn usage(msg: &str) -> ! {
+    eprintln!("error: {msg} (run `repro help`)");
+    std::process::exit(2);
+}
+
+/// Real three-layer demo: AOT JAX/Pallas artifacts executed by two PJRT
+/// workers with SVM-style polling, verified against the fused reference.
+fn run_real_coexec(c1: usize) -> anyhow::Result<()> {
+    use mobile_coexec::coexec::CoexecEngine;
+    use mobile_coexec::device::noise::SplitMix64;
+
+    let (l, cin, cout) = (50usize, 768usize, 3072usize);
+    let mut rng = SplitMix64::new(7);
+    let mut gen = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 0.2).collect()
+    };
+    let x = gen(l * cin);
+    let w = gen(cin * cout);
+    let b = gen(cout);
+
+    let engine = CoexecEngine::with_default_artifacts()?;
+    let artifacts =
+        mobile_coexec::runtime::read_manifest(&mobile_coexec::runtime::Runtime::default_dir())?;
+    let has_artifact = artifacts.iter().any(|a| a.name == format!("linear_cpu_c{c1}"));
+    let split =
+        has_artifact.then(|| (format!("linear_cpu_c{c1}"), format!("linear_gpu_c{c1}")));
+    println!(
+        "running linear({l},{cin},{cout}) split at c1={c1} via {}",
+        if split.is_some() { "AOT JAX/Pallas artifacts" } else { "XlaBuilder slices" }
+    );
+
+    for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+        // warm-up compiles, then a few timed runs
+        let mut reports = Vec::new();
+        for i in 0..6 {
+            let (y, report) =
+                engine.run_linear(&x, &w, &b, (l, cin, cout), c1, mech, split.clone())?;
+            if i == 0 {
+                // verify against the fused full artifact
+                let want =
+                    engine.run_full_reference("linear_full", &x, &w, &b, (l, cin, cout))?;
+                let max_err = y
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                anyhow::ensure!(max_err < 1e-3, "output mismatch: max err {max_err}");
+                println!("  numerics verified vs fused reference (max err {max_err:.2e})");
+            } else {
+                reports.push(report);
+            }
+        }
+        let mean_wall = reports.iter().map(|r| r.wall_us).sum::<f64>() / reports.len() as f64;
+        let mean_wait = reports
+            .iter()
+            .map(|r| r.cpu.wait_us.min(r.gpu.wait_us))
+            .sum::<f64>()
+            / reports.len() as f64;
+        println!(
+            "  {mech:?}: wall {mean_wall:.0} us, winner-side rendezvous wait {mean_wait:.1} us"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Evaluation metrics and small statistics helpers.
+
+/// Mean Absolute Percentage Error (the paper's Table 1 metric).
+pub fn mape(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    assert!(!actual.is_empty());
+    actual
+        .iter()
+        .zip(predicted)
+        .map(|(&a, &p)| ((p - a) / a).abs())
+        .sum::<f64>()
+        / actual.len() as f64
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Half-width of a 95% confidence interval for the mean (normal approx.,
+/// as in the paper's Fig. 2 error bars).
+pub fn ci95_halfwidth(xs: &[f64]) -> f64 {
+    1.96 * stddev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// `p`-th percentile (0..=100), linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty() && (0.0..=100.0).contains(&p));
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = p / 100.0 * (s.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Geometric mean (speedup aggregation alternative).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mape_basic() {
+        assert!((mape(&[100.0, 200.0], &[110.0, 180.0]) - 0.10).abs() < 1e-12);
+        assert_eq!(mape(&[5.0], &[5.0]), 0.0);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((stddev(&xs) - 1.2909944487).abs() < 1e-9);
+        assert!(ci95_halfwidth(&xs) > 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn geomean_of_equal_is_value() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+}

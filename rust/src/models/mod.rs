@@ -1,0 +1,313 @@
+//! Model zoo: the end-to-end networks of the paper's §5.4 (VGG16,
+//! ResNet-18/34, Inception-v3) plus ViT-Base-32 (the running example of
+//! §§1-3), expressed as flat per-layer op lists.
+//!
+//! The scheduler only needs each layer's *configuration* (the paper's
+//! per-op offline partitioning); weights live in the AOT artifacts for the
+//! ops that execute for real. Pooling layers are always pinned to the GPU
+//! ("pooling operations are always scheduled on the GPU, since their
+//! latency is negligible and this can avoid the synchronization overhead",
+//! §5.4).
+
+use crate::ops::{ConvConfig, LinearConfig, OpConfig};
+
+/// One layer of a network, as the scheduler sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Layer {
+    Conv(ConvConfig),
+    Linear(LinearConfig),
+    /// Pooling over an `h x w x c` map (kernel `k`, stride `s`).
+    Pool { h: usize, w: usize, c: usize, k: usize, stride: usize },
+}
+
+impl Layer {
+    /// The partitionable op config, if this layer is partitionable.
+    pub fn op(&self) -> Option<OpConfig> {
+        match self {
+            Layer::Conv(c) => Some(OpConfig::Conv(*c)),
+            Layer::Linear(c) => Some(OpConfig::Linear(*c)),
+            Layer::Pool { .. } => None,
+        }
+    }
+
+    /// Bytes of this layer's output (f32), for handoff costing.
+    pub fn output_bytes(&self) -> f64 {
+        match self {
+            Layer::Conv(c) => (c.out_positions() * c.cout * 4) as f64,
+            Layer::Linear(c) => (c.l * c.cout * 4) as f64,
+            Layer::Pool { h, w, c, stride, .. } => {
+                (h.div_ceil(*stride) * w.div_ceil(*stride) * c * 4) as f64
+            }
+        }
+    }
+}
+
+/// A whole network as a flat op list.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    /// Total FLOPs of partitionable layers.
+    pub fn flops(&self) -> f64 {
+        self.layers.iter().filter_map(|l| l.op()).map(|o| o.flops()).sum()
+    }
+
+    pub fn conv_count(&self) -> usize {
+        self.layers.iter().filter(|l| matches!(l, Layer::Conv(_))).count()
+    }
+
+    pub fn linear_count(&self) -> usize {
+        self.layers.iter().filter(|l| matches!(l, Layer::Linear(_))).count()
+    }
+
+    /// All four §5.4 evaluation networks.
+    pub fn paper_models() -> Vec<Model> {
+        vec![vgg16(), resnet18(), resnet34(), inception_v3()]
+    }
+}
+
+fn conv(h: usize, cin: usize, cout: usize, k: usize, s: usize) -> Layer {
+    Layer::Conv(ConvConfig::new(h, h, cin, cout, k, s))
+}
+
+fn conv_rect(h: usize, cin: usize, cout: usize, kh: usize, kw: usize) -> Layer {
+    Layer::Conv(ConvConfig::new_rect(h, h, cin, cout, kh, kw, 1))
+}
+
+fn pool(h: usize, c: usize) -> Layer {
+    Layer::Pool { h, w: h, c, k: 2, stride: 2 }
+}
+
+/// VGG16 (Simonyan & Zisserman 2014), 224x224x3 input.
+pub fn vgg16() -> Model {
+    let mut l = Vec::new();
+    // block 1: 224
+    l.push(conv(224, 3, 64, 3, 1));
+    l.push(conv(224, 64, 64, 3, 1));
+    l.push(pool(224, 64));
+    // block 2: 112
+    l.push(conv(112, 64, 128, 3, 1));
+    l.push(conv(112, 128, 128, 3, 1));
+    l.push(pool(112, 128));
+    // block 3: 56
+    l.push(conv(56, 128, 256, 3, 1));
+    l.push(conv(56, 256, 256, 3, 1));
+    l.push(conv(56, 256, 256, 3, 1));
+    l.push(pool(56, 256));
+    // block 4: 28
+    l.push(conv(28, 256, 512, 3, 1));
+    l.push(conv(28, 512, 512, 3, 1));
+    l.push(conv(28, 512, 512, 3, 1));
+    l.push(pool(28, 512));
+    // block 5: 14
+    l.push(conv(14, 512, 512, 3, 1));
+    l.push(conv(14, 512, 512, 3, 1));
+    l.push(conv(14, 512, 512, 3, 1));
+    l.push(pool(14, 512));
+    // classifier
+    l.push(Layer::Linear(LinearConfig::new(1, 25088, 4096)));
+    l.push(Layer::Linear(LinearConfig::new(1, 4096, 4096)));
+    l.push(Layer::Linear(LinearConfig::new(1, 4096, 1000)));
+    Model { name: "VGG16", layers: l }
+}
+
+/// A ResNet basic block (two 3x3 convs; `down` adds the 1x1 projection).
+fn basic_block(l: &mut Vec<Layer>, h: usize, cin: usize, cout: usize, down: bool) {
+    let s = if down { 2 } else { 1 };
+    l.push(conv(h, cin, cout, 3, s));
+    l.push(conv(h.div_ceil(s), cout, cout, 3, 1));
+    if down {
+        l.push(conv(h, cin, cout, 1, 2)); // projection shortcut
+    }
+}
+
+fn resnet(name: &'static str, blocks: [usize; 4]) -> Model {
+    let mut l = Vec::new();
+    l.push(conv(224, 3, 64, 7, 2)); // stem
+    l.push(Layer::Pool { h: 112, w: 112, c: 64, k: 3, stride: 2 });
+    let stages = [(56usize, 64usize), (56, 128), (28, 256), (14, 512)];
+    let mut cin = 64;
+    for (si, &n) in blocks.iter().enumerate() {
+        let (mut h, cout) = stages[si];
+        for b in 0..n {
+            let down = si > 0 && b == 0;
+            basic_block(&mut l, h, cin, cout, down);
+            if down {
+                h /= 2;
+            }
+            cin = cout;
+        }
+    }
+    l.push(Layer::Linear(LinearConfig::new(1, 512, 1000)));
+    Model { name, layers: l }
+}
+
+/// ResNet-18 (He et al. 2016).
+pub fn resnet18() -> Model {
+    resnet("ResNet-18", [2, 2, 2, 2])
+}
+
+/// ResNet-34.
+pub fn resnet34() -> Model {
+    resnet("ResNet-34", [3, 4, 6, 3])
+}
+
+/// Inception-v3 (Szegedy et al. 2016), 299x299x3 input. Factorized 1x7/7x1
+/// and 1x3/3x1 convolutions are modelled as rectangular filters.
+pub fn inception_v3() -> Model {
+    let mut l = Vec::new();
+    // stem (SAME-padding spatial bookkeeping; real net uses VALID, one
+    // pixel off per stage — immaterial for latency shape)
+    l.push(conv(299, 3, 32, 3, 2)); // -> 150
+    l.push(conv(150, 32, 32, 3, 1));
+    l.push(conv(150, 32, 64, 3, 1));
+    l.push(Layer::Pool { h: 150, w: 150, c: 64, k: 3, stride: 2 }); // -> 75
+    l.push(conv(75, 64, 80, 1, 1));
+    l.push(conv(75, 80, 192, 3, 1));
+    l.push(Layer::Pool { h: 75, w: 75, c: 192, k: 3, stride: 2 }); // -> 38
+
+    // 3x InceptionA at 38x38
+    let inception_a = |l: &mut Vec<Layer>, cin: usize, pool_ch: usize| {
+        l.push(conv(38, cin, 64, 1, 1)); // b1
+        l.push(conv(38, cin, 48, 1, 1)); // b2
+        l.push(conv(38, 48, 64, 5, 1));
+        l.push(conv(38, cin, 64, 1, 1)); // b3
+        l.push(conv(38, 64, 96, 3, 1));
+        l.push(conv(38, 96, 96, 3, 1));
+        l.push(conv(38, cin, pool_ch, 1, 1)); // b4 (after avg pool)
+    };
+    inception_a(&mut l, 192, 32); // -> 256
+    inception_a(&mut l, 256, 64); // -> 288
+    inception_a(&mut l, 288, 64); // -> 288
+
+    // ReductionA: 38 -> 19
+    l.push(conv(38, 288, 384, 3, 2));
+    l.push(conv(38, 288, 64, 1, 1));
+    l.push(conv(38, 64, 96, 3, 1));
+    l.push(conv(38, 96, 96, 3, 2));
+    l.push(Layer::Pool { h: 38, w: 38, c: 288, k: 3, stride: 2 }); // -> 768 ch
+
+    // 4x InceptionB at 19x19 with c7 = 128,160,160,192
+    let inception_b = |l: &mut Vec<Layer>, c7: usize| {
+        let cin = 768;
+        l.push(conv(19, cin, 192, 1, 1)); // b1
+        l.push(conv(19, cin, c7, 1, 1)); // b2: 1x1 -> 1x7 -> 7x1
+        l.push(conv_rect(19, c7, c7, 1, 7));
+        l.push(conv_rect(19, c7, 192, 7, 1));
+        l.push(conv(19, cin, c7, 1, 1)); // b3: double 7x7 factorized
+        l.push(conv_rect(19, c7, c7, 7, 1));
+        l.push(conv_rect(19, c7, c7, 1, 7));
+        l.push(conv_rect(19, c7, c7, 7, 1));
+        l.push(conv_rect(19, c7, 192, 1, 7));
+        l.push(conv(19, cin, 192, 1, 1)); // b4
+    };
+    inception_b(&mut l, 128);
+    inception_b(&mut l, 160);
+    inception_b(&mut l, 160);
+    inception_b(&mut l, 192);
+
+    // ReductionB: 19 -> 10
+    l.push(conv(19, 768, 192, 1, 1));
+    l.push(conv(19, 192, 320, 3, 2));
+    l.push(conv(19, 768, 192, 1, 1));
+    l.push(conv_rect(19, 192, 192, 1, 7));
+    l.push(conv_rect(19, 192, 192, 7, 1));
+    l.push(conv(19, 192, 192, 3, 2));
+    l.push(Layer::Pool { h: 19, w: 19, c: 768, k: 3, stride: 2 }); // -> 1280 ch
+
+    // 2x InceptionC at 10x10
+    let inception_c = |l: &mut Vec<Layer>, cin: usize| {
+        l.push(conv(10, cin, 320, 1, 1)); // b1
+        l.push(conv(10, cin, 384, 1, 1)); // b2 -> split 1x3 / 3x1
+        l.push(conv_rect(10, 384, 384, 1, 3));
+        l.push(conv_rect(10, 384, 384, 3, 1));
+        l.push(conv(10, cin, 448, 1, 1)); // b3
+        l.push(conv(10, 448, 384, 3, 1));
+        l.push(conv_rect(10, 384, 384, 1, 3));
+        l.push(conv_rect(10, 384, 384, 3, 1));
+        l.push(conv(10, cin, 192, 1, 1)); // b4
+    };
+    inception_c(&mut l, 1280); // -> 2048
+    inception_c(&mut l, 2048);
+
+    l.push(Layer::Linear(LinearConfig::new(1, 2048, 1000)));
+    Model { name: "Inception-v3", layers: l }
+}
+
+/// ViT-Base-32 (Dosovitskiy et al. 2020), 224x224x3 input: 7x7 = 49 patches
+/// + CLS = 50 tokens — the `L = 50` of the paper's running example.
+pub fn vit_base32() -> Model {
+    let mut l = Vec::new();
+    // patch embedding: 32x32 conv, stride 32
+    l.push(conv(224, 3, 768, 32, 32));
+    for _ in 0..12 {
+        l.push(Layer::Linear(LinearConfig::new(50, 768, 2304))); // qkv
+        l.push(Layer::Linear(LinearConfig::new(50, 768, 768))); // attn out
+        l.push(Layer::Linear(LinearConfig::new(50, 768, 3072))); // fc1
+        l.push(Layer::Linear(LinearConfig::new(50, 3072, 768))); // fc2
+    }
+    l.push(Layer::Linear(LinearConfig::new(1, 768, 1000))); // head
+    Model { name: "ViT-Base-32", layers: l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_structure() {
+        let m = vgg16();
+        assert_eq!(m.conv_count(), 13);
+        assert_eq!(m.linear_count(), 3);
+        // ~15.5 GFLOPs conv+fc at 224x224 (SAME-padding bookkeeping)
+        assert!(m.flops() > 2.5e10 && m.flops() < 3.5e10, "{}", m.flops());
+    }
+
+    #[test]
+    fn resnet_depths() {
+        // conv count: 18 = 1 stem + 16 block convs (+3 projections)
+        assert_eq!(resnet18().conv_count(), 1 + 16 + 3);
+        assert_eq!(resnet34().conv_count(), 1 + 32 + 3);
+        assert_eq!(resnet18().linear_count(), 1);
+    }
+
+    #[test]
+    fn resnet_flops_ratio() {
+        // ResNet-34 is roughly 2x ResNet-18 in FLOPs
+        let r = resnet34().flops() / resnet18().flops();
+        assert!(r > 1.7 && r < 2.3, "ratio {r}");
+    }
+
+    #[test]
+    fn inception_has_factorized_convs() {
+        let m = inception_v3();
+        let rect = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Conv(c) if c.k != c.kw))
+            .count();
+        assert!(rect >= 20, "only {rect} rectangular convs");
+        assert!(m.conv_count() > 80, "{}", m.conv_count());
+    }
+
+    #[test]
+    fn vit_flagship_op_present() {
+        let m = vit_base32();
+        let has = m.layers.iter().any(|l| {
+            matches!(l, Layer::Linear(c) if c.l == 50 && c.cin == 768 && c.cout == 3072)
+        });
+        assert!(has, "ViT fc1 (50,768,3072) missing");
+    }
+
+    #[test]
+    fn output_bytes_positive() {
+        for m in Model::paper_models() {
+            for layer in &m.layers {
+                assert!(layer.output_bytes() > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Operator configurations: the paper's two partitionable layer types.
+//!
+//! A linear layer multiplies `X (L x Cin)` by `W (Cin x Cout)`; a
+//! convolutional layer applies `Cout` filters of shape `K x K x Cin` to an
+//! `Hin x Win x Cin` feature map with stride `S` (Section 2 of the paper).
+//! Both are partitioned **along output channels**: channels `[0, c1)` run on
+//! the CPU, `[c1, Cout)` on the GPU, and each compute unit owns its slice of
+//! the weights (paper Fig. 4).
+
+mod split;
+
+pub use split::{ChannelSplit, Partitionable};
+
+
+/// Linear (fully-connected) layer configuration: `Y = X W`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinearConfig {
+    /// Number of input rows (sequence length / batch of activations).
+    pub l: usize,
+    /// Input channels (columns of `X`, rows of `W`).
+    pub cin: usize,
+    /// Output channels (columns of `W`): the partitioned dimension.
+    pub cout: usize,
+}
+
+impl LinearConfig {
+    pub const fn new(l: usize, cin: usize, cout: usize) -> Self {
+        Self { l, cin, cout }
+    }
+
+    /// The paper's flagship example: ViT-Base-32 MLP fc1 (Sections 1, 3).
+    pub const fn vit_fc1() -> Self {
+        Self::new(50, 768, 3072)
+    }
+
+    /// FLOPs (2 x MACs), the paper's workload-size filter metric.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.l as f64 * self.cin as f64 * self.cout as f64
+    }
+
+    /// Bytes touched (input + weights + output), f32.
+    pub fn bytes(&self) -> f64 {
+        4.0 * (self.l * self.cin + self.cin * self.cout + self.l * self.cout) as f64
+    }
+
+    /// A copy with a different number of output channels (partition slice).
+    pub fn with_cout(&self, cout: usize) -> Self {
+        Self { cout, ..*self }
+    }
+}
+
+/// Convolutional layer configuration (square input and filter, NHWC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvConfig {
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Input channels.
+    pub cin: usize,
+    /// Output channels: the partitioned dimension.
+    pub cout: usize,
+    /// Filter height `K` (square `K x K` unless `kw` differs).
+    pub k: usize,
+    /// Filter width (equals `k` for square filters; Inception-v3 uses
+    /// factorized 1x7 / 7x1 convolutions).
+    pub kw: usize,
+    /// Stride `S` (SAME padding: `Hout = ceil(Hin / S)`).
+    pub stride: usize,
+}
+
+impl ConvConfig {
+    pub const fn new(h: usize, w: usize, cin: usize, cout: usize, k: usize, stride: usize) -> Self {
+        Self { h, w, cin, cout, k, kw: k, stride }
+    }
+
+    /// Rectangular filter constructor (`kh x kw`), e.g. Inception's 1x7.
+    pub const fn new_rect(
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+    ) -> Self {
+        Self { h, w, cin, cout, k: kh, kw, stride }
+    }
+
+    /// The paper's Fig. 6b workload: 3x3 conv over a 64x64x128 feature map.
+    pub const fn fig6b(cout: usize) -> Self {
+        Self::new(64, 64, 128, cout, 3, 1)
+    }
+
+    /// Output height: `Hout = floor(Hin / S)` (the paper's Section 2
+    /// definition).
+    pub fn h_out(&self) -> usize {
+        (self.h / self.stride).max(1)
+    }
+
+    /// Output width: `Wout = floor(Win / S)`.
+    pub fn w_out(&self) -> usize {
+        (self.w / self.stride).max(1)
+    }
+
+    /// Number of output spatial positions.
+    pub fn out_positions(&self) -> usize {
+        self.h_out() * self.w_out()
+    }
+
+    /// FLOPs (2 x MACs).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.out_positions() as f64
+            * (self.k * self.kw * self.cin) as f64
+            * self.cout as f64
+    }
+
+    /// Weight bytes (f32) — the `conv_constant` eligibility input.
+    pub fn weight_bytes(&self) -> usize {
+        4 * self.k * self.kw * self.cin * self.cout
+    }
+
+    /// Bytes touched (input + weights + output), f32.
+    pub fn bytes(&self) -> f64 {
+        4.0 * (self.h * self.w * self.cin
+            + self.k * self.kw * self.cin * self.cout
+            + self.out_positions() * self.cout) as f64
+    }
+
+    /// A copy with a different number of output channels (partition slice).
+    pub fn with_cout(&self, cout: usize) -> Self {
+        Self { cout, ..*self }
+    }
+}
+
+/// Any partitionable operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpConfig {
+    Linear(LinearConfig),
+    Conv(ConvConfig),
+}
+
+impl OpConfig {
+    /// Total output channels (the partitioned dimension).
+    pub fn cout(&self) -> usize {
+        match self {
+            OpConfig::Linear(c) => c.cout,
+            OpConfig::Conv(c) => c.cout,
+        }
+    }
+
+    /// FLOPs (2 x MACs).
+    pub fn flops(&self) -> f64 {
+        match self {
+            OpConfig::Linear(c) => c.flops(),
+            OpConfig::Conv(c) => c.flops(),
+        }
+    }
+
+    /// Bytes touched, f32.
+    pub fn bytes(&self) -> f64 {
+        match self {
+            OpConfig::Linear(c) => c.bytes(),
+            OpConfig::Conv(c) => c.bytes(),
+        }
+    }
+
+    /// Short kind tag ("linear" / "conv") for logs and CSVs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            OpConfig::Linear(_) => "linear",
+            OpConfig::Conv(_) => "conv",
+        }
+    }
+
+    /// The op restricted to `cout` output channels.
+    pub fn with_cout(&self, cout: usize) -> Self {
+        match self {
+            OpConfig::Linear(c) => OpConfig::Linear(c.with_cout(cout)),
+            OpConfig::Conv(c) => OpConfig::Conv(c.with_cout(cout)),
+        }
+    }
+}
+
+impl std::fmt::Display for OpConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OpConfig::Linear(c) => write!(f, "linear({},{},{})", c.l, c.cin, c.cout),
+            OpConfig::Conv(c) => write!(
+                f,
+                "conv({}x{}x{},{}k{}s{})",
+                c.h, c.w, c.cin, c.cout, c.k, c.stride
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_flops() {
+        let c = LinearConfig::vit_fc1();
+        assert_eq!(c.flops(), 2.0 * 50.0 * 768.0 * 3072.0);
+    }
+
+    #[test]
+    fn conv_out_dims_same_padding() {
+        let c = ConvConfig::new(64, 64, 128, 256, 3, 1);
+        assert_eq!((c.h_out(), c.w_out()), (64, 64));
+        let c = ConvConfig::new(57, 57, 128, 256, 3, 2);
+        assert_eq!((c.h_out(), c.w_out()), (28, 28));
+    }
+
+    #[test]
+    fn conv_flops_fig6b() {
+        let c = ConvConfig::fig6b(128);
+        assert_eq!(c.flops(), 2.0 * 64.0 * 64.0 * 9.0 * 128.0 * 128.0);
+    }
+
+    #[test]
+    fn with_cout_preserves_rest() {
+        let op = OpConfig::Conv(ConvConfig::fig6b(192));
+        let op2 = op.with_cout(64);
+        assert_eq!(op2.cout(), 64);
+        match op2 {
+            OpConfig::Conv(c) => assert_eq!((c.h, c.k, c.stride), (64, 3, 1)),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn display_is_stable() {
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        assert_eq!(op.to_string(), "linear(50,768,3072)");
+    }
+}

@@ -1,0 +1,92 @@
+//! Output-channel partitioning (paper Section 2, Fig. 4).
+
+use super::OpConfig;
+
+/// A partition of `cout` output channels: `c_cpu + c_gpu == cout`.
+///
+/// The CPU computes channels `[0, c_cpu)`, the GPU `[c_cpu, cout)`; the two
+/// results are concatenated in the shared output buffer (fine-grained SVM in
+/// the paper; a plain shared slice in our two-worker engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ChannelSplit {
+    pub c_cpu: usize,
+    pub c_gpu: usize,
+}
+
+impl ChannelSplit {
+    pub fn new(c_cpu: usize, c_gpu: usize) -> Self {
+        Self { c_cpu, c_gpu }
+    }
+
+    /// Exclusive-GPU execution (`c1 = 0`): the paper's baseline.
+    pub fn gpu_only(cout: usize) -> Self {
+        Self { c_cpu: 0, c_gpu: cout }
+    }
+
+    /// Exclusive-CPU execution.
+    pub fn cpu_only(cout: usize) -> Self {
+        Self { c_cpu: cout, c_gpu: 0 }
+    }
+
+    pub fn total(&self) -> usize {
+        self.c_cpu + self.c_gpu
+    }
+
+    /// True iff both devices receive work — the only case that pays
+    /// synchronization overhead (`T_overhead = 0` for exclusive execution).
+    pub fn is_coexec(&self) -> bool {
+        self.c_cpu > 0 && self.c_gpu > 0
+    }
+}
+
+/// Types that can be split along output channels.
+pub trait Partitionable {
+    /// The (cpu-part, gpu-part) op configs for a given split.
+    fn split(&self, split: ChannelSplit) -> (Option<OpConfig>, Option<OpConfig>);
+}
+
+impl Partitionable for OpConfig {
+    fn split(&self, split: ChannelSplit) -> (Option<OpConfig>, Option<OpConfig>) {
+        assert_eq!(
+            split.total(),
+            self.cout(),
+            "split {:?} does not cover cout={}",
+            split,
+            self.cout()
+        );
+        let cpu = (split.c_cpu > 0).then(|| self.with_cout(split.c_cpu));
+        let gpu = (split.c_gpu > 0).then(|| self.with_cout(split.c_gpu));
+        (cpu, gpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::LinearConfig;
+
+    #[test]
+    fn split_covers_channels() {
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        let (c, g) = op.split(ChannelSplit::new(592, 2480));
+        assert_eq!(c.unwrap().cout(), 592);
+        assert_eq!(g.unwrap().cout(), 2480);
+    }
+
+    #[test]
+    fn exclusive_sides_are_none() {
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        let (c, g) = op.split(ChannelSplit::gpu_only(3072));
+        assert!(c.is_none());
+        assert_eq!(g.unwrap().cout(), 3072);
+        assert!(!ChannelSplit::gpu_only(3072).is_coexec());
+        assert!(ChannelSplit::new(1, 3071).is_coexec());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_split_panics() {
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        let _ = op.split(ChannelSplit::new(1, 1));
+    }
+}

@@ -1,0 +1,178 @@
+//! Feature extraction for latency predictors.
+//!
+//! Two modes, matching the paper's ablation (its Table 4 row "w/o
+//! Augmentation"):
+//!
+//! * [`FeatureMode::Basic`] — black-box operation parameters only
+//!   (shapes, FLOPs, bytes): what prior work feeds its predictors
+//!   (nn-Meter, CoDL, the paper's refs [9,13,15,22]).
+//! * [`FeatureMode::Augmented`] — adds the GPU delegate's *dispatch*
+//!   decisions (workgroup size/count, wave count, alignment waste,
+//!   channel-slice grid) computed white-box from the same heuristics the
+//!   delegate runs; conv predictors are additionally *split per kernel
+//!   implementation* (paper §3.2 point (1)).
+
+use crate::device::{Device, GpuDispatch};
+use crate::ops::OpConfig;
+
+/// Predictor input-feature mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureMode {
+    Basic,
+    Augmented,
+}
+
+/// Names of the basic (shape-only) feature block for an op kind.
+pub fn basic_names(kind: &str) -> Vec<&'static str> {
+    match kind {
+        "linear" => vec!["l", "cin", "cout", "flops", "bytes"],
+        _ => vec![
+            "h", "w", "cin", "cout", "k", "stride", "out_positions", "flops", "bytes",
+        ],
+    }
+}
+
+/// Names of the augmented (dispatch) feature block.
+pub fn dispatch_names() -> Vec<&'static str> {
+    vec![
+        "kernel_impl",
+        "wg_x",
+        "wg_y",
+        "wg_threads",
+        "wg_count",
+        "waves",
+        "out_slices",
+        "row_tiles",
+        "waste",
+    ]
+}
+
+/// Full feature names for a mode/kind (order matches [`gpu_features`]).
+pub fn feature_names(kind: &str, mode: FeatureMode) -> Vec<&'static str> {
+    let mut names = basic_names(kind);
+    if mode == FeatureMode::Augmented {
+        names.extend(dispatch_names());
+    }
+    names
+}
+
+/// Basic (shape-only) features of an op.
+pub fn basic_features(op: &OpConfig) -> Vec<f64> {
+    match op {
+        OpConfig::Linear(c) => vec![
+            c.l as f64,
+            c.cin as f64,
+            c.cout as f64,
+            c.flops(),
+            c.bytes(),
+        ],
+        OpConfig::Conv(c) => vec![
+            c.h as f64,
+            c.w as f64,
+            c.cin as f64,
+            c.cout as f64,
+            c.k as f64,
+            c.stride as f64,
+            c.out_positions() as f64,
+            c.flops(),
+            c.bytes(),
+        ],
+    }
+}
+
+/// Dispatch feature block from a delegate decision.
+pub fn dispatch_features(d: &GpuDispatch) -> Vec<f64> {
+    vec![
+        d.kernel.id() as f64,
+        d.wg_x as f64,
+        d.wg_y as f64,
+        d.wg_threads() as f64,
+        d.wg_count as f64,
+        d.waves as f64,
+        d.out_slices as f64,
+        d.row_tiles as f64,
+        d.waste,
+    ]
+}
+
+/// GPU-predictor features for an op on a device.
+pub fn gpu_features(device: &Device, op: &OpConfig, mode: FeatureMode) -> Vec<f64> {
+    let mut f = basic_features(op);
+    if mode == FeatureMode::Augmented {
+        f.extend(dispatch_features(&device.gpu_dispatch(op)));
+    }
+    f
+}
+
+/// CPU-predictor features (shape features + XNNPACK tile-grid terms; the
+/// CPU side has no dispatch heuristics, so there is no augmented variant —
+/// matching the paper, whose augmentation concerns GPU kernels only).
+pub fn cpu_features(op: &OpConfig) -> Vec<f64> {
+    use crate::device::cpu::{MR, NR};
+    let mut f = basic_features(op);
+    let (m, n) = match op {
+        OpConfig::Linear(c) => (c.l, c.cout),
+        OpConfig::Conv(c) => (c.out_positions(), c.cout),
+    };
+    f.push(m.div_ceil(MR) as f64);
+    f.push(n.div_ceil(NR) as f64);
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{ConvConfig, LinearConfig};
+
+    #[test]
+    fn names_match_lengths() {
+        let d = Device::oneplus11();
+        let lin = OpConfig::Linear(LinearConfig::vit_fc1());
+        let conv = OpConfig::Conv(ConvConfig::fig6b(192));
+        for mode in [FeatureMode::Basic, FeatureMode::Augmented] {
+            assert_eq!(
+                gpu_features(&d, &lin, mode).len(),
+                feature_names("linear", mode).len()
+            );
+            assert_eq!(
+                gpu_features(&d, &conv, mode).len(),
+                feature_names("conv", mode).len()
+            );
+        }
+    }
+
+    #[test]
+    fn augmented_features_are_superset() {
+        let d = Device::pixel5();
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 2500));
+        let basic = gpu_features(&d, &op, FeatureMode::Basic);
+        let aug = gpu_features(&d, &op, FeatureMode::Augmented);
+        assert_eq!(&aug[..basic.len()], &basic[..]);
+        assert!(aug.len() > basic.len());
+    }
+
+    #[test]
+    fn dispatch_features_change_at_spikes() {
+        // Neighbouring couts can yield different wave counts — the signal
+        // basic features cannot see.
+        let d = Device::oneplus11();
+        let f = |cout| gpu_features(&d, &OpConfig::Linear(LinearConfig::new(50, 768, cout)), FeatureMode::Augmented);
+        let all: Vec<_> = (2048..2560).step_by(4).map(f).collect();
+        let waves_idx = feature_names("linear", FeatureMode::Augmented)
+            .iter()
+            .position(|&n| n == "waves")
+            .unwrap();
+        let distinct: std::collections::HashSet<u64> =
+            all.iter().map(|f| f[waves_idx] as u64).collect();
+        assert!(distinct.len() > 1, "waves never change over the sweep");
+    }
+
+    #[test]
+    fn cpu_features_have_tile_terms() {
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 64));
+        let f = cpu_features(&op);
+        assert_eq!(f.len(), 5 + 2);
+        assert_eq!(f[5], (50f64 / 6.0).ceil());
+        assert_eq!(f[6], 8.0);
+    }
+}

@@ -1,0 +1,236 @@
+//! PJRT runtime: load AOT artifacts (HLO text from the JAX/Pallas compile
+//! path) and execute them on the CPU PJRT client via the `xla` crate.
+//!
+//! Two execution paths, mirroring DESIGN.md:
+//!
+//! * **AOT artifacts** — `artifacts/*.hlo.txt` produced once by
+//!   `python/compile/aot.py` (HLO *text*, not serialized protos: jax >= 0.5
+//!   emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//!   text parser reassigns ids). This is the production path: Python never
+//!   runs at serve time.
+//! * **Dynamic builder** — arbitrary-shape GEMMs assembled with
+//!   `XlaBuilder` for partition sweeps whose exact split has no shipped
+//!   artifact (partition decisions are made offline in production, so every
+//!   deployed split would ship as an artifact).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`): each [`Runtime`] is
+//! thread-local. The co-execution engine gives each worker thread its own
+//! `Runtime` — which is exactly the paper's topology (CPU and GPU each own
+//! their compiled kernels; only the SVM output buffer is shared).
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Parsed entry of `artifacts/manifest.tsv`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Argument shapes, e.g. `[[50, 768], [768, 3072], [3072]]`.
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// Free-form metadata (op kind, c1, side, ...).
+    pub meta: HashMap<String, String>,
+}
+
+/// Parse `manifest.tsv` (written by aot.py next to the artifacts):
+/// `name \t file \t 50x768|768x3072|3072 \t op=linear,c1=592,...`
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 4 {
+            return Err(anyhow!("malformed manifest line: {line:?}"));
+        }
+        let arg_shapes = cols[2]
+            .split('|')
+            .map(|s| {
+                s.split('x')
+                    .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d:?}: {e}")))
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let meta = cols[3]
+            .split(',')
+            .filter(|kv| !kv.is_empty())
+            .filter_map(|kv| kv.split_once('='))
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        out.push(ArtifactMeta {
+            name: cols[0].to_string(),
+            file: cols[1].to_string(),
+            arg_shapes,
+            meta,
+        });
+    }
+    Ok(out)
+}
+
+/// Thread-local PJRT runtime with an executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime rooted at an artifacts directory.
+    pub fn cpu<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory (repo-root `artifacts/`), honouring
+    /// `COEXEC_ARTIFACTS` for out-of-tree runs.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("COEXEC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> Result<Vec<ArtifactMeta>> {
+        read_manifest(&self.dir)
+    }
+
+    /// Load (and cache) an AOT artifact by name.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an AOT artifact (jax-lowered: output is a 1-tuple) with f32
+    /// tensor inputs; returns the flat f32 output.
+    pub fn execute_artifact(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>> {
+        let exe = self.load(name)?;
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| literal_matrix(data, dims))
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Build (and cache) a dynamic GEMM executable `x:(m,k) @ w:(k,n)`.
+    pub fn build_gemm(&self, m: usize, k: usize, n: usize) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("__gemm_{m}x{k}x{n}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let b = xla::XlaBuilder::new(&key);
+        let x = b.parameter_s(0, &xla::Shape::array::<f32>(vec![m as i64, k as i64]), "x")?;
+        let w = b.parameter_s(1, &xla::Shape::array::<f32>(vec![k as i64, n as i64]), "w")?;
+        let comp = x.matmul(&w)?.build()?;
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Build a *partition-slice* GEMM: takes the **full** weight matrix and
+    /// computes `x @ w[:, lo..hi]` — the runtime analogue of each compute
+    /// unit owning its slice of the weights (paper Fig. 4).
+    pub fn build_gemm_slice(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        assert!(lo < hi && hi <= n);
+        let key = format!("__gemm_slice_{m}x{k}x{n}_{lo}_{hi}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let b = xla::XlaBuilder::new(&key);
+        let x = b.parameter_s(0, &xla::Shape::array::<f32>(vec![m as i64, k as i64]), "x")?;
+        let w = b.parameter_s(1, &xla::Shape::array::<f32>(vec![k as i64, n as i64]), "w")?;
+        let w_slice = w.slice_in_dim1(lo as i64, hi as i64, 1)?;
+        let comp = x.matmul(&w_slice)?.build()?;
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a builder-path executable (non-tuple output).
+    pub fn execute_raw(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| literal_matrix(data, dims))
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        Ok(result.to_vec::<f32>()?)
+    }
+
+    /// Number of cached executables (telemetry).
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Build an f32 literal of the given dims from flat data.
+pub fn literal_matrix(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    let l = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims_i64)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parser_roundtrip() {
+        let dir = std::env::temp_dir().join("coexec_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# comment\nlinear_full\tlinear_full.hlo.txt\t50x768|768x3072|3072\top=linear,cout=3072\n",
+        )
+        .unwrap();
+        let m = read_manifest(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].arg_shapes[1], vec![768, 3072]);
+        assert_eq!(m[0].meta["op"], "linear");
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_matrix(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_pjrt.rs (they need the
+    // artifacts directory and a compiled client).
+}

@@ -1,0 +1,199 @@
+//! End-to-end model scheduling (the paper's §5.4).
+//!
+//! For every partitionable layer the planner's offline decision is applied;
+//! pooling stays on the GPU. End-to-end latency adds an inter-layer memory
+//! handoff term (the paper observes end-to-end speedups slightly below the
+//! sum of individual ops, "potentially due to memory access overhead
+//! between layers").
+
+use crate::device::{Device, SyncMechanism};
+use crate::models::{Layer, Model};
+use crate::ops::OpConfig;
+use crate::partition::{Plan, Planner};
+
+/// One layer's scheduled decision.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    pub layer: Layer,
+    /// None for GPU-pinned layers (pooling).
+    pub plan: Option<Plan>,
+}
+
+/// End-to-end evaluation result for one model on one device (a Table 3 row).
+#[derive(Debug, Clone)]
+pub struct E2eReport {
+    pub model: &'static str,
+    pub device: &'static str,
+    /// GPU-only baseline (ms).
+    pub baseline_ms: f64,
+    /// Sum of individually co-executed ops (ms) — the "Individual Ops"
+    /// column of Table 3 (no inter-layer effects).
+    pub individual_ms: f64,
+    /// Full end-to-end co-execution (ms), with handoff overhead.
+    pub e2e_ms: f64,
+}
+
+impl E2eReport {
+    pub fn individual_speedup(&self) -> f64 {
+        self.baseline_ms / self.individual_ms
+    }
+    pub fn e2e_speedup(&self) -> f64 {
+        self.baseline_ms / self.e2e_ms
+    }
+}
+
+/// GPU latency of a pooling layer (µs): bandwidth-bound elementwise pass +
+/// a fraction of a dispatch (pools are enqueued in the same command queue).
+pub fn pool_gpu_us(device: &Device, layer: &Layer) -> f64 {
+    match layer {
+        Layer::Pool { h, w, c, .. } => {
+            let bytes = (h * w * c * 4) as f64 * 1.25; // read + strided write
+            bytes / device.spec.gpu.mem_bw_gbps * 1e-3 + device.spec.gpu.dispatch_us * 0.3
+        }
+        _ => 0.0,
+    }
+}
+
+/// Inter-layer handoff cost (µs) when a layer ran co-executed: the next
+/// consumer reads a buffer whose halves were produced by different caches.
+fn handoff_us(device: &Device, layer: &Layer) -> f64 {
+    layer.output_bytes() / device.spec.gpu.mem_bw_gbps * 1e-3 * 0.25 + 2.0
+}
+
+/// The end-to-end scheduler: plans each layer offline, then evaluates.
+pub struct ModelScheduler<'a> {
+    pub device: &'a Device,
+    pub linear_planner: &'a Planner,
+    pub conv_planner: &'a Planner,
+    pub threads: usize,
+    pub mech: SyncMechanism,
+}
+
+impl<'a> ModelScheduler<'a> {
+    /// Offline planning pass (the paper folds this into compilation).
+    pub fn plan(&self, model: &Model) -> Vec<LayerSchedule> {
+        model
+            .layers
+            .iter()
+            .map(|layer| {
+                let plan = layer.op().map(|op| {
+                    let planner = match op {
+                        OpConfig::Linear(_) => self.linear_planner,
+                        OpConfig::Conv(_) => self.conv_planner,
+                    };
+                    planner.plan_with_threads(&op, self.threads)
+                });
+                LayerSchedule { layer: *layer, plan }
+            })
+            .collect()
+    }
+
+    /// Evaluate a planned model (measured on the device simulator).
+    pub fn evaluate(&self, model: &Model) -> E2eReport {
+        let schedule = self.plan(model);
+        let mut baseline_us = 0.0;
+        let mut individual_us = 0.0;
+        let mut e2e_us = 0.0;
+        for (i, ls) in schedule.iter().enumerate() {
+            match (&ls.layer, &ls.plan) {
+                (layer @ Layer::Pool { .. }, _) => {
+                    let t = pool_gpu_us(self.device, layer);
+                    baseline_us += t;
+                    individual_us += t;
+                    e2e_us += t;
+                }
+                (_, Some(plan)) => {
+                    let op = ls.layer.op().unwrap();
+                    let gpu_only = self.device.measure_gpu(&op, i as u64);
+                    let co = self.device.measure_coexec(
+                        &op,
+                        plan.split,
+                        self.threads,
+                        self.mech,
+                        i as u64,
+                    );
+                    baseline_us += gpu_only;
+                    individual_us += co;
+                    e2e_us += co
+                        + if plan.split.is_coexec() {
+                            handoff_us(self.device, &ls.layer)
+                        } else {
+                            0.0
+                        };
+                }
+                _ => unreachable!("non-pool layers always have plans"),
+            }
+        }
+        E2eReport {
+            model: model.name,
+            device: self.device.name(),
+            baseline_ms: baseline_us / 1e3,
+            individual_ms: individual_us / 1e3,
+            e2e_ms: e2e_us / 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::partition::Planner;
+
+    fn quick_planners(device: &Device) -> (Planner, Planner) {
+        (
+            Planner::train_for_kind(device, "linear", 900, 5),
+            Planner::train_for_kind(device, "conv", 900, 5),
+        )
+    }
+
+    #[test]
+    fn e2e_speedup_on_pixel5_resnet18() {
+        let device = Device::pixel5();
+        let (lp, cp) = quick_planners(&device);
+        let s = ModelScheduler {
+            device: &device,
+            linear_planner: &lp,
+            conv_planner: &cp,
+            threads: 3,
+            mech: SyncMechanism::SvmPolling,
+        };
+        let r = s.evaluate(&models::resnet18());
+        assert!(
+            r.e2e_speedup() > 1.15,
+            "pixel5 resnet18 e2e speedup {:.2}",
+            r.e2e_speedup()
+        );
+        // e2e is never better than the individual-op sum
+        assert!(r.e2e_ms >= r.individual_ms * 0.999);
+    }
+
+    #[test]
+    fn pool_latency_negligible() {
+        let device = Device::oneplus11();
+        let p = Layer::Pool { h: 112, w: 112, c: 64, k: 3, stride: 2 };
+        assert!(pool_gpu_us(&device, &p) < 100.0);
+    }
+
+    #[test]
+    fn schedule_covers_all_layers() {
+        let device = Device::moto2022();
+        let (lp, cp) = quick_planners(&device);
+        let s = ModelScheduler {
+            device: &device,
+            linear_planner: &lp,
+            conv_planner: &cp,
+            threads: 2,
+            mech: SyncMechanism::SvmPolling,
+        };
+        let m = models::vgg16();
+        let sched = s.plan(&m);
+        assert_eq!(sched.len(), m.layers.len());
+        for ls in &sched {
+            match ls.layer {
+                Layer::Pool { .. } => assert!(ls.plan.is_none()),
+                _ => assert!(ls.plan.is_some()),
+            }
+        }
+    }
+}

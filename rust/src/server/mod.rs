@@ -1,0 +1,191 @@
+//! Inference planning/serving front-end.
+//!
+//! The paper's contribution is the per-op planner, not a router, so L3's
+//! serving surface is deliberately thin: a line-oriented TCP protocol that
+//! exposes planning and (simulated) execution. One thread per connection
+//! (std-only build: tokio is unavailable offline; the request path does no
+//! blocking I/O besides the socket itself).
+//!
+//! Protocol (one request per line, fields space-separated):
+//!
+//! ```text
+//! PLAN linear <l> <cin> <cout> <threads>        -> OK c_cpu c_gpu t_pred_us
+//! PLAN conv <h> <w> <cin> <cout> <k> <s> <thr>  -> OK c_cpu c_gpu t_pred_us
+//! RUN  linear <l> <cin> <cout> <threads>        -> OK t_coexec_us t_gpu_us speedup
+//! PING                                          -> OK pong
+//! ```
+
+use crate::device::{Device, Processor};
+use crate::ops::{ConvConfig, LinearConfig, OpConfig};
+use crate::partition::Planner;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Shared server state: a device and one planner per op kind.
+pub struct ServerState {
+    pub device: Device,
+    pub linear_planner: Planner,
+    pub conv_planner: Planner,
+}
+
+impl ServerState {
+    /// Train planners for a device (done once at startup; the paper calls
+    /// this the offline compilation step).
+    pub fn new(device: Device, n_train: usize, seed: u64) -> Self {
+        let linear_planner = Planner::train_for_kind(&device, "linear", n_train, seed);
+        let conv_planner = Planner::train_for_kind(&device, "conv", n_train, seed);
+        Self { device, linear_planner, conv_planner }
+    }
+
+    /// Handle one request line; returns the reply line.
+    pub fn handle(&self, line: &str) -> String {
+        match self.handle_inner(line) {
+            Ok(s) => format!("OK {s}"),
+            Err(e) => format!("ERR {e}"),
+        }
+    }
+
+    fn parse_op(&self, parts: &[&str]) -> Result<(OpConfig, usize)> {
+        match parts {
+            ["linear", l, cin, cout, thr] => Ok((
+                OpConfig::Linear(LinearConfig::new(l.parse()?, cin.parse()?, cout.parse()?)),
+                thr.parse()?,
+            )),
+            ["conv", h, w, cin, cout, k, s, thr] => Ok((
+                OpConfig::Conv(ConvConfig::new(
+                    h.parse()?,
+                    w.parse()?,
+                    cin.parse()?,
+                    cout.parse()?,
+                    k.parse()?,
+                    s.parse()?,
+                )),
+                thr.parse()?,
+            )),
+            _ => Err(anyhow!("bad op spec")),
+        }
+    }
+
+    fn planner_for(&self, op: &OpConfig) -> &Planner {
+        match op {
+            OpConfig::Linear(_) => &self.linear_planner,
+            OpConfig::Conv(_) => &self.conv_planner,
+        }
+    }
+
+    fn handle_inner(&self, line: &str) -> Result<String> {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        match parts.as_slice() {
+            ["PING"] => Ok("pong".to_string()),
+            ["PLAN", rest @ ..] => {
+                let (op, threads) = self.parse_op(rest)?;
+                let plan = self.planner_for(&op).plan_with_threads(&op, threads);
+                Ok(format!(
+                    "{} {} {:.1}",
+                    plan.split.c_cpu, plan.split.c_gpu, plan.t_total_us
+                ))
+            }
+            ["RUN", rest @ ..] => {
+                let (op, threads) = self.parse_op(rest)?;
+                let planner = self.planner_for(&op);
+                let plan = planner.plan_with_threads(&op, threads);
+                let t_co = planner.measure_plan_us(&op, &plan, 8);
+                let t_gpu = self.device.measure_mean(&op, Processor::Gpu, 8);
+                Ok(format!("{:.1} {:.1} {:.3}", t_co, t_gpu, t_gpu / t_co))
+            }
+            _ => Err(anyhow!("unknown command")),
+        }
+    }
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7077").
+pub fn serve(state: Arc<ServerState>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("coexec planner serving on {addr} (device: {})", state.device.name());
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let st = state.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(st, stream);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let reply = state.handle(line.trim());
+        stream.write_all(reply.as_bytes())?;
+        stream.write_all(b"\n")?;
+    }
+}
+
+/// One-shot convenience: spawn a server on an ephemeral port, return the
+/// bound address (used by tests and the quickstart example).
+pub fn spawn_ephemeral(state: Arc<ServerState>) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let st = state.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(st, stream);
+            });
+        }
+    });
+    Ok(addr)
+}
+
+/// Tiny client helper for examples/tests.
+pub fn request(addr: &std::net::SocketAddr, line: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    Ok(reply.trim().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> Arc<ServerState> {
+        Arc::new(ServerState::new(Device::pixel5(), 2500, 3))
+    }
+
+    #[test]
+    fn protocol_roundtrip() {
+        let st = state();
+        assert_eq!(st.handle("PING"), "OK pong");
+        let reply = st.handle("PLAN linear 50 768 3072 3");
+        assert!(reply.starts_with("OK "), "{reply}");
+        let nums: Vec<f64> = reply[3..]
+            .split_whitespace()
+            .map(|s| s.parse().unwrap())
+            .collect();
+        assert_eq!(nums[0] as usize + nums[1] as usize, 3072);
+        assert!(st.handle("PLAN bogus").starts_with("ERR"));
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let addr = spawn_ephemeral(state()).unwrap();
+        let reply = request(&addr, "PING").unwrap();
+        assert_eq!(reply, "OK pong");
+        let reply = request(&addr, "RUN linear 50 768 3072 3").unwrap();
+        assert!(reply.starts_with("OK "), "{reply}");
+        let speedup: f64 = reply.split_whitespace().last().unwrap().parse().unwrap();
+        assert!(speedup > 1.1, "pixel5 flagship op must speed up: {speedup}");
+    }
+}

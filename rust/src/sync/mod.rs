@@ -1,0 +1,216 @@
+//! Real CPU↔"GPU" rendezvous — the paper's Section 4, executed for real.
+//!
+//! The paper's mechanism: outputs live in OpenCL fine-grained SVM (both
+//! processors address the same cache-coherent memory; no map/unmap), and a
+//! tiny polling kernel spins on two flags — the GPU sets `gpu_flag` and
+//! polls `cpu_flag`, the CPU sets `cpu_flag` and polls `gpu_flag`. The
+//! baseline blocks in `clWaitForEvents` and eats the notification delay.
+//!
+//! Our testbed analogue (DESIGN.md §Hardware-Adaptation): the two "devices"
+//! are two worker threads of one process. Shared virtual memory is the
+//! process address space; fine-grained SVM polling maps to atomic
+//! spin-waiting on shared cache lines ([`PollingPair`]); event notification
+//! maps to a `Mutex`+`Condvar` sleep/wake ([`EventPair`]) whose futex
+//! round-trip plays the role of the OpenCL event delay. The *relative*
+//! claim — polling is one to two orders of magnitude cheaper — is measured,
+//! not simulated, by [`measure_rendezvous_us`].
+//!
+//! Flags carry **round numbers** rather than booleans (the paper's flags
+//! are reset by the next kernel launch; a monotone counter gives the same
+//! protocol without a racy reset between rounds).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// A two-party rendezvous: each side signals completion of `round` and
+/// waits for the peer to reach it — the paper's `cpu_flag`/`gpu_flag` pair.
+/// Rounds must be issued in increasing order starting at 1.
+pub trait Rendezvous: Sync {
+    /// Called by side `who` (0 = cpu, 1 = gpu).
+    fn arrive_and_wait(&self, who: usize, round: u64);
+}
+
+/// Fine-grained-SVM-style active polling on two atomic flags.
+#[derive(Default)]
+pub struct PollingPair {
+    cpu_flag: AtomicU64,
+    gpu_flag: AtomicU64,
+}
+
+impl PollingPair {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Rendezvous for PollingPair {
+    fn arrive_and_wait(&self, who: usize, round: u64) {
+        let (mine, theirs) = if who == 0 {
+            (&self.cpu_flag, &self.gpu_flag)
+        } else {
+            (&self.gpu_flag, &self.cpu_flag)
+        };
+        mine.store(round, Ordering::Release);
+        // busy-wait: the paper accepts the power cost because its balanced
+        // partitions keep the wait short (its Section 4, technique 2).
+        // Spin-then-yield: on genuinely parallel processors (the paper's
+        // CPU+GPU) the peer flips the flag within the spin window and the
+        // yield never triggers; on time-shared cores (this testbed exposes
+        // single-CPU hosts) pure spinning burns whole scheduler quanta
+        // waiting for a peer that cannot run, so fall back to yielding.
+        let mut spins = 0u32;
+        while theirs.load(Ordering::Acquire) < round {
+            spins += 1;
+            if spins < 4096 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+/// Event-notification baseline: mutex + condvar (futex wake ≈ the OpenCL
+/// user-event notification delay, scaled to this host).
+#[derive(Default)]
+pub struct EventPair {
+    state: Mutex<[u64; 2]>,
+    cv: Condvar,
+}
+
+impl EventPair {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Rendezvous for EventPair {
+    fn arrive_and_wait(&self, who: usize, round: u64) {
+        let mut st = self.state.lock().unwrap();
+        st[who] = round;
+        self.cv.notify_all();
+        let _st = self.cv.wait_while(st, |st| st[1 - who] < round).unwrap();
+    }
+}
+
+/// Measured rendezvous statistics (µs).
+#[derive(Debug, Clone, Copy)]
+pub struct RendezvousStats {
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+/// Measure the pure rendezvous overhead over `rounds` rounds: two threads
+/// perform `work_us` of balanced busy work, then rendezvous; the overhead
+/// of one round is `wall - work` as seen by the measuring side.
+pub fn measure_rendezvous_us<R: Rendezvous>(
+    pair: &R,
+    rounds: usize,
+    work_us: f64,
+) -> RendezvousStats {
+    let start_gate = AtomicU64::new(0);
+    let mut samples = Vec::with_capacity(rounds);
+
+    std::thread::scope(|scope| {
+        // the "GPU" side
+        let gate = &start_gate;
+        let pair_ref = &*pair;
+        scope.spawn(move || {
+            for r in 1..=rounds as u64 {
+                let mut spins = 0u32;
+                while gate.load(Ordering::Acquire) < r {
+                    spins += 1;
+                    if spins < 4096 {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                busy_work(work_us);
+                pair_ref.arrive_and_wait(1, r);
+            }
+        });
+
+        // the "CPU" side (measuring)
+        for r in 1..=rounds as u64 {
+            start_gate.store(r, Ordering::Release);
+            let t0 = Instant::now();
+            busy_work(work_us);
+            pair.arrive_and_wait(0, r);
+            let wall = t0.elapsed().as_secs_f64() * 1e6;
+            samples.push((wall - work_us).max(0.0));
+        }
+    });
+
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p99_idx = ((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1);
+    RendezvousStats {
+        mean_us: mean,
+        p50_us: samples[samples.len() / 2],
+        p99_us: samples[p99_idx],
+    }
+}
+
+/// Spin for approximately `us` microseconds of CPU work.
+pub fn busy_work(us: f64) {
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() * 1e6 < us {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polling_rendezvous_completes() {
+        // Correctness only: timing assertions live in the sync_overhead
+        // bench, which runs serially (the parallel test harness deschedules
+        // spinning threads and makes wall-clock meaningless here).
+        let p = PollingPair::new();
+        let s = measure_rendezvous_us(&p, 50, 20.0);
+        assert!(s.mean_us.is_finite() && s.p50_us <= s.p99_us);
+    }
+
+    #[test]
+    fn event_rendezvous_completes() {
+        let p = EventPair::new();
+        let s = measure_rendezvous_us(&p, 50, 20.0);
+        assert!(s.mean_us.is_finite());
+    }
+
+    #[test]
+    #[ignore = "timing-sensitive: run serially (cargo test -- --ignored) or see the sync_overhead bench"]
+    fn polling_cheaper_than_event() {
+        // The paper's headline sync result, measured for real on this host.
+        let poll = measure_rendezvous_us(&PollingPair::new(), 200, 30.0);
+        let event = measure_rendezvous_us(&EventPair::new(), 200, 30.0);
+        assert!(
+            poll.mean_us < event.mean_us,
+            "polling {:.2}us !< event {:.2}us",
+            poll.mean_us,
+            event.mean_us
+        );
+    }
+
+    #[test]
+    fn unbalanced_arrival_orders() {
+        // one side always arrives late: no deadlock, correct pairing
+        let p = PollingPair::new();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for r in 1..=100u64 {
+                    busy_work(5.0);
+                    p.arrive_and_wait(1, r);
+                }
+            });
+            for r in 1..=100u64 {
+                p.arrive_and_wait(0, r);
+            }
+        });
+    }
+}

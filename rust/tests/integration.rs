@@ -1,0 +1,142 @@
+//! Cross-module integration tests: dataset -> measurement -> predictor ->
+//! planner -> scheduler, at quick scale.
+
+use mobile_coexec::dataset;
+use mobile_coexec::device::{Device, Processor, SyncMechanism};
+use mobile_coexec::experiments::{figures, Scale};
+use mobile_coexec::gbdt::GbdtParams;
+use mobile_coexec::models;
+use mobile_coexec::ops::{ChannelSplit, LinearConfig, OpConfig};
+use mobile_coexec::partition::{grid_search, Planner};
+use mobile_coexec::predictor::{FeatureMode, GpuPredictor};
+use mobile_coexec::scheduler::ModelScheduler;
+
+fn quick_params() -> GbdtParams {
+    GbdtParams { n_estimators: 150, max_leaves: 64, ..Default::default() }
+}
+
+#[test]
+fn pipeline_flagship_op_speedup_pixel5() {
+    // The paper's headline flow on its best device: train -> plan ->
+    // measure -> beat GPU-only by a healthy margin.
+    let device = Device::pixel5();
+    let planner = Planner::train_for_kind(&device, "linear", 5000, 42);
+    let op = OpConfig::Linear(LinearConfig::vit_fc1());
+    let plan = planner.plan_with_threads(&op, 3);
+    let t_co = planner.measure_plan_us(&op, &plan, 16);
+    let t_gpu = device.measure_mean(&op, Processor::Gpu, 16);
+    let speedup = t_gpu / t_co;
+    // grid-search oracle reaches ~1.60x here; the predictor-driven planner
+    // lands ~1.44x at this training size (same ~90% ratio as the paper's
+    // Table 2 GBDT-vs-Search columns)
+    assert!(speedup > 1.35, "pixel5 flagship speedup only {speedup:.2}x");
+}
+
+#[test]
+fn planner_tracks_grid_search_across_random_ops() {
+    let device = Device::pixel4();
+    let planner = Planner::train_for_kind(&device, "linear", 2000, 43);
+    let grid = dataset::linear_test_grid();
+    // deterministic small sample across the grid
+    let mut worse = 0;
+    let total = 12;
+    for (i, cfg) in grid.iter().step_by(grid.len() / total).take(total).enumerate() {
+        let op = OpConfig::Linear(*cfg);
+        let plan = planner.plan_with_threads(&op, 3);
+        let t_plan = planner.measure_plan_us(&op, &plan, 6);
+        let (_, t_oracle) = grid_search(&device, &op, 3, SyncMechanism::SvmPolling, 6);
+        if t_plan > t_oracle * 1.25 {
+            worse += 1;
+        }
+        let _ = i;
+    }
+    assert!(worse <= 2, "{worse}/{total} plans were >25% off the oracle");
+}
+
+#[test]
+fn augmentation_gain_is_large_on_conv() {
+    // Table 4's first ablation, as an invariant: augmented conv predictors
+    // must clearly beat basic ones on held-out data.
+    let device = Device::moto2022();
+    let (train, test) = dataset::training_split("conv", 2500, 44);
+    let basic = GpuPredictor::train(&device, &train, FeatureMode::Basic, &quick_params());
+    let aug = GpuPredictor::train(&device, &train, FeatureMode::Augmented, &quick_params());
+    let (eb, ea) = (basic.evaluate(&device, &test), aug.evaluate(&device, &test));
+    assert!(
+        ea < eb * 0.85,
+        "augmented {:.3} should be <0.85x basic {:.3}",
+        ea,
+        eb
+    );
+}
+
+#[test]
+fn event_wait_erases_coexec_gains_on_small_ops() {
+    // The paper's §4 motivation: with ~160us event overhead, small ops
+    // lose their co-execution benefit.
+    let device = Device::moto2022();
+    let op = OpConfig::Linear(LinearConfig::new(64, 256, 512)); // ~17 MFLOPs
+    let split = ChannelSplit::new(128, 384);
+    let t_poll = device.measure_coexec_mean(&op, split, 2, SyncMechanism::SvmPolling, 12);
+    let t_event = device.measure_coexec_mean(&op, split, 2, SyncMechanism::EventWait, 12);
+    assert!(
+        t_event > t_poll + 100.0,
+        "event {t_event:.0}us vs polling {t_poll:.0}us"
+    );
+}
+
+#[test]
+fn e2e_ordering_matches_paper() {
+    // Table 3's qualitative shape: Pixel 5 speedups > OnePlus 11 speedups
+    // on the same model.
+    let mut speedups = Vec::new();
+    for device in [Device::pixel5(), Device::oneplus11()] {
+        let lp = Planner::train_for_kind(&device, "linear", 1200, 45);
+        let cp = Planner::train_for_kind(&device, "conv", 1200, 45);
+        let sched = ModelScheduler {
+            device: &device,
+            linear_planner: &lp,
+            conv_planner: &cp,
+            threads: 3,
+            mech: SyncMechanism::SvmPolling,
+        };
+        speedups.push(sched.evaluate(&models::resnet34()).e2e_speedup());
+    }
+    assert!(
+        speedups[0] > speedups[1],
+        "pixel5 {:.2}x should beat oneplus {:.2}x",
+        speedups[0],
+        speedups[1]
+    );
+    assert!(speedups[0] > 1.3, "pixel5 resnet34 e2e {:.2}x", speedups[0]);
+}
+
+#[test]
+fn figure_sanity_quick() {
+    // Fig 6b kernel switch and Fig 2 crossover exist at quick scale.
+    let switch = figures::fig6b(Scale::quick());
+    assert_eq!(switch, 132);
+    let crossover = figures::fig2(Scale::quick());
+    assert!(
+        crossover >= 100 && crossover <= 800,
+        "fig2 crossover {crossover} out of plausible range"
+    );
+}
+
+#[test]
+fn all_devices_all_kinds_train_cleanly() {
+    for device in Device::all() {
+        for kind in ["linear", "conv"] {
+            let (train, test) = dataset::training_split(kind, 800, 46);
+            let p = GpuPredictor::train(&device, &train, FeatureMode::Augmented, &quick_params());
+            let e = p.evaluate(&device, &test);
+            assert!(
+                e < 0.25,
+                "{} {} augmented GPU MAPE {:.3}",
+                device.name(),
+                kind,
+                e
+            );
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Randomized property tests over coordinator invariants.
+//!
+//! proptest is unavailable in the offline build, so these sweeps use the
+//! crate's own seeded PRNG: hundreds of random cases per property, fully
+//! deterministic, with the failing case printed on assert.
+
+use mobile_coexec::device::noise::SplitMix64;
+use mobile_coexec::device::{Device, SyncMechanism};
+use mobile_coexec::gbdt::{Gbdt, GbdtParams};
+use mobile_coexec::metrics;
+use mobile_coexec::ops::{ChannelSplit, ConvConfig, LinearConfig, OpConfig, Partitionable};
+
+fn random_linear(rng: &mut SplitMix64) -> LinearConfig {
+    LinearConfig::new(rng.gen_range(1, 2048), rng.gen_range(1, 2048), rng.gen_range(2, 4096))
+}
+
+fn random_conv(rng: &mut SplitMix64) -> ConvConfig {
+    ConvConfig::new(
+        rng.gen_range(4, 128),
+        rng.gen_range(4, 128),
+        rng.gen_range(1, 512),
+        rng.gen_range(2, 512),
+        [1, 3, 5, 7][rng.gen_range(0, 3)],
+        [1, 2][rng.gen_range(0, 1)],
+    )
+}
+
+fn random_op(rng: &mut SplitMix64) -> OpConfig {
+    if rng.next_f64() < 0.5 {
+        OpConfig::Linear(random_linear(rng))
+    } else {
+        OpConfig::Conv(random_conv(rng))
+    }
+}
+
+/// Property: splitting preserves channel totals and FLOPs additivity.
+#[test]
+fn prop_split_preserves_flops() {
+    let mut rng = SplitMix64::new(1);
+    for case in 0..500 {
+        let op = random_op(&mut rng);
+        let cout = op.cout();
+        let c1 = rng.gen_range(1, cout - 1);
+        let split = ChannelSplit::new(c1, cout - c1);
+        let (cpu, gpu) = op.split(split);
+        let (cpu, gpu) = (cpu.unwrap(), gpu.unwrap());
+        assert_eq!(cpu.cout() + gpu.cout(), cout, "case {case}: {op}");
+        let sum = cpu.flops() + gpu.flops();
+        assert!(
+            (sum - op.flops()).abs() / op.flops() < 1e-9,
+            "case {case}: flops not additive for {op} at c1={c1}"
+        );
+    }
+}
+
+/// Property: co-execution latency is bounded below by each side's own
+/// latency and above by exclusive execution + overhead... specifically
+/// max(sides) <= coexec <= max(sides) + overhead*(1+5*sigma).
+#[test]
+fn prop_coexec_latency_bounds() {
+    let mut rng = SplitMix64::new(2);
+    let devices = Device::all();
+    for case in 0..200 {
+        let device = &devices[rng.gen_range(0, devices.len() - 1)];
+        let op = random_op(&mut rng);
+        let cout = op.cout();
+        let c1 = rng.gen_range(1, cout - 1);
+        let split = ChannelSplit::new(c1, cout - c1);
+        let threads = rng.gen_range(1, 2);
+        let trial = case as u64;
+        let t_cpu = device.measure_cpu(&op.with_cout(c1), threads, trial);
+        let t_gpu = device.measure_gpu(&op.with_cout(cout - c1), trial);
+        let t_co =
+            device.measure_coexec(&op, split, threads, SyncMechanism::SvmPolling, trial);
+        let floor = t_cpu.max(t_gpu);
+        let ceil = floor + device.sync_overhead_us(SyncMechanism::SvmPolling, op.kind()) * 3.0;
+        assert!(
+            t_co >= floor && t_co <= ceil,
+            "case {case} {op}: co {t_co:.1} outside [{floor:.1}, {ceil:.1}]"
+        );
+    }
+}
+
+/// Property: exclusive execution has exactly zero sync overhead.
+#[test]
+fn prop_exclusive_no_overhead() {
+    let mut rng = SplitMix64::new(3);
+    let device = Device::moto2022();
+    for case in 0..200 {
+        let op = random_op(&mut rng);
+        let trial = case as u64;
+        let gpu_only = device.measure_coexec(
+            &op,
+            ChannelSplit::gpu_only(op.cout()),
+            1,
+            SyncMechanism::EventWait,
+            trial,
+        );
+        assert_eq!(gpu_only, device.measure_gpu(&op, trial), "case {case} {op}");
+    }
+}
+
+/// Property: GPU dispatch decisions are internally consistent.
+#[test]
+fn prop_dispatch_consistency() {
+    let mut rng = SplitMix64::new(4);
+    let device = Device::oneplus11();
+    for case in 0..500 {
+        let op = random_op(&mut rng);
+        let d = device.gpu_dispatch(&op);
+        assert_eq!(
+            d.wg_count,
+            d.out_slices.div_ceil(d.wg_x) * d.row_tiles.div_ceil(d.wg_y),
+            "case {case} {op}: wg_count inconsistent"
+        );
+        assert_eq!(
+            d.waves,
+            d.wg_count.div_ceil(device.spec.gpu.compute_units),
+            "case {case} {op}: waves inconsistent"
+        );
+        assert!(d.waste >= 0.0, "case {case}: negative waste");
+        let (lat, d2) = device.gpu_model_us(&op);
+        assert!(lat.is_finite() && lat > 0.0);
+        assert_eq!(d, d2, "dispatch must be deterministic");
+    }
+}
+
+/// Property: CPU latency is monotone in output channels at tile
+/// granularity (adding a whole NR tile never reduces latency).
+#[test]
+fn prop_cpu_monotone_in_tiles() {
+    let mut rng = SplitMix64::new(5);
+    let device = Device::pixel4();
+    for case in 0..300 {
+        let cfg = random_linear(&mut rng);
+        if cfg.cout < 16 {
+            continue;
+        }
+        let smaller = OpConfig::Linear(cfg.with_cout(cfg.cout - 8));
+        let bigger = OpConfig::Linear(cfg);
+        let t_small = device.cpu_model_us(&smaller, 2);
+        let t_big = device.cpu_model_us(&bigger, 2);
+        assert!(
+            t_big >= t_small - 1e-9,
+            "case {case}: cpu latency decreased {t_small} -> {t_big} for {bigger}"
+        );
+    }
+}
+
+/// Property: GBDT predictions are finite and reproduce training behaviour
+/// for arbitrary feature matrices.
+#[test]
+fn prop_gbdt_finite_predictions() {
+    let mut rng = SplitMix64::new(6);
+    for case in 0..20 {
+        let n = rng.gen_range(50, 400);
+        let d = rng.gen_range(1, 6);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.next_f64() * 1000.0 - 500.0).collect())
+            .collect();
+        let y: Vec<f64> = rows.iter().map(|r| r.iter().sum::<f64>().abs() + 1.0).collect();
+        let params = GbdtParams { n_estimators: 30, ..Default::default() };
+        let m = Gbdt::fit(&rows, &y, &params);
+        for r in rows.iter().take(20) {
+            let p = m.predict(r);
+            assert!(p.is_finite(), "case {case}: non-finite prediction");
+        }
+        // out-of-range queries must also be finite (extrapolation clamps)
+        let far: Vec<f64> = (0..d).map(|_| 1e9).collect();
+        assert!(m.predict(&far).is_finite());
+    }
+}
+
+/// Property: metrics helpers agree with naive definitions.
+#[test]
+fn prop_metrics_agree_with_naive() {
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..100 {
+        let n = rng.gen_range(2, 50);
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 100.0 + 1.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x * (0.8 + 0.4 * rng.next_f64())).collect();
+        let naive = xs
+            .iter()
+            .zip(&ys)
+            .map(|(a, p)| ((p - a) / a).abs())
+            .sum::<f64>()
+            / n as f64;
+        assert!((metrics::mape(&xs, &ys) - naive).abs() < 1e-12);
+        let m = metrics::mean(&xs);
+        assert!((m - xs.iter().sum::<f64>() / n as f64).abs() < 1e-12);
+        assert!(metrics::percentile(&xs, 0.0) <= metrics::percentile(&xs, 100.0));
+    }
+}
+
+/// Property: measurement noise is unbiased (mean factor ~1) and
+/// deterministic per trial key.
+#[test]
+fn prop_noise_unbiased() {
+    let device = Device::pixel4();
+    let op = OpConfig::Linear(LinearConfig::vit_fc1());
+    let model = device.cpu_model_us(&op, 1);
+    let mean_measured = device.measure_mean(
+        &op,
+        mobile_coexec::device::Processor::Cpu(1),
+        400,
+    );
+    let rel = (mean_measured / model - 1.0).abs();
+    assert!(rel < 0.03, "noise bias {rel:.4}");
+}

@@ -1,0 +1,209 @@
+//! PJRT-backed integration: AOT JAX/Pallas artifacts loaded and executed
+//! from Rust, plus the real two-worker co-execution engine.
+//!
+//! Requires `make artifacts` (run from the repo root so `artifacts/`
+//! resolves; `COEXEC_ARTIFACTS` overrides).
+
+use mobile_coexec::coexec::CoexecEngine;
+use mobile_coexec::device::noise::SplitMix64;
+use mobile_coexec::device::SyncMechanism;
+use mobile_coexec::runtime::{read_manifest, Runtime};
+
+fn artifacts_ready() -> bool {
+    Runtime::default_dir().join("manifest.tsv").exists()
+}
+
+fn randvec(rng: &mut SplitMix64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 0.2).collect()
+}
+
+fn cpu_matmul(x: &[f32], w: &[f32], b: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let yrow = &mut y[i * n..(i + 1) * n];
+            for j in 0..n {
+                yrow[j] += xv * wrow[j];
+            }
+        }
+    }
+    if let Some(b) = b {
+        for i in 0..m {
+            for j in 0..n {
+                y[i * n + j] += b[j];
+            }
+        }
+    }
+    y
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    let mut max_err = 0.0f32;
+    for (a, b) in got.iter().zip(want) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < tol, "{what}: max err {max_err}");
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    assert!(artifacts_ready(), "run `make artifacts` first");
+    let m = read_manifest(&Runtime::default_dir()).unwrap();
+    assert!(m.len() >= 20, "only {} artifacts", m.len());
+    for name in ["linear_full", "linear_cpu_c592", "linear_gpu_c592", "conv3x3_full", "conv3x3_winograd", "vit_mlp_block_c592"] {
+        assert!(m.iter().any(|a| a.name == name), "missing {name}");
+    }
+}
+
+#[test]
+fn aot_linear_matches_native_gemm() {
+    assert!(artifacts_ready(), "run `make artifacts` first");
+    let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let (l, cin, cout) = (50, 768, 3072);
+    let mut rng = SplitMix64::new(10);
+    let x = randvec(&mut rng, l * cin);
+    let w = randvec(&mut rng, cin * cout);
+    let b = randvec(&mut rng, cout);
+    let got = rt
+        .execute_artifact(
+            "linear_full",
+            &[(&x, &[l, cin][..]), (&w, &[cin, cout][..]), (&b, &[cout][..])],
+        )
+        .unwrap();
+    let want = cpu_matmul(&x, &w, Some(&b), l, cin, cout);
+    assert_close(&got, &want, 2e-3, "linear_full (Pallas GEMM via PJRT)");
+}
+
+#[test]
+fn aot_partition_slices_reassemble() {
+    // The co-execution identity executed through the real AOT path:
+    // cpu slice ++ gpu slice == full output.
+    assert!(artifacts_ready(), "run `make artifacts` first");
+    let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let (l, cin, cout, c1) = (50, 768, 3072, 592);
+    let mut rng = SplitMix64::new(11);
+    let x = randvec(&mut rng, l * cin);
+    let w = randvec(&mut rng, cin * cout);
+    let b = randvec(&mut rng, cout);
+    let args = [(&x[..], &[l, cin][..]), (&w[..], &[cin, cout][..]), (&b[..], &[cout][..])];
+    let full = rt.execute_artifact("linear_full", &args).unwrap();
+    let cpu = rt.execute_artifact("linear_cpu_c592", &args).unwrap();
+    let gpu = rt.execute_artifact("linear_gpu_c592", &args).unwrap();
+    assert_eq!(cpu.len(), l * c1);
+    assert_eq!(gpu.len(), l * (cout - c1));
+    let mut merged = vec![0.0f32; l * cout];
+    for r in 0..l {
+        merged[r * cout..r * cout + c1].copy_from_slice(&cpu[r * c1..(r + 1) * c1]);
+        merged[r * cout + c1..(r + 1) * cout]
+            .copy_from_slice(&gpu[r * (cout - c1)..(r + 1) * (cout - c1)]);
+    }
+    assert_close(&merged, &full, 1e-3, "partition slices vs fused");
+}
+
+#[test]
+fn builder_gemm_matches_native() {
+    let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let (m, k, n) = (17, 33, 29);
+    let mut rng = SplitMix64::new(12);
+    let x = randvec(&mut rng, m * k);
+    let w = randvec(&mut rng, k * n);
+    let exe = rt.build_gemm(m, k, n).unwrap();
+    let got = rt.execute_raw(&exe, &[(&x, &[m, k][..]), (&w, &[k, n][..])]).unwrap();
+    let want = cpu_matmul(&x, &w, None, m, k, n);
+    assert_close(&got, &want, 1e-4, "builder gemm");
+    // slice path
+    let exe2 = rt.build_gemm_slice(m, k, n, 5, 20).unwrap();
+    let got2 = rt.execute_raw(&exe2, &[(&x, &[m, k][..]), (&w, &[k, n][..])]).unwrap();
+    for r in 0..m {
+        for c in 0..15 {
+            let full_idx = r * n + 5 + c;
+            assert!((got2[r * 15 + c] - want[full_idx]).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn coexec_engine_real_run_verified() {
+    assert!(artifacts_ready(), "run `make artifacts` first");
+    let engine = CoexecEngine::with_default_artifacts().unwrap();
+    let (l, cin, cout, c1) = (50usize, 768usize, 3072usize, 592usize);
+    let mut rng = SplitMix64::new(13);
+    let x = randvec(&mut rng, l * cin);
+    let w = randvec(&mut rng, cin * cout);
+    let b = randvec(&mut rng, cout);
+    let split = Some(("linear_cpu_c592".to_string(), "linear_gpu_c592".to_string()));
+    for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+        let (y, report) = engine
+            .run_linear(&x, &w, &b, (l, cin, cout), c1, mech, split.clone())
+            .unwrap();
+        let want = cpu_matmul(&x, &w, Some(&b), l, cin, cout);
+        assert_close(&y, &want, 2e-3, "coexec output");
+        assert!(report.wall_us > 0.0);
+        assert!(report.cpu.exec_us > 0.0 && report.gpu.exec_us > 0.0);
+    }
+}
+
+#[test]
+fn coexec_engine_builder_fallback() {
+    // No artifact for c1=1000: the engine must fall back to XlaBuilder
+    // slices and still be correct.
+    let engine = CoexecEngine::with_default_artifacts().unwrap();
+    let (l, cin, cout, c1) = (16usize, 64usize, 96usize, 40usize);
+    let mut rng = SplitMix64::new(14);
+    let x = randvec(&mut rng, l * cin);
+    let w = randvec(&mut rng, cin * cout);
+    let b = randvec(&mut rng, cout);
+    let (y, _) = engine
+        .run_linear(&x, &w, &b, (l, cin, cout), c1, SyncMechanism::SvmPolling, None)
+        .unwrap();
+    let want = cpu_matmul(&x, &w, Some(&b), l, cin, cout);
+    assert_close(&y, &want, 1e-3, "builder-fallback coexec");
+}
+
+#[test]
+fn winograd_artifact_matches_direct_conv() {
+    // L1 Winograd Pallas kernel vs the direct conv kernel, both through
+    // the full AOT -> PJRT path.
+    assert!(artifacts_ready(), "run `make artifacts` first");
+    let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let (h, w_, cin, cout) = (64, 64, 128, 192);
+    let mut rng = SplitMix64::new(15);
+    let x = randvec(&mut rng, h * w_ * cin);
+    let w = randvec(&mut rng, 3 * 3 * cin * cout);
+    let args = [(&x[..], &[1, h, w_, cin][..]), (&w[..], &[3, 3, cin, cout][..])];
+    let direct = rt.execute_artifact("conv3x3_full", &args).unwrap();
+    let wino = rt.execute_artifact("conv3x3_winograd", &args).unwrap();
+    assert_close(&wino, &direct, 5e-2, "winograd vs direct conv (AOT)");
+}
+
+#[test]
+fn vit_block_artifact_runs() {
+    assert!(artifacts_ready(), "run `make artifacts` first");
+    let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let mut rng = SplitMix64::new(16);
+    let x = randvec(&mut rng, 50 * 768);
+    let w1 = randvec(&mut rng, 768 * 3072);
+    let b1 = randvec(&mut rng, 3072);
+    let w2 = randvec(&mut rng, 3072 * 768);
+    let b2 = randvec(&mut rng, 768);
+    let y = rt
+        .execute_artifact(
+            "vit_mlp_block_c592",
+            &[
+                (&x, &[50, 768][..]),
+                (&w1, &[768, 3072][..]),
+                (&b1, &[3072][..]),
+                (&w2, &[3072, 768][..]),
+                (&b2, &[768][..]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(y.len(), 50 * 768);
+    assert!(y.iter().all(|v| v.is_finite()));
+}
