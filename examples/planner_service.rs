@@ -18,14 +18,30 @@ fn main() -> anyhow::Result<()> {
     for line in [
         "PING",
         "PLAN linear 50 768 3072 3",    // ViT fc1
+        "PLAN linear 50 768 3072 3",    // same shape again: cache hit
         "PLAN linear 50 3072 768 3",    // ViT fc2
         "PLAN conv 64 64 128 192 3 1 3", // Fig 6b conv
         "RUN linear 50 768 3072 3",
         "RUN conv 64 64 128 192 3 1 2",
+        "PLAN_MODEL resnet18 3",        // whole model through the cache
         "PLAN linear oops",
+        "STATS",
     ] {
         let reply = request(&addr, line)?;
         println!("> {line}\n< {reply}");
+    }
+
+    // DEVICE is session-scoped, so it needs a persistent connection.
+    println!("\n-- persistent session: switching device --");
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    for line in ["DEVICE pixel5", "PLAN linear 50 768 3072 3"] {
+        use std::io::{BufRead, Write};
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut reply = String::new();
+        reader.read_line(&mut reply)?;
+        println!("> {line}\n< {}", reply.trim());
     }
     Ok(())
 }

@@ -1,0 +1,64 @@
+//! Bench: serving-layer plan cache and loopback throughput.
+//!
+//! The acceptance bar for the caching serving layer: a warm-cache PLAN
+//! must be >= 10x cheaper than a cold plan (in practice it is orders of
+//! magnitude — a hash lookup vs a full coarse-to-fine GBDT sweep). Also
+//! reports end-to-end loopback request throughput through the worker pool.
+
+use mobile_coexec::benchutil::{bench, report_scalar};
+use mobile_coexec::device::Device;
+use mobile_coexec::ops::{LinearConfig, OpConfig};
+use mobile_coexec::partition::Planner;
+use mobile_coexec::server::cache::PlanCache;
+use mobile_coexec::server::{request, Server, ServerConfig, ServerState};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let device = Device::pixel5();
+    let planner = Planner::train_for_kind(&device, "linear", 3000, 42);
+    let op = OpConfig::Linear(LinearConfig::vit_fc1());
+
+    // cold: every iteration plans from scratch through a fresh cache
+    let cold = bench("plan_cold", 2, 30, || {
+        let cache = PlanCache::default();
+        std::hint::black_box(cache.get_or_plan(&planner, &op, 3));
+    });
+
+    // warm: one shared cache, first fill excluded by warmup iterations
+    let cache = PlanCache::default();
+    let warm = bench("plan_warm_cache_hit", 10, 2000, || {
+        std::hint::black_box(cache.get_or_plan(&planner, &op, 3));
+    });
+
+    let speedup = cold.mean_us / warm.mean_us;
+    report_scalar("plan_cache", "warm_over_cold_speedup", speedup);
+    assert!(
+        speedup >= 10.0,
+        "acceptance: warm-cache PLAN must be >=10x cheaper than cold ({speedup:.1}x)"
+    );
+
+    // end-to-end loopback: persistent connection, warm-cache PLAN requests
+    // through the reader-thread + worker-pool path
+    let state = Arc::new(ServerState::new(device, 1500, 42));
+    let server = Server::new(state, ServerConfig::default());
+    let addr = server.spawn_ephemeral().expect("spawn server");
+    let _ = request(&addr, "PLAN linear 50 768 3072 3").expect("prime cache");
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut reply = String::new();
+    let n = 2000usize;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        stream.write_all(b"PLAN linear 50 768 3072 3\n").expect("write");
+        reply.clear();
+        reader.read_line(&mut reply).expect("read");
+        assert!(reply.starts_with("OK "), "{reply}");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    report_scalar("loopback_plan_warm", "req_per_s", n as f64 / wall_s);
+    report_scalar("loopback_plan_warm", "mean_us", wall_s / n as f64 * 1e6);
+}

@@ -82,6 +82,13 @@ impl CpuSpec {
     pub fn effective_gmacs(&self, threads: usize) -> f64 {
         self.rate_gmacs(threads)
     }
+
+    /// Largest thread count the cost model supports — the device's
+    /// big-core budget (the paper pins 1-3 threads to the big cluster).
+    /// The serving layer clamps client-requested thread counts to this.
+    pub fn max_threads(&self) -> usize {
+        self.thread_efficiency.len()
+    }
 }
 
 #[cfg(test)]
@@ -151,5 +158,15 @@ mod tests {
     #[should_panic]
     fn zero_threads_rejected() {
         spec().effective_gmacs(0);
+    }
+
+    #[test]
+    fn max_threads_matches_efficiency_table() {
+        let s = spec();
+        assert_eq!(s.max_threads(), 3);
+        // the whole supported range must be valid
+        for t in 1..=s.max_threads() {
+            assert!(s.effective_gmacs(t) > 0.0);
+        }
     }
 }

@@ -9,7 +9,8 @@
 //! repro sync                                 §4 sync-overhead comparison
 //! repro plan  --device <name> --linear L,CIN,COUT [--threads N]
 //! repro coexec [--c1 N]                      REAL PJRT co-execution demo
-//! repro serve --device <name> [--addr A]     planning server
+//! repro serve --device <name> [--addr A] [--workers N] [--queue N]
+//!                                            plan-caching multi-device server
 //! repro all   [--quick]                      everything, in order
 //! ```
 //!
@@ -107,13 +108,27 @@ fn main() {
         "serve" => {
             let device = parse_device(&get("--device").unwrap_or_else(|| "pixel5".into()));
             let addr = get("--addr").unwrap_or_else(|| "127.0.0.1:7077".into());
+            let defaults = mobile_coexec::server::ServerConfig::default();
+            let workers: usize = get("--workers")
+                .map(|w| w.parse().unwrap_or_else(|_| usage("--workers must be a number")))
+                .unwrap_or(defaults.workers);
+            let queue_cap: usize = get("--queue")
+                .map(|q| q.parse().unwrap_or_else(|_| usage("--queue must be a number")))
+                .unwrap_or(defaults.queue_cap);
+            if workers == 0 {
+                usage("--workers must be >= 1");
+            }
+            if queue_cap == 0 {
+                usage("--queue must be >= 1");
+            }
             eprintln!("training planners (offline compilation step) ...");
             let state = std::sync::Arc::new(mobile_coexec::server::ServerState::new(
                 device,
                 scale.train_n,
                 42,
             ));
-            mobile_coexec::server::serve(state, &addr).expect("serve");
+            let config = mobile_coexec::server::ServerConfig { workers, queue_cap };
+            mobile_coexec::server::serve_with(state, &addr, config).expect("serve");
         }
         "all" => {
             figures::fig2(scale);
@@ -134,7 +149,8 @@ fn main() {
                  usage:\n  repro fig   --id 2|3|5|6a|6b|7 [--quick]\n  \
                  repro table --id 1|2|3|4 [--quick]\n  repro sync\n  \
                  repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N]\n  \
-                 repro coexec [--c1 N]\n  repro serve --device <name> [--addr HOST:PORT]\n  \
+                 repro coexec [--c1 N]\n  \
+                 repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N]\n  \
                  repro all [--quick]"
             );
         }
@@ -142,13 +158,10 @@ fn main() {
 }
 
 fn parse_device(name: &str) -> Device {
-    match name.to_ascii_lowercase().as_str() {
-        "pixel4" => Device::pixel4(),
-        "pixel5" => Device::pixel5(),
-        "moto2022" | "moto" => Device::moto2022(),
-        "oneplus11" | "oneplus" => Device::oneplus11(),
-        other => usage(&format!("unknown device {other}")),
-    }
+    // the server module owns the device table (keys, aliases, constructors)
+    mobile_coexec::server::canonical_device_key(name)
+        .and_then(mobile_coexec::server::device_by_key)
+        .unwrap_or_else(|| usage(&format!("unknown device {name}")))
 }
 
 fn usage(msg: &str) -> ! {

@@ -1,4 +1,94 @@
 //! Evaluation metrics and small statistics helpers.
+//!
+//! Besides the offline statistics the experiment harness uses (MAPE,
+//! percentiles, ...), this module provides the two concurrency-safe
+//! primitives the serving layer composes into per-endpoint telemetry:
+//! [`Counter`] (lock-free event counts) and [`LatencyRecorder`] (a bounded
+//! sample reservoir answering p50/p95 queries).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A monotonically increasing event counter, shareable across threads.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    /// Add one; returns the new value.
+    pub fn inc(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time latency summary from a [`LatencyRecorder`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySnapshot {
+    /// Total samples ever recorded (may exceed the retained window).
+    pub count: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+/// Thread-safe latency reservoir: keeps the most recent `cap` samples in a
+/// ring and answers percentile queries over that window. Empty recorders
+/// report zero percentiles (a snapshot must never panic mid-serve).
+#[derive(Debug)]
+pub struct LatencyRecorder {
+    cap: usize,
+    samples: Mutex<Vec<f64>>,
+    count: Counter,
+}
+
+impl LatencyRecorder {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "latency window must hold at least one sample");
+        Self { cap, samples: Mutex::new(Vec::new()), count: Counter::new() }
+    }
+
+    pub fn record_us(&self, us: f64) {
+        let n = self.count.inc();
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < self.cap {
+            s.push(us);
+        } else {
+            // overwrite the oldest slot (ring indexed by total count)
+            let idx = ((n - 1) as usize) % self.cap;
+            s[idx] = us;
+        }
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        // copy under the lock, sort outside it: recorders sit on hot
+        // request paths and must not block on a snapshot's sort
+        let mut sorted = self.samples.lock().unwrap().clone();
+        let count = self.count.get();
+        if sorted.is_empty() {
+            return LatencySnapshot { count, p50_us: 0.0, p95_us: 0.0 };
+        }
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySnapshot {
+            count,
+            p50_us: percentile_sorted(&sorted, 50.0),
+            p95_us: percentile_sorted(&sorted, 95.0),
+        }
+    }
+}
+
+impl Default for LatencyRecorder {
+    /// Window of 4096 samples: enough for stable serving percentiles at a
+    /// few KiB per endpoint.
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
 
 /// Mean Absolute Percentage Error (the paper's Table 1 metric).
 pub fn mape(actual: &[f64], predicted: &[f64]) -> f64 {
@@ -35,9 +125,15 @@ pub fn ci95_halfwidth(xs: &[f64]) -> f64 {
 
 /// `p`-th percentile (0..=100), linear interpolation.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty() && (0.0..=100.0).contains(&p));
     let mut s = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, p)
+}
+
+/// `p`-th percentile of an already ascending-sorted slice (callers that
+/// query several percentiles sort once and use this).
+pub fn percentile_sorted(s: &[f64], p: f64) -> f64 {
+    assert!(!s.is_empty() && (0.0..=100.0).contains(&p));
     let pos = p / 100.0 * (s.len() - 1) as f64;
     let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
     if lo == hi {
@@ -84,5 +180,51 @@ mod tests {
     fn geomean_of_equal_is_value() {
         assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counter_counts_across_threads() {
+        let c = std::sync::Arc::new(Counter::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn latency_recorder_percentiles() {
+        let r = LatencyRecorder::new(100);
+        assert_eq!(r.snapshot(), LatencySnapshot { count: 0, p50_us: 0.0, p95_us: 0.0 });
+        for i in 1..=100 {
+            r.record_us(i as f64);
+        }
+        let s = r.snapshot();
+        assert_eq!(s.count, 100);
+        assert!((s.p50_us - 50.5).abs() < 1e-9);
+        assert!(s.p95_us > s.p50_us && s.p95_us <= 100.0);
+    }
+
+    #[test]
+    fn latency_recorder_ring_overwrites() {
+        let r = LatencyRecorder::new(4);
+        for _ in 0..8 {
+            r.record_us(1000.0);
+        }
+        for _ in 0..4 {
+            r.record_us(1.0); // fills the whole ring
+        }
+        let s = r.snapshot();
+        assert_eq!(s.count, 12);
+        assert_eq!((s.p50_us, s.p95_us), (1.0, 1.0));
     }
 }

@@ -28,7 +28,11 @@ pub const PLAN_STEP: usize = 4;
 pub const GRID_STEP: usize = 8;
 
 /// A partitioning decision with its predicted cost breakdown.
-#[derive(Debug, Clone, Copy)]
+///
+/// Plans are `Copy` and compare exactly (planning is deterministic per
+/// `(device, op, threads, mech)` tuple), which is what lets the serving
+/// layer's `PlanCache` treat them as cheap, stable cache values.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Plan {
     pub split: ChannelSplit,
     pub threads: usize,

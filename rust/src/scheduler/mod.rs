@@ -72,17 +72,28 @@ pub struct ModelScheduler<'a> {
 impl<'a> ModelScheduler<'a> {
     /// Offline planning pass (the paper folds this into compilation).
     pub fn plan(&self, model: &Model) -> Vec<LayerSchedule> {
+        self.plan_via(model, |op, threads| {
+            let planner = match op {
+                OpConfig::Linear(_) => self.linear_planner,
+                OpConfig::Conv(_) => self.conv_planner,
+            };
+            planner.plan_with_threads(op, threads)
+        })
+    }
+
+    /// Planning pass through an arbitrary plan source — the serving layer
+    /// passes a closure backed by its `PlanCache` so repeated shapes
+    /// (within one model or across requests) are planned once. Pooling
+    /// layers stay GPU-pinned (`plan: None`), exactly as in [`Self::plan`].
+    pub fn plan_via<F>(&self, model: &Model, mut plan_op: F) -> Vec<LayerSchedule>
+    where
+        F: FnMut(&OpConfig, usize) -> Plan,
+    {
         model
             .layers
             .iter()
             .map(|layer| {
-                let plan = layer.op().map(|op| {
-                    let planner = match op {
-                        OpConfig::Linear(_) => self.linear_planner,
-                        OpConfig::Conv(_) => self.conv_planner,
-                    };
-                    planner.plan_with_threads(&op, self.threads)
-                });
+                let plan = layer.op().map(|op| plan_op(&op, self.threads));
                 LayerSchedule { layer: *layer, plan }
             })
             .collect()
@@ -173,6 +184,34 @@ mod tests {
         let device = Device::oneplus11();
         let p = Layer::Pool { h: 112, w: 112, c: 64, k: 3, stride: 2 };
         assert!(pool_gpu_us(&device, &p) < 100.0);
+    }
+
+    #[test]
+    fn plan_via_matches_direct_plan() {
+        let device = Device::pixel5();
+        let (lp, cp) = quick_planners(&device);
+        let s = ModelScheduler {
+            device: &device,
+            linear_planner: &lp,
+            conv_planner: &cp,
+            threads: 3,
+            mech: SyncMechanism::SvmPolling,
+        };
+        let m = models::resnet18();
+        let direct = s.plan(&m);
+        let mut calls = 0usize;
+        let via = s.plan_via(&m, |op, threads| {
+            calls += 1;
+            let planner = match op {
+                crate::ops::OpConfig::Linear(_) => &lp,
+                crate::ops::OpConfig::Conv(_) => &cp,
+            };
+            planner.plan_with_threads(op, threads)
+        });
+        assert_eq!(calls, direct.iter().filter(|ls| ls.plan.is_some()).count());
+        for (a, b) in direct.iter().zip(&via) {
+            assert_eq!(a.plan, b.plan);
+        }
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Sharded plan cache — the serving layer's core data structure.
+//!
+//! Delegate dispatch heuristics and the trained GBDT predictors are pure
+//! functions of the op shape, so a partition plan is fully determined by
+//! the `(device, op-config, threads, sync-mechanism)` tuple ([`PlanKey`]).
+//! Re-planning on every request wastes ~ms of GBDT sweeps per op; a cache
+//! hit is a hash lookup over a `Copy` [`Plan`] (~ns). The cache is sharded
+//! by key hash so concurrent requests for different ops rarely contend.
+//!
+//! Concurrency contract: [`PlanCache::get_or_insert_with`] holds the shard
+//! lock *while computing* a missing plan. That gives single-flight
+//! semantics per shard — two racing requests for the same key produce
+//! exactly one miss and one hit, never two misses — which the protocol
+//! stress tests rely on (`hits == requests - distinct keys`). Planning
+//! costs ~3-4 ms worst case; with [`DEFAULT_SHARDS`] shards the collateral
+//! blocking of unrelated keys is negligible at serving concurrency.
+//!
+//! Memory is bounded: each shard holds at most
+//! [`DEFAULT_MAX_PER_SHARD`] plans (configurable via
+//! [`PlanCache::with_capacity`]) and is flushed wholesale when full, so a
+//! client iterating distinct shapes cannot grow the server without limit.
+
+use crate::device::SyncMechanism;
+use crate::metrics::Counter;
+use crate::ops::OpConfig;
+use crate::partition::{Plan, Planner};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Mutex, MutexGuard};
+
+/// Everything a partition plan depends on. Cheap to build (all `Copy`
+/// except the static device name) and collision-free: two keys compare
+/// equal iff every component is equal.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Device display name (`Device::name()`, `'static` — no allocation).
+    pub device: &'static str,
+    pub op: OpConfig,
+    pub threads: usize,
+    pub mech: SyncMechanism,
+}
+
+/// Default shard count: power of two, comfortably above typical serving
+/// parallelism (worker pools of 4-16).
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// Default per-shard entry bound (total bound = shards x this). Plans are
+/// tiny, so 16 x 4096 entries is megabytes — but the bound must exist: a
+/// client iterating distinct shapes must not grow server memory forever.
+pub const DEFAULT_MAX_PER_SHARD: usize = 4096;
+
+/// A sharded `(PlanKey -> Plan)` map with hit/miss telemetry.
+pub struct PlanCache {
+    shards: Vec<Mutex<HashMap<PlanKey, Plan>>>,
+    max_per_shard: usize,
+    hits: Counter,
+    misses: Counter,
+}
+
+impl PlanCache {
+    pub fn new(n_shards: usize) -> Self {
+        Self::with_capacity(n_shards, DEFAULT_MAX_PER_SHARD)
+    }
+
+    /// A cache with an explicit per-shard entry bound. A shard that fills
+    /// up is flushed wholesale before the next insert — crude, O(1)
+    /// bookkeeping, and plans are milliseconds to recompute; what matters
+    /// is that memory stays bounded.
+    pub fn with_capacity(n_shards: usize, max_per_shard: usize) -> Self {
+        assert!(n_shards > 0, "cache needs at least one shard");
+        assert!(max_per_shard > 0, "shards must hold at least one plan");
+        Self {
+            shards: (0..n_shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            max_per_shard,
+            hits: Counter::new(),
+            misses: Counter::new(),
+        }
+    }
+
+    fn shard(&self, key: &PlanKey) -> &Mutex<HashMap<PlanKey, Plan>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Lock a shard, recovering from poisoning: `compute` runs under the
+    /// lock, so a panicking planner must degrade that one request (the
+    /// worker pool contains the panic), not wedge the shard forever. The
+    /// map itself stays consistent — a failed compute inserted nothing.
+    fn lock(m: &Mutex<HashMap<PlanKey, Plan>>) -> MutexGuard<'_, HashMap<PlanKey, Plan>> {
+        m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Cached plan for `key`, or `compute` it (under the shard lock — see
+    /// the module docs for the single-flight rationale) and remember it.
+    pub fn get_or_insert_with<F: FnOnce() -> Plan>(&self, key: PlanKey, compute: F) -> Plan {
+        let mut shard = Self::lock(self.shard(&key));
+        if let Some(plan) = shard.get(&key) {
+            self.hits.inc();
+            return *plan;
+        }
+        self.misses.inc();
+        let plan = compute();
+        if shard.len() >= self.max_per_shard {
+            shard.clear(); // bounded memory beats perfect retention
+        }
+        shard.insert(key, plan);
+        plan
+    }
+
+    /// The serving-layer entry point: plan `op` through `planner`, reusing
+    /// a cached plan when one exists. Identical to
+    /// `planner.plan_with_threads(op, threads)` by construction (planning
+    /// is deterministic), just ~1000x cheaper on a hit.
+    pub fn get_or_plan(&self, planner: &Planner, op: &OpConfig, threads: usize) -> Plan {
+        let key = PlanKey {
+            device: planner.device.name(),
+            op: *op,
+            threads,
+            mech: planner.mech,
+        };
+        self.get_or_insert_with(key, || planner.plan_with_threads(op, threads))
+    }
+
+    /// Peek without counting (diagnostics only).
+    pub fn peek(&self, key: &PlanKey) -> Option<Plan> {
+        Self::lock(self.shard(key)).get(key).copied()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    /// Number of cached plans across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| Self::lock(s).len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached plan (keeps the hit/miss counters).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            Self::lock(s).clear();
+        }
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new(DEFAULT_SHARDS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::ops::LinearConfig;
+    use std::sync::Arc;
+
+    fn planner() -> Planner {
+        Planner::train_for_kind(&Device::pixel5(), "linear", 600, 9)
+    }
+
+    #[test]
+    fn hit_returns_identical_plan() {
+        let p = planner();
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        let first = cache.get_or_plan(&p, &op, 3);
+        let second = cache.get_or_plan(&p, &op, 3);
+        assert_eq!(first, second);
+        assert_eq!(first, p.plan_with_threads(&op, 3));
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_tuples_get_distinct_entries() {
+        let p = planner();
+        let cache = PlanCache::default();
+        let op_a = OpConfig::Linear(LinearConfig::new(50, 768, 1024));
+        let op_b = OpConfig::Linear(LinearConfig::new(50, 768, 1028));
+        cache.get_or_plan(&p, &op_a, 3);
+        cache.get_or_plan(&p, &op_a, 2); // same op, different threads
+        cache.get_or_plan(&p, &op_b, 3);
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 3, 3));
+    }
+
+    #[test]
+    fn concurrent_same_key_is_one_miss() {
+        let p = Arc::new(planner());
+        let cache = Arc::new(PlanCache::default());
+        let op = OpConfig::Linear(LinearConfig::new(64, 512, 2048));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (p, cache) = (p.clone(), cache.clone());
+                std::thread::spawn(move || cache.get_or_plan(&p, &op, 3))
+            })
+            .collect();
+        let plans: Vec<Plan> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(plans.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(cache.misses(), 1, "single-flight: exactly one cold plan");
+        assert_eq!(cache.hits(), 7);
+    }
+
+    #[test]
+    fn full_shard_is_flushed_not_grown() {
+        let p = planner();
+        // one shard, room for two plans: the third insert flushes it
+        let cache = PlanCache::with_capacity(1, 2);
+        for cout in [256usize, 260, 264] {
+            let op = OpConfig::Linear(LinearConfig::new(8, 64, cout));
+            cache.get_or_plan(&p, &op, 1);
+        }
+        assert_eq!(cache.len(), 1, "flush happens before the overflowing insert");
+        assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn clear_keeps_counters() {
+        let p = planner();
+        let cache = PlanCache::new(4);
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 256));
+        cache.get_or_plan(&p, &op, 1);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.misses(), 1);
+        cache.get_or_plan(&p, &op, 1);
+        assert_eq!(cache.misses(), 2, "cleared entries re-plan");
+    }
+}

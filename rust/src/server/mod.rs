@@ -1,151 +1,756 @@
-//! Inference planning/serving front-end.
+//! Concurrent plan-caching serving layer.
 //!
-//! The paper's contribution is the per-op planner, not a router, so L3's
-//! serving surface is deliberately thin: a line-oriented TCP protocol that
-//! exposes planning and (simulated) execution. One thread per connection
-//! (std-only build: tokio is unavailable offline; the request path does no
-//! blocking I/O besides the socket itself).
+//! The paper's planner is fast because the expensive work (GBDT training,
+//! dispatch-feature extraction) happens offline; this module makes the
+//! *online* side scale the same way. Three pieces:
 //!
-//! Protocol (one request per line, fields space-separated):
+//! * a device **registry** serving all four paper phones from one process
+//!   (per-device planners are trained lazily, on first use);
+//! * a sharded **[`cache::PlanCache`]** keyed by
+//!   `(device, op-config, threads, sync-mechanism)` — delegate heuristics
+//!   and trained predictors are deterministic per shape, so a plan never
+//!   needs computing twice;
+//! * a bounded **[`pool::WorkerPool`]** request executor: each connection
+//!   gets a thin I/O reader thread, but all planning/measuring runs on N
+//!   shared workers behind a bounded queue. When the queue is full the
+//!   server sheds load with `ERR busy` instead of melting down.
+//!
+//! # Protocol grammar
+//!
+//! Line-oriented TCP, one request per line, fields space-separated,
+//! replies a single line starting `OK ` or `ERR `:
 //!
 //! ```text
-//! PLAN linear <l> <cin> <cout> <threads>        -> OK c_cpu c_gpu t_pred_us
-//! PLAN conv <h> <w> <cin> <cout> <k> <s> <thr>  -> OK c_cpu c_gpu t_pred_us
-//! RUN  linear <l> <cin> <cout> <threads>        -> OK t_coexec_us t_gpu_us speedup
-//! PING                                          -> OK pong
+//! request    = ping | plan | run | device | plan-model | stats
+//! ping       = "PING"                                   ; -> OK pong
+//! plan       = "PLAN" op-spec                           ; -> OK c_cpu c_gpu t_pred_us
+//! run        = "RUN" op-spec                            ; -> OK t_coexec_us t_gpu_us speedup
+//! device     = "DEVICE" name                            ; -> OK device <name>
+//! plan-model = "PLAN_MODEL" model threads               ; -> OK model=<m> layers=<n>
+//!                                                       ;      planned=<n> coexec=<n>
+//!                                                       ;      t_pred_ms=<x>
+//! stats      = "STATS"                                  ; -> OK hits=.. misses=.. entries=..
+//!                                                       ;      <verb>.req= .err= .p50_us= .p95_us= ...
+//! op-spec    = "linear" l cin cout threads
+//!            | "conv" h w cin cout k s threads
+//! name       = "pixel4" | "pixel5" | "moto2022" | "oneplus11"   ; + aliases moto, oneplus
+//! model      = "vgg16" | "resnet18" | "resnet34" | "inception_v3" | "vit_base32"
+//! threads    = 1..cores   ; 0 is an error, larger values clamp to the
+//!                         ; device's big-core count
 //! ```
+//!
+//! `DEVICE` is *session-scoped*: it selects the device for subsequent
+//! requests on the same connection only (every connection starts on the
+//! server's default device). All numeric fields must be positive and at
+//! most [`MAX_FIELD`] — an oversized shape must not pin a worker in a
+//! near-endless partition sweep.
+//!
+//! # Example session
+//!
+//! ```text
+//! > PING
+//! < OK pong
+//! > DEVICE pixel5
+//! < OK device pixel5
+//! > PLAN linear 50 768 3072 3
+//! < OK 592 2480 1628.4
+//! > PLAN linear 50 768 3072 3
+//! < OK 592 2480 1628.4          (cache hit: identical bytes, ~1000x cheaper)
+//! > PLAN_MODEL resnet18 3
+//! < OK model=resnet18 layers=<n> planned=<n> coexec=<n> t_pred_ms=<x>
+//! > PLAN linear 0 768 3072 3
+//! < ERR zero-sized shape
+//! > STATS
+//! < OK hits=<n> misses=<n> entries=<n> ping.req=1 ping.err=0 ...
+//! ```
+//!
+//! (Repeated shapes — across requests or within one model — are cache
+//! hits, so `entries` counts *distinct* planned shapes, not layers.)
 
+pub mod cache;
+pub mod pool;
+
+use self::cache::PlanCache;
+use self::pool::{SubmitError, WorkerPool};
 use crate::device::{Device, Processor};
+use crate::metrics::{Counter, LatencyRecorder};
+use crate::models::{self, Model};
 use crate::ops::{ConvConfig, LinearConfig, OpConfig};
-use crate::partition::Planner;
+use crate::partition::{Plan, Planner};
+use crate::scheduler::{pool_gpu_us, ModelScheduler};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, OnceLock};
+use std::time::Instant;
 
-/// Shared server state: a device and one planner per op kind.
+/// The paper's four evaluation devices: single source of truth for
+/// `(canonical key, aliases, constructor)` — the registry, name
+/// resolution, and the CLI all consult this table, so the sets cannot
+/// diverge when a device is added.
+const DEVICES: [(&str, &[&str], fn() -> Device); 4] = [
+    ("pixel4", &[], Device::pixel4),
+    ("pixel5", &[], Device::pixel5),
+    ("moto2022", &["moto"], Device::moto2022),
+    ("oneplus11", &["oneplus"], Device::oneplus11),
+];
+
+/// Canonical registry keys, in [`DEVICES`] order (derived, so the two
+/// cannot diverge when a device is added).
+pub const DEVICE_KEYS: [&str; DEVICES.len()] = {
+    let mut keys = [""; DEVICES.len()];
+    let mut i = 0;
+    while i < DEVICES.len() {
+        keys[i] = DEVICES[i].0;
+        i += 1;
+    }
+    keys
+};
+
+/// Resolve a client-supplied device name (aliases, any case) to its
+/// canonical registry key.
+pub fn canonical_device_key(name: &str) -> Option<&'static str> {
+    let lower = name.to_ascii_lowercase();
+    DEVICES
+        .iter()
+        .find(|(key, aliases, _)| *key == lower || aliases.contains(&lower.as_str()))
+        .map(|(key, _, _)| *key)
+}
+
+/// A fresh [`Device`] for a canonical registry key.
+pub fn device_by_key(key: &str) -> Option<Device> {
+    DEVICES.iter().find(|(k, _, _)| *k == key).map(|(_, _, ctor)| ctor())
+}
+
+fn model_by_name(name: &str) -> Option<Model> {
+    match name.to_ascii_lowercase().as_str() {
+        "vgg16" => Some(models::vgg16()),
+        "resnet18" => Some(models::resnet18()),
+        "resnet34" => Some(models::resnet34()),
+        "inception_v3" | "inceptionv3" => Some(models::inception_v3()),
+        "vit_base32" | "vit" => Some(models::vit_base32()),
+        _ => None,
+    }
+}
+
+/// Both planners for one device (trained together, lazily).
+pub struct DevicePlanners {
+    pub linear: Planner,
+    pub conv: Planner,
+}
+
+impl DevicePlanners {
+    /// The planner responsible for an op's kind.
+    pub fn for_op(&self, op: &OpConfig) -> &Planner {
+        match op {
+            OpConfig::Linear(_) => &self.linear,
+            OpConfig::Conv(_) => &self.conv,
+        }
+    }
+}
+
+struct DeviceEntry {
+    key: &'static str,
+    device: Device,
+    planners: OnceLock<DevicePlanners>,
+}
+
+impl DeviceEntry {
+    fn planners(&self, n_train: usize, seed: u64) -> &DevicePlanners {
+        self.planners.get_or_init(|| DevicePlanners {
+            linear: Planner::train_for_kind(&self.device, "linear", n_train, seed),
+            conv: Planner::train_for_kind(&self.device, "conv", n_train, seed),
+        })
+    }
+}
+
+/// Request counters and latency for one protocol verb.
+pub struct EndpointStats {
+    pub requests: Counter,
+    pub errors: Counter,
+    pub latency: LatencyRecorder,
+}
+
+impl EndpointStats {
+    fn new() -> Self {
+        Self {
+            requests: Counter::new(),
+            errors: Counter::new(),
+            latency: LatencyRecorder::default(),
+        }
+    }
+}
+
+/// Per-verb serving telemetry, rendered by the `STATS` verb.
+pub struct ServerMetrics {
+    endpoints: Vec<(&'static str, EndpointStats)>,
+}
+
+/// The protocol's verbs: wire token -> metrics key. Single source of
+/// truth for telemetry bookkeeping and the stable `STATS` reporting
+/// order (dispatch itself lives in `handle_inner`'s match).
+const VERBS: [(&str, &str); 6] = [
+    ("PING", "ping"),
+    ("PLAN", "plan"),
+    ("RUN", "run"),
+    ("DEVICE", "device"),
+    ("PLAN_MODEL", "plan_model"),
+    ("STATS", "stats"),
+];
+
+/// Metrics key collecting unrecognized verbs (reported last by `STATS`).
+const OTHER_KEY: &str = "other";
+
+impl ServerMetrics {
+    fn new() -> Self {
+        Self {
+            endpoints: VERBS
+                .iter()
+                .map(|(_, key)| *key)
+                .chain([OTHER_KEY])
+                .map(|k| (k, EndpointStats::new()))
+                .collect(),
+        }
+    }
+
+    /// Stats for a verb key (`"plan"`, ...); unknown keys land in `other`.
+    pub fn endpoint(&self, key: &str) -> &EndpointStats {
+        self.endpoints
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, e)| e)
+            .unwrap_or(&self.endpoints[self.endpoints.len() - 1].1)
+    }
+
+    /// The `STATS` reply body: cache counters first, then per-verb
+    /// `req/err/p50/p95` in [`VERBS`] order (`other` last).
+    fn render(&self, cache: &PlanCache) -> String {
+        let mut out = format!(
+            "hits={} misses={} entries={}",
+            cache.hits(),
+            cache.misses(),
+            cache.len()
+        );
+        for (name, ep) in &self.endpoints {
+            let s = ep.latency.snapshot();
+            out.push_str(&format!(
+                " {name}.req={} {name}.err={} {name}.p50_us={:.1} {name}.p95_us={:.1}",
+                ep.requests.get(),
+                ep.errors.get(),
+                s.p50_us,
+                s.p95_us
+            ));
+        }
+        out
+    }
+}
+
+/// Per-connection protocol state: which registry device the connection is
+/// talking to (`DEVICE` switches it; new connections start on the default).
+#[derive(Debug, Clone, Copy)]
+pub struct Session {
+    device: &'static str,
+}
+
+impl Session {
+    /// Canonical key of the currently selected device.
+    pub fn device_key(&self) -> &'static str {
+        self.device
+    }
+}
+
+/// Shared server state: device registry + plan cache + telemetry.
+///
+/// Request handling ([`ServerState::handle`]) is pure computation over
+/// `&self` — all I/O and thread management lives in [`Server`].
 pub struct ServerState {
-    pub device: Device,
-    pub linear_planner: Planner,
-    pub conv_planner: Planner,
+    registry: Vec<DeviceEntry>,
+    default_device: &'static str,
+    n_train: usize,
+    seed: u64,
+    pub cache: PlanCache,
+    pub metrics: ServerMetrics,
 }
 
 impl ServerState {
-    /// Train planners for a device (done once at startup; the paper calls
-    /// this the offline compilation step).
+    /// Registry over all four paper devices with `device` as the default,
+    /// whose planners are trained eagerly (the paper's offline compilation
+    /// step); the other devices train on first `DEVICE` use.
     pub fn new(device: Device, n_train: usize, seed: u64) -> Self {
-        let linear_planner = Planner::train_for_kind(&device, "linear", n_train, seed);
-        let conv_planner = Planner::train_for_kind(&device, "conv", n_train, seed);
-        Self { device, linear_planner, conv_planner }
+        let state = Self::new_lazy(device, n_train, seed);
+        let default = state.entry(state.default_device).expect("default registered");
+        default.planners(state.n_train, state.seed);
+        state
     }
 
-    /// Handle one request line; returns the reply line.
-    pub fn handle(&self, line: &str) -> String {
-        match self.handle_inner(line) {
+    /// Like [`ServerState::new`] but trains nothing up front (every device
+    /// compiles on first use). Useful for tests and fast startup.
+    pub fn new_lazy(device: Device, n_train: usize, seed: u64) -> Self {
+        let mut registry: Vec<DeviceEntry> = DEVICES
+            .iter()
+            .map(|(key, _, ctor)| DeviceEntry {
+                key: *key,
+                device: ctor(),
+                planners: OnceLock::new(),
+            })
+            .collect();
+        let default_device = match registry
+            .iter()
+            .position(|e| e.device.spec.name == device.spec.name)
+        {
+            Some(i) => {
+                // honor the caller's device instance (custom seed etc.)
+                registry[i].device = device;
+                registry[i].key
+            }
+            None => {
+                let key = device.spec.name;
+                registry.push(DeviceEntry { key, device, planners: OnceLock::new() });
+                key
+            }
+        };
+        Self {
+            registry,
+            default_device,
+            n_train,
+            seed,
+            cache: PlanCache::default(),
+            metrics: ServerMetrics::new(),
+        }
+    }
+
+    /// Train planners for every registry device that has none yet. Called
+    /// off the request path (see [`Server::serve`]): without it, the first
+    /// request for a cold device pins a pool worker for the whole GBDT
+    /// training — and four cold-device requests would pin the entire
+    /// default pool.
+    pub fn prewarm_all(&self) {
+        for entry in &self.registry {
+            entry.planners(self.n_train, self.seed);
+        }
+    }
+
+    /// A fresh per-connection session on the default device.
+    pub fn session(&self) -> Session {
+        Session { device: self.default_device }
+    }
+
+    /// The default device's canonical key.
+    pub fn default_device_key(&self) -> &'static str {
+        self.default_device
+    }
+
+    fn entry(&self, key: &str) -> Option<&DeviceEntry> {
+        self.registry.iter().find(|e| e.key == key)
+    }
+
+    fn session_entry(&self, session: &Session) -> &DeviceEntry {
+        self.entry(session.device).expect("session device always registered")
+    }
+
+    fn planners_for(&self, entry: &DeviceEntry) -> &DevicePlanners {
+        entry.planners(self.n_train, self.seed)
+    }
+
+    /// Plan an op for the session's device through the cache.
+    pub fn plan_cached(&self, session: &Session, op: &OpConfig, threads: usize) -> Plan {
+        let planners = self.planners_for(self.session_entry(session));
+        self.cache.get_or_plan(planners.for_op(op), op, threads)
+    }
+
+    /// Record a request shed before reaching [`Self::handle`] (pool full or
+    /// shutting down): overload must still show up in `STATS` as a request
+    /// and an error. `verb` is the metrics key (see `verb_key`), computed
+    /// by the caller before the request line moves into its pool job.
+    pub fn record_shed(&self, verb: &str) {
+        let ep = self.metrics.endpoint(verb);
+        ep.requests.inc();
+        ep.errors.inc();
+    }
+
+    /// Record an error for a request whose worker job died mid-flight (the
+    /// request itself was already counted by [`Self::handle`] before the
+    /// panic): failures must not hide from `STATS`.
+    pub fn record_internal_error(&self, verb: &str) {
+        self.metrics.endpoint(verb).errors.inc();
+    }
+
+    /// Handle one request line; returns the reply line (always `OK ...` or
+    /// `ERR ...`), recording per-verb telemetry.
+    pub fn handle(&self, session: &mut Session, line: &str) -> String {
+        let t0 = Instant::now();
+        let ep = self.metrics.endpoint(verb_key(line));
+        ep.requests.inc();
+        let reply = match self.handle_inner(session, line) {
             Ok(s) => format!("OK {s}"),
-            Err(e) => format!("ERR {e}"),
-        }
+            Err(e) => {
+                ep.errors.inc();
+                format!("ERR {e}")
+            }
+        };
+        ep.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+        reply
     }
 
-    fn parse_op(&self, parts: &[&str]) -> Result<(OpConfig, usize)> {
-        match parts {
-            ["linear", l, cin, cout, thr] => Ok((
-                OpConfig::Linear(LinearConfig::new(l.parse()?, cin.parse()?, cout.parse()?)),
-                thr.parse()?,
-            )),
-            ["conv", h, w, cin, cout, k, s, thr] => Ok((
-                OpConfig::Conv(ConvConfig::new(
-                    h.parse()?,
-                    w.parse()?,
-                    cin.parse()?,
-                    cout.parse()?,
-                    k.parse()?,
-                    s.parse()?,
-                )),
-                thr.parse()?,
-            )),
-            _ => Err(anyhow!("bad op spec")),
-        }
-    }
-
-    fn planner_for(&self, op: &OpConfig) -> &Planner {
-        match op {
-            OpConfig::Linear(_) => &self.linear_planner,
-            OpConfig::Conv(_) => &self.conv_planner,
-        }
-    }
-
-    fn handle_inner(&self, line: &str) -> Result<String> {
+    fn handle_inner(&self, session: &mut Session, line: &str) -> Result<String> {
         let parts: Vec<&str> = line.split_whitespace().collect();
         match parts.as_slice() {
             ["PING"] => Ok("pong".to_string()),
+            ["PING", ..] => Err(anyhow!("bad request (expected: PING)")),
+            ["DEVICE", name] => {
+                // canonical names/aliases first, then exact registry keys
+                // (covers custom devices registered by `new_lazy`)
+                let key = canonical_device_key(name)
+                    .and_then(|k| self.entry(k))
+                    .or_else(|| self.entry(name))
+                    .map(|e| e.key)
+                    .ok_or_else(|| anyhow!("unknown device {name}"))?;
+                session.device = key;
+                Ok(format!("device {key}"))
+            }
+            ["DEVICE", ..] => Err(anyhow!("bad device spec (expected: DEVICE <name>)")),
             ["PLAN", rest @ ..] => {
-                let (op, threads) = self.parse_op(rest)?;
-                let plan = self.planner_for(&op).plan_with_threads(&op, threads);
+                let (op, threads) = self.parse_op(session, rest)?;
+                let plan = self.plan_cached(session, &op, threads);
                 Ok(format!(
                     "{} {} {:.1}",
                     plan.split.c_cpu, plan.split.c_gpu, plan.t_total_us
                 ))
             }
             ["RUN", rest @ ..] => {
-                let (op, threads) = self.parse_op(rest)?;
-                let planner = self.planner_for(&op);
-                let plan = planner.plan_with_threads(&op, threads);
+                let (op, threads) = self.parse_op(session, rest)?;
+                let entry = self.session_entry(session);
+                let planner = self.planners_for(entry).for_op(&op);
+                let plan = self.cache.get_or_plan(planner, &op, threads);
                 let t_co = planner.measure_plan_us(&op, &plan, 8);
-                let t_gpu = self.device.measure_mean(&op, Processor::Gpu, 8);
+                let t_gpu = entry.device.measure_mean(&op, Processor::Gpu, 8);
                 Ok(format!("{:.1} {:.1} {:.3}", t_co, t_gpu, t_gpu / t_co))
             }
-            _ => Err(anyhow!("unknown command")),
+            ["PLAN_MODEL", model, threads] => self.plan_model(session, model, threads),
+            ["PLAN_MODEL", ..] => {
+                Err(anyhow!("bad model spec (expected: PLAN_MODEL <model> <threads>)"))
+            }
+            ["STATS"] => Ok(self.metrics.render(&self.cache)),
+            ["STATS", ..] => Err(anyhow!("bad request (expected: STATS)")),
+            [other, ..] => Err(anyhow!("unknown command {other}")),
+            [] => Err(anyhow!("empty request")),
+        }
+    }
+
+    /// Plan every partitionable layer of a named model through the cache
+    /// (repeated shapes inside one model already hit).
+    fn plan_model(&self, session: &Session, name: &str, threads: &str) -> Result<String> {
+        let entry = self.session_entry(session);
+        let threads = self.parse_threads(entry, threads)?;
+        let model = model_by_name(name).ok_or_else(|| anyhow!("unknown model {name}"))?;
+        let planners = self.planners_for(entry);
+        let sched = ModelScheduler {
+            device: &entry.device,
+            linear_planner: &planners.linear,
+            conv_planner: &planners.conv,
+            threads,
+            mech: planners.linear.mech,
+        };
+        let schedule = sched.plan_via(&model, |op, threads| {
+            self.cache.get_or_plan(planners.for_op(op), op, threads)
+        });
+        let planned = schedule.iter().filter(|ls| ls.plan.is_some()).count();
+        let coexec = schedule
+            .iter()
+            .filter(|ls| ls.plan.is_some_and(|p| p.split.is_coexec()))
+            .count();
+        let t_pred_us: f64 = schedule
+            .iter()
+            .map(|ls| match &ls.plan {
+                Some(plan) => plan.t_total_us,
+                None => pool_gpu_us(&entry.device, &ls.layer),
+            })
+            .sum();
+        Ok(format!(
+            "model={} layers={} planned={planned} coexec={coexec} t_pred_ms={:.2}",
+            model.name,
+            model.layers.len(),
+            t_pred_us / 1e3
+        ))
+    }
+
+    fn parse_op(&self, session: &Session, parts: &[&str]) -> Result<(OpConfig, usize)> {
+        let entry = self.session_entry(session);
+        match parts {
+            ["linear", l, cin, cout, thr] => {
+                let cfg = LinearConfig::new(
+                    field(l, "l")?,
+                    field(cin, "cin")?,
+                    field(cout, "cout")?,
+                );
+                if cfg.l == 0 || cfg.cin == 0 || cfg.cout == 0 {
+                    return Err(anyhow!("zero-sized shape"));
+                }
+                Ok((OpConfig::Linear(cfg), self.parse_threads(entry, thr)?))
+            }
+            ["conv", h, w, cin, cout, k, s, thr] => {
+                let cfg = ConvConfig::new(
+                    field(h, "h")?,
+                    field(w, "w")?,
+                    field(cin, "cin")?,
+                    field(cout, "cout")?,
+                    field(k, "k")?,
+                    field(s, "s")?,
+                );
+                if cfg.h == 0
+                    || cfg.w == 0
+                    || cfg.cin == 0
+                    || cfg.cout == 0
+                    || cfg.k == 0
+                    || cfg.stride == 0
+                {
+                    return Err(anyhow!("zero-sized shape"));
+                }
+                Ok((OpConfig::Conv(cfg), self.parse_threads(entry, thr)?))
+            }
+            [kind, ..] if *kind != "linear" && *kind != "conv" => {
+                Err(anyhow!("unknown op kind {kind}"))
+            }
+            _ => Err(anyhow!(
+                "bad op spec (expected: linear <l> <cin> <cout> <threads> | \
+                 conv <h> <w> <cin> <cout> <k> <s> <threads>)"
+            )),
+        }
+    }
+
+    /// Validate and clamp a client thread count: 0 is an error; anything
+    /// above the device's big-core budget clamps to it (a client asking for
+    /// 99 threads must not make the cost model extrapolate nonsense).
+    fn parse_threads(&self, entry: &DeviceEntry, tok: &str) -> Result<usize> {
+        let t: usize = field(tok, "threads")?;
+        if t == 0 {
+            return Err(anyhow!("threads must be >= 1"));
+        }
+        Ok(t.min(entry.device.spec.cpu.max_threads()))
+    }
+}
+
+/// Pause after a failed `accept()` (fd exhaustion and friends): long
+/// enough not to busy-spin, short enough to recover promptly.
+const ACCEPT_BACKOFF: std::time::Duration = std::time::Duration::from_millis(50);
+
+/// Largest accepted request line in bytes: a client streaming data with
+/// no newline must not grow per-connection buffers without limit.
+const MAX_LINE_BYTES: u64 = 4096;
+
+/// Largest accepted value for any numeric request field: covers the model
+/// zoo (which tops out at VGG16's classifier `cin = 25088`), small enough
+/// that a single request cannot pin a worker in a near-endless partition
+/// sweep — and that the cost models' usize products (up to four max-sized
+/// factors, e.g. `k*kw*cin*cout` at 2^60) cannot wrap at 2^64.
+pub const MAX_FIELD: usize = 1 << 15;
+
+fn field(tok: &str, name: &str) -> Result<usize> {
+    let v: usize = tok.parse().map_err(|_| anyhow!("malformed field {name}={tok}"))?;
+    if v > MAX_FIELD {
+        return Err(anyhow!("field too large {name}={v} (max {MAX_FIELD})"));
+    }
+    Ok(v)
+}
+
+/// Metrics key for a request line's verb (from the same [`VERBS`] table
+/// that defines the `STATS` reporting order).
+fn verb_key(line: &str) -> &'static str {
+    let first = line.split_whitespace().next().unwrap_or("");
+    VERBS
+        .iter()
+        .find(|(wire, _)| *wire == first)
+        .map(|(_, key)| *key)
+        .unwrap_or(OTHER_KEY)
+}
+
+/// Serving knobs: worker-pool size and bounded-queue depth.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { workers: 4, queue_cap: 64 }
+    }
+}
+
+/// A running server: shared state + the worker pool executing requests.
+pub struct Server {
+    pub state: Arc<ServerState>,
+    pub pool: Arc<WorkerPool>,
+}
+
+impl Server {
+    pub fn new(state: Arc<ServerState>, config: ServerConfig) -> Self {
+        Self {
+            state,
+            pool: Arc::new(WorkerPool::new(config.workers, config.queue_cap)),
+        }
+    }
+
+    /// Serve forever on `addr` (e.g. "127.0.0.1:7077"). Non-default
+    /// devices pre-warm in the background so first-use requests don't
+    /// pin pool workers on planner training.
+    pub fn serve(&self, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        let warm = self.state.clone();
+        std::thread::spawn(move || warm.prewarm_all());
+        eprintln!(
+            "coexec planner serving on {addr} (default device: {}, {} workers)",
+            self.state.default_device,
+            self.pool.worker_count()
+        );
+        accept_loop(listener, self.state.clone(), self.pool.clone(), true);
+        Ok(())
+    }
+
+    /// Bind an ephemeral port, serve in the background, return the address.
+    pub fn spawn_ephemeral(&self) -> Result<std::net::SocketAddr> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let (state, pool) = (self.state.clone(), self.pool.clone());
+        std::thread::spawn(move || accept_loop(listener, state, pool, false));
+        Ok(addr)
+    }
+}
+
+/// Serve forever on `addr` with default pool sizing.
+pub fn serve(state: Arc<ServerState>, addr: &str) -> Result<()> {
+    serve_with(state, addr, ServerConfig::default())
+}
+
+/// Serve forever on `addr` with explicit pool sizing.
+pub fn serve_with(state: Arc<ServerState>, addr: &str, config: ServerConfig) -> Result<()> {
+    Server::new(state, config).serve(addr)
+}
+
+/// One-shot convenience: spawn a default-config server on an ephemeral
+/// port, return the bound address (used by tests and the examples).
+pub fn spawn_ephemeral(state: Arc<ServerState>) -> Result<std::net::SocketAddr> {
+    Server::new(state, ServerConfig::default()).spawn_ephemeral()
+}
+
+/// The shared accept loop: one thin reader thread per connection, all
+/// compute on the worker pool. Transient accept() errors (e.g. EMFILE
+/// under a burst) must neither take the server down nor busy-spin, so
+/// they back off; `serve` logs them, `spawn_ephemeral` (tests/examples,
+/// which also skip pre-warming to control their own training) stays
+/// quiet.
+fn accept_loop(
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    pool: Arc<WorkerPool>,
+    log_errors: bool,
+) {
+    for stream in listener.incoming() {
+        match stream {
+            Ok(stream) => {
+                let (state, pool) = (state.clone(), pool.clone());
+                std::thread::spawn(move || {
+                    let _ = handle_conn(state, pool, stream);
+                });
+            }
+            Err(e) => {
+                if log_errors {
+                    eprintln!("accept error (backing off): {e}");
+                }
+                std::thread::sleep(ACCEPT_BACKOFF);
+            }
         }
     }
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7077").
-pub fn serve(state: Arc<ServerState>, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    eprintln!("coexec planner serving on {addr} (device: {})", state.device.name());
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let st = state.clone();
-        std::thread::spawn(move || {
-            let _ = handle_conn(st, stream);
-        });
-    }
+/// Reply, then close without a TCP RST: half-close our write side so the
+/// reply's delivery doesn't race the close, and drain (bounded) whatever
+/// the client already sent — on Linux, dropping a socket with unread
+/// received bytes turns close() into RST, which can destroy the reply in
+/// flight.
+fn reply_and_hang_up(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    reply: &[u8],
+) -> Result<()> {
+    stream.write_all(reply)?;
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = std::io::copy(&mut reader.take(1 << 20), &mut std::io::sink());
     Ok(())
 }
 
-fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
+/// Per-connection I/O loop: a thin reader thread that forwards each line
+/// to the worker pool and relays the reply. Requests on one connection are
+/// processed in order; concurrency comes from many connections sharing the
+/// pool. A full queue is answered with `ERR busy` immediately — the reader
+/// never blocks on pool capacity.
+fn handle_conn(
+    state: Arc<ServerState>,
+    pool: Arc<WorkerPool>,
+    stream: TcpStream,
+) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
-    let mut line = String::new();
+    let mut session = state.session();
+    let mut buf: Vec<u8> = Vec::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
+        buf.clear();
+        // bytes, not read_line: invalid UTF-8 must get an ERR reply, not a
+        // dropped connection. The length cap's Take resets each iteration.
+        let n = (&mut reader).take(MAX_LINE_BYTES).read_until(b'\n', &mut buf)?;
+        if n == 0 {
             return Ok(()); // client closed
         }
-        let reply = state.handle(line.trim());
+        if !buf.ends_with(b"\n") && n as u64 == MAX_LINE_BYTES {
+            // protocol violation, not a request: reply and hang up
+            return reply_and_hang_up(&mut stream, &mut reader, b"ERR line too long\n");
+        }
+        let req = match std::str::from_utf8(&buf) {
+            Ok(s) => s.trim().to_string(),
+            Err(_) => {
+                // line framing is intact, so the connection can continue
+                stream.write_all(b"ERR invalid utf-8\n")?;
+                continue;
+            }
+        };
+        let (tx, rx) = mpsc::channel();
+        let st = state.clone();
+        let mut sess = session;
+        // telemetry key outlives the request line, which moves into the job
+        let vk = verb_key(&req);
+        let submitted = pool.try_submit(Box::new(move || {
+            let reply = st.handle(&mut sess, &req);
+            let _ = tx.send((sess, reply));
+        }));
+        let reply = match submitted {
+            // a worker that panicked mid-job drops the sender; the client
+            // still gets a reply line rather than a dead connection
+            Ok(()) => match rx.recv() {
+                Ok((sess, reply)) => {
+                    session = sess; // DEVICE switches persist across the connection
+                    reply
+                }
+                Err(_) => {
+                    state.record_internal_error(vk);
+                    "ERR internal error".to_string()
+                }
+            },
+            Err(SubmitError::Busy) => {
+                state.record_shed(vk);
+                "ERR busy (queue full)".to_string()
+            }
+            Err(SubmitError::Shutdown) => {
+                // terminal, not transient: tell the client and hang up
+                state.record_shed(vk);
+                return reply_and_hang_up(&mut stream, &mut reader, b"ERR shutting down\n");
+            }
+        };
         stream.write_all(reply.as_bytes())?;
         stream.write_all(b"\n")?;
     }
 }
 
-/// One-shot convenience: spawn a server on an ephemeral port, return the
-/// bound address (used by tests and the quickstart example).
-pub fn spawn_ephemeral(state: Arc<ServerState>) -> Result<std::net::SocketAddr> {
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?;
-    std::thread::spawn(move || {
-        for stream in listener.incoming().flatten() {
-            let st = state.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(st, stream);
-            });
-        }
-    });
-    Ok(addr)
-}
-
-/// Tiny client helper for examples/tests.
+/// Tiny one-shot client helper for examples/tests.
 pub fn request(addr: &std::net::SocketAddr, line: &str) -> Result<String> {
     let mut stream = TcpStream::connect(addr)?;
     stream.write_all(line.as_bytes())?;
@@ -167,15 +772,16 @@ mod tests {
     #[test]
     fn protocol_roundtrip() {
         let st = state();
-        assert_eq!(st.handle("PING"), "OK pong");
-        let reply = st.handle("PLAN linear 50 768 3072 3");
+        let mut session = st.session();
+        assert_eq!(st.handle(&mut session, "PING"), "OK pong");
+        let reply = st.handle(&mut session, "PLAN linear 50 768 3072 3");
         assert!(reply.starts_with("OK "), "{reply}");
         let nums: Vec<f64> = reply[3..]
             .split_whitespace()
             .map(|s| s.parse().unwrap())
             .collect();
         assert_eq!(nums[0] as usize + nums[1] as usize, 3072);
-        assert!(st.handle("PLAN bogus").starts_with("ERR"));
+        assert!(st.handle(&mut session, "PLAN bogus").starts_with("ERR"));
     }
 
     #[test]
@@ -187,5 +793,28 @@ mod tests {
         assert!(reply.starts_with("OK "), "{reply}");
         let speedup: f64 = reply.split_whitespace().last().unwrap().parse().unwrap();
         assert!(speedup > 1.1, "pixel5 flagship op must speed up: {speedup}");
+    }
+
+    #[test]
+    fn repeat_plan_hits_cache() {
+        // lazy + small: this test only cares about cache behaviour
+        let st = Arc::new(ServerState::new_lazy(Device::pixel5(), 700, 3));
+        let mut session = st.session();
+        let a = st.handle(&mut session, "PLAN linear 50 768 3072 3");
+        let b = st.handle(&mut session, "PLAN linear 50 768 3072 3");
+        assert_eq!(a, b, "cached plan must serialize identically");
+        assert_eq!((st.cache.hits(), st.cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn device_switch_is_session_scoped() {
+        // DEVICE never trains planners: lazy state keeps this instant
+        let st = Arc::new(ServerState::new_lazy(Device::pixel5(), 700, 3));
+        let mut session = st.session();
+        assert_eq!(st.handle(&mut session, "DEVICE moto2022"), "OK device moto2022");
+        assert_eq!(session.device_key(), "moto2022");
+        // a fresh session still points at the default
+        assert_eq!(st.session().device_key(), "pixel5");
+        assert!(st.handle(&mut session, "DEVICE fridge").starts_with("ERR unknown device"));
     }
 }

@@ -192,6 +192,53 @@ fn prop_metrics_agree_with_naive() {
     }
 }
 
+/// Property: the serving layer's plan cache is *transparent* — for random
+/// ops, a cached plan is identical to a freshly computed plan — and cache
+/// keys never collide across distinct `(op, threads, mech)` tuples.
+#[test]
+fn prop_plan_cache_transparent_and_keys_collision_free() {
+    use mobile_coexec::partition::Planner;
+    use mobile_coexec::server::cache::{PlanCache, PlanKey};
+    use std::collections::HashSet;
+
+    let device = Device::pixel5();
+    let linear = Planner::train_for_kind(&device, "linear", 500, 21);
+    let conv = Planner::train_for_kind(&device, "conv", 500, 21);
+    let cache = PlanCache::default();
+    let mut rng = SplitMix64::new(8);
+    let mut tuples: HashSet<(OpConfig, usize, SyncMechanism)> = HashSet::new();
+    let mut keys: HashSet<PlanKey> = HashSet::new();
+    for case in 0..60 {
+        let op = random_op(&mut rng);
+        let threads = rng.gen_range(1, 3);
+        let planner = match op {
+            OpConfig::Linear(_) => &linear,
+            OpConfig::Conv(_) => &conv,
+        };
+        // transparency: cold fill, then a hit, both == a direct plan
+        let cached = cache.get_or_plan(planner, &op, threads);
+        let fresh = planner.plan_with_threads(&op, threads);
+        assert_eq!(cached, fresh, "case {case}: cold cache fill diverged for {op}");
+        let hit = cache.get_or_plan(planner, &op, threads);
+        assert_eq!(hit, fresh, "case {case}: cache hit diverged for {op}");
+        // key uniqueness: one key per distinct tuple, for both mechanisms
+        for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+            tuples.insert((op, threads, mech));
+            keys.insert(PlanKey { device: device.name(), op, threads, mech });
+        }
+    }
+    assert_eq!(
+        keys.len(),
+        tuples.len(),
+        "distinct (op, threads, mech) tuples must map to distinct keys"
+    );
+    // and the cache held exactly one entry per distinct (op, threads)
+    let planned: HashSet<(OpConfig, usize)> =
+        tuples.iter().map(|(op, t, _)| (*op, *t)).collect();
+    assert_eq!(cache.len(), planned.len());
+    assert_eq!(cache.misses() as usize, planned.len());
+}
+
 /// Property: measurement noise is unbiased (mean factor ~1) and
 /// deterministic per trial key.
 #[test]

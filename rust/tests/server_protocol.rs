@@ -1,0 +1,438 @@
+//! Loopback protocol tests for the concurrent plan-caching serving layer.
+//!
+//! Everything here is deterministic: no sleeps, no timing assumptions.
+//! Ordering is enforced with channels (pool saturation) and per-connection
+//! request/reply sequencing; cache-coherence assertions lean on the
+//! cache's single-flight guarantee (`hits == requests - distinct keys`).
+
+use mobile_coexec::device::Device;
+use mobile_coexec::ops::{LinearConfig, OpConfig};
+use mobile_coexec::server::cache::PlanKey;
+use mobile_coexec::server::{Server, ServerConfig, ServerState, DEVICE_KEYS};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, OnceLock};
+
+/// Shared server for the single-client tests (training planners is the
+/// expensive part; do it once per test binary).
+fn shared() -> (&'static Arc<ServerState>, SocketAddr) {
+    static STATE: OnceLock<Arc<ServerState>> = OnceLock::new();
+    static ADDR: OnceLock<SocketAddr> = OnceLock::new();
+    let state = STATE.get_or_init(|| Arc::new(ServerState::new(Device::pixel5(), 800, 7)));
+    let addr = *ADDR.get_or_init(|| {
+        Server::new(state.clone(), ServerConfig::default())
+            .spawn_ephemeral()
+            .expect("spawn server")
+    });
+    (state, addr)
+}
+
+/// Persistent-connection client: sends one line, reads one reply line.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Self { stream, reader }
+    }
+
+    fn request(&mut self, line: &str) -> String {
+        self.stream.write_all(line.as_bytes()).expect("write");
+        self.stream.write_all(b"\n").expect("write nl");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read");
+        reply.trim().to_string()
+    }
+}
+
+// ---------------------------------------------------------------- verbs --
+
+#[test]
+fn every_verb_roundtrips_over_loopback() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+
+    assert_eq!(c.request("PING"), "OK pong");
+
+    let plan = c.request("PLAN linear 50 768 3072 3");
+    let nums: Vec<f64> = plan
+        .strip_prefix("OK ")
+        .unwrap_or_else(|| panic!("PLAN failed: {plan}"))
+        .split_whitespace()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    assert_eq!(nums[0] as usize + nums[1] as usize, 3072, "split covers cout");
+    assert!(nums[2] > 0.0, "predicted latency positive");
+
+    let conv = c.request("PLAN conv 64 64 128 192 3 1 2");
+    let nums: Vec<f64> = conv
+        .strip_prefix("OK ")
+        .unwrap_or_else(|| panic!("PLAN conv failed: {conv}"))
+        .split_whitespace()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    assert_eq!(nums[0] as usize + nums[1] as usize, 192);
+
+    let run = c.request("RUN linear 50 768 3072 3");
+    let nums: Vec<f64> = run
+        .strip_prefix("OK ")
+        .unwrap_or_else(|| panic!("RUN failed: {run}"))
+        .split_whitespace()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    assert_eq!(nums.len(), 3);
+    assert!(nums.iter().all(|t| *t > 0.0));
+
+    // DEVICE is session-scoped: switching must change subsequent plans
+    assert_eq!(c.request("DEVICE moto2022"), "OK device moto2022");
+    let moto_plan = c.request("PLAN linear 50 768 3072 3");
+    assert!(moto_plan.starts_with("OK "), "{moto_plan}");
+    assert_ne!(
+        moto_plan, plan,
+        "moto's flagship-GPU plan must differ from pixel5's"
+    );
+    // ...but only for this connection: a new connection sees the default
+    let mut fresh = Client::connect(&addr);
+    assert_eq!(fresh.request("PLAN linear 50 768 3072 3"), plan);
+
+    let pm = c.request("PLAN_MODEL resnet18 3");
+    assert!(pm.starts_with("OK model=resnet18 layers="), "{pm}");
+
+    let stats = c.request("STATS");
+    assert!(stats.starts_with("OK hits="), "{stats}");
+}
+
+#[test]
+fn device_aliases_resolve() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+    assert_eq!(c.request("DEVICE moto"), "OK device moto2022");
+    assert_eq!(c.request("DEVICE ONEPLUS"), "OK device oneplus11");
+    assert_eq!(c.request("DEVICE Pixel4"), "OK device pixel4");
+    for key in DEVICE_KEYS {
+        assert_eq!(c.request(&format!("DEVICE {key}")), format!("OK device {key}"));
+    }
+}
+
+// ------------------------------------------------------------ ERR paths --
+
+#[test]
+fn every_err_path_over_loopback() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+    // (request, expected reply prefix) — exact prefixes so error wording
+    // stays a stable part of the wire format
+    let cases = [
+        // malformed fields
+        ("PLAN linear a 768 3072 3", "ERR malformed field l=a"),
+        ("PLAN linear 50 768 3072 x", "ERR malformed field threads=x"),
+        ("PLAN linear 50 768 3072 -1", "ERR malformed field threads=-1"),
+        ("PLAN conv 64 64 12.5 192 3 1 2", "ERR malformed field cin=12.5"),
+        // oversized fields (DoS guard: bounded partition sweeps, no
+        // overflow in the cost models)
+        ("PLAN linear 1 1 4000000000 3", "ERR field too large cout=4000000000"),
+        ("RUN conv 64 64 128 70000 3 1 2", "ERR field too large cout=70000"),
+        // unknown op kind
+        ("PLAN quantum 1 2 3 4", "ERR unknown op kind quantum"),
+        ("RUN attention 50 768 3072 3", "ERR unknown op kind attention"),
+        // zero-sized shapes
+        ("PLAN linear 0 768 3072 3", "ERR zero-sized shape"),
+        ("PLAN linear 50 768 0 3", "ERR zero-sized shape"),
+        ("PLAN conv 64 64 128 0 3 1 2", "ERR zero-sized shape"),
+        ("PLAN conv 64 64 128 192 0 1 2", "ERR zero-sized shape"),
+        // wrong arity
+        ("PLAN linear 50 768 3072", "ERR bad op spec"),
+        ("PLAN linear 50 768 3072 3 9", "ERR bad op spec"),
+        ("PLAN conv 64 64 128 192 3 1", "ERR bad op spec"),
+        ("PLAN", "ERR bad op spec"),
+        // zero threads (regression: must be rejected, not planned)
+        ("PLAN linear 50 768 3072 0", "ERR threads must be >= 1"),
+        ("RUN linear 50 768 3072 0", "ERR threads must be >= 1"),
+        // unknown device / bad device spec
+        ("DEVICE iphone15", "ERR unknown device iphone15"),
+        ("DEVICE", "ERR bad device spec"),
+        ("DEVICE pixel4 pixel5", "ERR bad device spec"),
+        // unknown model / bad model spec
+        ("PLAN_MODEL alexnet 3", "ERR unknown model alexnet"),
+        ("PLAN_MODEL resnet18", "ERR bad model spec"),
+        ("PLAN_MODEL resnet18 0", "ERR threads must be >= 1"),
+        // known verbs with wrong arity name the verb, not "unknown command"
+        ("PING extra", "ERR bad request (expected: PING)"),
+        ("STATS now", "ERR bad request (expected: STATS)"),
+        // unknown command / empty line
+        ("FROBNICATE 1 2", "ERR unknown command FROBNICATE"),
+        ("", "ERR empty request"),
+    ];
+    for (req, want) in cases {
+        let reply = c.request(req);
+        assert!(
+            reply.starts_with(want),
+            "request {req:?}: got {reply:?}, want prefix {want:?}"
+        );
+    }
+    // the connection survives every error
+    assert_eq!(c.request("PING"), "OK pong");
+}
+
+#[test]
+fn invalid_utf8_line_gets_err_reply_and_connection_survives() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+    c.stream.write_all(b"PLAN \xFF\xFE linear\n").expect("write raw");
+    let mut reply = String::new();
+    c.reader.read_line(&mut reply).expect("read");
+    assert_eq!(reply.trim(), "ERR invalid utf-8");
+    assert_eq!(c.request("PING"), "OK pong");
+}
+
+#[test]
+fn oversized_request_line_is_rejected_and_connection_closed() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+    // ~10 KB with no newline until the very end: the server must cap the
+    // line instead of buffering it all
+    let reply = c.request(&"PING ".repeat(2000));
+    assert_eq!(reply, "ERR line too long");
+    // a protocol violation closes the connection: next read sees EOF
+    let mut rest = String::new();
+    assert_eq!(c.reader.read_line(&mut rest).expect("read eof"), 0);
+}
+
+// ------------------------------------------------------ format stability --
+
+#[test]
+fn response_formats_are_stable() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+
+    // PLAN: "OK <usize> <usize> <float:.1>"
+    let plan = c.request("PLAN linear 50 768 1024 2");
+    let toks: Vec<&str> = plan.split_whitespace().collect();
+    assert_eq!(toks.len(), 4, "{plan}");
+    assert_eq!(toks[0], "OK");
+    toks[1].parse::<usize>().unwrap();
+    toks[2].parse::<usize>().unwrap();
+    let (_, frac) = toks[3].split_once('.').expect("one decimal place");
+    assert_eq!(frac.len(), 1, "{plan}");
+
+    // RUN: "OK <float:.1> <float:.1> <float:.3>"
+    let run = c.request("RUN linear 50 768 1024 2");
+    let toks: Vec<&str> = run.split_whitespace().collect();
+    assert_eq!(toks.len(), 4, "{run}");
+    assert_eq!(toks[3].split_once('.').unwrap().1.len(), 3, "{run}");
+
+    // DEVICE: "OK device <canonical>"
+    assert_eq!(c.request("DEVICE pixel5"), "OK device pixel5");
+
+    // PLAN_MODEL: fixed key=value fields in order
+    let pm = c.request("PLAN_MODEL resnet18 3");
+    let body = pm.strip_prefix("OK ").unwrap();
+    let keys: Vec<&str> = body
+        .split_whitespace()
+        .map(|kv| kv.split_once('=').expect("key=value").0)
+        .collect();
+    assert_eq!(keys, ["model", "layers", "planned", "coexec", "t_pred_ms"]);
+
+    // STATS: cache counters then per-verb blocks, in declaration order
+    let stats = c.request("STATS");
+    let body = stats.strip_prefix("OK ").unwrap();
+    for kv in body.split_whitespace() {
+        assert!(kv.contains('='), "non key=value token {kv:?} in {stats}");
+    }
+    let mut last = 0;
+    for key in ["hits=", "misses=", "entries="] {
+        let pos = body.find(key).unwrap_or_else(|| panic!("missing {key}"));
+        assert!(pos >= last, "{key} out of order");
+        last = pos;
+    }
+    for verb in ["ping", "plan", "run", "device", "plan_model", "stats", "other"] {
+        for fieldname in ["req", "err", "p50_us", "p95_us"] {
+            let key = format!("{verb}.{fieldname}=");
+            let pos = body.find(&key).unwrap_or_else(|| panic!("missing {key}"));
+            assert!(pos > last, "{key} out of order in {stats}");
+            last = pos;
+        }
+    }
+}
+
+// ------------------------------------------------- threads clamp (fix) --
+
+#[test]
+fn threads_clamped_to_device_core_count() {
+    let (state, addr) = shared();
+    let mut c = Client::connect(&addr);
+    let at_max = c.request("PLAN linear 60 512 2048 3");
+    let clamped = c.request("PLAN linear 60 512 2048 99");
+    assert!(at_max.starts_with("OK "), "{at_max}");
+    assert_eq!(
+        at_max, clamped,
+        "threads above the core count must clamp to it"
+    );
+    // the clamp happens before the cache: only a threads=3 key may exist
+    let op = OpConfig::Linear(LinearConfig::new(60, 512, 2048));
+    let device = Device::pixel5().name();
+    let mech = mobile_coexec::device::SyncMechanism::SvmPolling;
+    assert!(
+        state.cache.peek(&PlanKey { device, op, threads: 3, mech }).is_some(),
+        "clamped request must be cached under threads=3"
+    );
+    assert!(
+        state.cache.peek(&PlanKey { device, op, threads: 99, mech }).is_none(),
+        "no unclamped key may be created"
+    );
+}
+
+// ------------------------------------------------- concurrency / cache --
+
+#[test]
+fn sixteen_clients_get_byte_identical_replies_and_exact_hit_counts() {
+    // fresh state: this test reasons about exact cache counters
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 500, 11));
+    let server = Server::new(state.clone(), ServerConfig { workers: 4, queue_cap: 64 });
+    let addr = server.spawn_ephemeral().unwrap();
+
+    // overlapping shapes: 4 distinct (op, threads) tuples
+    let requests = [
+        "PLAN linear 50 768 3072 3",
+        "PLAN linear 50 768 3072 2",
+        "PLAN linear 64 512 1024 3",
+        "PLAN conv 32 32 64 128 3 1 2",
+    ];
+    let n_clients = 16;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr);
+                // vary the order per client to shake interleavings
+                let mut replies = vec![String::new(); requests.len()];
+                for k in 0..requests.len() {
+                    let idx = (k + i) % requests.len();
+                    replies[idx] = c.request(requests[idx]);
+                }
+                replies
+            })
+        })
+        .collect();
+    let all: Vec<Vec<String>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (idx, req) in requests.iter().enumerate() {
+        let first = &all[0][idx];
+        assert!(first.starts_with("OK "), "{req} -> {first}");
+        for replies in &all {
+            assert_eq!(
+                &replies[idx], first,
+                "cache coherence: identical requests must serialize identically ({req})"
+            );
+        }
+    }
+
+    let total = (n_clients * requests.len()) as u64;
+    let distinct = requests.len() as u64;
+    assert_eq!(
+        state.cache.misses(),
+        distinct,
+        "single-flight: one miss per distinct (op, threads) tuple"
+    );
+    assert_eq!(
+        state.cache.hits(),
+        total - distinct,
+        "hits must equal requests minus distinct shapes"
+    );
+    assert_eq!(state.cache.len(), distinct as usize);
+}
+
+#[test]
+fn plan_model_reuses_cache_across_requests() {
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 400, 13));
+    let mut session = state.session();
+    let first = state.handle(&mut session, "PLAN_MODEL resnet18 2");
+    assert!(first.starts_with("OK "), "{first}");
+    let misses_after_first = state.cache.misses();
+    assert!(misses_after_first > 0);
+
+    let second = state.handle(&mut session, "PLAN_MODEL resnet18 2");
+    assert_eq!(first, second, "replanning a model must be byte-identical");
+    assert_eq!(
+        state.cache.misses(),
+        misses_after_first,
+        "second PLAN_MODEL must be served entirely from cache"
+    );
+    // every plannable layer hit the cache the second time
+    let planned: u64 = first
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix("planned="))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(state.cache.hits() >= planned, "hits {} < planned {planned}", state.cache.hits());
+}
+
+// ----------------------------------------------------- backpressure --
+
+#[test]
+fn full_queue_answers_err_busy_then_recovers() {
+    use std::sync::mpsc;
+    // PING needs no planners: new_lazy keeps this test training-free
+    let state = Arc::new(ServerState::new_lazy(Device::pixel4(), 100, 17));
+    let server = Server::new(state, ServerConfig { workers: 1, queue_cap: 1 });
+    let addr = server.spawn_ephemeral().unwrap();
+
+    // deterministically saturate: one job occupying the single worker...
+    let (started_tx, started_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let (done_tx, done_rx) = mpsc::channel();
+    let d1 = done_tx.clone();
+    server
+        .pool
+        .try_submit(Box::new(move || {
+            started_tx.send(()).unwrap();
+            release_rx.recv().unwrap();
+            d1.send(()).unwrap();
+        }))
+        .unwrap();
+    started_rx.recv().unwrap(); // the worker is now provably busy
+    // ...and one job filling the 1-deep queue
+    server.pool.try_submit(Box::new(move || done_tx.send(()).unwrap())).unwrap();
+
+    // more clients than workers: the next request must be shed, not queued
+    let mut c = Client::connect(&addr);
+    let reply = c.request("PING");
+    assert!(reply.starts_with("ERR busy"), "expected load shedding, got {reply}");
+
+    // drain deterministically, then the same connection must succeed
+    release_tx.send(()).unwrap();
+    done_rx.recv().unwrap();
+    done_rx.recv().unwrap(); // both jobs finished -> worker idle, queue empty
+    assert_eq!(c.request("PING"), "OK pong");
+
+    // overload must be visible in telemetry: the shed request counted as
+    // a ping request AND a ping error
+    let ep = server.state.metrics.endpoint("ping");
+    assert_eq!((ep.requests.get(), ep.errors.get()), (2, 1));
+}
+
+#[test]
+fn more_clients_than_workers_all_served() {
+    // 2 workers, deep queue: 8 concurrent clients must all be answered
+    // correctly (queueing, not shedding)
+    let state = Arc::new(ServerState::new_lazy(Device::pixel4(), 100, 19));
+    let server = Server::new(state, ServerConfig { workers: 2, queue_cap: 32 });
+    let addr = server.spawn_ephemeral().unwrap();
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr);
+                (0..4).map(|_| c.request("PING")).collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    for h in handles {
+        for reply in h.join().unwrap() {
+            assert_eq!(reply, "OK pong");
+        }
+    }
+}
