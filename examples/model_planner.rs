@@ -1,14 +1,16 @@
 //! Whole-model offline planning (the paper's §5.4 deployment flow): train
-//! predictors for a device, plan every layer of ResNet-18 and VGG16, print
-//! the per-layer decisions, and report the end-to-end speedup.
+//! predictors for a device, plan every layer of ResNet-18 and VGG16 with
+//! per-layer auto strategy selection (each layer picks its own channel
+//! split, CPU thread count, and sync mechanism), print the decisions, and
+//! report the end-to-end speedup.
 //!
 //! ```bash
 //! cargo run --release --example model_planner [pixel4|pixel5|moto2022|oneplus11]
 //! ```
 
-use mobile_coexec::device::{Device, SyncMechanism};
+use mobile_coexec::device::Device;
 use mobile_coexec::models::{self, Layer};
-use mobile_coexec::partition::Planner;
+use mobile_coexec::partition::{PlanRequest, Planner};
 use mobile_coexec::scheduler::ModelScheduler;
 
 fn main() {
@@ -18,7 +20,7 @@ fn main() {
         Some("oneplus11") => Device::oneplus11(),
         _ => Device::pixel5(),
     };
-    println!("planning for {} (GPU + 3 CPU threads)", device.name());
+    println!("planning for {} (per-layer auto strategy selection)", device.name());
     println!("training predictors ...");
     let lp = Planner::train_for_kind(&device, "linear", 4000, 42);
     let cp = Planner::train_for_kind(&device, "conv", 4000, 42);
@@ -26,8 +28,7 @@ fn main() {
         device: &device,
         linear_planner: &lp,
         conv_planner: &cp,
-        threads: 3,
-        mech: SyncMechanism::SvmPolling,
+        req: PlanRequest::auto(),
     };
 
     for model in [models::resnet18(), models::vgg16()] {
@@ -44,8 +45,12 @@ fn main() {
                     if plan.split.is_coexec() {
                         coexec_layers += 1;
                         println!(
-                            "  [{i:2}] {op} -> CPU {:4} | GPU {:4}  (pred {:.0} us)",
-                            plan.split.c_cpu, plan.split.c_gpu, plan.t_total_us
+                            "  [{i:2}] {op} -> CPU {:4} | GPU {:4}  ({} thr, {:?}, pred {:.0} us)",
+                            plan.split.c_cpu,
+                            plan.split.c_gpu,
+                            plan.threads,
+                            plan.mech,
+                            plan.t_total_us
                         );
                     } else if plan.split.c_cpu > 0 {
                         println!("  [{i:2}] {op} -> CPU only (pred {:.0} us)", plan.t_total_us);
@@ -58,8 +63,10 @@ fn main() {
         }
         let r = sched.evaluate(&model);
         println!(
-            "  co-executed layers: {coexec_layers}/{}\n  baseline {:.1} ms -> e2e {:.1} ms  ({:.2}x speedup)",
+            "  co-executed layers: {coexec_layers}/{}\n  chosen threads: {:?}  mechs: {:?}\n  baseline {:.1} ms -> e2e {:.1} ms  ({:.2}x speedup)",
             schedule.len(),
+            r.strategies.threads,
+            r.strategies.mechs,
             r.baseline_ms,
             r.e2e_ms,
             r.e2e_speedup()

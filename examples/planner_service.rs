@@ -19,29 +19,46 @@ fn main() -> anyhow::Result<()> {
         "PING",
         "PLAN linear 50 768 3072 3",    // ViT fc1
         "PLAN linear 50 768 3072 3",    // same shape again: cache hit
+        "PLAN linear 50 768 3072 auto", // joint (threads, mech) search
         "PLAN linear 50 3072 768 3",    // ViT fc2
         "PLAN conv 64 64 128 192 3 1 3", // Fig 6b conv
         "RUN linear 50 768 3072 3",
         "RUN conv 64 64 128 192 3 1 2",
         "PLAN_MODEL resnet18 3",        // whole model through the cache
+        "PLAN_MODEL resnet18 auto",     // per-layer strategy selection
         "PLAN linear oops",
+        "FLUSH",                        // calibration changed: drop plans
         "STATS",
     ] {
         let reply = request(&addr, line)?;
         println!("> {line}\n< {reply}");
     }
 
-    // DEVICE is session-scoped, so it needs a persistent connection.
-    println!("\n-- persistent session: switching device --");
+    // DEVICE is session-scoped, and PLAN_BATCH replies span several
+    // lines, so both want a persistent connection.
+    println!("\n-- persistent session: switching device, batching --");
     let mut stream = std::net::TcpStream::connect(addr)?;
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
-    for line in ["DEVICE pixel5", "PLAN linear 50 768 3072 3"] {
+    let mut roundtrip = |line: &str| -> anyhow::Result<String> {
         use std::io::{BufRead, Write};
         stream.write_all(line.as_bytes())?;
         stream.write_all(b"\n")?;
         let mut reply = String::new();
         reader.read_line(&mut reply)?;
         println!("> {line}\n< {}", reply.trim());
+        Ok(reply.trim().to_string())
+    };
+    roundtrip("DEVICE pixel5")?;
+    roundtrip("PLAN linear 50 768 3072 3")?;
+    // a compiler client planning three layers in one round-trip
+    let header =
+        roundtrip("PLAN_BATCH linear 50 768 3072 auto; linear 50 3072 768 auto; conv 64 64 128 192 3 1 2")?;
+    let n: usize = header.strip_prefix("OK n=").unwrap_or("0").parse().unwrap_or(0);
+    for _ in 0..n {
+        use std::io::BufRead;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        println!("< {}", line.trim());
     }
     Ok(())
 }

@@ -4,7 +4,7 @@
 use mobile_coexec::benchutil::{bench, report_scalar};
 use mobile_coexec::device::{Device, SyncMechanism};
 use mobile_coexec::models::Model;
-use mobile_coexec::partition::Planner;
+use mobile_coexec::partition::{PlanRequest, Planner};
 use mobile_coexec::scheduler::ModelScheduler;
 
 fn main() {
@@ -16,8 +16,7 @@ fn main() {
         device: &device,
         linear_planner: &lp,
         conv_planner: &cp,
-        threads: 3,
-        mech: SyncMechanism::SvmPolling,
+        req: PlanRequest::fixed(3, SyncMechanism::SvmPolling),
     };
     for model in Model::paper_models() {
         let r = sched.evaluate(&model);

@@ -1,10 +1,16 @@
 //! Bench: partition-search scaling (Table 2's inner loop) — plan cost vs
-//! Cout, and the measured grid-search oracle cost it replaces.
+//! Cout, the joint strategy search's overhead vs a fixed plan, and the
+//! measured grid-search oracle cost both replace.
+//!
+//! Gate: a fully `Auto` plan (3 thread counts x 2 mechanisms) must stay
+//! within 4x the cost of a fixed plan. Shared GPU predictions, the
+//! analytic mechanism prune, and the per-candidate dominated-thread prune
+//! (see `partition` module docs) keep it there.
 
-use mobile_coexec::benchutil::bench;
+use mobile_coexec::benchutil::{bench, report_scalar};
 use mobile_coexec::device::{Device, SyncMechanism};
 use mobile_coexec::ops::{LinearConfig, OpConfig};
-use mobile_coexec::partition::{grid_search, Planner};
+use mobile_coexec::partition::{grid_search, PlanRequest, Planner};
 
 fn main() {
     let device = Device::pixel5();
@@ -15,8 +21,25 @@ fn main() {
             std::hint::black_box(planner.plan_with_threads(&op, 3));
         });
     }
-    // the oracle the planner replaces (simulated measurements, step 8)
+
+    // the auto-vs-fixed planning-cost gate, on the flagship shape
     let op = OpConfig::Linear(LinearConfig::new(50, 768, 3072));
+    let fixed = bench("plan_fixed_cout3072", 2, 30, || {
+        std::hint::black_box(
+            planner.plan_request(&op, PlanRequest::fixed(3, SyncMechanism::SvmPolling)),
+        );
+    });
+    let auto = bench("plan_auto_cout3072", 2, 30, || {
+        std::hint::black_box(planner.plan_request(&op, PlanRequest::auto()));
+    });
+    let ratio = auto.mean_us / fixed.mean_us;
+    report_scalar("plan_auto", "auto_over_fixed_cost", ratio);
+    assert!(
+        ratio <= 4.0,
+        "acceptance: auto planning must stay within 4x a fixed plan ({ratio:.2}x)"
+    );
+
+    // the oracle the planner replaces (simulated measurements, step 8)
     bench("grid_search_oracle_cout3072", 1, 10, || {
         std::hint::black_box(grid_search(&device, &op, 3, SyncMechanism::SvmPolling, 5));
     });

@@ -8,7 +8,7 @@
 use mobile_coexec::benchutil::{bench, report_scalar};
 use mobile_coexec::device::Device;
 use mobile_coexec::ops::{LinearConfig, OpConfig};
-use mobile_coexec::partition::Planner;
+use mobile_coexec::partition::{PlanRequest, Planner};
 use mobile_coexec::server::cache::PlanCache;
 use mobile_coexec::server::{request, Server, ServerConfig, ServerState};
 use std::io::{BufRead, BufReader, Write};
@@ -38,6 +38,20 @@ fn main() {
     assert!(
         speedup >= 10.0,
         "acceptance: warm-cache PLAN must be >=10x cheaper than cold ({speedup:.1}x)"
+    );
+
+    // warm `auto` requests ride the resolution index + plans map: the hit
+    // must be as cheap as a fixed hit despite the joint strategy search a
+    // cold auto plan pays
+    let auto_cache = PlanCache::default();
+    let warm_auto = bench("plan_auto_warm_cache_hit", 10, 2000, || {
+        std::hint::black_box(auto_cache.get_or_plan_request(&planner, &op, PlanRequest::auto()));
+    });
+    let auto_speedup = cold.mean_us / warm_auto.mean_us;
+    report_scalar("plan_cache", "warm_auto_over_cold_fixed_speedup", auto_speedup);
+    assert!(
+        auto_speedup >= 10.0,
+        "acceptance: warm auto PLAN must be >=10x cheaper than a cold fixed plan ({auto_speedup:.1}x)"
     );
 
     // end-to-end loopback: persistent connection, warm-cache PLAN requests

@@ -7,9 +7,9 @@ use crate::gbdt::GbdtParams;
 use crate::metrics::mean;
 use crate::models::Model;
 use crate::ops::OpConfig;
-use crate::partition::{grid_search, Planner};
+use crate::partition::{grid_search, PlanRequest, Planner};
 use crate::predictor::{CpuPredictor, FeatureMode, GpuPredictor, PredictorSet};
-use crate::scheduler::ModelScheduler;
+use crate::scheduler::{E2eReport, ModelScheduler};
 
 /// Table 1: MAPE of GBDT predictors per device x op kind x processor.
 /// Returns rows of (device, kind, [gpu, cpu1, cpu2, cpu3]) MAPEs.
@@ -79,18 +79,19 @@ pub struct Table2Row {
     pub search_conv: SpeedupRow,
 }
 
-/// Average speedup of the GBDT planner over a test set, vs GPU-only.
+/// Average speedup of the GBDT planner over a test set, vs GPU-only, for
+/// one strategy request (fixed or auto).
 fn gbdt_speedups(
     device: &Device,
     planner: &Planner,
     ops: &[OpConfig],
-    threads: usize,
+    req: PlanRequest,
     trials: u64,
 ) -> f64 {
     let speedups: Vec<f64> = ops
         .iter()
         .map(|op| {
-            let plan = planner.plan_with_threads(op, threads);
+            let plan = planner.plan_request(op, req);
             let t_co = planner.measure_plan_us(op, &plan, trials);
             let t_gpu = device.measure_mean(op, Processor::Gpu, trials);
             t_gpu / t_co
@@ -155,11 +156,13 @@ pub fn table2(scale: Scale) -> Vec<Table2Row> {
                     search_conv: [0.0; 3],
                 };
                 for t in 1..=3 {
+                    let req = PlanRequest::fixed(t, SyncMechanism::SvmPolling);
                     row.gbdt_linear[t - 1] =
-                        gbdt_speedups(device, &lp, &l_test, t, scale.trials);
+                        gbdt_speedups(device, &lp, &l_test, req, scale.trials);
                     row.search_linear[t - 1] =
                         search_speedups(device, &l_oracle, t, scale.trials);
-                    row.gbdt_conv[t - 1] = gbdt_speedups(device, &cp, &c_test, t, scale.trials);
+                    row.gbdt_conv[t - 1] =
+                        gbdt_speedups(device, &cp, &c_test, req, scale.trials);
                     row.search_conv[t - 1] =
                         search_speedups(device, &c_oracle, t, scale.trials);
                 }
@@ -195,8 +198,10 @@ pub fn table2(scale: Scale) -> Vec<Table2Row> {
     rows_data
 }
 
-/// Table 3: end-to-end speedups (GPU + 3 CPU threads) for the four models.
-pub fn table3(scale: Scale) -> Vec<crate::scheduler::E2eReport> {
+/// Table 3: end-to-end speedups for the four models, at the paper's fixed
+/// strategy (GPU + 3 CPU threads, SVM polling) and with per-layer `auto`
+/// strategy selection. Returns `(fixed, auto)` report pairs.
+pub fn table3(scale: Scale) -> Vec<(E2eReport, E2eReport)> {
     let devices = Device::all();
     let reports = std::sync::Mutex::new(Vec::new());
     std::thread::scope(|s| {
@@ -205,46 +210,70 @@ pub fn table3(scale: Scale) -> Vec<crate::scheduler::E2eReport> {
             s.spawn(move || {
                 let lp = Planner::train_for_kind(device, "linear", scale.train_n, 42);
                 let cp = Planner::train_for_kind(device, "conv", scale.train_n, 42);
-                let sched = ModelScheduler {
+                let fixed_sched = ModelScheduler {
                     device,
                     linear_planner: &lp,
                     conv_planner: &cp,
-                    threads: 3,
-                    mech: SyncMechanism::SvmPolling,
+                    req: PlanRequest::fixed(3, SyncMechanism::SvmPolling),
+                };
+                let auto_sched = ModelScheduler {
+                    device,
+                    linear_planner: &lp,
+                    conv_planner: &cp,
+                    req: PlanRequest::auto(),
                 };
                 let mut local = Vec::new();
                 for model in Model::paper_models() {
-                    local.push(sched.evaluate(&model));
+                    local.push((fixed_sched.evaluate(&model), auto_sched.evaluate(&model)));
                 }
                 reports.lock().unwrap().extend(local);
             });
         }
     });
     let mut all = reports.into_inner().unwrap();
-    all.sort_by_key(|r| (order(r.device), r.model));
+    all.sort_by_key(|(r, _)| (order(r.device), r.model));
 
     let rows: Vec<Vec<String>> = all
         .iter()
-        .map(|r| {
+        .map(|(fixed, auto)| {
             vec![
-                r.device.to_string(),
-                r.model.to_string(),
-                format!("{:.1}", r.baseline_ms),
-                format!("{:.1}", r.individual_ms),
-                format!("{:.2}x", r.individual_speedup()),
-                format!("{:.1}", r.e2e_ms),
-                format!("{:.2}x", r.e2e_speedup()),
+                fixed.device.to_string(),
+                fixed.model.to_string(),
+                format!("{:.1}", fixed.baseline_ms),
+                format!("{:.1}", fixed.individual_ms),
+                format!("{:.2}x", fixed.individual_speedup()),
+                format!("{:.1}", fixed.e2e_ms),
+                format!("{:.2}x", fixed.e2e_speedup()),
+                format!("{:.2}x", auto.e2e_speedup()),
             ]
         })
         .collect();
     print_table(
-        "Table 3 — end-to-end speedups (GPU + 3 CPU threads)",
-        &["device", "model", "baseline_ms", "indiv_ms", "indiv_speedup", "e2e_ms", "e2e_speedup"],
+        "Table 3 — end-to-end speedups (fixed: GPU + 3 CPU threads | auto: per-layer strategy)",
+        &[
+            "device",
+            "model",
+            "baseline_ms",
+            "indiv_ms",
+            "indiv_speedup",
+            "e2e_ms",
+            "e2e_speedup",
+            "auto_speedup",
+        ],
         &rows,
     );
     write_csv(
         "table3.csv",
-        &["device", "model", "baseline_ms", "indiv_ms", "indiv_speedup", "e2e_ms", "e2e_speedup"],
+        &[
+            "device",
+            "model",
+            "baseline_ms",
+            "indiv_ms",
+            "indiv_speedup",
+            "e2e_ms",
+            "e2e_speedup",
+            "auto_speedup",
+        ],
         &rows,
     );
     all
@@ -267,12 +296,14 @@ pub fn table4(scale: Scale) -> Vec<(String, SpeedupRow, SpeedupRow)> {
     );
 
     let params = GbdtParams::default();
-    let mk_planner = |kind: &str, mode: FeatureMode, mech: SyncMechanism| {
+    let mk_planner = |kind: &str, mode: FeatureMode| {
         let (train, _) = dataset::training_split(kind, scale.train_n, 42);
         let preds = PredictorSet::train(&device, &train, mode, &params);
-        Planner::new(device.clone(), preds, mech)
+        Planner::new(device.clone(), preds)
     };
 
+    // the sync mechanism is a per-request strategy axis now, so the
+    // "Original Overhead" ablation just pins EventWait in the request
     let variants: Vec<(&str, FeatureMode, SyncMechanism)> = vec![
         ("Ours", FeatureMode::Augmented, SyncMechanism::SvmPolling),
         ("w/o Augmentation", FeatureMode::Basic, SyncMechanism::SvmPolling),
@@ -281,13 +312,14 @@ pub fn table4(scale: Scale) -> Vec<(String, SpeedupRow, SpeedupRow)> {
 
     let mut out = Vec::new();
     for (label, mode, mech) in variants {
-        let lp = mk_planner("linear", mode, mech);
-        let cp = mk_planner("conv", mode, mech);
+        let lp = mk_planner("linear", mode);
+        let cp = mk_planner("conv", mode);
         let mut lin = [0.0; 3];
         let mut conv = [0.0; 3];
         for t in 1..=3 {
-            lin[t - 1] = gbdt_speedups(&device, &lp, &linear_grid, t, scale.trials);
-            conv[t - 1] = gbdt_speedups(&device, &cp, &conv_grid, t, scale.trials);
+            let req = PlanRequest::fixed(t, mech);
+            lin[t - 1] = gbdt_speedups(&device, &lp, &linear_grid, req, scale.trials);
+            conv[t - 1] = gbdt_speedups(&device, &cp, &conv_grid, req, scale.trials);
         }
         out.push((label.to_string(), lin, conv));
     }

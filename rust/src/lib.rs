@@ -38,8 +38,10 @@
 //!
 //! let device = Device::pixel5();
 //! let op = OpConfig::Linear(LinearConfig { l: 50, cin: 768, cout: 3072 });
-//! let planner = Planner::train_for(&device, 3, 2000, 42); // 3 CPU threads
-//! let plan = planner.plan(&op);
+//! let planner = Planner::train_for(&device, 2000, 42);
+//! let plan = planner.plan(&op); // 3 CPU threads, SVM polling
+//! // or: planner.plan_request(&op, mobile_coexec::partition::PlanRequest::auto())
+//! // to jointly search split x threads x sync mechanism
 //! println!("CPU gets {} channels, GPU gets {}", plan.split.c_cpu, plan.split.c_gpu);
 //! ```
 

@@ -7,7 +7,7 @@
 //! repro fig   --id 2|3|5|6a|6b|7 [--quick]   regenerate a paper figure
 //! repro table --id 1|2|3|4       [--quick]   regenerate a paper table
 //! repro sync                                 §4 sync-overhead comparison
-//! repro plan  --device <name> --linear L,CIN,COUT [--threads N]
+//! repro plan  --device <name> --linear L,CIN,COUT [--threads N|auto]
 //! repro coexec [--c1 N]                      REAL PJRT co-execution demo
 //! repro serve --device <name> [--addr A] [--workers N] [--queue N]
 //!                                            plan-caching multi-device server
@@ -19,7 +19,8 @@
 use mobile_coexec::device::{Device, SyncMechanism};
 use mobile_coexec::experiments::{figures, tables, Scale};
 use mobile_coexec::ops::{LinearConfig, OpConfig};
-use mobile_coexec::partition::Planner;
+use mobile_coexec::partition::{PlanRequest, Planner};
+use mobile_coexec::server::mech_wire;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -78,20 +79,30 @@ fn main() {
             let device = parse_device(&get("--device").unwrap_or_else(|| "pixel5".into()));
             let dims = get("--linear").unwrap_or_else(|| "50,768,3072".into());
             let d: Vec<usize> = dims.split(',').map(|s| s.parse().expect("dim")).collect();
-            let threads: usize =
-                get("--threads").map(|t| t.parse().expect("threads")).unwrap_or(3);
+            let threads_flag = get("--threads").unwrap_or_else(|| "3".into());
+            let req = if threads_flag.eq_ignore_ascii_case("auto") {
+                PlanRequest::auto()
+            } else {
+                PlanRequest::fixed(
+                    threads_flag.parse().expect("threads"),
+                    SyncMechanism::SvmPolling,
+                )
+            };
             let op = OpConfig::Linear(LinearConfig::new(d[0], d[1], d[2]));
             eprintln!("training planner for {} ...", device.name());
             let planner = Planner::train_for_kind(&device, "linear", scale.train_n, 42);
-            let plan = planner.plan_with_threads(&op, threads);
+            let plan = planner.plan_request(&op, req);
             let measured = planner.measure_plan_us(&op, &plan, 16);
             let gpu_only =
                 device.measure_mean(&op, mobile_coexec::device::Processor::Gpu, 16);
             println!(
-                "{op} on {} with {threads} CPU threads:\n  plan: CPU {} ch | GPU {} ch (predicted {:.1} us)\n  measured co-exec {:.1} us vs GPU-only {:.1} us -> {:.2}x speedup",
+                "{op} on {} ({} request):\n  plan: CPU {} ch | GPU {} ch, {} CPU threads, {} sync (predicted {:.1} us)\n  measured co-exec {:.1} us vs GPU-only {:.1} us -> {:.2}x speedup",
                 device.name(),
+                if req.is_fixed() { "fixed" } else { "auto" },
                 plan.split.c_cpu,
                 plan.split.c_gpu,
+                plan.threads,
+                mech_wire(plan.mech),
                 plan.t_total_us,
                 measured,
                 gpu_only,
@@ -148,7 +159,7 @@ fn main() {
                 "repro — CPU-GPU co-execution reproduction (EPEW 2025)\n\n\
                  usage:\n  repro fig   --id 2|3|5|6a|6b|7 [--quick]\n  \
                  repro table --id 1|2|3|4 [--quick]\n  repro sync\n  \
-                 repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N]\n  \
+                 repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto]\n  \
                  repro coexec [--c1 N]\n  \
                  repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N]\n  \
                  repro all [--quick]"

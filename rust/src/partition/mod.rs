@@ -1,4 +1,5 @@
-//! Output-channel partition planning (the paper's Section 2 objective).
+//! Output-channel partition planning (the paper's Section 2 objective),
+//! over the full execution-strategy space.
 //!
 //! Given predictors `T_cpu`, `T_gpu` and the sync-overhead model, the
 //! planner solves
@@ -12,6 +13,26 @@
 //! (`c1 = 0` or `c2 = 0`) carry no overhead and are always considered, so
 //! the planner naturally falls back to CPU-only or GPU-only when
 //! co-execution cannot win.
+//!
+//! The paper observes that CPU/GPU times depend on "the dynamic selection
+//! of implementations and parallelism level" — so the split is only one
+//! axis of the decision. [`Planner::plan_request`] searches the full
+//! strategy space: a [`PlanRequest`] pins or frees each of the thread
+//! count and the sync mechanism, and the search jointly minimizes the
+//! predicted total over `(split × threads × mechanism)`. Two structural
+//! facts keep the joint search within a small multiple of a fixed plan:
+//!
+//! * **The mechanism axis is pruned analytically.** Sync overhead is an
+//!   additive per-mechanism constant (zero for exclusive splits), so both
+//!   mechanisms' totals derive from one `max(T_cpu, T_gpu)` evaluation —
+//!   the dominated mechanism never costs a separate split search.
+//! * **Dominated thread counts are pruned per candidate.** The GPU side
+//!   and the overhead are thread-invariant, so `t_total >= T_gpu(c2) +
+//!   T_overhead` holds before any CPU prediction is made; thread counts
+//!   whose incumbents a candidate provably cannot beat skip their CPU
+//!   GBDT evaluation entirely. The prune only discards candidates that
+//!   could not have changed the result, so an `Auto` plan is *never worse*
+//!   than any fixed `(threads, mech)` plan (a property-tested invariant).
 //!
 //! [`grid_search`] is the paper's measured oracle baseline (§5.3): try every
 //! split with step 8, **measure** each, keep the best. It is not deployable
@@ -27,10 +48,63 @@ pub const PLAN_STEP: usize = 4;
 /// Paper's grid-search step (§5.3).
 pub const GRID_STEP: usize = 8;
 
+/// One axis of a [`PlanRequest`]: pinned by the caller, or left to the
+/// planner's strategy search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Choice<T> {
+    Fixed(T),
+    Auto,
+}
+
+/// A fully resolved execution strategy: how many big-core CPU threads the
+/// CPU side runs with, and which rendezvous mechanism synchronizes the
+/// two sides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Strategy {
+    pub threads: usize,
+    pub mech: SyncMechanism,
+}
+
+/// What a client asks the planner for: each strategy axis is either fixed
+/// or `Auto` (searched jointly with the channel split).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanRequest {
+    pub threads: Choice<usize>,
+    pub mech: Choice<SyncMechanism>,
+}
+
+impl PlanRequest {
+    /// Both axes pinned — the classic fixed-strategy plan.
+    pub fn fixed(threads: usize, mech: SyncMechanism) -> Self {
+        Self { threads: Choice::Fixed(threads), mech: Choice::Fixed(mech) }
+    }
+
+    /// Both axes free: jointly search split × threads × mechanism.
+    pub fn auto() -> Self {
+        Self { threads: Choice::Auto, mech: Choice::Auto }
+    }
+
+    /// True iff no axis needs searching.
+    pub fn is_fixed(&self) -> bool {
+        matches!((self.threads, self.mech), (Choice::Fixed(_), Choice::Fixed(_)))
+    }
+
+    /// Canonical form for a device: a fixed thread count is clamped to
+    /// `1..=max_threads`, so equivalent requests (e.g. `threads=99` and
+    /// `threads=3` on a 3-big-core SoC) compare and hash identically.
+    pub fn normalized(self, max_threads: usize) -> Self {
+        let threads = match self.threads {
+            Choice::Fixed(t) => Choice::Fixed(t.clamp(1, max_threads)),
+            Choice::Auto => Choice::Auto,
+        };
+        Self { threads, mech: self.mech }
+    }
+}
+
 /// A partitioning decision with its predicted cost breakdown.
 ///
 /// Plans are `Copy` and compare exactly (planning is deterministic per
-/// `(device, op, threads, mech)` tuple), which is what lets the serving
+/// `(device, op, plan-request)` tuple), which is what lets the serving
 /// layer's `PlanCache` treat them as cheap, stable cache values.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Plan {
@@ -45,23 +119,30 @@ pub struct Plan {
     pub t_total_us: f64,
 }
 
+impl Plan {
+    /// The resolved (threads, mech) strategy this plan executes with.
+    pub fn strategy(&self) -> Strategy {
+        Strategy { threads: self.threads, mech: self.mech }
+    }
+}
+
 /// The partition planner: predictors + overhead model for one device.
+/// Strategy (thread count, sync mechanism) is per-request, not per-planner
+/// — see [`PlanRequest`].
 pub struct Planner {
     pub device: Device,
     pub predictors: PredictorSet,
-    pub mech: SyncMechanism,
 }
 
 impl Planner {
-    pub fn new(device: Device, predictors: PredictorSet, mech: SyncMechanism) -> Self {
-        Self { device, predictors, mech }
+    pub fn new(device: Device, predictors: PredictorSet) -> Self {
+        Self { device, predictors }
     }
 
     /// Convenience constructor for linear layers: sample a §5.2-style
     /// training set of `n_train` ops on the device, measure, train
-    /// augmented predictors, and return a ready planner. (`threads` is the
-    /// CPU budget you intend to plan with; kept for API clarity.)
-    pub fn train_for(device: &Device, _threads: usize, n_train: usize, seed: u64) -> Self {
+    /// augmented predictors, and return a ready planner.
+    pub fn train_for(device: &Device, n_train: usize, seed: u64) -> Self {
         Self::train_for_kind(device, "linear", n_train, seed)
     }
 
@@ -70,11 +151,17 @@ impl Planner {
         let (train, _) = crate::dataset::training_split(kind, n_train, seed);
         let params = GbdtParams::default();
         let predictors = PredictorSet::train(device, &train, FeatureMode::Augmented, &params);
-        Self::new(device.clone(), predictors, SyncMechanism::SvmPolling)
+        Self::new(device.clone(), predictors)
     }
 
-    /// Predicted latency of a specific split.
-    pub fn predict_split_us(&self, op: &OpConfig, split: ChannelSplit, threads: usize) -> Plan {
+    /// Predicted latency of a specific split under a specific strategy.
+    pub fn predict_split_us(
+        &self,
+        op: &OpConfig,
+        split: ChannelSplit,
+        threads: usize,
+        mech: SyncMechanism,
+    ) -> Plan {
         let (t_cpu, t_gpu) = (
             if split.c_cpu > 0 {
                 self.predictors.predict_us(
@@ -93,73 +180,235 @@ impl Planner {
             },
         );
         let overhead = if split.is_coexec() {
-            self.device.sync_overhead_us(self.mech, op.kind())
+            self.device.sync_overhead_us(mech, op.kind())
         } else {
             0.0
         };
         Plan {
             split,
             threads,
-            mech: self.mech,
+            mech,
             t_cpu_us: t_cpu,
             t_gpu_us: t_gpu,
-            t_total_us: overhead + t_cpu.max(t_gpu),
+            t_total_us: t_cpu.max(t_gpu) + overhead,
         }
     }
 
     /// Solve the partitioning problem for one op (the paper's 3-4 ms
-    /// offline planning step).
+    /// offline planning step) at the paper's default strategy.
     pub fn plan(&self, op: &OpConfig) -> Plan {
         self.plan_with_threads(op, 3)
     }
 
-    /// Solve with an explicit CPU thread count.
-    ///
-    /// Coarse-to-fine search: a stride-32 sweep finds the basin, then a
-    /// stride-[`PLAN_STEP`] refinement around the winner resolves the exact
-    /// split. The predicted curve is piecewise-constant from the trees, so
-    /// the basin is wide; this costs ~7x fewer GBDT evaluations than a flat
-    /// stride-4 scan (EXPERIMENTS.md §Perf).
+    /// Solve with an explicit CPU thread count and the paper's SVM-polling
+    /// mechanism (the classic fixed-strategy entry point).
     pub fn plan_with_threads(&self, op: &OpConfig, threads: usize) -> Plan {
+        self.plan_request(op, PlanRequest::fixed(threads, SyncMechanism::SvmPolling))
+    }
+
+    /// Solve over the requested strategy space: jointly minimize predicted
+    /// `t_total_us` over `(split × threads × mechanism)`, where each axis
+    /// is either pinned by `req` or searched.
+    ///
+    /// Per strategy point this is the same coarse-to-fine split search as
+    /// a fixed plan: a stride-32 sweep finds the basin, then a
+    /// stride-[`PLAN_STEP`] refinement around each strategy point's winner
+    /// resolves the exact split. (The predicted curve is piecewise-constant
+    /// from the trees, so the basin is wide; coarse-to-fine costs ~7x fewer
+    /// GBDT evaluations than a flat stride-4 scan — EXPERIMENTS.md §Perf.)
+    /// Shared GPU predictions, the analytic mechanism prune, and the
+    /// per-candidate dominated-thread prune (module docs) keep a fully
+    /// `Auto` plan within ~4x the cost of a fixed one, and the result is
+    /// exactly `min` over every fixed strategy's plan. Ties resolve to the
+    /// lowest thread count and `SvmPolling`.
+    pub fn plan_request(&self, op: &OpConfig, req: PlanRequest) -> Plan {
+        let max_threads = self.device.spec.cpu.max_threads();
+        let threads: Vec<usize> = match req.threads {
+            Choice::Fixed(t) => vec![t.clamp(1, max_threads)],
+            Choice::Auto => (1..=max_threads).collect(),
+        };
+        let mechs: Vec<SyncMechanism> = match req.mech {
+            Choice::Fixed(m) => vec![m],
+            Choice::Auto => vec![SyncMechanism::SvmPolling, SyncMechanism::EventWait],
+        };
+        let overheads: Vec<f64> =
+            mechs.iter().map(|&m| self.device.sync_overhead_us(m, op.kind())).collect();
         let cout = op.cout();
-        let mut best = self.predict_split_us(op, ChannelSplit::gpu_only(cout), threads);
-        let cpu_only = self.predict_split_us(op, ChannelSplit::cpu_only(cout), threads);
-        if cpu_only.t_total_us < best.t_total_us {
-            best = cpu_only;
-        }
-        const COARSE: usize = 32;
-        let coarse = cout > 4 * COARSE;
-        let mut consider = |c: usize, best: &mut Plan| {
-            if c == 0 || c >= cout {
+
+        // Incumbent per (threads, mech) strategy point, seeded with the
+        // exclusive assignments exactly like the fixed search. Exclusive
+        // predictions are shared: GPU-only latency is thread- and
+        // mech-invariant, CPU-only is per thread count, and neither pays
+        // sync overhead, so one GPU eval + one CPU eval per thread count
+        // seed the whole grid.
+        let t_gpu_full = self.predictors.predict_us(&self.device, op, Processor::Gpu);
+        let mut best: Vec<Vec<Plan>> = threads
+            .iter()
+            .map(|&t| {
+                let t_cpu_full =
+                    self.predictors.predict_us(&self.device, op, Processor::Cpu(t));
+                mechs
+                    .iter()
+                    .map(|&m| {
+                        let gpu = Plan {
+                            split: ChannelSplit::gpu_only(cout),
+                            threads: t,
+                            mech: m,
+                            t_cpu_us: 0.0,
+                            t_gpu_us: t_gpu_full,
+                            t_total_us: 0.0f64.max(t_gpu_full),
+                        };
+                        let cpu = Plan {
+                            split: ChannelSplit::cpu_only(cout),
+                            threads: t,
+                            mech: m,
+                            t_cpu_us: t_cpu_full,
+                            t_gpu_us: 0.0,
+                            t_total_us: t_cpu_full.max(0.0),
+                        };
+                        if cpu.t_total_us < gpu.t_total_us {
+                            cpu
+                        } else {
+                            gpu
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // One co-executed candidate: a single shared GPU prediction, CPU
+        // predictions only for thread counts the candidate could still
+        // win for, per-mechanism totals derived from the same base.
+        let consider = |c1: usize, best: &mut Vec<Vec<Plan>>| {
+            if c1 == 0 || c1 >= cout {
                 return;
             }
-            let plan = self.predict_split_us(op, ChannelSplit::new(c, cout - c), threads);
-            if plan.t_total_us < best.t_total_us {
-                *best = plan;
+            let split = ChannelSplit::new(c1, cout - c1);
+            let t_gpu = self.predictors.predict_us(
+                &self.device,
+                &op.with_cout(split.c_gpu),
+                Processor::Gpu,
+            );
+            for (ti, &t) in threads.iter().enumerate() {
+                // dominated-thread prune: t_total >= t_gpu + overhead for
+                // any CPU prediction, so skip the CPU evaluation when this
+                // candidate provably cannot beat thread count t's
+                // incumbents under any mechanism.
+                if (0..mechs.len()).all(|mi| t_gpu + overheads[mi] > best[ti][mi].t_total_us) {
+                    continue;
+                }
+                let t_cpu = self.predictors.predict_us(
+                    &self.device,
+                    &op.with_cout(split.c_cpu),
+                    Processor::Cpu(t),
+                );
+                let base = t_cpu.max(t_gpu);
+                for (mi, &m) in mechs.iter().enumerate() {
+                    let total = base + overheads[mi];
+                    if total < best[ti][mi].t_total_us {
+                        best[ti][mi] = Plan {
+                            split,
+                            threads: t,
+                            mech: m,
+                            t_cpu_us: t_cpu,
+                            t_gpu_us: t_gpu,
+                            t_total_us: total,
+                        };
+                    }
+                }
             }
         };
+
+        const COARSE: usize = 32;
+        let coarse = cout > 4 * COARSE;
+        let step = if coarse { COARSE } else { PLAN_STEP };
         let mut c = PLAN_STEP;
         while c < cout {
             consider(c, &mut best);
-            c += if coarse { COARSE } else { PLAN_STEP };
+            c += step;
         }
-        // refine around the coarse winner
-        if coarse && best.split.is_coexec() {
-            let center = best.split.c_cpu;
-            let lo = center.saturating_sub(COARSE).max(PLAN_STEP);
-            let hi = (center + COARSE).min(cout - 1);
-            let mut c = lo / PLAN_STEP * PLAN_STEP;
-            while c <= hi {
-                consider(c, &mut best);
-                c += PLAN_STEP;
+
+        // Refinement is per strategy point: each (threads, mech) point
+        // refines around — and is only updated from — its own coarse
+        // winner, exactly like a fixed-strategy search. (Cross-window
+        // updates would occasionally find better plans, but would make an
+        // `Auto` result diverge from the fixed plan at its resolved
+        // strategy; reproducibility is worth more than that sliver.)
+        // Points whose coarse winner is exclusive skip refinement, as in
+        // the fixed search; points sharing a center share one sweep, with
+        // the GPU prediction and per-thread CPU predictions shared.
+        if coarse {
+            let mut windows: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+            for (ti, row) in best.iter().enumerate() {
+                for (mi, p) in row.iter().enumerate() {
+                    if p.split.is_coexec() {
+                        let center = p.split.c_cpu;
+                        match windows.iter().position(|(c, _)| *c == center) {
+                            Some(w) => windows[w].1.push((ti, mi)),
+                            None => windows.push((center, vec![(ti, mi)])),
+                        }
+                    }
+                }
+            }
+            for (center, members) in windows {
+                let lo = center.saturating_sub(COARSE).max(PLAN_STEP);
+                let hi = (center + COARSE).min(cout - 1);
+                let mut c1 = lo / PLAN_STEP * PLAN_STEP;
+                while c1 <= hi {
+                    let split = ChannelSplit::new(c1, cout - c1);
+                    let t_gpu = self.predictors.predict_us(
+                        &self.device,
+                        &op.with_cout(split.c_gpu),
+                        Processor::Gpu,
+                    );
+                    let mut cpu_memo: Vec<(usize, f64)> = Vec::new();
+                    for &(ti, mi) in &members {
+                        if t_gpu + overheads[mi] > best[ti][mi].t_total_us {
+                            continue; // provably cannot beat this incumbent
+                        }
+                        let t_cpu = match cpu_memo.iter().position(|&(i, _)| i == ti) {
+                            Some(hit) => cpu_memo[hit].1,
+                            None => {
+                                let v = self.predictors.predict_us(
+                                    &self.device,
+                                    &op.with_cout(split.c_cpu),
+                                    Processor::Cpu(threads[ti]),
+                                );
+                                cpu_memo.push((ti, v));
+                                v
+                            }
+                        };
+                        let total = t_cpu.max(t_gpu) + overheads[mi];
+                        if total < best[ti][mi].t_total_us {
+                            best[ti][mi] = Plan {
+                                split,
+                                threads: threads[ti],
+                                mech: mechs[mi],
+                                t_cpu_us: t_cpu,
+                                t_gpu_us: t_gpu,
+                                t_total_us: total,
+                            };
+                        }
+                    }
+                    c1 += PLAN_STEP;
+                }
             }
         }
-        best
+
+        let mut winner = best[0][0];
+        for row in &best {
+            for p in row {
+                if p.t_total_us < winner.t_total_us {
+                    winner = *p;
+                }
+            }
+        }
+        winner
     }
 
     /// Measured latency of executing a plan on the device (the evaluation
     /// the paper reports in Table 2: plans are chosen by prediction but
-    /// *scored* by measurement).
+    /// *scored* by measurement). The plan carries its own strategy.
     pub fn measure_plan_us(&self, op: &OpConfig, plan: &Plan, trials: u64) -> f64 {
         self.device
             .measure_coexec_mean(op, plan.split, plan.threads, plan.mech, trials)
@@ -253,6 +502,55 @@ mod tests {
         let plan = p.plan_with_threads(&op, 2);
         assert_eq!(plan.split.total(), 3000);
         assert_eq!(plan.threads, 2);
+        assert_eq!(plan.mech, SyncMechanism::SvmPolling);
         assert!(plan.t_total_us > 0.0);
+    }
+
+    #[test]
+    fn auto_plan_minimizes_over_the_strategy_grid() {
+        let device = Device::pixel5();
+        let p = planner(device.clone());
+        for op in [
+            OpConfig::Linear(LinearConfig::vit_fc1()),
+            OpConfig::Linear(LinearConfig::new(64, 512, 900)),
+            OpConfig::Linear(LinearConfig::new(8, 64, 96)), // below coarse threshold
+        ] {
+            let auto = p.plan_request(&op, PlanRequest::auto());
+            let mut grid_best = f64::MAX;
+            for t in 1..=device.spec.cpu.max_threads() {
+                for m in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+                    let fixed = p.plan_request(&op, PlanRequest::fixed(t, m));
+                    assert_eq!(fixed.threads, t);
+                    assert_eq!(fixed.mech, m);
+                    grid_best = grid_best.min(fixed.t_total_us);
+                }
+            }
+            assert!(
+                auto.t_total_us <= grid_best + 1e-9,
+                "{op}: auto {:.2} worse than best fixed {:.2}",
+                auto.t_total_us,
+                grid_best
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_request_clamps_threads_to_device_budget() {
+        let device = Device::moto2022();
+        let p = planner(device);
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 1024));
+        let clamped = p.plan_request(&op, PlanRequest::fixed(99, SyncMechanism::SvmPolling));
+        let at_max = p.plan_with_threads(&op, p.device.spec.cpu.max_threads());
+        assert_eq!(clamped, at_max);
+    }
+
+    #[test]
+    fn request_normalization_is_canonical() {
+        let a = PlanRequest::fixed(99, SyncMechanism::SvmPolling).normalized(3);
+        let b = PlanRequest::fixed(3, SyncMechanism::SvmPolling).normalized(3);
+        assert_eq!(a, b);
+        let auto = PlanRequest::auto().normalized(3);
+        assert_eq!(auto, PlanRequest::auto());
+        assert!(!auto.is_fixed() && a.is_fixed());
     }
 }

@@ -2,36 +2,51 @@
 //!
 //! Delegate dispatch heuristics and the trained GBDT predictors are pure
 //! functions of the op shape, so a partition plan is fully determined by
-//! the `(device, op-config, threads, sync-mechanism)` tuple ([`PlanKey`]).
-//! Re-planning on every request wastes ~ms of GBDT sweeps per op; a cache
-//! hit is a hash lookup over a `Copy` [`Plan`] (~ns). The cache is sharded
-//! by key hash so concurrent requests for different ops rarely contend.
+//! the `(device, op-config, plan-request)` tuple. Re-planning on every
+//! request wastes ~ms of GBDT sweeps per op; a cache hit is a hash lookup
+//! over a `Copy` [`Plan`] (~ns). The cache is sharded by key hash so
+//! concurrent requests for different ops rarely contend.
 //!
-//! Concurrency contract: [`PlanCache::get_or_insert_with`] holds the shard
-//! lock *while computing* a missing plan. That gives single-flight
-//! semantics per shard — two racing requests for the same key produce
-//! exactly one miss and one hit, never two misses — which the protocol
-//! stress tests rely on (`hits == requests - distinct keys`). Planning
-//! costs ~3-4 ms worst case; with [`DEFAULT_SHARDS`] shards the collateral
-//! blocking of unrelated keys is negligible at serving concurrency.
+//! Two maps back the cache:
 //!
-//! Memory is bounded: each shard holds at most
-//! [`DEFAULT_MAX_PER_SHARD`] plans (configurable via
-//! [`PlanCache::with_capacity`]) and is flushed wholesale when full, so a
-//! client iterating distinct shapes cannot grow the server without limit.
+//! * **plans** — `(device, op, threads, mech)` ([`PlanKey`], fully
+//!   resolved) → [`Plan`]. Every cached plan lives here.
+//! * **auto resolutions** — `(device, op, normalized request)`
+//!   ([`AutoKey`], at least one `Auto` axis) → the winning [`Strategy`].
+//!   An `Auto` request resolves once, then indexes into **plans** under
+//!   its resolved key — so the `auto` request and the equivalent fixed
+//!   request share one cache entry and hit each other.
+//!
+//! Concurrency contract: misses compute *while holding the shard lock*
+//! (the auto-key shard for requests with an `Auto` axis, the plan-key
+//! shard otherwise). That gives single-flight semantics per shard — two
+//! racing requests for the same key produce exactly one miss and one hit,
+//! never two misses — which the protocol stress tests rely on
+//! (`hits == requests - distinct keys`). Planning costs ~3-4 ms worst
+//! case; with [`DEFAULT_SHARDS`] shards the collateral blocking of
+//! unrelated keys is negligible at serving concurrency. Lock order is
+//! auto-shard → plan-shard, never the reverse.
+//!
+//! Memory is bounded: each shard holds at most [`DEFAULT_MAX_PER_SHARD`]
+//! entries (configurable via [`PlanCache::with_capacity`]) with per-shard
+//! LRU eviction — a full shard drops its least-recently-used entry, not
+//! the whole shard, so a client iterating distinct shapes evicts cold
+//! plans while hot shapes stay resident. Eviction scans the shard for the
+//! oldest tick (O(capacity)), which is noise next to the milliseconds a
+//! re-plan costs.
 
 use crate::device::SyncMechanism;
 use crate::metrics::Counter;
 use crate::ops::OpConfig;
-use crate::partition::{Plan, Planner};
+use crate::partition::{Choice, Plan, PlanRequest, Planner, Strategy};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::{Mutex, MutexGuard};
 
-/// Everything a partition plan depends on. Cheap to build (all `Copy`
-/// except the static device name) and collision-free: two keys compare
-/// equal iff every component is equal.
+/// Everything a fully resolved partition plan depends on. Cheap to build
+/// (all `Copy` except the static device name) and collision-free: two keys
+/// compare equal iff every component is equal.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     /// Device display name (`Device::name()`, `'static` — no allocation).
@@ -39,6 +54,17 @@ pub struct PlanKey {
     pub op: OpConfig,
     pub threads: usize,
     pub mech: SyncMechanism,
+}
+
+/// Cache key for a plan request with at least one `Auto` axis, after
+/// [`PlanRequest::normalized`] (so `threads=99` and `threads=3` requests
+/// on a 3-core device share a key). Maps to the strategy the planner
+/// resolved, which in turn indexes the plans map.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AutoKey {
+    pub device: &'static str,
+    pub op: OpConfig,
+    pub req: PlanRequest,
 }
 
 /// Default shard count: power of two, comfortably above typical serving
@@ -50,10 +76,122 @@ pub const DEFAULT_SHARDS: usize = 16;
 /// client iterating distinct shapes must not grow server memory forever.
 pub const DEFAULT_MAX_PER_SHARD: usize = 4096;
 
-/// A sharded `(PlanKey -> Plan)` map with hit/miss telemetry.
-pub struct PlanCache {
-    shards: Vec<Mutex<HashMap<PlanKey, Plan>>>,
+/// One LRU shard: entries tagged with a monotonic recency tick.
+struct LruShard<K, V> {
+    map: HashMap<K, (V, u64)>,
+    tick: u64,
+}
+
+impl<K: Hash + Eq + Clone, V: Copy> LruShard<K, V> {
+    fn new() -> Self {
+        Self { map: HashMap::new(), tick: 0 }
+    }
+
+    fn touch(&mut self, key: &K) -> Option<V> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|(v, t)| {
+            *t = tick;
+            *v
+        })
+    }
+
+    /// Insert, evicting the least-recently-used entry if the shard is at
+    /// `max` and the key is new.
+    fn insert(&mut self, key: K, value: V, max: usize) {
+        self.tick += 1;
+        if self.map.len() >= max && !self.map.contains_key(&key) {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, (_, t))| *t).map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, (value, self.tick));
+    }
+}
+
+/// A sharded LRU map; misses in [`LruMap::get_or_insert_with`] compute
+/// under the shard lock (single-flight per shard).
+struct LruMap<K, V> {
+    shards: Vec<Mutex<LruShard<K, V>>>,
     max_per_shard: usize,
+}
+
+impl<K: Hash + Eq + Clone, V: Copy> LruMap<K, V> {
+    fn new(n_shards: usize, max_per_shard: usize) -> Self {
+        assert!(n_shards > 0, "cache needs at least one shard");
+        assert!(max_per_shard > 0, "shards must hold at least one entry");
+        Self {
+            shards: (0..n_shards).map(|_| Mutex::new(LruShard::new())).collect(),
+            max_per_shard,
+        }
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<LruShard<K, V>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Lock a shard, recovering from poisoning: computes run under the
+    /// lock, so a panicking compute must degrade that one request (the
+    /// worker pool contains the panic), not wedge the shard forever. The
+    /// map itself stays consistent — a failed compute inserted nothing.
+    fn lock(m: &Mutex<LruShard<K, V>>) -> MutexGuard<'_, LruShard<K, V>> {
+        m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Recency-bumping lookup.
+    fn get(&self, key: &K) -> Option<V> {
+        Self::lock(self.shard(key)).touch(key)
+    }
+
+    /// Lookup without touching recency (diagnostics only).
+    fn peek(&self, key: &K) -> Option<V> {
+        Self::lock(self.shard(key)).map.get(key).map(|(v, _)| *v)
+    }
+
+    /// Cached value for `key`, or `compute` it (under the shard lock — see
+    /// the module docs for the single-flight rationale) and remember it.
+    /// Returns `(value, was_hit)`.
+    fn get_or_insert_with<F: FnOnce() -> V>(&self, key: K, compute: F) -> (V, bool) {
+        let mut shard = Self::lock(self.shard(&key));
+        if let Some(v) = shard.touch(&key) {
+            return (v, true);
+        }
+        let v = compute();
+        shard.insert(key, v, self.max_per_shard);
+        (v, false)
+    }
+
+    /// Insert without touching the hit/miss accounting of callers.
+    fn insert(&self, key: K, value: V) {
+        let mut shard = Self::lock(self.shard(&key));
+        shard.insert(key, value, self.max_per_shard);
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| Self::lock(s).map.len()).sum()
+    }
+
+    /// Drop every entry; returns how many were dropped.
+    fn clear(&self) -> usize {
+        let mut n = 0;
+        for s in &self.shards {
+            let mut shard = Self::lock(s);
+            n += shard.map.len();
+            shard.map.clear();
+        }
+        n
+    }
+}
+
+/// The sharded plan cache with hit/miss telemetry: resolved plans plus the
+/// `Auto`-request resolution index (module docs).
+pub struct PlanCache {
+    plans: LruMap<PlanKey, Plan>,
+    auto: LruMap<AutoKey, Strategy>,
     hits: Counter,
     misses: Counter,
 }
@@ -63,69 +201,103 @@ impl PlanCache {
         Self::with_capacity(n_shards, DEFAULT_MAX_PER_SHARD)
     }
 
-    /// A cache with an explicit per-shard entry bound. A shard that fills
-    /// up is flushed wholesale before the next insert — crude, O(1)
-    /// bookkeeping, and plans are milliseconds to recompute; what matters
-    /// is that memory stays bounded.
+    /// A cache with an explicit per-shard entry bound (applied to the plan
+    /// shards and the auto-resolution shards alike).
     pub fn with_capacity(n_shards: usize, max_per_shard: usize) -> Self {
-        assert!(n_shards > 0, "cache needs at least one shard");
-        assert!(max_per_shard > 0, "shards must hold at least one plan");
         Self {
-            shards: (0..n_shards).map(|_| Mutex::new(HashMap::new())).collect(),
-            max_per_shard,
+            plans: LruMap::new(n_shards, max_per_shard),
+            auto: LruMap::new(n_shards, max_per_shard),
             hits: Counter::new(),
             misses: Counter::new(),
         }
     }
 
-    fn shard(&self, key: &PlanKey) -> &Mutex<HashMap<PlanKey, Plan>> {
-        let mut h = DefaultHasher::new();
-        key.hash(&mut h);
-        &self.shards[(h.finish() as usize) % self.shards.len()]
-    }
-
-    /// Lock a shard, recovering from poisoning: `compute` runs under the
-    /// lock, so a panicking planner must degrade that one request (the
-    /// worker pool contains the panic), not wedge the shard forever. The
-    /// map itself stays consistent — a failed compute inserted nothing.
-    fn lock(m: &Mutex<HashMap<PlanKey, Plan>>) -> MutexGuard<'_, HashMap<PlanKey, Plan>> {
-        m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
-    }
-
-    /// Cached plan for `key`, or `compute` it (under the shard lock — see
-    /// the module docs for the single-flight rationale) and remember it.
+    /// Cached plan for a fully resolved `key`, or `compute` it under the
+    /// shard lock and remember it.
     pub fn get_or_insert_with<F: FnOnce() -> Plan>(&self, key: PlanKey, compute: F) -> Plan {
-        let mut shard = Self::lock(self.shard(&key));
-        if let Some(plan) = shard.get(&key) {
+        let (plan, hit) = self.plans.get_or_insert_with(key, compute);
+        if hit {
             self.hits.inc();
-            return *plan;
+        } else {
+            self.misses.inc();
         }
-        self.misses.inc();
-        let plan = compute();
-        if shard.len() >= self.max_per_shard {
-            shard.clear(); // bounded memory beats perfect retention
-        }
-        shard.insert(key, plan);
         plan
     }
 
-    /// The serving-layer entry point: plan `op` through `planner`, reusing
-    /// a cached plan when one exists. Identical to
-    /// `planner.plan_with_threads(op, threads)` by construction (planning
-    /// is deterministic), just ~1000x cheaper on a hit.
-    pub fn get_or_plan(&self, planner: &Planner, op: &OpConfig, threads: usize) -> Plan {
-        let key = PlanKey {
-            device: planner.device.name(),
-            op: *op,
-            threads,
-            mech: planner.mech,
-        };
-        self.get_or_insert_with(key, || planner.plan_with_threads(op, threads))
+    /// The serving-layer entry point: plan `op` through `planner` for an
+    /// arbitrary [`PlanRequest`], reusing cached work wherever possible.
+    /// Identical to `planner.plan_request(op, req)` by construction
+    /// (planning is deterministic), just ~1000x cheaper on a hit.
+    pub fn get_or_plan_request(
+        &self,
+        planner: &Planner,
+        op: &OpConfig,
+        req: PlanRequest,
+    ) -> Plan {
+        let device = planner.device.name();
+        let req = req.normalized(planner.device.spec.cpu.max_threads());
+        if let (Choice::Fixed(threads), Choice::Fixed(mech)) = (req.threads, req.mech) {
+            return self.get_or_insert_with(PlanKey { device, op: *op, threads, mech }, || {
+                planner.plan_request(op, req)
+            });
+        }
+        let akey = AutoKey { device, op: *op, req };
+        if let Some(s) = self.auto.get(&akey) {
+            // Resolved before: serve from the plans map. Re-planning (LRU
+            // eviction dropped the plan but kept the resolution) pins the
+            // resolved strategy — the planner guarantees the fixed search
+            // at an `Auto` plan's resolved strategy reproduces it exactly,
+            // at a fraction of the joint search's cost.
+            return self.get_or_insert_with(
+                PlanKey { device, op: *op, threads: s.threads, mech: s.mech },
+                || planner.plan_request(op, PlanRequest::fixed(s.threads, s.mech)),
+            );
+        }
+        // Cold auto request: resolve under the auto-shard lock (single
+        // flight per auto key) and publish the plan under its resolved
+        // fixed key *before* the resolution becomes visible, so the
+        // equivalent fixed request — and racing auto requests — hit it.
+        let mut computed: Option<Plan> = None;
+        let (strategy, _) = self.auto.get_or_insert_with(akey, || {
+            let plan = planner.plan_request(op, req);
+            self.misses.inc();
+            self.plans.insert(
+                PlanKey { device, op: *op, threads: plan.threads, mech: plan.mech },
+                plan,
+            );
+            computed = Some(plan);
+            plan.strategy()
+        });
+        match computed {
+            Some(plan) => plan,
+            // lost the single-flight race: the resolver published the plan
+            // (re-plan at the resolved strategy if it was already evicted)
+            None => self.get_or_insert_with(
+                PlanKey { device, op: *op, threads: strategy.threads, mech: strategy.mech },
+                || planner.plan_request(op, PlanRequest::fixed(strategy.threads, strategy.mech)),
+            ),
+        }
     }
 
-    /// Peek without counting (diagnostics only).
+    /// Fixed-strategy convenience used throughout tests and benches: plan
+    /// with `threads` CPU threads and the paper's SVM-polling mechanism.
+    pub fn get_or_plan(&self, planner: &Planner, op: &OpConfig, threads: usize) -> Plan {
+        self.get_or_plan_request(
+            planner,
+            op,
+            PlanRequest::fixed(threads, SyncMechanism::SvmPolling),
+        )
+    }
+
+    /// Peek a resolved plan without counting or touching recency
+    /// (diagnostics only).
     pub fn peek(&self, key: &PlanKey) -> Option<Plan> {
-        Self::lock(self.shard(key)).get(key).copied()
+        self.plans.peek(key)
+    }
+
+    /// Peek an `Auto` request's resolved strategy (diagnostics only).
+    pub fn peek_resolution(&self, key: &AutoKey) -> Option<Strategy> {
+        self.auto.peek(key)
     }
 
     pub fn hits(&self) -> u64 {
@@ -136,20 +308,30 @@ impl PlanCache {
         self.misses.get()
     }
 
-    /// Number of cached plans across all shards.
+    /// Number of cached plans across all shards (auto resolutions are an
+    /// index, not plans, and are not counted).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| Self::lock(s).len()).sum()
+        self.plans.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Drop every cached plan and auto resolution — the `FLUSH` verb, for
+    /// when device calibration changes. Keeps the hit/miss counters;
+    /// returns the number of plans dropped.
+    pub fn flush(&self) -> usize {
+        // plans first: a racing auto request that saw a stale resolution
+        // re-plans into the fresh map rather than resurrecting a plan
+        let n = self.plans.clear();
+        self.auto.clear();
+        n
+    }
+
     /// Drop every cached plan (keeps the hit/miss counters).
     pub fn clear(&self) {
-        for s in &self.shards {
-            Self::lock(s).clear();
-        }
+        self.flush();
     }
 }
 
@@ -212,16 +394,81 @@ mod tests {
     }
 
     #[test]
-    fn full_shard_is_flushed_not_grown() {
+    fn concurrent_auto_same_key_is_one_miss() {
+        let p = Arc::new(planner());
+        let cache = Arc::new(PlanCache::default());
+        let op = OpConfig::Linear(LinearConfig::new(40, 512, 1536));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (p, cache) = (p.clone(), cache.clone());
+                std::thread::spawn(move || {
+                    cache.get_or_plan_request(&p, &op, PlanRequest::auto())
+                })
+            })
+            .collect();
+        let plans: Vec<Plan> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(plans.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(cache.misses(), 1, "single-flight: exactly one cold auto plan");
+        assert_eq!(cache.hits(), 7);
+    }
+
+    #[test]
+    fn auto_and_equivalent_fixed_share_one_entry() {
         let p = planner();
-        // one shard, room for two plans: the third insert flushes it
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        let auto = cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        assert_eq!(cache.misses(), 1);
+        // the resolution is recorded and indexes the plans map
+        let akey = AutoKey {
+            device: p.device.name(),
+            op,
+            req: PlanRequest::auto(),
+        };
+        assert_eq!(cache.peek_resolution(&akey), Some(auto.strategy()));
+        // the equivalent fixed request hits the same entry...
+        let fixed =
+            cache.get_or_plan_request(&p, &op, PlanRequest::fixed(auto.threads, auto.mech));
+        assert_eq!(fixed, auto);
+        // ...as does a repeated auto request
+        let again = cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        assert_eq!(again, auto);
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (2, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_not_the_shard() {
+        let p = planner();
+        // one shard, room for two plans
         let cache = PlanCache::with_capacity(1, 2);
-        for cout in [256usize, 260, 264] {
-            let op = OpConfig::Linear(LinearConfig::new(8, 64, cout));
-            cache.get_or_plan(&p, &op, 1);
-        }
-        assert_eq!(cache.len(), 1, "flush happens before the overflowing insert");
-        assert_eq!(cache.misses(), 3);
+        let op_a = OpConfig::Linear(LinearConfig::new(8, 64, 256));
+        let op_b = OpConfig::Linear(LinearConfig::new(8, 64, 260));
+        let op_c = OpConfig::Linear(LinearConfig::new(8, 64, 264));
+        cache.get_or_plan(&p, &op_a, 1); // miss
+        cache.get_or_plan(&p, &op_b, 1); // miss, shard full
+        cache.get_or_plan(&p, &op_a, 1); // hit: A is now most-recent
+        cache.get_or_plan(&p, &op_c, 1); // miss: evicts B (LRU), not A
+        assert_eq!(cache.len(), 2, "eviction drops one entry, not the shard");
+        cache.get_or_plan(&p, &op_a, 1); // still resident
+        assert_eq!(cache.misses(), 3, "A must have survived the eviction");
+        cache.get_or_plan(&p, &op_b, 1); // gone: re-planned
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn flush_clears_plans_and_resolutions() {
+        let p = planner();
+        let cache = PlanCache::new(4);
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 256));
+        cache.get_or_plan(&p, &op, 1);
+        cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        let n = cache.len();
+        assert_eq!(cache.flush(), n);
+        assert!(cache.is_empty());
+        let misses = cache.misses();
+        cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        assert_eq!(cache.misses(), misses + 1, "flushed auto requests re-resolve");
     }
 
     #[test]
@@ -235,5 +482,16 @@ mod tests {
         assert_eq!(cache.misses(), 1);
         cache.get_or_plan(&p, &op, 1);
         assert_eq!(cache.misses(), 2, "cleared entries re-plan");
+    }
+
+    #[test]
+    fn oversized_fixed_threads_normalize_onto_the_clamped_key() {
+        let p = planner();
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::new(60, 512, 2048));
+        let max = p.device.spec.cpu.max_threads();
+        cache.get_or_plan(&p, &op, max);
+        cache.get_or_plan(&p, &op, 99); // clamps to max: same key, a hit
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
     }
 }

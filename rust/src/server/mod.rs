@@ -6,10 +6,12 @@
 //!
 //! * a device **registry** serving all four paper phones from one process
 //!   (per-device planners are trained lazily, on first use);
-//! * a sharded **[`cache::PlanCache`]** keyed by
-//!   `(device, op-config, threads, sync-mechanism)` — delegate heuristics
-//!   and trained predictors are deterministic per shape, so a plan never
-//!   needs computing twice;
+//! * a sharded **[`cache::PlanCache`]** — resolved plans keyed by
+//!   `(device, op-config, threads, sync-mechanism)` plus an index mapping
+//!   `auto` requests to their resolved strategy, with per-shard LRU
+//!   eviction. Planning is deterministic per shape, so a plan never needs
+//!   computing twice, and an `auto` request and its equivalent fixed
+//!   request share one entry;
 //! * a bounded **[`pool::WorkerPool`]** request executor: each connection
 //!   gets a thin I/O reader thread, but all planning/measuring runs on N
 //!   shared workers behind a bounded queue. When the queue is full the
@@ -17,33 +19,53 @@
 //!
 //! # Protocol grammar
 //!
-//! Line-oriented TCP, one request per line, fields space-separated,
-//! replies a single line starting `OK ` or `ERR `:
+//! Line-oriented TCP, one request per line, fields space-separated.
+//! Replies are a single line starting `OK ` or `ERR ` — except
+//! `PLAN_BATCH`, whose `OK n=<k>` header line is followed by `k` per-op
+//! lines (each itself `OK ...` or `ERR ...`):
 //!
 //! ```text
-//! request    = ping | plan | run | device | plan-model | stats
-//! ping       = "PING"                                   ; -> OK pong
-//! plan       = "PLAN" op-spec                           ; -> OK c_cpu c_gpu t_pred_us
-//! run        = "RUN" op-spec                            ; -> OK t_coexec_us t_gpu_us speedup
-//! device     = "DEVICE" name                            ; -> OK device <name>
-//! plan-model = "PLAN_MODEL" model threads               ; -> OK model=<m> layers=<n>
-//!                                                       ;      planned=<n> coexec=<n>
-//!                                                       ;      t_pred_ms=<x>
-//! stats      = "STATS"                                  ; -> OK hits=.. misses=.. entries=..
-//!                                                       ;      <verb>.req= .err= .p50_us= .p95_us= ...
+//! request    = ping | plan | plan-batch | run | device | plan-model
+//!            | flush | stats
+//! ping       = "PING"                     ; -> OK pong
+//! plan       = "PLAN" op-spec             ; -> OK c_cpu c_gpu t_pred_us
+//!                                         ;      threads=<t> mech=<mech>
+//! plan-batch = "PLAN_BATCH" op-spec *(";" op-spec)
+//!                                         ; -> OK n=<k> header, then one
+//!                                         ;    "OK ..."/"ERR ..." line per
+//!                                         ;    op-spec, in request order
+//! run        = "RUN" op-spec              ; -> OK t_coexec_us t_gpu_us
+//!                                         ;      speedup threads=<t>
+//!                                         ;      mech=<mech>
+//! device     = "DEVICE" name              ; -> OK device <name>
+//! plan-model = "PLAN_MODEL" model threads ; -> OK model=<m> layers=<n>
+//!                                         ;      planned=<n> coexec=<n>
+//!                                         ;      threads=<t:n,...>
+//!                                         ;      mechs=<mech:n,...>
+//!                                         ;      t_pred_ms=<x>
+//! flush      = "FLUSH"                    ; -> OK flushed=<n>
+//! stats      = "STATS"                    ; -> OK hits=.. misses=.. entries=..
+//!                                         ;      <verb>.req= .err= .p50_us= .p95_us= ...
 //! op-spec    = "linear" l cin cout threads
 //!            | "conv" h w cin cout k s threads
 //! name       = "pixel4" | "pixel5" | "moto2022" | "oneplus11"   ; + aliases moto, oneplus
 //! model      = "vgg16" | "resnet18" | "resnet34" | "inception_v3" | "vit_base32"
-//! threads    = 1..cores   ; 0 is an error, larger values clamp to the
-//!                         ; device's big-core count
+//! threads    = 1..cores | "auto"
+//!            ; 0 is an error, larger values clamp to the device's
+//!            ; big-core count; "auto" jointly searches the thread count
+//!            ; and the sync mechanism per op (per *layer* in PLAN_MODEL)
+//! mech       = "svm_polling" | "event_wait"
 //! ```
 //!
 //! `DEVICE` is *session-scoped*: it selects the device for subsequent
 //! requests on the same connection only (every connection starts on the
-//! server's default device). All numeric fields must be positive and at
-//! most [`MAX_FIELD`] — an oversized shape must not pin a worker in a
-//! near-endless partition sweep.
+//! server's default device). `FLUSH` drops every cached plan and `auto`
+//! resolution — for when device calibration changes. All numeric fields
+//! must be positive and at most [`MAX_FIELD`] — an oversized shape must
+//! not pin a worker in a near-endless partition sweep. A `PLAN_BATCH`
+//! line amortizes round-trips for compiler clients planning whole graphs;
+//! its per-op failures are reported in-band (per-op `ERR` lines) and do
+//! not fail the batch.
 //!
 //! # Example session
 //!
@@ -53,13 +75,20 @@
 //! > DEVICE pixel5
 //! < OK device pixel5
 //! > PLAN linear 50 768 3072 3
-//! < OK 592 2480 1628.4
-//! > PLAN linear 50 768 3072 3
-//! < OK 592 2480 1628.4          (cache hit: identical bytes, ~1000x cheaper)
-//! > PLAN_MODEL resnet18 3
-//! < OK model=resnet18 layers=<n> planned=<n> coexec=<n> t_pred_ms=<x>
-//! > PLAN linear 0 768 3072 3
+//! < OK 592 2480 1628.4 threads=3 mech=svm_polling
+//! > PLAN linear 50 768 3072 auto
+//! < OK 592 2480 1628.4 threads=3 mech=svm_polling   (auto resolved; cached
+//!                                                    once, shared with the
+//!                                                    fixed request above)
+//! > PLAN_BATCH linear 50 768 3072 3; linear 0 768 3072 3
+//! < OK n=2
+//! < OK 592 2480 1628.4 threads=3 mech=svm_polling
 //! < ERR zero-sized shape
+//! > PLAN_MODEL resnet18 auto
+//! < OK model=resnet18 layers=<n> planned=<n> coexec=<n> threads=<t:n,...>
+//!      mechs=<mech:n,...> t_pred_ms=<x>
+//! > FLUSH
+//! < OK flushed=<n>
 //! > STATS
 //! < OK hits=<n> misses=<n> entries=<n> ping.req=1 ping.err=0 ...
 //! ```
@@ -72,12 +101,12 @@ pub mod pool;
 
 use self::cache::PlanCache;
 use self::pool::{SubmitError, WorkerPool};
-use crate::device::{Device, Processor};
+use crate::device::{Device, Processor, SyncMechanism};
 use crate::metrics::{Counter, LatencyRecorder};
 use crate::models::{self, Model};
 use crate::ops::{ConvConfig, LinearConfig, OpConfig};
-use crate::partition::{Plan, Planner};
-use crate::scheduler::{pool_gpu_us, ModelScheduler};
+use crate::partition::{Plan, PlanRequest, Planner};
+use crate::scheduler::{pool_gpu_us, strategy_distribution, ModelScheduler};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -130,6 +159,14 @@ fn model_by_name(name: &str) -> Option<Model> {
         "inception_v3" | "inceptionv3" => Some(models::inception_v3()),
         "vit_base32" | "vit" => Some(models::vit_base32()),
         _ => None,
+    }
+}
+
+/// Wire name of a sync mechanism (`mech=` reply fields).
+pub fn mech_wire(mech: SyncMechanism) -> &'static str {
+    match mech {
+        SyncMechanism::SvmPolling => "svm_polling",
+        SyncMechanism::EventWait => "event_wait",
     }
 }
 
@@ -189,12 +226,14 @@ pub struct ServerMetrics {
 /// The protocol's verbs: wire token -> metrics key. Single source of
 /// truth for telemetry bookkeeping and the stable `STATS` reporting
 /// order (dispatch itself lives in `handle_inner`'s match).
-const VERBS: [(&str, &str); 6] = [
+const VERBS: [(&str, &str); 8] = [
     ("PING", "ping"),
     ("PLAN", "plan"),
+    ("PLAN_BATCH", "plan_batch"),
     ("RUN", "run"),
     ("DEVICE", "device"),
     ("PLAN_MODEL", "plan_model"),
+    ("FLUSH", "flush"),
     ("STATS", "stats"),
 ];
 
@@ -353,9 +392,9 @@ impl ServerState {
     }
 
     /// Plan an op for the session's device through the cache.
-    pub fn plan_cached(&self, session: &Session, op: &OpConfig, threads: usize) -> Plan {
+    pub fn plan_cached(&self, session: &Session, op: &OpConfig, req: PlanRequest) -> Plan {
         let planners = self.planners_for(self.session_entry(session));
-        self.cache.get_or_plan(planners.for_op(op), op, threads)
+        self.cache.get_or_plan_request(planners.for_op(op), op, req)
     }
 
     /// Record a request shed before reaching [`Self::handle`] (pool full or
@@ -375,8 +414,9 @@ impl ServerState {
         self.metrics.endpoint(verb).errors.inc();
     }
 
-    /// Handle one request line; returns the reply line (always `OK ...` or
-    /// `ERR ...`), recording per-verb telemetry.
+    /// Handle one request line; returns the reply (starting `OK ...` or
+    /// `ERR ...` — multi-line only for `PLAN_BATCH`, whose header frames
+    /// the per-op lines), recording per-verb telemetry.
     pub fn handle(&self, session: &mut Session, line: &str) -> String {
         let t0 = Instant::now();
         let ep = self.metrics.endpoint(verb_key(line));
@@ -393,6 +433,13 @@ impl ServerState {
     }
 
     fn handle_inner(&self, session: &mut Session, line: &str) -> Result<String> {
+        // PLAN_BATCH groups op-specs with ';', which whitespace-splitting
+        // would destroy — route it on the raw remainder of the line.
+        if let Some(rest) = line.strip_prefix("PLAN_BATCH") {
+            if rest.is_empty() || rest.starts_with(char::is_whitespace) {
+                return self.plan_batch(session, rest);
+            }
+        }
         let parts: Vec<&str> = line.split_whitespace().collect();
         match parts.as_slice() {
             ["PING"] => Ok("pong".to_string()),
@@ -410,26 +457,32 @@ impl ServerState {
             }
             ["DEVICE", ..] => Err(anyhow!("bad device spec (expected: DEVICE <name>)")),
             ["PLAN", rest @ ..] => {
-                let (op, threads) = self.parse_op(session, rest)?;
-                let plan = self.plan_cached(session, &op, threads);
-                Ok(format!(
-                    "{} {} {:.1}",
-                    plan.split.c_cpu, plan.split.c_gpu, plan.t_total_us
-                ))
+                let (op, req) = self.parse_op(session, rest)?;
+                let plan = self.plan_cached(session, &op, req);
+                Ok(plan_body(&plan))
             }
             ["RUN", rest @ ..] => {
-                let (op, threads) = self.parse_op(session, rest)?;
+                let (op, req) = self.parse_op(session, rest)?;
                 let entry = self.session_entry(session);
                 let planner = self.planners_for(entry).for_op(&op);
-                let plan = self.cache.get_or_plan(planner, &op, threads);
+                let plan = self.cache.get_or_plan_request(planner, &op, req);
                 let t_co = planner.measure_plan_us(&op, &plan, 8);
                 let t_gpu = entry.device.measure_mean(&op, Processor::Gpu, 8);
-                Ok(format!("{:.1} {:.1} {:.3}", t_co, t_gpu, t_gpu / t_co))
+                Ok(format!(
+                    "{:.1} {:.1} {:.3} threads={} mech={}",
+                    t_co,
+                    t_gpu,
+                    t_gpu / t_co,
+                    plan.threads,
+                    mech_wire(plan.mech)
+                ))
             }
             ["PLAN_MODEL", model, threads] => self.plan_model(session, model, threads),
             ["PLAN_MODEL", ..] => {
                 Err(anyhow!("bad model spec (expected: PLAN_MODEL <model> <threads>)"))
             }
+            ["FLUSH"] => Ok(format!("flushed={}", self.cache.flush())),
+            ["FLUSH", ..] => Err(anyhow!("bad request (expected: FLUSH)")),
             ["STATS"] => Ok(self.metrics.render(&self.cache)),
             ["STATS", ..] => Err(anyhow!("bad request (expected: STATS)")),
             [other, ..] => Err(anyhow!("unknown command {other}")),
@@ -438,21 +491,22 @@ impl ServerState {
     }
 
     /// Plan every partitionable layer of a named model through the cache
-    /// (repeated shapes inside one model already hit).
+    /// (repeated shapes inside one model already hit). With `auto` each
+    /// layer resolves its own strategy; the reply reports the distribution
+    /// of chosen thread counts and mechanisms.
     fn plan_model(&self, session: &Session, name: &str, threads: &str) -> Result<String> {
         let entry = self.session_entry(session);
-        let threads = self.parse_threads(entry, threads)?;
+        let req = self.parse_request(entry, threads)?;
         let model = model_by_name(name).ok_or_else(|| anyhow!("unknown model {name}"))?;
         let planners = self.planners_for(entry);
         let sched = ModelScheduler {
             device: &entry.device,
             linear_planner: &planners.linear,
             conv_planner: &planners.conv,
-            threads,
-            mech: planners.linear.mech,
+            req,
         };
-        let schedule = sched.plan_via(&model, |op, threads| {
-            self.cache.get_or_plan(planners.for_op(op), op, threads)
+        let schedule = sched.plan_via(&model, |op, req| {
+            self.cache.get_or_plan_request(planners.for_op(op), op, req)
         });
         let planned = schedule.iter().filter(|ls| ls.plan.is_some()).count();
         let coexec = schedule
@@ -466,15 +520,50 @@ impl ServerState {
                 None => pool_gpu_us(&entry.device, &ls.layer),
             })
             .sum();
+        let dist = strategy_distribution(&schedule);
+        let threads_s: Vec<String> =
+            dist.threads.iter().map(|(t, n)| format!("{t}:{n}")).collect();
+        let mechs_s: Vec<String> =
+            dist.mechs.iter().map(|(m, n)| format!("{}:{n}", mech_wire(*m))).collect();
         Ok(format!(
-            "model={} layers={} planned={planned} coexec={coexec} t_pred_ms={:.2}",
+            "model={} layers={} planned={planned} coexec={coexec} threads={} mechs={} t_pred_ms={:.2}",
             model.name,
             model.layers.len(),
+            threads_s.join(","),
+            mechs_s.join(","),
             t_pred_us / 1e3
         ))
     }
 
-    fn parse_op(&self, session: &Session, parts: &[&str]) -> Result<(OpConfig, usize)> {
+    /// One `PLAN_BATCH` line: `;`-separated op-specs, one `OK`/`ERR` line
+    /// per spec after an `OK n=<k>` framing header. Blank segments (e.g. a
+    /// trailing `;`) are skipped; per-op failures are in-band and do not
+    /// fail the batch.
+    fn plan_batch(&self, session: &Session, specs: &str) -> Result<String> {
+        let mut lines: Vec<String> = Vec::new();
+        for spec in specs.split(';') {
+            let parts: Vec<&str> = spec.split_whitespace().collect();
+            if parts.is_empty() {
+                continue;
+            }
+            lines.push(
+                match self.parse_op(session, &parts).map(|(op, req)| {
+                    plan_body(&self.plan_cached(session, &op, req))
+                }) {
+                    Ok(body) => format!("OK {body}"),
+                    Err(e) => format!("ERR {e}"),
+                },
+            );
+        }
+        if lines.is_empty() {
+            return Err(anyhow!(
+                "empty batch (expected: PLAN_BATCH <op-spec>[; <op-spec>]...)"
+            ));
+        }
+        Ok(format!("n={}\n{}", lines.len(), lines.join("\n")))
+    }
+
+    fn parse_op(&self, session: &Session, parts: &[&str]) -> Result<(OpConfig, PlanRequest)> {
         let entry = self.session_entry(session);
         match parts {
             ["linear", l, cin, cout, thr] => {
@@ -486,7 +575,7 @@ impl ServerState {
                 if cfg.l == 0 || cfg.cin == 0 || cfg.cout == 0 {
                     return Err(anyhow!("zero-sized shape"));
                 }
-                Ok((OpConfig::Linear(cfg), self.parse_threads(entry, thr)?))
+                Ok((OpConfig::Linear(cfg), self.parse_request(entry, thr)?))
             }
             ["conv", h, w, cin, cout, k, s, thr] => {
                 let cfg = ConvConfig::new(
@@ -506,28 +595,49 @@ impl ServerState {
                 {
                     return Err(anyhow!("zero-sized shape"));
                 }
-                Ok((OpConfig::Conv(cfg), self.parse_threads(entry, thr)?))
+                Ok((OpConfig::Conv(cfg), self.parse_request(entry, thr)?))
             }
             [kind, ..] if *kind != "linear" && *kind != "conv" => {
                 Err(anyhow!("unknown op kind {kind}"))
             }
             _ => Err(anyhow!(
-                "bad op spec (expected: linear <l> <cin> <cout> <threads> | \
-                 conv <h> <w> <cin> <cout> <k> <s> <threads>)"
+                "bad op spec (expected: linear <l> <cin> <cout> <threads|auto> | \
+                 conv <h> <w> <cin> <cout> <k> <s> <threads|auto>)"
             )),
         }
     }
 
-    /// Validate and clamp a client thread count: 0 is an error; anything
-    /// above the device's big-core budget clamps to it (a client asking for
-    /// 99 threads must not make the cost model extrapolate nonsense).
-    fn parse_threads(&self, entry: &DeviceEntry, tok: &str) -> Result<usize> {
+    /// Parse a threads token into a [`PlanRequest`]: `auto` frees both
+    /// strategy axes; a number pins `(threads, SvmPolling)`. 0 is an
+    /// error; anything above the device's big-core budget clamps to it (a
+    /// client asking for 99 threads must not make the cost model
+    /// extrapolate nonsense).
+    fn parse_request(&self, entry: &DeviceEntry, tok: &str) -> Result<PlanRequest> {
+        if tok.eq_ignore_ascii_case("auto") {
+            return Ok(PlanRequest::auto());
+        }
         let t: usize = field(tok, "threads")?;
         if t == 0 {
             return Err(anyhow!("threads must be >= 1"));
         }
-        Ok(t.min(entry.device.spec.cpu.max_threads()))
+        Ok(PlanRequest::fixed(
+            t.min(entry.device.spec.cpu.max_threads()),
+            SyncMechanism::SvmPolling,
+        ))
     }
+}
+
+/// The `PLAN` reply body for a resolved plan: split, predicted total, and
+/// the chosen strategy.
+fn plan_body(plan: &Plan) -> String {
+    format!(
+        "{} {} {:.1} threads={} mech={}",
+        plan.split.c_cpu,
+        plan.split.c_gpu,
+        plan.t_total_us,
+        plan.threads,
+        mech_wire(plan.mech)
+    )
 }
 
 /// Pause after a failed `accept()` (fd exhaustion and friends): long
@@ -535,7 +645,9 @@ impl ServerState {
 const ACCEPT_BACKOFF: std::time::Duration = std::time::Duration::from_millis(50);
 
 /// Largest accepted request line in bytes: a client streaming data with
-/// no newline must not grow per-connection buffers without limit.
+/// no newline must not grow per-connection buffers without limit. Also
+/// the practical bound on `PLAN_BATCH` size (~150 op-specs per line) —
+/// large graphs split across a few batch lines.
 const MAX_LINE_BYTES: u64 = 4096;
 
 /// Largest accepted value for any numeric request field: covers the model
@@ -750,7 +862,8 @@ fn handle_conn(
     }
 }
 
-/// Tiny one-shot client helper for examples/tests.
+/// Tiny one-shot client helper for examples/tests (single-line replies;
+/// batch clients read the `PLAN_BATCH` header's `n=` further lines).
 pub fn request(addr: &std::net::SocketAddr, line: &str) -> Result<String> {
     let mut stream = TcpStream::connect(addr)?;
     stream.write_all(line.as_bytes())?;
@@ -769,19 +882,41 @@ mod tests {
         Arc::new(ServerState::new(Device::pixel5(), 2500, 3))
     }
 
+    /// First three whitespace tokens of a PLAN reply body as numbers.
+    fn plan_nums(reply: &str) -> Vec<f64> {
+        reply
+            .strip_prefix("OK ")
+            .unwrap_or_else(|| panic!("not OK: {reply}"))
+            .split_whitespace()
+            .take(3)
+            .map(|s| s.parse().unwrap())
+            .collect()
+    }
+
     #[test]
     fn protocol_roundtrip() {
         let st = state();
         let mut session = st.session();
         assert_eq!(st.handle(&mut session, "PING"), "OK pong");
         let reply = st.handle(&mut session, "PLAN linear 50 768 3072 3");
-        assert!(reply.starts_with("OK "), "{reply}");
-        let nums: Vec<f64> = reply[3..]
-            .split_whitespace()
-            .map(|s| s.parse().unwrap())
-            .collect();
+        let nums = plan_nums(&reply);
         assert_eq!(nums[0] as usize + nums[1] as usize, 3072);
+        assert!(reply.contains(" threads=3 mech=svm_polling"), "{reply}");
         assert!(st.handle(&mut session, "PLAN bogus").starts_with("ERR"));
+    }
+
+    #[test]
+    fn auto_spec_resolves_and_reports_strategy() {
+        // lazy + small: this test only cares about request parsing and
+        // reply shape, not plan quality
+        let st = Arc::new(ServerState::new_lazy(Device::pixel5(), 700, 3));
+        let mut session = st.session();
+        let reply = st.handle(&mut session, "PLAN linear 50 768 3072 auto");
+        let nums = plan_nums(&reply);
+        assert_eq!(nums[0] as usize + nums[1] as usize, 3072);
+        assert!(reply.contains(" threads=") && reply.contains(" mech="), "{reply}");
+        // warm auto request: byte-identical (cache hit)
+        assert_eq!(st.handle(&mut session, "PLAN linear 50 768 3072 auto"), reply);
     }
 
     #[test]
@@ -791,7 +926,12 @@ mod tests {
         assert_eq!(reply, "OK pong");
         let reply = request(&addr, "RUN linear 50 768 3072 3").unwrap();
         assert!(reply.starts_with("OK "), "{reply}");
-        let speedup: f64 = reply.split_whitespace().last().unwrap().parse().unwrap();
+        let speedup: f64 = reply
+            .split_whitespace()
+            .nth(3)
+            .unwrap()
+            .parse()
+            .unwrap();
         assert!(speedup > 1.1, "pixel5 flagship op must speed up: {speedup}");
     }
 
@@ -804,6 +944,18 @@ mod tests {
         let b = st.handle(&mut session, "PLAN linear 50 768 3072 3");
         assert_eq!(a, b, "cached plan must serialize identically");
         assert_eq!((st.cache.hits(), st.cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn flush_drops_cached_plans() {
+        let st = Arc::new(ServerState::new_lazy(Device::pixel5(), 700, 5));
+        let mut session = st.session();
+        st.handle(&mut session, "PLAN linear 50 768 1024 2");
+        assert_eq!(st.handle(&mut session, "FLUSH"), "OK flushed=1");
+        assert!(st.cache.is_empty());
+        st.handle(&mut session, "PLAN linear 50 768 1024 2");
+        assert_eq!(st.cache.misses(), 2, "flushed plans re-plan");
+        assert!(st.handle(&mut session, "FLUSH now").starts_with("ERR bad request"));
     }
 
     #[test]

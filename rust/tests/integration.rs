@@ -7,7 +7,7 @@ use mobile_coexec::experiments::{figures, Scale};
 use mobile_coexec::gbdt::GbdtParams;
 use mobile_coexec::models;
 use mobile_coexec::ops::{ChannelSplit, LinearConfig, OpConfig};
-use mobile_coexec::partition::{grid_search, Planner};
+use mobile_coexec::partition::{grid_search, PlanRequest, Planner};
 use mobile_coexec::predictor::{FeatureMode, GpuPredictor};
 use mobile_coexec::scheduler::ModelScheduler;
 
@@ -97,8 +97,7 @@ fn e2e_ordering_matches_paper() {
             device: &device,
             linear_planner: &lp,
             conv_planner: &cp,
-            threads: 3,
-            mech: SyncMechanism::SvmPolling,
+            req: PlanRequest::fixed(3, SyncMechanism::SvmPolling),
         };
         speedups.push(sched.evaluate(&models::resnet34()).e2e_speedup());
     }

@@ -192,6 +192,50 @@ fn prop_metrics_agree_with_naive() {
     }
 }
 
+/// Property: an `Auto` plan's predicted total is never worse than any
+/// fixed `(threads, mech)` plan for the same op — the strategy search's
+/// pruning (analytic mechanism collapse, per-candidate dominated-thread
+/// skips) must never discard a candidate that could have won.
+#[test]
+fn prop_auto_plan_never_worse_than_any_fixed_strategy() {
+    use mobile_coexec::partition::{PlanRequest, Planner};
+
+    let device = Device::pixel5();
+    let linear = Planner::train_for_kind(&device, "linear", 600, 31);
+    let conv = Planner::train_for_kind(&device, "conv", 600, 31);
+    let max_threads = device.spec.cpu.max_threads();
+    let mut rng = SplitMix64::new(12);
+    for case in 0..40 {
+        let op = random_op(&mut rng);
+        let planner = match op {
+            OpConfig::Linear(_) => &linear,
+            OpConfig::Conv(_) => &conv,
+        };
+        let auto = planner.plan_request(&op, PlanRequest::auto());
+        assert!(
+            (1..=max_threads).contains(&auto.threads),
+            "case {case} {op}: auto resolved threads {}",
+            auto.threads
+        );
+        for threads in 1..=max_threads {
+            for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+                let fixed = planner.plan_request(&op, PlanRequest::fixed(threads, mech));
+                assert!(
+                    auto.t_total_us <= fixed.t_total_us + 1e-9,
+                    "case {case} {op}: auto {:.3}us worse than fixed ({threads}, {mech:?}) {:.3}us",
+                    auto.t_total_us,
+                    fixed.t_total_us
+                );
+            }
+        }
+        // the auto plan *is* one of the fixed plans (exactness, not just
+        // dominance): re-planning at its resolved strategy reproduces it
+        let replay =
+            planner.plan_request(&op, PlanRequest::fixed(auto.threads, auto.mech));
+        assert_eq!(replay, auto, "case {case} {op}: auto plan not reproducible");
+    }
+}
+
 /// Property: the serving layer's plan cache is *transparent* — for random
 /// ops, a cached plan is identical to a freshly computed plan — and cache
 /// keys never collide across distinct `(op, threads, mech)` tuples.

@@ -7,7 +7,7 @@
 
 use mobile_coexec::device::Device;
 use mobile_coexec::ops::{LinearConfig, OpConfig};
-use mobile_coexec::server::cache::PlanKey;
+use mobile_coexec::server::cache::{AutoKey, PlanCache, PlanKey};
 use mobile_coexec::server::{Server, ServerConfig, ServerState, DEVICE_KEYS};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -43,10 +43,53 @@ impl Client {
     fn request(&mut self, line: &str) -> String {
         self.stream.write_all(line.as_bytes()).expect("write");
         self.stream.write_all(b"\n").expect("write nl");
+        self.read_line()
+    }
+
+    fn read_line(&mut self) -> String {
         let mut reply = String::new();
         self.reader.read_line(&mut reply).expect("read");
         reply.trim().to_string()
     }
+
+    /// Send a `PLAN_BATCH` line; return the per-op reply lines (the
+    /// `OK n=<k>` header frames how many to read).
+    fn request_batch(&mut self, line: &str) -> Vec<String> {
+        let header = self.request(line);
+        let n: usize = header
+            .strip_prefix("OK n=")
+            .unwrap_or_else(|| panic!("bad batch header: {header}"))
+            .parse()
+            .expect("batch count");
+        (0..n).map(|_| self.read_line()).collect()
+    }
+}
+
+/// The first three whitespace fields of a `PLAN` reply body, parsed.
+fn plan_nums(reply: &str) -> Vec<f64> {
+    reply
+        .strip_prefix("OK ")
+        .unwrap_or_else(|| panic!("not an OK reply: {reply}"))
+        .split_whitespace()
+        .take(3)
+        .map(|s| s.parse().unwrap())
+        .collect()
+}
+
+/// The `key=value` fields of a reply, as (key, value) pairs.
+fn kv_fields(reply: &str) -> Vec<(&str, &str)> {
+    reply
+        .split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .collect()
+}
+
+fn kv<'a>(reply: &'a str, key: &str) -> &'a str {
+    kv_fields(reply)
+        .into_iter()
+        .find(|(k, _)| *k == key)
+        .unwrap_or_else(|| panic!("missing {key}= in {reply}"))
+        .1
 }
 
 // ---------------------------------------------------------------- verbs --
@@ -59,33 +102,26 @@ fn every_verb_roundtrips_over_loopback() {
     assert_eq!(c.request("PING"), "OK pong");
 
     let plan = c.request("PLAN linear 50 768 3072 3");
-    let nums: Vec<f64> = plan
-        .strip_prefix("OK ")
-        .unwrap_or_else(|| panic!("PLAN failed: {plan}"))
-        .split_whitespace()
-        .map(|s| s.parse().unwrap())
-        .collect();
+    let nums = plan_nums(&plan);
     assert_eq!(nums[0] as usize + nums[1] as usize, 3072, "split covers cout");
     assert!(nums[2] > 0.0, "predicted latency positive");
+    assert_eq!(kv(&plan, "threads"), "3");
+    assert_eq!(kv(&plan, "mech"), "svm_polling");
 
     let conv = c.request("PLAN conv 64 64 128 192 3 1 2");
-    let nums: Vec<f64> = conv
-        .strip_prefix("OK ")
-        .unwrap_or_else(|| panic!("PLAN conv failed: {conv}"))
-        .split_whitespace()
-        .map(|s| s.parse().unwrap())
-        .collect();
+    let nums = plan_nums(&conv);
     assert_eq!(nums[0] as usize + nums[1] as usize, 192);
 
     let run = c.request("RUN linear 50 768 3072 3");
-    let nums: Vec<f64> = run
-        .strip_prefix("OK ")
-        .unwrap_or_else(|| panic!("RUN failed: {run}"))
+    let body = run.strip_prefix("OK ").unwrap_or_else(|| panic!("RUN failed: {run}"));
+    let nums: Vec<f64> = body
         .split_whitespace()
+        .take(3)
         .map(|s| s.parse().unwrap())
         .collect();
     assert_eq!(nums.len(), 3);
     assert!(nums.iter().all(|t| *t > 0.0));
+    assert_eq!(kv(&run, "threads"), "3");
 
     // DEVICE is session-scoped: switching must change subsequent plans
     assert_eq!(c.request("DEVICE moto2022"), "OK device moto2022");
@@ -116,6 +152,73 @@ fn device_aliases_resolve() {
     for key in DEVICE_KEYS {
         assert_eq!(c.request(&format!("DEVICE {key}")), format!("OK device {key}"));
     }
+}
+
+// ------------------------------------------------------------ auto spec --
+
+#[test]
+fn auto_spec_dominates_fixed_and_caches_once() {
+    // fresh state: this test reasons about exact cache counters
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 500, 23));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    let auto = c.request("PLAN linear 50 768 3072 auto");
+    let auto_t: f64 = plan_nums(&auto)[2];
+    let threads = kv(&auto, "threads").to_string();
+    let mech = kv(&auto, "mech").to_string();
+    assert!(["svm_polling", "event_wait"].contains(&mech.as_str()), "{auto}");
+    let misses_after_auto = state.cache.misses();
+    assert_eq!(misses_after_auto, 1, "cold auto is one planning miss");
+
+    // the chosen strategy's predicted total is <= every fixed alternative
+    for t in 1..=3 {
+        let fixed = c.request(&format!("PLAN linear 50 768 3072 {t}"));
+        assert!(
+            auto_t <= plan_nums(&fixed)[2] + 1e-6,
+            "auto {auto} must dominate fixed {fixed}"
+        );
+    }
+
+    // Mechanism dominance means auto always resolves svm_polling, so one
+    // of the three fixed requests above hit the auto-published entry:
+    // 1 auto miss + 2 fixed misses, and never a re-plan.
+    assert_eq!(mech, "svm_polling");
+    assert_eq!(state.cache.misses(), 3);
+
+    // warm auto is a cache hit with a byte-identical reply
+    let hits_before = state.cache.hits();
+    assert_eq!(c.request("PLAN linear 50 768 3072 auto"), auto);
+    assert_eq!(state.cache.hits(), hits_before + 1, "warm auto must hit");
+    assert_eq!(state.cache.misses(), 3, "warm auto must not re-plan");
+
+    // the fixed request at the resolved strategy shares the auto entry:
+    // if auto resolved svm_polling, that fixed request above already hit
+    if mech == "svm_polling" {
+        let equivalent = c.request(&format!("PLAN linear 50 768 3072 {threads}"));
+        assert_eq!(plan_nums(&equivalent), plan_nums(&auto));
+        assert_eq!(kv(&equivalent, "threads"), threads);
+    }
+
+    // uppercase AUTO is accepted too, and hits the same normalized key
+    let hits_before = state.cache.hits();
+    assert_eq!(c.request("PLAN linear 50 768 3072 AUTO"), auto);
+    assert_eq!(state.cache.hits(), hits_before + 1);
+
+    // auto also flows through RUN and PLAN_MODEL
+    let run = c.request("RUN linear 50 768 3072 auto");
+    assert!(run.starts_with("OK "), "{run}");
+    assert_eq!(kv(&run, "threads"), threads);
+    let pm = c.request("PLAN_MODEL resnet18 auto");
+    assert!(pm.starts_with("OK model=resnet18"), "{pm}");
+    let planned: usize = kv(&pm, "planned").parse().unwrap();
+    let threads_dist = kv(&pm, "threads");
+    let total: usize = threads_dist
+        .split(',')
+        .map(|bin| bin.split_once(':').expect("t:count").1.parse::<usize>().unwrap())
+        .sum();
+    assert_eq!(total, planned, "threads distribution covers planned layers");
 }
 
 // ------------------------------------------------------------ ERR paths --
@@ -152,6 +255,9 @@ fn every_err_path_over_loopback() {
         // zero threads (regression: must be rejected, not planned)
         ("PLAN linear 50 768 3072 0", "ERR threads must be >= 1"),
         ("RUN linear 50 768 3072 0", "ERR threads must be >= 1"),
+        // batches must carry at least one op-spec
+        ("PLAN_BATCH", "ERR empty batch"),
+        ("PLAN_BATCH ; ;", "ERR empty batch"),
         // unknown device / bad device spec
         ("DEVICE iphone15", "ERR unknown device iphone15"),
         ("DEVICE", "ERR bad device spec"),
@@ -162,9 +268,11 @@ fn every_err_path_over_loopback() {
         ("PLAN_MODEL resnet18 0", "ERR threads must be >= 1"),
         // known verbs with wrong arity name the verb, not "unknown command"
         ("PING extra", "ERR bad request (expected: PING)"),
+        ("FLUSH now", "ERR bad request (expected: FLUSH)"),
         ("STATS now", "ERR bad request (expected: STATS)"),
         // unknown command / empty line
         ("FROBNICATE 1 2", "ERR unknown command FROBNICATE"),
+        ("PLAN_BATCHX 1", "ERR unknown command PLAN_BATCHX"),
         ("", "ERR empty request"),
     ];
     for (req, want) in cases {
@@ -202,6 +310,69 @@ fn oversized_request_line_is_rejected_and_connection_closed() {
     assert_eq!(c.reader.read_line(&mut rest).expect("read eof"), 0);
 }
 
+// ------------------------------------------------------------ PLAN_BATCH --
+
+#[test]
+fn plan_batch_replies_per_op_in_order() {
+    // fresh state: the batch must reuse the cache across its own ops
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 500, 29));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    let lines = c.request_batch(
+        "PLAN_BATCH linear 50 768 1024 2; linear 0 768 1024 2; \
+         conv 32 32 64 128 3 1 auto; linear 50 768 1024 2;",
+    );
+    assert_eq!(lines.len(), 4, "{lines:?}");
+    let first = plan_nums(&lines[0]);
+    assert_eq!(first[0] as usize + first[1] as usize, 1024);
+    assert_eq!(kv(&lines[0], "threads"), "2");
+    assert!(lines[1].starts_with("ERR zero-sized shape"), "{}", lines[1]);
+    let conv = plan_nums(&lines[2]);
+    assert_eq!(conv[0] as usize + conv[1] as usize, 128);
+    // the repeated shape is served from the cache, byte-identically
+    assert_eq!(lines[3], lines[0]);
+    assert_eq!(state.cache.hits(), 1, "repeated batch op must hit");
+    assert_eq!(state.cache.misses(), 2, "two distinct plannable specs");
+
+    // a batch and single PLANs share the same cache entries
+    let single = c.request("PLAN linear 50 768 1024 2");
+    assert_eq!(single, lines[0]);
+    assert_eq!(state.cache.hits(), 2);
+    // and the whole batch counted as one request in telemetry
+    assert_eq!(state.metrics.endpoint("plan_batch").requests.get(), 1);
+    assert_eq!(state.metrics.endpoint("plan_batch").errors.get(), 0);
+}
+
+// --------------------------------------------------------------- FLUSH --
+
+#[test]
+fn flush_drops_plans_and_resolutions_over_loopback() {
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 500, 37));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    let fixed = c.request("PLAN linear 50 768 1024 2");
+    let auto = c.request("PLAN linear 64 512 2048 auto");
+    let entries = state.cache.len();
+    assert!(entries >= 1);
+    let reply = c.request("FLUSH");
+    assert_eq!(reply, format!("OK flushed={entries}"));
+    assert!(state.cache.is_empty());
+
+    // flushed plans re-plan (deterministically: same bytes, new misses)
+    let misses = state.cache.misses();
+    assert_eq!(c.request("PLAN linear 50 768 1024 2"), fixed);
+    assert_eq!(c.request("PLAN linear 64 512 2048 auto"), auto);
+    assert_eq!(state.cache.misses(), misses + 2, "flush must drop auto resolutions too");
+
+    // an empty cache flushes zero
+    c.request("FLUSH");
+    assert_eq!(c.request("FLUSH"), "OK flushed=0");
+}
+
 // ------------------------------------------------------ format stability --
 
 #[test]
@@ -209,20 +380,22 @@ fn response_formats_are_stable() {
     let (_, addr) = shared();
     let mut c = Client::connect(&addr);
 
-    // PLAN: "OK <usize> <usize> <float:.1>"
+    // PLAN: "OK <usize> <usize> <float:.1> threads=<t> mech=<mech>"
     let plan = c.request("PLAN linear 50 768 1024 2");
     let toks: Vec<&str> = plan.split_whitespace().collect();
-    assert_eq!(toks.len(), 4, "{plan}");
+    assert_eq!(toks.len(), 6, "{plan}");
     assert_eq!(toks[0], "OK");
     toks[1].parse::<usize>().unwrap();
     toks[2].parse::<usize>().unwrap();
     let (_, frac) = toks[3].split_once('.').expect("one decimal place");
     assert_eq!(frac.len(), 1, "{plan}");
+    kv(&plan, "threads").parse::<usize>().unwrap();
+    assert!(["svm_polling", "event_wait"].contains(&kv(&plan, "mech")), "{plan}");
 
-    // RUN: "OK <float:.1> <float:.1> <float:.3>"
+    // RUN: "OK <float:.1> <float:.1> <float:.3> threads=<t> mech=<mech>"
     let run = c.request("RUN linear 50 768 1024 2");
     let toks: Vec<&str> = run.split_whitespace().collect();
-    assert_eq!(toks.len(), 4, "{run}");
+    assert_eq!(toks.len(), 6, "{run}");
     assert_eq!(toks[3].split_once('.').unwrap().1.len(), 3, "{run}");
 
     // DEVICE: "OK device <canonical>"
@@ -235,7 +408,14 @@ fn response_formats_are_stable() {
         .split_whitespace()
         .map(|kv| kv.split_once('=').expect("key=value").0)
         .collect();
-    assert_eq!(keys, ["model", "layers", "planned", "coexec", "t_pred_ms"]);
+    assert_eq!(
+        keys,
+        ["model", "layers", "planned", "coexec", "threads", "mechs", "t_pred_ms"]
+    );
+    // a fixed request degenerates to one strategy bin covering all layers
+    let planned = kv(&pm, "planned");
+    assert_eq!(kv(&pm, "threads"), format!("3:{planned}"), "{pm}");
+    assert_eq!(kv(&pm, "mechs"), format!("svm_polling:{planned}"), "{pm}");
 
     // STATS: cache counters then per-verb blocks, in declaration order
     let stats = c.request("STATS");
@@ -249,7 +429,17 @@ fn response_formats_are_stable() {
         assert!(pos >= last, "{key} out of order");
         last = pos;
     }
-    for verb in ["ping", "plan", "run", "device", "plan_model", "stats", "other"] {
+    for verb in [
+        "ping",
+        "plan",
+        "plan_batch",
+        "run",
+        "device",
+        "plan_model",
+        "flush",
+        "stats",
+        "other",
+    ] {
         for fieldname in ["req", "err", "p50_us", "p95_us"] {
             let key = format!("{verb}.{fieldname}=");
             let pos = body.find(&key).unwrap_or_else(|| panic!("missing {key}"));
@@ -295,10 +485,10 @@ fn sixteen_clients_get_byte_identical_replies_and_exact_hit_counts() {
     let server = Server::new(state.clone(), ServerConfig { workers: 4, queue_cap: 64 });
     let addr = server.spawn_ephemeral().unwrap();
 
-    // overlapping shapes: 4 distinct (op, threads) tuples
+    // overlapping shapes: 4 distinct (op, request) tuples, one of them auto
     let requests = [
         "PLAN linear 50 768 3072 3",
-        "PLAN linear 50 768 3072 2",
+        "PLAN linear 50 768 3072 auto",
         "PLAN linear 64 512 1024 3",
         "PLAN conv 32 32 64 128 3 1 2",
     ];
@@ -330,19 +520,22 @@ fn sixteen_clients_get_byte_identical_replies_and_exact_hit_counts() {
         }
     }
 
+    // Single-flight accounting. If the auto request resolved to the same
+    // strategy as the fixed threads=3 request, they share one plan entry
+    // (the auto resolution itself still misses once); either way, total
+    // planning work is one miss per distinct resolution.
     let total = (n_clients * requests.len()) as u64;
     let distinct = requests.len() as u64;
     assert_eq!(
         state.cache.misses(),
         distinct,
-        "single-flight: one miss per distinct (op, threads) tuple"
+        "single-flight: one miss per distinct request tuple"
     );
     assert_eq!(
         state.cache.hits(),
         total - distinct,
-        "hits must equal requests minus distinct shapes"
+        "hits must equal requests minus distinct tuples"
     );
-    assert_eq!(state.cache.len(), distinct as usize);
 }
 
 #[test]
@@ -369,6 +562,63 @@ fn plan_model_reuses_cache_across_requests() {
         .parse()
         .unwrap();
     assert!(state.cache.hits() >= planned, "hits {} < planned {planned}", state.cache.hits());
+
+    // auto planning of the same model resolves per layer and is likewise
+    // cached: a repeat is byte-identical with no new planning misses
+    let auto_first = state.handle(&mut session, "PLAN_MODEL resnet18 auto");
+    assert!(auto_first.starts_with("OK "), "{auto_first}");
+    let misses_after_auto = state.cache.misses();
+    let auto_second = state.handle(&mut session, "PLAN_MODEL resnet18 auto");
+    assert_eq!(auto_first, auto_second);
+    assert_eq!(state.cache.misses(), misses_after_auto);
+}
+
+// ----------------------------------------------------- LRU eviction --
+
+#[test]
+fn lru_eviction_keeps_hot_entries_over_loopback() {
+    // a deliberately tiny cache: one shard, two plans
+    let mut raw = ServerState::new_lazy(Device::pixel5(), 400, 41);
+    raw.cache = PlanCache::with_capacity(1, 2);
+    let state = Arc::new(raw);
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    let a = c.request("PLAN linear 8 64 256 1"); // miss
+    let b = c.request("PLAN linear 8 64 260 1"); // miss: cache now full
+    c.request("PLAN linear 8 64 256 1"); // hit: A becomes most-recent
+    c.request("PLAN linear 8 64 264 1"); // miss: evicts B (LRU), not A
+    assert_eq!(state.cache.len(), 2, "eviction drops one entry, not the shard");
+    assert_eq!((state.cache.hits(), state.cache.misses()), (1, 3));
+
+    // A survived the eviction; B was evicted and re-plans (byte-identical)
+    assert_eq!(c.request("PLAN linear 8 64 256 1"), a);
+    assert_eq!((state.cache.hits(), state.cache.misses()), (2, 3));
+    assert_eq!(c.request("PLAN linear 8 64 260 1"), b);
+    assert_eq!((state.cache.hits(), state.cache.misses()), (2, 4));
+}
+
+#[test]
+fn auto_resolution_survives_plan_eviction() {
+    // capacity one: planning a second shape evicts the first plan, but the
+    // auto *resolution* map is independent — the re-plan must stay
+    // byte-identical and keep the originally resolved strategy
+    let mut raw = ServerState::new_lazy(Device::pixel5(), 400, 43);
+    raw.cache = PlanCache::with_capacity(1, 1);
+    let state = Arc::new(raw);
+    let mut session = state.session();
+
+    let auto = state.handle(&mut session, "PLAN linear 64 512 2048 auto");
+    state.handle(&mut session, "PLAN linear 8 64 256 1"); // evicts the plan
+    assert_eq!(state.handle(&mut session, "PLAN linear 64 512 2048 auto"), auto);
+
+    let akey = AutoKey {
+        device: Device::pixel5().name(),
+        op: OpConfig::Linear(LinearConfig::new(64, 512, 2048)),
+        req: mobile_coexec::partition::PlanRequest::auto(),
+    };
+    assert!(state.cache.peek_resolution(&akey).is_some(), "resolution must persist");
 }
 
 // ----------------------------------------------------- backpressure --
