@@ -54,6 +54,25 @@ fn main() {
         "acceptance: warm auto PLAN must be >=10x cheaper than a cold fixed plan ({auto_speedup:.1}x)"
     );
 
+    // TTL bookkeeping (stamp checks on every touch) must not tax warm
+    // hits: through a TTL-enabled cache the hit stays >= 10x cheaper than
+    // a cold plan, and a long TTL expires nothing mid-bench
+    let ttl_cache = PlanCache::with_ttl(std::time::Duration::from_secs(3600));
+    let warm_ttl = bench("plan_warm_hit_with_ttl", 10, 2000, || {
+        std::hint::black_box(ttl_cache.get_or_plan(&planner, &op, 3));
+    });
+    let ttl_speedup = cold.mean_us / warm_ttl.mean_us;
+    report_scalar("plan_cache", "warm_ttl_over_cold_speedup", ttl_speedup);
+    assert!(
+        ttl_speedup >= 10.0,
+        "acceptance: TTL bookkeeping must not break the warm-hit bar ({ttl_speedup:.1}x)"
+    );
+    assert_eq!(
+        (ttl_cache.evictions(), ttl_cache.expired()),
+        (0, 0),
+        "a one-hour TTL must neither evict nor expire mid-bench"
+    );
+
     // end-to-end loopback: persistent connection, warm-cache PLAN requests
     // through the reader-thread + worker-pool path
     let state = Arc::new(ServerState::new(device, 1500, 42));

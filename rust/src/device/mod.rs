@@ -18,11 +18,28 @@ pub mod sync_model;
 
 pub use cpu::CpuSpec;
 pub use gpu::{GpuDispatch, GpuSpec, KernelImpl};
-pub use soc::SocSpec;
+pub use soc::{validate_device_name, SocSpec, CALIBRATION_KEYS};
 pub use sync_model::{SyncMechanism, SyncSpec};
 
 use crate::ops::{ChannelSplit, OpConfig};
 use noise::{fnv1a, lognormal_factor};
+
+/// Intern a device name to the `'static` lifetime that `SocSpec::name`
+/// and the serving layer's cache keys require. Each *distinct* name leaks
+/// exactly once — repeated interns (e.g. recalibrating the same device)
+/// return the original slice — and the serving registry bounds how many
+/// distinct names ever reach this, so the leak is bounded too.
+pub fn intern_device_name(name: &str) -> &'static str {
+    use std::sync::Mutex;
+    static INTERNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+    let mut table = INTERNED.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(s) = table.iter().find(|s| **s == name) {
+        return s;
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    table.push(leaked);
+    leaked
+}
 
 /// A compute processor choice for one op.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -47,11 +64,25 @@ pub struct Device {
     pub spec: SocSpec,
     /// Seed mixed into every measurement (experiment reproducibility).
     pub seed: u64,
+    /// Calibration epoch: 0 for direct constructions; every runtime
+    /// (re)calibration stamps a fresh nonzero epoch (see
+    /// [`next_calibration_epoch`]). Plan-cache keys include it, so a
+    /// plan computed in flight against a pre-recalibration spec can
+    /// never be served to the recalibrated device — same name,
+    /// different epoch, different key.
+    pub epoch: u64,
+}
+
+/// A process-unique nonzero calibration epoch (see [`Device::epoch`]).
+pub fn next_calibration_epoch() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
 impl Device {
     pub fn new(spec: SocSpec) -> Self {
-        Self { spec, seed: 0x5EED }
+        Self { spec, seed: 0x5EED, epoch: 0 }
     }
 
     pub fn pixel4() -> Self {
@@ -202,6 +233,16 @@ impl Device {
 mod tests {
     use super::*;
     use crate::ops::{ConvConfig, LinearConfig};
+
+    #[test]
+    fn interned_names_are_stable_and_shared() {
+        let a = intern_device_name("intern-test-a");
+        let b = intern_device_name("intern-test-a");
+        let c = intern_device_name("intern-test-b");
+        assert!(std::ptr::eq(a, b), "repeated interns must share one slice");
+        assert_eq!(a, "intern-test-a");
+        assert_ne!(a, c);
+    }
 
     #[test]
     fn measurements_reproducible() {

@@ -13,6 +13,7 @@
 use super::cpu::CpuSpec;
 use super::gpu::GpuSpec;
 use super::sync_model::SyncSpec;
+use anyhow::{anyhow, ensure, Result};
 
 /// A complete mobile SoC model: CPU cluster + GPU + sync fabric.
 #[derive(Debug, Clone)]
@@ -21,6 +22,158 @@ pub struct SocSpec {
     pub cpu: CpuSpec,
     pub gpu: GpuSpec,
     pub sync: SyncSpec,
+}
+
+/// The calibration surface of a [`SocSpec`]: every `<key>=<value>`
+/// parameter the serving layer's `CALIBRATE` verb accepts, one per spec
+/// field (`cpu.eff2`/`cpu.eff3` are the cumulative 2-/3-thread scaling
+/// entries of `thread_efficiency`; the 1-thread entry is 1.0 by
+/// definition). Kept in one table so the parser, the validator, and the
+/// protocol docs cannot drift apart.
+pub const CALIBRATION_KEYS: [&str; 19] = [
+    "cpu.gmacs_per_thread",
+    "cpu.eff2",
+    "cpu.eff3",
+    "cpu.mem_bw_gbps",
+    "cpu.launch_us",
+    "cpu.noise_sigma",
+    "gpu.compute_units",
+    "gpu.wave_size",
+    "gpu.clock_ghz",
+    "gpu.macs_per_cu_cycle",
+    "gpu.mem_bw_gbps",
+    "gpu.dispatch_us",
+    "gpu.const_mem_kb",
+    "gpu.noise_sigma",
+    "sync.polling_linear_us",
+    "sync.polling_conv_us",
+    "sync.event_linear_us",
+    "sync.event_conv_us",
+    "sync.noise_sigma",
+];
+
+/// Validate and canonicalize (lowercase) a client-supplied device name
+/// for registration: 1-32 chars of `[a-z0-9_-]`, starting with a letter,
+/// and not a protocol keyword (`all`, `auto`, `base`).
+pub fn validate_device_name(name: &str) -> Result<String> {
+    let lower = name.to_ascii_lowercase();
+    ensure!(
+        !lower.is_empty() && lower.len() <= 32,
+        "bad device name {name:?} (1-32 characters)"
+    );
+    ensure!(
+        lower.chars().next().is_some_and(|c| c.is_ascii_lowercase())
+            && lower
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-'),
+        "bad device name {name:?} (letters, digits, '_', '-'; must start with a letter)"
+    );
+    ensure!(
+        !matches!(lower.as_str(), "all" | "auto" | "base"),
+        "bad device name {name:?} (reserved word)"
+    );
+    Ok(lower)
+}
+
+/// Largest accepted calibration value: the cost models divide by most of
+/// these fields, so they must be positive, and products of a few of them
+/// must stay far from overflow and precision trouble.
+const MAX_PARAM: f64 = 1e6;
+
+fn positive(v: f64, key: &str) -> Result<f64> {
+    ensure!(
+        v.is_finite() && v > 0.0 && v <= MAX_PARAM,
+        "calibration value {key}={v} must be in (0, {MAX_PARAM:e}]"
+    );
+    Ok(v)
+}
+
+fn sigma(v: f64, key: &str) -> Result<f64> {
+    ensure!(
+        v.is_finite() && (0.0..=0.5).contains(&v),
+        "calibration value {key}={v} must be a noise sigma in [0, 0.5]"
+    );
+    Ok(v)
+}
+
+fn integer(v: f64, key: &str) -> Result<usize> {
+    ensure!(
+        v.is_finite() && v.fract() == 0.0 && (1.0..=65536.0).contains(&v),
+        "calibration value {key}={v} must be an integer in [1, 65536]"
+    );
+    Ok(v as usize)
+}
+
+impl SocSpec {
+    /// Apply one `key=value` calibration parameter (see
+    /// [`CALIBRATION_KEYS`]). Per-field range checks happen here; the
+    /// cross-field checks (e.g. thread-efficiency monotonicity) happen in
+    /// [`SocSpec::validate`] once every override has been applied.
+    pub fn set_param(&mut self, key: &str, value: f64) -> Result<()> {
+        match key {
+            "cpu.gmacs_per_thread" => self.cpu.gmacs_per_thread = positive(value, key)?,
+            "cpu.eff2" => self.cpu.thread_efficiency[1] = positive(value, key)?,
+            "cpu.eff3" => self.cpu.thread_efficiency[2] = positive(value, key)?,
+            "cpu.mem_bw_gbps" => self.cpu.mem_bw_gbps = positive(value, key)?,
+            "cpu.launch_us" => self.cpu.launch_us = positive(value, key)?,
+            "cpu.noise_sigma" => self.cpu.noise_sigma = sigma(value, key)?,
+            "gpu.compute_units" => self.gpu.compute_units = integer(value, key)?,
+            "gpu.wave_size" => self.gpu.wave_size = integer(value, key)?,
+            "gpu.clock_ghz" => self.gpu.clock_ghz = positive(value, key)?,
+            "gpu.macs_per_cu_cycle" => self.gpu.macs_per_cu_cycle = positive(value, key)?,
+            "gpu.mem_bw_gbps" => self.gpu.mem_bw_gbps = positive(value, key)?,
+            "gpu.dispatch_us" => self.gpu.dispatch_us = positive(value, key)?,
+            "gpu.const_mem_kb" => self.gpu.const_mem_kb = integer(value, key)?,
+            "gpu.noise_sigma" => self.gpu.noise_sigma = sigma(value, key)?,
+            "sync.polling_linear_us" => self.sync.polling_linear_us = positive(value, key)?,
+            "sync.polling_conv_us" => self.sync.polling_conv_us = positive(value, key)?,
+            "sync.event_linear_us" => self.sync.event_linear_us = positive(value, key)?,
+            "sync.event_conv_us" => self.sync.event_conv_us = positive(value, key)?,
+            "sync.noise_sigma" => self.sync.noise_sigma = sigma(value, key)?,
+            _ => {
+                return Err(anyhow!(
+                    "unknown calibration key {key} (valid: {})",
+                    CALIBRATION_KEYS.join(", ")
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    /// Whole-spec consistency: everything [`SocSpec::set_param`] checks
+    /// per field, plus the cross-field constraints a sequence of
+    /// individually valid overrides could still break.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "device name must be non-empty");
+        positive(self.cpu.gmacs_per_thread, "cpu.gmacs_per_thread")?;
+        positive(self.cpu.mem_bw_gbps, "cpu.mem_bw_gbps")?;
+        positive(self.cpu.launch_us, "cpu.launch_us")?;
+        sigma(self.cpu.noise_sigma, "cpu.noise_sigma")?;
+        let [e1, e2, e3] = self.cpu.thread_efficiency;
+        ensure!(e1 == 1.0, "cpu thread_efficiency[0] must be 1.0 by definition");
+        ensure!(
+            (1.0..=2.0).contains(&e2),
+            "cpu.eff2={e2} must be cumulative 2-thread scaling in [1, 2]"
+        );
+        ensure!(
+            (e2..=3.0).contains(&e3),
+            "cpu.eff3={e3} must be cumulative 3-thread scaling in [eff2, 3]"
+        );
+        integer(self.gpu.compute_units as f64, "gpu.compute_units")?;
+        integer(self.gpu.wave_size as f64, "gpu.wave_size")?;
+        integer(self.gpu.const_mem_kb as f64, "gpu.const_mem_kb")?;
+        positive(self.gpu.clock_ghz, "gpu.clock_ghz")?;
+        positive(self.gpu.macs_per_cu_cycle, "gpu.macs_per_cu_cycle")?;
+        positive(self.gpu.mem_bw_gbps, "gpu.mem_bw_gbps")?;
+        positive(self.gpu.dispatch_us, "gpu.dispatch_us")?;
+        sigma(self.gpu.noise_sigma, "gpu.noise_sigma")?;
+        positive(self.sync.polling_linear_us, "sync.polling_linear_us")?;
+        positive(self.sync.polling_conv_us, "sync.polling_conv_us")?;
+        positive(self.sync.event_linear_us, "sync.event_linear_us")?;
+        positive(self.sync.event_conv_us, "sync.event_conv_us")?;
+        sigma(self.sync.noise_sigma, "sync.noise_sigma")?;
+        Ok(())
+    }
 }
 
 impl SocSpec {
@@ -187,6 +340,71 @@ mod tests {
             lat(SocSpec::oneplus11()),
         );
         assert!(op11 < moto && moto < p4 && p4 < p5, "{op11} {moto} {p4} {p5}");
+    }
+
+    #[test]
+    fn builtin_specs_validate() {
+        for spec in [
+            SocSpec::pixel4(),
+            SocSpec::pixel5(),
+            SocSpec::moto2022(),
+            SocSpec::oneplus11(),
+        ] {
+            spec.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        }
+    }
+
+    #[test]
+    fn set_param_covers_every_calibration_key() {
+        // every advertised key must be settable, and a set must round-trip
+        // through validate() when given an in-range value
+        let mut spec = SocSpec::pixel5();
+        for key in CALIBRATION_KEYS {
+            let value = match key {
+                k if k.ends_with("noise_sigma") => 0.05,
+                "cpu.eff2" => 1.8,
+                "cpu.eff3" => 2.4,
+                "gpu.compute_units" | "gpu.wave_size" | "gpu.const_mem_kb" => 16.0,
+                _ => 12.0,
+            };
+            spec.set_param(key, value)
+                .unwrap_or_else(|e| panic!("set_param({key}): {e}"));
+        }
+        spec.validate().expect("fully overridden spec validates");
+        assert!(spec.set_param("bogus.key", 1.0).is_err());
+    }
+
+    #[test]
+    fn set_param_rejects_out_of_range_values() {
+        let mut spec = SocSpec::pixel5();
+        assert!(spec.set_param("cpu.gmacs_per_thread", 0.0).is_err());
+        assert!(spec.set_param("cpu.gmacs_per_thread", -3.0).is_err());
+        assert!(spec.set_param("cpu.gmacs_per_thread", f64::NAN).is_err());
+        assert!(spec.set_param("cpu.gmacs_per_thread", 1e9).is_err());
+        assert!(spec.set_param("gpu.compute_units", 2.5).is_err(), "integer field");
+        assert!(spec.set_param("gpu.compute_units", 0.0).is_err());
+        assert!(spec.set_param("sync.noise_sigma", 0.9).is_err(), "sigma cap");
+        // a failed set leaves the spec valid
+        spec.validate().expect("rejected params must not corrupt the spec");
+    }
+
+    #[test]
+    fn validate_catches_cross_field_inconsistency() {
+        // eff3 < eff2 passes per-field checks but breaks monotonicity
+        let mut spec = SocSpec::pixel5();
+        spec.set_param("cpu.eff2", 1.9).unwrap();
+        spec.set_param("cpu.eff3", 1.2).unwrap();
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn device_names_validate_and_canonicalize() {
+        assert_eq!(validate_device_name("PhoneX").unwrap(), "phonex");
+        assert_eq!(validate_device_name("sm8550_lab-2").unwrap(), "sm8550_lab-2");
+        for bad in ["", "9phone", "has space", "emoji🚀", "all", "AUTO", "base",
+                    "x234567890123456789012345678901234567890"] {
+            assert!(validate_device_name(bad).is_err(), "{bad:?} must be rejected");
+        }
     }
 
     #[test]

@@ -9,8 +9,13 @@
 //! repro sync                                 §4 sync-overhead comparison
 //! repro plan  --device <name> --linear L,CIN,COUT [--threads N|auto]
 //! repro coexec [--c1 N]                      REAL PJRT co-execution demo
-//! repro serve --device <name> [--addr A] [--workers N] [--queue N]
+//! repro serve --device <name> [--addr A] [--workers N] [--queue N] [--ttl SECS]
 //!                                            plan-caching multi-device server
+//!                                            (--ttl expires cached plans, for
+//!                                            long-lived servers on drifting
+//!                                            calibration; clients upload or
+//!                                            recalibrate devices at runtime
+//!                                            with the CALIBRATE verb)
 //! repro all   [--quick]                      everything, in order
 //! ```
 //!
@@ -132,12 +137,21 @@ fn main() {
             if queue_cap == 0 {
                 usage("--queue must be >= 1");
             }
+            let ttl_secs: Option<u64> = get("--ttl").map(|t| {
+                t.parse().unwrap_or_else(|_| usage("--ttl must be a number of seconds"))
+            });
+            if ttl_secs == Some(0) {
+                usage("--ttl must be >= 1 second");
+            }
             eprintln!("training planners (offline compilation step) ...");
-            let state = std::sync::Arc::new(mobile_coexec::server::ServerState::new(
-                device,
-                scale.train_n,
-                42,
-            ));
+            let mut state =
+                mobile_coexec::server::ServerState::new(device, scale.train_n, 42);
+            if let Some(secs) = ttl_secs {
+                state.cache = mobile_coexec::server::cache::PlanCache::with_ttl(
+                    std::time::Duration::from_secs(secs),
+                );
+            }
+            let state = std::sync::Arc::new(state);
             let config = mobile_coexec::server::ServerConfig { workers, queue_cap };
             mobile_coexec::server::serve_with(state, &addr, config).expect("serve");
         }
@@ -161,7 +175,7 @@ fn main() {
                  repro table --id 1|2|3|4 [--quick]\n  repro sync\n  \
                  repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto]\n  \
                  repro coexec [--c1 N]\n  \
-                 repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N]\n  \
+                 repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N] [--ttl SECS]\n  \
                  repro all [--quick]"
             );
         }

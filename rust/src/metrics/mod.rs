@@ -23,6 +23,11 @@ impl Counter {
         self.0.fetch_add(1, Ordering::Relaxed) + 1
     }
 
+    /// Add `n`; returns the new value.
+    pub fn add(&self, n: u64) -> u64 {
+        self.0.fetch_add(n, Ordering::Relaxed) + n
+    }
+
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -54,8 +59,13 @@ impl LatencyRecorder {
     }
 
     pub fn record_us(&self, us: f64) {
-        let n = self.count.inc();
+        // The count and the slot it selects must advance together under
+        // the samples lock: with the count taken first, two records racing
+        // across the ring boundary (`len == cap`) could both see a full
+        // ring, compute colliding overwrite indices, and silently drop a
+        // sample while `count` advanced past the retained window.
         let mut s = self.samples.lock().unwrap();
+        let n = self.count.inc();
         if s.len() < self.cap {
             s.push(us);
         } else {
@@ -63,6 +73,12 @@ impl LatencyRecorder {
             let idx = ((n - 1) as usize) % self.cap;
             s[idx] = us;
         }
+    }
+
+    /// Number of samples currently retained: `min(count, cap)` — the
+    /// recorder never drops a sample below capacity.
+    pub fn retained(&self) -> usize {
+        self.samples.lock().unwrap().len()
     }
 
     pub fn snapshot(&self) -> LatencySnapshot {
@@ -212,6 +228,47 @@ mod tests {
         assert_eq!(s.count, 100);
         assert!((s.p50_us - 50.5).abs() < 1e-9);
         assert!(s.p95_us > s.p50_us && s.p95_us <= 100.0);
+    }
+
+    #[test]
+    fn concurrent_records_never_drop_samples_at_the_ring_boundary() {
+        // Regression: `count` used to be incremented outside the samples
+        // lock, so two records straddling `len == cap` could collide on
+        // one overwrite index and drop a sample while `count` advanced.
+        // With total records == cap, every sample must be retained.
+        const CAP: usize = 64;
+        const THREADS: usize = 8;
+        for round in 0..50 {
+            let r = std::sync::Arc::new(LatencyRecorder::new(CAP));
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let r = r.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..CAP / THREADS {
+                            r.record_us((t * CAP + i) as f64);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(r.snapshot().count, CAP as u64);
+            assert_eq!(
+                r.retained(),
+                CAP,
+                "round {round}: a sample was dropped at the ring boundary"
+            );
+        }
+    }
+
+    #[test]
+    fn counter_add_matches_repeated_inc() {
+        let c = Counter::new();
+        assert_eq!(c.add(3), 3);
+        c.inc();
+        assert_eq!(c.add(0), 4);
+        assert_eq!(c.get(), 4);
     }
 
     #[test]

@@ -9,9 +9,10 @@
 //!
 //! Two maps back the cache:
 //!
-//! * **plans** — `(device, op, threads, mech)` ([`PlanKey`], fully
-//!   resolved) → [`Plan`]. Every cached plan lives here.
-//! * **auto resolutions** — `(device, op, normalized request)`
+//! * **plans** — `(device, calibration epoch, op, threads, mech)`
+//!   ([`PlanKey`], fully resolved) → [`Plan`]. Every cached plan lives
+//!   here.
+//! * **auto resolutions** — `(device, epoch, op, normalized request)`
 //!   ([`AutoKey`], at least one `Auto` axis) → the winning [`Strategy`].
 //!   An `Auto` request resolves once, then indexes into **plans** under
 //!   its resolved key — so the `auto` request and the equivalent fixed
@@ -27,13 +28,29 @@
 //! unrelated keys is negligible at serving concurrency. Lock order is
 //! auto-shard → plan-shard, never the reverse.
 //!
-//! Memory is bounded: each shard holds at most [`DEFAULT_MAX_PER_SHARD`]
-//! entries (configurable via [`PlanCache::with_capacity`]) with per-shard
-//! LRU eviction — a full shard drops its least-recently-used entry, not
-//! the whole shard, so a client iterating distinct shapes evicts cold
-//! plans while hot shapes stay resident. Eviction scans the shard for the
-//! oldest tick (O(capacity)), which is noise next to the milliseconds a
-//! re-plan costs.
+//! Memory is bounded two ways:
+//!
+//! * **LRU** — each shard holds at most [`DEFAULT_MAX_PER_SHARD`] entries
+//!   (configurable via [`PlanCache::with_capacity`]); a full shard drops
+//!   its least-recently-used entry, not the whole shard, so a client
+//!   iterating distinct shapes evicts cold plans while hot shapes stay
+//!   resident. Eviction scans the shard for the oldest tick
+//!   (O(capacity)), which is noise next to the milliseconds a re-plan
+//!   costs.
+//! * **TTL** — with [`PlanCache::with_config`] every entry additionally
+//!   expires `ttl` after it was inserted (long-lived servers plan against
+//!   *drifting* calibration; a bounded lifetime bounds how stale a served
+//!   plan can be). Expiry is lazy — an expired entry is dropped when it
+//!   is touched, when its shard needs room, or when [`PlanCache::len`]
+//!   sweeps — and reads time from an injected [`CacheClock`], so tests
+//!   drive it deterministically with [`ManualClock`] instead of sleeping.
+//!
+//! Both exits are counted separately ([`PlanCache::evictions`] = capacity
+//! pressure, [`PlanCache::expired`] = TTL) and surfaced by the `STATS`
+//! verb. Invalidation is calibration-scoped: [`PlanCache::flush_device`]
+//! drops one device's plans *and* auto resolutions (the `CALIBRATE` verb
+//! and plain `FLUSH`), while [`PlanCache::flush`] keeps the old global
+//! behavior (`FLUSH all`).
 
 use crate::device::SyncMechanism;
 use crate::metrics::Counter;
@@ -42,7 +59,9 @@ use crate::partition::{Choice, Plan, PlanRequest, Planner, Strategy};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 /// Everything a fully resolved partition plan depends on. Cheap to build
 /// (all `Copy` except the static device name) and collision-free: two keys
@@ -51,6 +70,11 @@ use std::sync::{Mutex, MutexGuard};
 pub struct PlanKey {
     /// Device display name (`Device::name()`, `'static` — no allocation).
     pub device: &'static str,
+    /// The device's calibration epoch (`Device::epoch`): a plan computed
+    /// in flight against a pre-recalibration spec lands under the old
+    /// epoch and can never be served to the recalibrated device, even if
+    /// it is published after the calibration flush.
+    pub epoch: u64,
     pub op: OpConfig,
     pub threads: usize,
     pub mech: SyncMechanism,
@@ -63,6 +87,8 @@ pub struct PlanKey {
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct AutoKey {
     pub device: &'static str,
+    /// Calibration epoch, same rationale as [`PlanKey::epoch`].
+    pub epoch: u64,
     pub op: OpConfig,
     pub req: PlanRequest,
 }
@@ -76,55 +102,105 @@ pub const DEFAULT_SHARDS: usize = 16;
 /// client iterating distinct shapes must not grow server memory forever.
 pub const DEFAULT_MAX_PER_SHARD: usize = 4096;
 
+/// Time source for TTL expiry. Injected so tests and benches can advance
+/// time deterministically; production uses [`MonotonicClock`].
+pub trait CacheClock: Send + Sync {
+    /// Milliseconds since an arbitrary fixed origin (monotonic).
+    fn now_ms(&self) -> u64;
+}
+
+/// Wall-clock-free monotonic time, anchored at construction.
+#[derive(Debug)]
+pub struct MonotonicClock(Instant);
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        Self(Instant::now())
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CacheClock for MonotonicClock {
+    fn now_ms(&self) -> u64 {
+        self.0.elapsed().as_millis() as u64
+    }
+}
+
+/// Hand-advanced test clock: TTL behavior without sleeps.
+#[derive(Debug, Default)]
+pub struct ManualClock(AtomicU64);
+
+impl ManualClock {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn advance_ms(&self, ms: u64) {
+        self.0.fetch_add(ms, Ordering::Relaxed);
+    }
+
+    pub fn set_ms(&self, ms: u64) {
+        self.0.store(ms, Ordering::Relaxed);
+    }
+}
+
+impl CacheClock for ManualClock {
+    fn now_ms(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One cached value with its recency tick (LRU) and insertion stamp (TTL).
+struct Slot<V> {
+    value: V,
+    tick: u64,
+    stamp_ms: u64,
+}
+
 /// One LRU shard: entries tagged with a monotonic recency tick.
 struct LruShard<K, V> {
-    map: HashMap<K, (V, u64)>,
+    map: HashMap<K, Slot<V>>,
     tick: u64,
 }
 
-impl<K: Hash + Eq + Clone, V: Copy> LruShard<K, V> {
+impl<K, V> LruShard<K, V> {
     fn new() -> Self {
         Self { map: HashMap::new(), tick: 0 }
     }
-
-    fn touch(&mut self, key: &K) -> Option<V> {
-        self.tick += 1;
-        let tick = self.tick;
-        self.map.get_mut(key).map(|(v, t)| {
-            *t = tick;
-            *v
-        })
-    }
-
-    /// Insert, evicting the least-recently-used entry if the shard is at
-    /// `max` and the key is new.
-    fn insert(&mut self, key: K, value: V, max: usize) {
-        self.tick += 1;
-        if self.map.len() >= max && !self.map.contains_key(&key) {
-            if let Some(oldest) =
-                self.map.iter().min_by_key(|(_, (_, t))| *t).map(|(k, _)| k.clone())
-            {
-                self.map.remove(&oldest);
-            }
-        }
-        self.map.insert(key, (value, self.tick));
-    }
 }
 
-/// A sharded LRU map; misses in [`LruMap::get_or_insert_with`] compute
-/// under the shard lock (single-flight per shard).
+/// A sharded LRU+TTL map; misses in [`LruMap::get_or_insert_with`]
+/// compute under the shard lock (single-flight per shard).
 struct LruMap<K, V> {
     shards: Vec<Mutex<LruShard<K, V>>>,
     max_per_shard: usize,
+    ttl_ms: Option<u64>,
+    clock: Arc<dyn CacheClock>,
+    evictions: Counter,
+    expired: Counter,
 }
 
 impl<K: Hash + Eq + Clone, V: Copy> LruMap<K, V> {
-    fn new(n_shards: usize, max_per_shard: usize) -> Self {
+    fn new(
+        n_shards: usize,
+        max_per_shard: usize,
+        ttl_ms: Option<u64>,
+        clock: Arc<dyn CacheClock>,
+    ) -> Self {
         assert!(n_shards > 0, "cache needs at least one shard");
         assert!(max_per_shard > 0, "shards must hold at least one entry");
         Self {
             shards: (0..n_shards).map(|_| Mutex::new(LruShard::new())).collect(),
             max_per_shard,
+            ttl_ms,
+            clock,
+            evictions: Counter::new(),
+            expired: Counter::new(),
         }
     }
 
@@ -142,37 +218,114 @@ impl<K: Hash + Eq + Clone, V: Copy> LruMap<K, V> {
         m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
-    /// Recency-bumping lookup.
-    fn get(&self, key: &K) -> Option<V> {
-        Self::lock(self.shard(key)).touch(key)
+    fn is_expired(&self, now_ms: u64, stamp_ms: u64) -> bool {
+        self.ttl_ms.is_some_and(|ttl| now_ms.saturating_sub(stamp_ms) > ttl)
     }
 
-    /// Lookup without touching recency (diagnostics only).
+    /// Recency-bumping lookup in a locked shard; an entry past its TTL is
+    /// dropped (counted as expired) and reported as absent — expiry must
+    /// look exactly like a miss, never serve a stale value.
+    fn touch(&self, shard: &mut LruShard<K, V>, key: &K, now_ms: u64) -> Option<V> {
+        shard.tick += 1;
+        let tick = shard.tick;
+        match shard.map.get_mut(key) {
+            Some(slot) if self.is_expired(now_ms, slot.stamp_ms) => {} // fall through
+            Some(slot) => {
+                slot.tick = tick;
+                return Some(slot.value);
+            }
+            None => return None,
+        }
+        shard.map.remove(key);
+        self.expired.inc();
+        None
+    }
+
+    /// Drop every expired entry in a locked shard, counting them.
+    fn purge_expired(&self, shard: &mut LruShard<K, V>, now_ms: u64) {
+        if self.ttl_ms.is_some() {
+            let before = shard.map.len();
+            shard.map.retain(|_, slot| !self.is_expired(now_ms, slot.stamp_ms));
+            self.expired.add((before - shard.map.len()) as u64);
+        }
+    }
+
+    /// Insert into a locked shard. A full shard first drops expired
+    /// entries (that is TTL churn, not capacity pressure) and only then
+    /// — if still full and the key is new — evicts the LRU entry.
+    fn insert(&self, shard: &mut LruShard<K, V>, key: K, value: V, now_ms: u64) {
+        shard.tick += 1;
+        let tick = shard.tick;
+        if shard.map.len() >= self.max_per_shard && !shard.map.contains_key(&key) {
+            self.purge_expired(shard, now_ms);
+            if shard.map.len() >= self.max_per_shard {
+                if let Some(oldest) =
+                    shard.map.iter().min_by_key(|(_, s)| s.tick).map(|(k, _)| k.clone())
+                {
+                    shard.map.remove(&oldest);
+                    self.evictions.inc();
+                }
+            }
+        }
+        shard.map.insert(key, Slot { value, tick, stamp_ms: now_ms });
+    }
+
+    /// Recency-bumping lookup.
+    fn get(&self, key: &K) -> Option<V> {
+        let now_ms = self.clock.now_ms();
+        self.touch(&mut Self::lock(self.shard(key)), key, now_ms)
+    }
+
+    /// Lookup without touching recency or expiring (diagnostics only):
+    /// reports what is physically resident.
     fn peek(&self, key: &K) -> Option<V> {
-        Self::lock(self.shard(key)).map.get(key).map(|(v, _)| *v)
+        Self::lock(self.shard(key)).map.get(key).map(|slot| slot.value)
     }
 
     /// Cached value for `key`, or `compute` it (under the shard lock — see
     /// the module docs for the single-flight rationale) and remember it.
     /// Returns `(value, was_hit)`.
     fn get_or_insert_with<F: FnOnce() -> V>(&self, key: K, compute: F) -> (V, bool) {
+        let now_ms = self.clock.now_ms();
         let mut shard = Self::lock(self.shard(&key));
-        if let Some(v) = shard.touch(&key) {
+        if let Some(v) = self.touch(&mut shard, &key, now_ms) {
             return (v, true);
         }
         let v = compute();
-        shard.insert(key, v, self.max_per_shard);
+        self.insert(&mut shard, key, v, now_ms);
         (v, false)
     }
 
     /// Insert without touching the hit/miss accounting of callers.
-    fn insert(&self, key: K, value: V) {
+    fn publish(&self, key: K, value: V) {
+        let now_ms = self.clock.now_ms();
         let mut shard = Self::lock(self.shard(&key));
-        shard.insert(key, value, self.max_per_shard);
+        self.insert(&mut shard, key, value, now_ms);
     }
 
+    /// Live entries across all shards (sweeps expired entries first, so
+    /// the count never includes values that could no longer be served).
     fn len(&self) -> usize {
-        self.shards.iter().map(|s| Self::lock(s).map.len()).sum()
+        let now_ms = self.clock.now_ms();
+        let mut n = 0;
+        for s in &self.shards {
+            let mut shard = Self::lock(s);
+            self.purge_expired(&mut shard, now_ms);
+            n += shard.map.len();
+        }
+        n
+    }
+
+    /// Drop every entry failing `keep`; returns how many were dropped.
+    fn retain<F: Fn(&K) -> bool>(&self, keep: F) -> usize {
+        let mut removed = 0;
+        for s in &self.shards {
+            let mut shard = Self::lock(s);
+            let before = shard.map.len();
+            shard.map.retain(|k, _| keep(k));
+            removed += before - shard.map.len();
+        }
+        removed
     }
 
     /// Drop every entry; returns how many were dropped.
@@ -202,11 +355,36 @@ impl PlanCache {
     }
 
     /// A cache with an explicit per-shard entry bound (applied to the plan
-    /// shards and the auto-resolution shards alike).
+    /// shards and the auto-resolution shards alike), no TTL.
     pub fn with_capacity(n_shards: usize, max_per_shard: usize) -> Self {
+        Self::with_config(n_shards, max_per_shard, None, Arc::new(MonotonicClock::new()))
+    }
+
+    /// A TTL-expiring cache with default sharding and capacity, on the
+    /// monotonic system clock (`repro serve --ttl`).
+    pub fn with_ttl(ttl: Duration) -> Self {
+        Self::with_config(
+            DEFAULT_SHARDS,
+            DEFAULT_MAX_PER_SHARD,
+            Some(ttl),
+            Arc::new(MonotonicClock::new()),
+        )
+    }
+
+    /// Fully explicit construction: sharding, per-shard capacity, optional
+    /// TTL, and the clock the TTL reads (tests inject [`ManualClock`]).
+    pub fn with_config(
+        n_shards: usize,
+        max_per_shard: usize,
+        ttl: Option<Duration>,
+        clock: Arc<dyn CacheClock>,
+    ) -> Self {
+        // sub-millisecond TTLs round up: a zero TTL would expire entries
+        // within their own insertion instant
+        let ttl_ms = ttl.map(|d| (d.as_millis() as u64).max(1));
         Self {
-            plans: LruMap::new(n_shards, max_per_shard),
-            auto: LruMap::new(n_shards, max_per_shard),
+            plans: LruMap::new(n_shards, max_per_shard, ttl_ms, clock.clone()),
+            auto: LruMap::new(n_shards, max_per_shard, ttl_ms, clock),
             hits: Counter::new(),
             misses: Counter::new(),
         }
@@ -235,21 +413,24 @@ impl PlanCache {
         req: PlanRequest,
     ) -> Plan {
         let device = planner.device.name();
+        let epoch = planner.device.epoch;
         let req = req.normalized(planner.device.spec.cpu.max_threads());
         if let (Choice::Fixed(threads), Choice::Fixed(mech)) = (req.threads, req.mech) {
-            return self.get_or_insert_with(PlanKey { device, op: *op, threads, mech }, || {
-                planner.plan_request(op, req)
-            });
+            return self.get_or_insert_with(
+                PlanKey { device, epoch, op: *op, threads, mech },
+                || planner.plan_request(op, req),
+            );
         }
-        let akey = AutoKey { device, op: *op, req };
+        let akey = AutoKey { device, epoch, op: *op, req };
         if let Some(s) = self.auto.get(&akey) {
             // Resolved before: serve from the plans map. Re-planning (LRU
-            // eviction dropped the plan but kept the resolution) pins the
-            // resolved strategy — the planner guarantees the fixed search
-            // at an `Auto` plan's resolved strategy reproduces it exactly,
-            // at a fraction of the joint search's cost.
+            // eviction or TTL expiry dropped the plan but kept the
+            // resolution) pins the resolved strategy — the planner
+            // guarantees the fixed search at an `Auto` plan's resolved
+            // strategy reproduces it exactly, at a fraction of the joint
+            // search's cost.
             return self.get_or_insert_with(
-                PlanKey { device, op: *op, threads: s.threads, mech: s.mech },
+                PlanKey { device, epoch, op: *op, threads: s.threads, mech: s.mech },
                 || planner.plan_request(op, PlanRequest::fixed(s.threads, s.mech)),
             );
         }
@@ -261,8 +442,8 @@ impl PlanCache {
         let (strategy, _) = self.auto.get_or_insert_with(akey, || {
             let plan = planner.plan_request(op, req);
             self.misses.inc();
-            self.plans.insert(
-                PlanKey { device, op: *op, threads: plan.threads, mech: plan.mech },
+            self.plans.publish(
+                PlanKey { device, epoch, op: *op, threads: plan.threads, mech: plan.mech },
                 plan,
             );
             computed = Some(plan);
@@ -273,7 +454,7 @@ impl PlanCache {
             // lost the single-flight race: the resolver published the plan
             // (re-plan at the resolved strategy if it was already evicted)
             None => self.get_or_insert_with(
-                PlanKey { device, op: *op, threads: strategy.threads, mech: strategy.mech },
+                PlanKey { device, epoch, op: *op, threads: strategy.threads, mech: strategy.mech },
                 || planner.plan_request(op, PlanRequest::fixed(strategy.threads, strategy.mech)),
             ),
         }
@@ -289,8 +470,8 @@ impl PlanCache {
         )
     }
 
-    /// Peek a resolved plan without counting or touching recency
-    /// (diagnostics only).
+    /// Peek a resolved plan without counting, touching recency, or
+    /// expiring (diagnostics only).
     pub fn peek(&self, key: &PlanKey) -> Option<Plan> {
         self.plans.peek(key)
     }
@@ -308,8 +489,20 @@ impl PlanCache {
         self.misses.get()
     }
 
-    /// Number of cached plans across all shards (auto resolutions are an
-    /// index, not plans, and are not counted).
+    /// Plans dropped to make room in a full shard (capacity pressure; the
+    /// auto-resolution index's own churn is not counted).
+    pub fn evictions(&self) -> u64 {
+        self.plans.evictions.get()
+    }
+
+    /// Plans dropped because they outlived the TTL.
+    pub fn expired(&self) -> u64 {
+        self.plans.expired.get()
+    }
+
+    /// Number of live cached plans across all shards (expired entries are
+    /// swept and counted first; auto resolutions are an index, not plans,
+    /// and are not counted).
     pub fn len(&self) -> usize {
         self.plans.len()
     }
@@ -318,12 +511,30 @@ impl PlanCache {
         self.len() == 0
     }
 
-    /// Drop every cached plan and auto resolution — the `FLUSH` verb, for
-    /// when device calibration changes. Keeps the hit/miss counters;
-    /// returns the number of plans dropped.
-    pub fn flush(&self) -> usize {
+    /// Drop one device's cached plans *and* auto resolutions, across
+    /// every calibration epoch — `FLUSH` and the `CALIBRATE` verb's
+    /// auto-invalidation. Dropping the resolutions with the plans is
+    /// what keeps a stale resolution from pinning a pre-recalibration
+    /// strategy on the next `auto` request. Matching by name alone also
+    /// reclaims old-epoch entries still resident *at flush time*; a
+    /// racing plan that publishes under an old epoch *after* the flush
+    /// is unreachable (the epoch key guarantees it is never served) but
+    /// stays resident — counted by `len`/`STATS` — until LRU pressure,
+    /// TTL, or a later flush of the same name reclaims it. Keeps the
+    /// hit/miss counters; returns the number of plans dropped.
+    pub fn flush_device(&self, device: &str) -> usize {
         // plans first: a racing auto request that saw a stale resolution
         // re-plans into the fresh map rather than resurrecting a plan
+        let n = self.plans.retain(|k| k.device != device);
+        self.auto.retain(|k| k.device != device);
+        n
+    }
+
+    /// Drop every cached plan and auto resolution for every device — the
+    /// `FLUSH all` verb. Keeps the hit/miss counters; returns the number
+    /// of plans dropped.
+    pub fn flush(&self) -> usize {
+        // same ordering rationale as flush_device
         let n = self.plans.clear();
         self.auto.clear();
         n
@@ -350,6 +561,18 @@ mod tests {
 
     fn planner() -> Planner {
         Planner::train_for_kind(&Device::pixel5(), "linear", 600, 9)
+    }
+
+    /// A single-shard cache on a hand-advanced clock.
+    fn manual_cache(max_per_shard: usize, ttl_ms: u64) -> (PlanCache, Arc<ManualClock>) {
+        let clock = Arc::new(ManualClock::new());
+        let cache = PlanCache::with_config(
+            1,
+            max_per_shard,
+            Some(Duration::from_millis(ttl_ms)),
+            clock.clone(),
+        );
+        (cache, clock)
     }
 
     #[test]
@@ -422,6 +645,7 @@ mod tests {
         // the resolution is recorded and indexes the plans map
         let akey = AutoKey {
             device: p.device.name(),
+            epoch: 0,
             op,
             req: PlanRequest::auto(),
         };
@@ -449,11 +673,185 @@ mod tests {
         cache.get_or_plan(&p, &op_a, 1); // hit: A is now most-recent
         cache.get_or_plan(&p, &op_c, 1); // miss: evicts B (LRU), not A
         assert_eq!(cache.len(), 2, "eviction drops one entry, not the shard");
+        assert_eq!(cache.evictions(), 1, "capacity pressure must be counted");
         cache.get_or_plan(&p, &op_a, 1); // still resident
         assert_eq!(cache.misses(), 3, "A must have survived the eviction");
         cache.get_or_plan(&p, &op_b, 1); // gone: re-planned
         assert_eq!(cache.misses(), 4);
         assert_eq!(cache.hits(), 2);
+        assert_eq!((cache.evictions(), cache.expired()), (2, 0));
+    }
+
+    #[test]
+    fn ttl_expires_entries_without_resurrecting_them() {
+        let p = planner();
+        let (cache, clock) = manual_cache(8, 100);
+        let op = OpConfig::Linear(LinearConfig::new(8, 64, 256));
+        let fresh = cache.get_or_plan(&p, &op, 1); // miss at t=0
+        clock.advance_ms(100);
+        cache.get_or_plan(&p, &op, 1); // t=100: within TTL, a hit
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        clock.advance_ms(101);
+        // t=201: the *insertion* stamp (t=0) is past the TTL — a hit must
+        // not refresh the lease — so this is a miss that re-plans
+        let replanned = cache.get_or_plan(&p, &op, 1);
+        assert_eq!(replanned, fresh, "re-planned entry must be byte-identical");
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        assert_eq!((cache.evictions(), cache.expired()), (0, 1));
+        assert_eq!(cache.len(), 1, "the re-planned entry is live again");
+    }
+
+    #[test]
+    fn len_sweeps_expired_entries() {
+        let p = planner();
+        let (cache, clock) = manual_cache(8, 50);
+        cache.get_or_plan(&p, &OpConfig::Linear(LinearConfig::new(8, 64, 256)), 1);
+        cache.get_or_plan(&p, &OpConfig::Linear(LinearConfig::new(8, 64, 260)), 1);
+        assert_eq!(cache.len(), 2);
+        clock.advance_ms(51);
+        assert_eq!(cache.len(), 0, "len must not count expired entries");
+        assert_eq!(cache.expired(), 2);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn full_shard_prefers_dropping_expired_over_evicting_live() {
+        let p = planner();
+        let (cache, clock) = manual_cache(2, 50);
+        let op_a = OpConfig::Linear(LinearConfig::new(8, 64, 256));
+        let op_b = OpConfig::Linear(LinearConfig::new(8, 64, 260));
+        let op_c = OpConfig::Linear(LinearConfig::new(8, 64, 264));
+        cache.get_or_plan(&p, &op_a, 1); // t=0
+        clock.advance_ms(40);
+        cache.get_or_plan(&p, &op_b, 1); // t=40: shard full
+        clock.advance_ms(20);
+        // t=60: A is expired, B is live. Inserting C must drop A (TTL),
+        // not evict B (LRU would pick A anyway here, so check counters).
+        cache.get_or_plan(&p, &op_c, 1);
+        assert_eq!((cache.evictions(), cache.expired()), (0, 1));
+        // B stayed live through the capacity squeeze
+        cache.get_or_plan(&p, &op_b, 1);
+        assert_eq!(cache.hits(), 1, "live entry must survive an expired purge");
+    }
+
+    #[test]
+    fn auto_resolution_expires_with_its_ttl() {
+        let p = planner();
+        let (cache, clock) = manual_cache(8, 100);
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        let auto = cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        let akey = AutoKey { device: p.device.name(), epoch: 0, op, req: PlanRequest::auto() };
+        assert!(cache.peek_resolution(&akey).is_some());
+        clock.advance_ms(101);
+        // both the plan and the resolution are stale: a fresh auto request
+        // re-resolves from scratch (one planning miss), byte-identically
+        let again = cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        assert_eq!(again, auto);
+        assert_eq!(cache.misses(), 2, "expired auto must re-resolve");
+    }
+
+    #[test]
+    fn evicted_auto_plan_rerequests_replan_at_resolved_strategy() {
+        let p = planner();
+        // capacity one: any second plan evicts the first, while the auto
+        // resolution index (its own map) keeps the resolution
+        let cache = PlanCache::with_capacity(1, 1);
+        let op = OpConfig::Linear(LinearConfig::new(64, 512, 2048));
+        let auto = cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        let akey = AutoKey { device: p.device.name(), epoch: 0, op, req: PlanRequest::auto() };
+        let resolved = cache.peek_resolution(&akey).expect("resolution recorded");
+        assert_eq!(resolved, auto.strategy());
+
+        let other = OpConfig::Linear(LinearConfig::new(8, 64, 256));
+        cache.get_or_plan(&p, &other, 1); // evicts the auto plan
+        let key =
+            PlanKey { device: p.device.name(), epoch: 0, op, threads: auto.threads, mech: auto.mech };
+        assert!(cache.peek(&key).is_none(), "plan entry must be evicted");
+
+        // the resolution outlived its plan entry: the re-request must
+        // re-plan (a miss) at exactly the resolved strategy, reproducing
+        // the original plan byte-for-byte
+        let misses = cache.misses();
+        let again = cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        assert_eq!(again, auto, "re-planned auto must reproduce the original");
+        assert_eq!(again.strategy(), resolved, "re-plan must pin the resolved strategy");
+        assert_eq!(cache.misses(), misses + 1, "evicted plan must re-plan, not resurrect");
+        assert_eq!(
+            cache.peek_resolution(&akey),
+            Some(resolved),
+            "resolution must be unchanged by the re-plan"
+        );
+    }
+
+    #[test]
+    fn stale_epoch_plans_cannot_serve_a_recalibrated_device() {
+        // calibration audit: a plan computed in flight against the old
+        // spec may be published *after* the calibration flush — the
+        // epoch in the key must keep it unreachable from the new device
+        let p_old = planner(); // epoch 0
+        let mut recalibrated = Device::pixel5();
+        recalibrated.epoch = crate::device::next_calibration_epoch();
+        let p_new = Planner::train_for_kind(&recalibrated, "linear", 600, 9);
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 1024));
+
+        // straggler: an old-epoch plan lands in the cache
+        cache.get_or_plan(&p_old, &op, 2);
+        // the recalibrated device must re-plan, not hit the straggler
+        let misses = cache.misses();
+        cache.get_or_plan(&p_new, &op, 2);
+        assert_eq!(cache.misses(), misses + 1, "old-epoch plan must not be served");
+        // ...while its own entry is warm as usual
+        cache.get_or_plan(&p_new, &op, 2);
+        assert_eq!(cache.misses(), misses + 1);
+        // flushing by name reclaims both epochs' entries
+        assert_eq!(cache.flush_device(p_old.device.name()), 2);
+    }
+
+    #[test]
+    fn flush_device_drops_stale_resolutions_with_the_plans() {
+        // regression (calibration audit): if flush_device kept the auto
+        // index, a post-flush auto request would pin the *old* strategy
+        // instead of re-resolving against the recalibrated device
+        let p = planner();
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        let akey = AutoKey { device: p.device.name(), epoch: 0, op, req: PlanRequest::auto() };
+        assert!(cache.peek_resolution(&akey).is_some());
+        let flushed = cache.flush_device(p.device.name());
+        assert_eq!(flushed, 1);
+        assert!(cache.peek_resolution(&akey).is_none(), "resolutions must flush too");
+        let misses = cache.misses();
+        cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        assert_eq!(cache.misses(), misses + 1, "flushed auto must re-resolve");
+    }
+
+    #[test]
+    fn flush_device_is_scoped_to_one_device() {
+        let p5 = planner();
+        let moto = Planner::train_for_kind(&Device::moto2022(), "linear", 600, 9);
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 1024));
+        cache.get_or_plan(&p5, &op, 2);
+        cache.get_or_plan(&moto, &op, 2);
+        cache.get_or_plan_request(&moto, &op, PlanRequest::auto());
+        let before = cache.len();
+
+        let flushed = cache.flush_device(p5.device.name());
+        assert_eq!(flushed, 1, "only pixel5's plan may be dropped");
+        assert_eq!(cache.len(), before - 1);
+
+        // moto's plan and auto resolution are untouched: both warm hits
+        let hits = cache.hits();
+        cache.get_or_plan(&moto, &op, 2);
+        cache.get_or_plan_request(&moto, &op, PlanRequest::auto());
+        assert_eq!(cache.hits(), hits + 2, "device B must stay warm across a device-A flush");
+
+        // pixel5 re-plans
+        let misses = cache.misses();
+        cache.get_or_plan(&p5, &op, 2);
+        assert_eq!(cache.misses(), misses + 1);
     }
 
     #[test]

@@ -4,14 +4,23 @@
 //! dispatch-feature extraction) happens offline; this module makes the
 //! *online* side scale the same way. Three pieces:
 //!
-//! * a device **registry** serving all four paper phones from one process
-//!   (per-device planners are trained lazily, on first use);
+//! * a *mutable* device **registry**: the four paper phones out of the
+//!   box (per-device planners trained lazily, on first use), plus any
+//!   device a client uploads or recalibrates at runtime with the
+//!   `CALIBRATE` verb — co-execution strategies are device-specific, so a
+//!   serving system that onboards real fleets must accept devices the
+//!   paper never measured;
 //! * a sharded **[`cache::PlanCache`]** — resolved plans keyed by
-//!   `(device, op-config, threads, sync-mechanism)` plus an index mapping
+//!   `(device, calibration-epoch, op-config, threads, sync-mechanism)`
+//!   plus an index mapping
 //!   `auto` requests to their resolved strategy, with per-shard LRU
-//!   eviction. Planning is deterministic per shape, so a plan never needs
-//!   computing twice, and an `auto` request and its equivalent fixed
-//!   request share one entry;
+//!   eviction and optional TTL expiry (drifting calibration must not pin
+//!   stale plans forever). Planning is deterministic per shape, so a plan
+//!   never needs computing twice, and an `auto` request and its
+//!   equivalent fixed request share one entry. Invalidation is
+//!   calibration-scoped: `FLUSH` drops the session device's plans,
+//!   `FLUSH all` drops everything, and a successful `CALIBRATE`
+//!   auto-flushes exactly the recalibrated device;
 //! * a bounded **[`pool::WorkerPool`]** request executor: each connection
 //!   gets a thin I/O reader thread, but all planning/measuring runs on N
 //!   shared workers behind a bounded queue. When the queue is full the
@@ -25,8 +34,8 @@
 //! lines (each itself `OK ...` or `ERR ...`):
 //!
 //! ```text
-//! request    = ping | plan | plan-batch | run | device | plan-model
-//!            | flush | stats
+//! request    = ping | plan | plan-batch | run | device | calibrate
+//!            | plan-model | flush | stats
 //! ping       = "PING"                     ; -> OK pong
 //! plan       = "PLAN" op-spec             ; -> OK c_cpu c_gpu t_pred_us
 //!                                         ;      threads=<t> mech=<mech>
@@ -38,17 +47,23 @@
 //!                                         ;      speedup threads=<t>
 //!                                         ;      mech=<mech>
 //! device     = "DEVICE" name              ; -> OK device <name>
+//! calibrate  = "CALIBRATE" name *(param "=" value)
+//!                                         ; -> OK calibrated <name> flushed=<n>
 //! plan-model = "PLAN_MODEL" model threads ; -> OK model=<m> layers=<n>
 //!                                         ;      planned=<n> coexec=<n>
 //!                                         ;      threads=<t:n,...>
 //!                                         ;      mechs=<mech:n,...>
 //!                                         ;      t_pred_ms=<x>
-//! flush      = "FLUSH"                    ; -> OK flushed=<n>
-//! stats      = "STATS"                    ; -> OK hits=.. misses=.. entries=..
+//! flush      = "FLUSH" ["all"]            ; -> OK flushed=<n>
+//! stats      = "STATS"                    ; -> OK hits= misses= entries=
+//!                                         ;      evictions= expired=
 //!                                         ;      <verb>.req= .err= .p50_us= .p95_us= ...
 //! op-spec    = "linear" l cin cout threads
 //!            | "conv" h w cin cout k s threads
 //! name       = "pixel4" | "pixel5" | "moto2022" | "oneplus11"   ; + aliases moto, oneplus
+//!            | custom-name               ; 1-32 of [a-z0-9_-], letter first
+//! param      = "base"                     ; spec to start from (device name)
+//!            | any `device::CALIBRATION_KEYS` entry, e.g. "gpu.clock_ghz"
 //! model      = "vgg16" | "resnet18" | "resnet34" | "inception_v3" | "vit_base32"
 //! threads    = 1..cores | "auto"
 //!            ; 0 is an error, larger values clamp to the device's
@@ -59,8 +74,23 @@
 //!
 //! `DEVICE` is *session-scoped*: it selects the device for subsequent
 //! requests on the same connection only (every connection starts on the
-//! server's default device). `FLUSH` drops every cached plan and `auto`
-//! resolution — for when device calibration changes. All numeric fields
+//! server's default device).
+//!
+//! `CALIBRATE` uploads a custom [`crate::device::SocSpec`] (or
+//! recalibrates an existing device, built-in or custom) into the
+//! registry. The spec starts from `base=<device>`'s *current* spec —
+//! required for a new name, defaulting to the device's own current spec
+//! when recalibrating — then applies the `<key>=<value>` overrides
+//! (validated; a failed `CALIBRATE` mutates nothing). On success exactly
+//! that device's cached plans and `auto` resolutions are dropped
+//! (`flushed=<n>`); every other device's entries stay warm. Its planners
+//! retrain lazily on first use, like any cold registry device. A
+//! calibrated device then serves every planning verb with the same
+//! caching/auto-resolution behavior as the built-in four.
+//!
+//! `FLUSH` drops the *session device's* cached plans and `auto`
+//! resolutions — for when one device's calibration changed out of band;
+//! `FLUSH all` keeps the old global behavior. All numeric fields
 //! must be positive and at most [`MAX_FIELD`] — an oversized shape must
 //! not pin a worker in a near-endless partition sweep. A `PLAN_BATCH`
 //! line amortizes round-trips for compiler clients planning whole graphs;
@@ -87,10 +117,17 @@
 //! > PLAN_MODEL resnet18 auto
 //! < OK model=resnet18 layers=<n> planned=<n> coexec=<n> threads=<t:n,...>
 //!      mechs=<mech:n,...> t_pred_ms=<x>
+//! > CALIBRATE lab_phone base=pixel5 gpu.clock_ghz=0.71 sync.polling_linear_us=7.5
+//! < OK calibrated lab_phone flushed=0
+//! > DEVICE lab_phone
+//! < OK device lab_phone
+//! > CALIBRATE lab_phone gpu.clock_ghz=0.74
+//! < OK calibrated lab_phone flushed=<n>   (only lab_phone's plans dropped)
 //! > FLUSH
-//! < OK flushed=<n>
+//! < OK flushed=<n>                        (session device only; FLUSH all
+//!                                          drops every device)
 //! > STATS
-//! < OK hits=<n> misses=<n> entries=<n> ping.req=1 ping.err=0 ...
+//! < OK hits=<n> misses=<n> entries=<n> evictions=<n> expired=<n> ping.req=1 ...
 //! ```
 //!
 //! (Repeated shapes — across requests or within one model — are cache
@@ -101,7 +138,7 @@ pub mod pool;
 
 use self::cache::PlanCache;
 use self::pool::{SubmitError, WorkerPool};
-use crate::device::{Device, Processor, SyncMechanism};
+use crate::device::{intern_device_name, validate_device_name, Device, Processor, SyncMechanism};
 use crate::metrics::{Counter, LatencyRecorder};
 use crate::models::{self, Model};
 use crate::ops::{ConvConfig, LinearConfig, OpConfig};
@@ -110,7 +147,7 @@ use crate::scheduler::{pool_gpu_us, strategy_distribution, ModelScheduler};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{mpsc, Arc, OnceLock};
+use std::sync::{mpsc, Arc, OnceLock, RwLock, RwLockReadGuard};
 use std::time::Instant;
 
 /// The paper's four evaluation devices: single source of truth for
@@ -186,6 +223,10 @@ impl DevicePlanners {
     }
 }
 
+/// Most devices the registry will hold: custom `CALIBRATE` uploads must
+/// not grow server memory (or the interned-name table) without bound.
+pub const MAX_DEVICES: usize = 64;
+
 struct DeviceEntry {
     key: &'static str,
     device: Device,
@@ -226,12 +267,13 @@ pub struct ServerMetrics {
 /// The protocol's verbs: wire token -> metrics key. Single source of
 /// truth for telemetry bookkeeping and the stable `STATS` reporting
 /// order (dispatch itself lives in `handle_inner`'s match).
-const VERBS: [(&str, &str); 8] = [
+const VERBS: [(&str, &str); 9] = [
     ("PING", "ping"),
     ("PLAN", "plan"),
     ("PLAN_BATCH", "plan_batch"),
     ("RUN", "run"),
     ("DEVICE", "device"),
+    ("CALIBRATE", "calibrate"),
     ("PLAN_MODEL", "plan_model"),
     ("FLUSH", "flush"),
     ("STATS", "stats"),
@@ -265,10 +307,12 @@ impl ServerMetrics {
     /// `req/err/p50/p95` in [`VERBS`] order (`other` last).
     fn render(&self, cache: &PlanCache) -> String {
         let mut out = format!(
-            "hits={} misses={} entries={}",
+            "hits={} misses={} entries={} evictions={} expired={}",
             cache.hits(),
             cache.misses(),
-            cache.len()
+            cache.len(),
+            cache.evictions(),
+            cache.expired()
         );
         for (name, ep) in &self.endpoints {
             let s = ep.latency.snapshot();
@@ -301,9 +345,17 @@ impl Session {
 /// Shared server state: device registry + plan cache + telemetry.
 ///
 /// Request handling ([`ServerState::handle`]) is pure computation over
-/// `&self` — all I/O and thread management lives in [`Server`].
+/// `&self` — all I/O and thread management lives in [`Server`]. The
+/// registry is a `RwLock` over `Arc` entries: reads (every planning
+/// request) clone an `Arc` and drop the lock immediately; the only
+/// writer is `CALIBRATE`, which swaps one entry for a freshly built one
+/// carrying a fresh calibration epoch. In-flight requests keep planning
+/// against the entry they already hold, but their results publish under
+/// the *old* epoch's cache keys — unreachable from the new entry — so a
+/// racing pre-recalibration plan can never be served post-calibration;
+/// sessions pick up the new entry on their next request.
 pub struct ServerState {
-    registry: Vec<DeviceEntry>,
+    registry: RwLock<Vec<Arc<DeviceEntry>>>,
     default_device: &'static str,
     n_train: usize,
     seed: u64,
@@ -349,7 +401,7 @@ impl ServerState {
             }
         };
         Self {
-            registry,
+            registry: RwLock::new(registry.into_iter().map(Arc::new).collect()),
             default_device,
             n_train,
             seed,
@@ -364,7 +416,10 @@ impl ServerState {
     /// training — and four cold-device requests would pin the entire
     /// default pool.
     pub fn prewarm_all(&self) {
-        for entry in &self.registry {
+        // snapshot the Arcs so multi-second training never holds the
+        // registry lock (CALIBRATE would block behind it)
+        let entries: Vec<Arc<DeviceEntry>> = self.read_registry().clone();
+        for entry in entries {
             entry.planners(self.n_train, self.seed);
         }
     }
@@ -379,21 +434,28 @@ impl ServerState {
         self.default_device
     }
 
-    fn entry(&self, key: &str) -> Option<&DeviceEntry> {
-        self.registry.iter().find(|e| e.key == key)
+    /// Read-lock the registry, recovering from poisoning (a panicked
+    /// writer left a consistent Vec — entries are swapped atomically).
+    fn read_registry(&self) -> RwLockReadGuard<'_, Vec<Arc<DeviceEntry>>> {
+        self.registry.read().unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
-    fn session_entry(&self, session: &Session) -> &DeviceEntry {
+    fn entry(&self, key: &str) -> Option<Arc<DeviceEntry>> {
+        self.read_registry().iter().find(|e| e.key == key).cloned()
+    }
+
+    fn session_entry(&self, session: &Session) -> Arc<DeviceEntry> {
         self.entry(session.device).expect("session device always registered")
     }
 
-    fn planners_for(&self, entry: &DeviceEntry) -> &DevicePlanners {
+    fn planners_for<'a>(&self, entry: &'a DeviceEntry) -> &'a DevicePlanners {
         entry.planners(self.n_train, self.seed)
     }
 
     /// Plan an op for the session's device through the cache.
     pub fn plan_cached(&self, session: &Session, op: &OpConfig, req: PlanRequest) -> Plan {
-        let planners = self.planners_for(self.session_entry(session));
+        let entry = self.session_entry(session);
+        let planners = self.planners_for(&entry);
         self.cache.get_or_plan_request(planners.for_op(op), op, req)
     }
 
@@ -445,17 +507,18 @@ impl ServerState {
             ["PING"] => Ok("pong".to_string()),
             ["PING", ..] => Err(anyhow!("bad request (expected: PING)")),
             ["DEVICE", name] => {
-                // canonical names/aliases first, then exact registry keys
-                // (covers custom devices registered by `new_lazy`)
-                let key = canonical_device_key(name)
-                    .and_then(|k| self.entry(k))
-                    .or_else(|| self.entry(name))
+                let key = self
+                    .resolve_device(name)
                     .map(|e| e.key)
                     .ok_or_else(|| anyhow!("unknown device {name}"))?;
                 session.device = key;
                 Ok(format!("device {key}"))
             }
             ["DEVICE", ..] => Err(anyhow!("bad device spec (expected: DEVICE <name>)")),
+            ["CALIBRATE", name, params @ ..] => self.calibrate(name, params),
+            ["CALIBRATE"] => Err(anyhow!(
+                "bad calibration (expected: CALIBRATE <name> [base=<device>] [<key>=<value> ...])"
+            )),
             ["PLAN", rest @ ..] => {
                 let (op, req) = self.parse_op(session, rest)?;
                 let plan = self.plan_cached(session, &op, req);
@@ -464,7 +527,7 @@ impl ServerState {
             ["RUN", rest @ ..] => {
                 let (op, req) = self.parse_op(session, rest)?;
                 let entry = self.session_entry(session);
-                let planner = self.planners_for(entry).for_op(&op);
+                let planner = self.planners_for(&entry).for_op(&op);
                 let plan = self.cache.get_or_plan_request(planner, &op, req);
                 let t_co = planner.measure_plan_us(&op, &plan, 8);
                 let t_gpu = entry.device.measure_mean(&op, Processor::Gpu, 8);
@@ -481,8 +544,16 @@ impl ServerState {
             ["PLAN_MODEL", ..] => {
                 Err(anyhow!("bad model spec (expected: PLAN_MODEL <model> <threads>)"))
             }
-            ["FLUSH"] => Ok(format!("flushed={}", self.cache.flush())),
-            ["FLUSH", ..] => Err(anyhow!("bad request (expected: FLUSH)")),
+            ["FLUSH"] => {
+                // calibration-scoped: only the session device's plans (and
+                // auto resolutions) drop; other devices stay warm
+                let entry = self.session_entry(session);
+                Ok(format!("flushed={}", self.cache.flush_device(entry.device.name())))
+            }
+            ["FLUSH", all] if all.eq_ignore_ascii_case("all") => {
+                Ok(format!("flushed={}", self.cache.flush()))
+            }
+            ["FLUSH", ..] => Err(anyhow!("bad request (expected: FLUSH [all])")),
             ["STATS"] => Ok(self.metrics.render(&self.cache)),
             ["STATS", ..] => Err(anyhow!("bad request (expected: STATS)")),
             [other, ..] => Err(anyhow!("unknown command {other}")),
@@ -496,9 +567,9 @@ impl ServerState {
     /// of chosen thread counts and mechanisms.
     fn plan_model(&self, session: &Session, name: &str, threads: &str) -> Result<String> {
         let entry = self.session_entry(session);
-        let req = self.parse_request(entry, threads)?;
+        let req = self.parse_request(&entry, threads)?;
         let model = model_by_name(name).ok_or_else(|| anyhow!("unknown model {name}"))?;
-        let planners = self.planners_for(entry);
+        let planners = self.planners_for(&entry);
         let sched = ModelScheduler {
             device: &entry.device,
             linear_planner: &planners.linear,
@@ -575,7 +646,7 @@ impl ServerState {
                 if cfg.l == 0 || cfg.cin == 0 || cfg.cout == 0 {
                     return Err(anyhow!("zero-sized shape"));
                 }
-                Ok((OpConfig::Linear(cfg), self.parse_request(entry, thr)?))
+                Ok((OpConfig::Linear(cfg), self.parse_request(&entry, thr)?))
             }
             ["conv", h, w, cin, cout, k, s, thr] => {
                 let cfg = ConvConfig::new(
@@ -595,7 +666,7 @@ impl ServerState {
                 {
                     return Err(anyhow!("zero-sized shape"));
                 }
-                Ok((OpConfig::Conv(cfg), self.parse_request(entry, thr)?))
+                Ok((OpConfig::Conv(cfg), self.parse_request(&entry, thr)?))
             }
             [kind, ..] if *kind != "linear" && *kind != "conv" => {
                 Err(anyhow!("unknown op kind {kind}"))
@@ -624,6 +695,105 @@ impl ServerState {
             t.min(entry.device.spec.cpu.max_threads()),
             SyncMechanism::SvmPolling,
         ))
+    }
+
+    /// Resolve a client-supplied device name to its registry entry:
+    /// canonical names/aliases first, then exact registry keys (covers
+    /// custom devices registered by `new_lazy`, whose keys keep the
+    /// caller's casing), then lowercased keys (devices registered at
+    /// runtime by `CALIBRATE` are always lowercase).
+    fn resolve_device(&self, name: &str) -> Option<Arc<DeviceEntry>> {
+        canonical_device_key(name)
+            .and_then(|k| self.entry(k))
+            .or_else(|| self.entry(name))
+            .or_else(|| self.entry(&name.to_ascii_lowercase()))
+    }
+
+    /// The `CALIBRATE` verb: upload a custom `SocSpec` (or recalibrate an
+    /// existing device) into the registry, then drop exactly that
+    /// device's cached plans and auto resolutions. Everything is parsed
+    /// and validated before any mutation — a failed `CALIBRATE` leaves
+    /// the registry and cache untouched.
+    fn calibrate(&self, name: &str, params: &[&str]) -> Result<String> {
+        let key = validate_device_name(name)?;
+        // aliases recalibrate their canonical built-in (moto -> moto2022)
+        let key = canonical_device_key(&key).map(str::to_string).unwrap_or(key);
+
+        let mut base: Option<Arc<DeviceEntry>> = None;
+        let mut overrides: Vec<(&str, f64)> = Vec::new();
+        for tok in params {
+            let (k, v) = tok.split_once('=').ok_or_else(|| {
+                anyhow!("bad calibration parameter {tok} (expected <key>=<value>)")
+            })?;
+            if k == "base" {
+                base = Some(
+                    self.resolve_device(v).ok_or_else(|| anyhow!("unknown base device {v}"))?,
+                );
+            } else {
+                let value: f64 =
+                    v.parse().map_err(|_| anyhow!("malformed calibration value {k}={v}"))?;
+                overrides.push((k, value));
+            }
+        }
+
+        // exact key first (covers mixed-case custom devices registered by
+        // `ServerState::new_lazy` — recalibrate them, never shadow-register
+        // a lowercased twin), then the canonical/lowercased key
+        let existing = self.entry(name).or_else(|| self.entry(&key));
+        let key = match &existing {
+            Some(e) => e.key.to_string(),
+            None => key,
+        };
+        // start from the base's current spec (explicit base=), else the
+        // device's own current spec (recalibration); a brand-new device
+        // must say what it is a variation of
+        let (mut spec, seed) = match (&base, &existing) {
+            (Some(b), _) => (b.device.spec.clone(), b.device.seed),
+            (None, Some(e)) => (e.device.spec.clone(), e.device.seed),
+            (None, None) => {
+                return Err(anyhow!("unknown device {key}: a new device needs base=<device>"))
+            }
+        };
+        for (k, v) in &overrides {
+            spec.set_param(k, *v)?;
+        }
+        spec.validate()?;
+        // a fresh epoch isolates the new calibration's cache namespace: a
+        // plan still in flight against the old entry publishes under the
+        // old epoch and can never be served to the recalibrated device
+        let device = Device { spec, seed, epoch: crate::device::next_calibration_epoch() };
+        let spec_name = self.upsert_device(&key, device)?;
+        // auto-invalidate exactly the recalibrated device: its old plans
+        // and auto resolutions are stale, every other device stays warm
+        let flushed = self.cache.flush_device(spec_name);
+        Ok(format!("calibrated {key} flushed={flushed}"))
+    }
+
+    /// Swap a registry entry for a freshly built one (planners retrain
+    /// lazily on first use), or append a new device under an interned
+    /// key; returns the device's spec name (the plan-cache namespace).
+    ///
+    /// The spec is given the *target's* identity here, never the base's:
+    /// plans are keyed by spec name, so a clone of `pixel5` keeping the
+    /// name "Pixel 5" would cross-contaminate the two devices' cache
+    /// entries. Interning happens after the capacity check, under the
+    /// write lock — a rejected upload must not grow the interned table.
+    fn upsert_device(&self, key: &str, mut device: Device) -> Result<&'static str> {
+        let mut registry = self.registry.write().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if let Some(slot) = registry.iter_mut().find(|e| e.key == key) {
+            device.spec.name = slot.device.name();
+            let name = device.spec.name;
+            let key = slot.key;
+            *slot = Arc::new(DeviceEntry { key, device, planners: OnceLock::new() });
+            return Ok(name);
+        }
+        if registry.len() >= MAX_DEVICES {
+            return Err(anyhow!("device registry full (max {MAX_DEVICES} devices)"));
+        }
+        let key = intern_device_name(key);
+        device.spec.name = key;
+        registry.push(Arc::new(DeviceEntry { key, device, planners: OnceLock::new() }));
+        Ok(key)
     }
 }
 
@@ -956,6 +1126,83 @@ mod tests {
         st.handle(&mut session, "PLAN linear 50 768 1024 2");
         assert_eq!(st.cache.misses(), 2, "flushed plans re-plan");
         assert!(st.handle(&mut session, "FLUSH now").starts_with("ERR bad request"));
+    }
+
+    #[test]
+    fn calibrate_registers_validates_and_reports() {
+        // CALIBRATE never trains planners: lazy state keeps this instant
+        let st = Arc::new(ServerState::new_lazy(Device::pixel5(), 700, 3));
+        let mut session = st.session();
+        // a brand-new device must name its base spec
+        assert!(st
+            .handle(&mut session, "CALIBRATE newphone gpu.clock_ghz=0.7")
+            .starts_with("ERR unknown device newphone"));
+        // upload a pixel5 variant, then select it like any built-in
+        assert_eq!(
+            st.handle(&mut session, "CALIBRATE newphone base=pixel5 gpu.clock_ghz=0.7"),
+            "OK calibrated newphone flushed=0"
+        );
+        assert_eq!(st.handle(&mut session, "DEVICE newphone"), "OK device newphone");
+        assert_eq!(session.device_key(), "newphone");
+        // recalibrating an existing device needs no base; aliases resolve
+        assert_eq!(
+            st.handle(&mut session, "CALIBRATE moto cpu.launch_us=6.5"),
+            "OK calibrated moto2022 flushed=0"
+        );
+        // every bad-spec path is an ERR that mutates nothing
+        for (req, want) in [
+            ("CALIBRATE newphone bogus.key=1", "ERR unknown calibration key"),
+            ("CALIBRATE newphone gpu.clock_ghz=fast", "ERR malformed calibration value"),
+            ("CALIBRATE newphone gpu.clock_ghz=-1", "ERR calibration value"),
+            ("CALIBRATE newphone gpu.compute_units=2.5", "ERR calibration value"),
+            ("CALIBRATE newphone cpu.eff2=1.99 cpu.eff3=1.2", "ERR cpu.eff3"),
+            ("CALIBRATE newphone threads", "ERR bad calibration parameter"),
+            ("CALIBRATE other base=fridge", "ERR unknown base device fridge"),
+            ("CALIBRATE 9bad base=pixel5", "ERR bad device name"),
+            ("CALIBRATE all base=pixel5", "ERR bad device name"),
+            ("CALIBRATE", "ERR bad calibration (expected"),
+        ] {
+            let reply = st.handle(&mut session, req);
+            assert!(reply.starts_with(want), "{req:?}: got {reply:?}, want prefix {want:?}");
+        }
+        // the rejected recalibrations left newphone serviceable
+        assert_eq!(st.handle(&mut session, "DEVICE newphone"), "OK device newphone");
+    }
+
+    #[test]
+    fn calibrate_targets_mixed_case_custom_devices_exactly() {
+        // an embedder can register a mixed-case custom device via
+        // new_lazy; CALIBRATE must recalibrate that entry, not
+        // shadow-register a lowercased twin with its own cache namespace
+        let mut spec = crate::device::SocSpec::pixel5();
+        spec.name = "LabX";
+        let st = Arc::new(ServerState::new_lazy(Device::new(spec), 700, 3));
+        let mut session = st.session();
+        assert_eq!(st.default_device_key(), "LabX");
+        assert_eq!(st.handle(&mut session, "DEVICE LabX"), "OK device LabX");
+        assert_eq!(
+            st.handle(&mut session, "CALIBRATE LabX cpu.launch_us=6.0"),
+            "OK calibrated LabX flushed=0"
+        );
+        assert_eq!(st.read_registry().len(), 5, "no shadow device may appear");
+    }
+
+    #[test]
+    fn calibrate_registry_is_bounded() {
+        let st = Arc::new(ServerState::new_lazy(Device::pixel5(), 700, 3));
+        let mut session = st.session();
+        let builtin = st.read_registry().len();
+        for i in 0..MAX_DEVICES - builtin {
+            let reply = st.handle(&mut session, &format!("CALIBRATE filler{i} base=pixel5"));
+            assert!(reply.starts_with("OK calibrated"), "{reply}");
+        }
+        assert!(st
+            .handle(&mut session, "CALIBRATE onemore base=pixel5")
+            .starts_with("ERR device registry full"));
+        // recalibrating an existing device still works at the cap
+        assert!(st
+            .handle(&mut session, "CALIBRATE filler0 cpu.launch_us=9.0")
+            .starts_with("OK calibrated filler0"));
     }
 
     #[test]

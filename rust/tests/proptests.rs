@@ -268,7 +268,7 @@ fn prop_plan_cache_transparent_and_keys_collision_free() {
         // key uniqueness: one key per distinct tuple, for both mechanisms
         for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
             tuples.insert((op, threads, mech));
-            keys.insert(PlanKey { device: device.name(), op, threads, mech });
+            keys.insert(PlanKey { device: device.name(), epoch: 0, op, threads, mech });
         }
     }
     assert_eq!(
@@ -281,6 +281,109 @@ fn prop_plan_cache_transparent_and_keys_collision_free() {
         tuples.iter().map(|(op, t, _)| (*op, *t)).collect();
     assert_eq!(cache.len(), planned.len());
     assert_eq!(cache.misses() as usize, planned.len());
+}
+
+/// Property: the TTL x LRU interaction is exact. A shadow model replays
+/// every request against the cache's documented semantics — recency on
+/// touch, insertion-stamp TTL (a hit must NOT refresh the lease), expired
+/// entries dropped before capacity eviction — and must agree with the
+/// real cache on every hit/miss. Expiry or eviction never resurrects an
+/// entry (a re-request is a fresh miss whose plan is byte-identical to a
+/// direct plan), and the counters stay conserved:
+/// `misses == live entries + evictions + expired + flushed`.
+#[test]
+fn prop_ttl_lru_expiry_never_resurrects_and_counters_conserve() {
+    use mobile_coexec::partition::{Plan, Planner};
+    use mobile_coexec::server::cache::{CacheClock, ManualClock, PlanCache};
+    use std::collections::HashMap;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let device = Device::pixel5();
+    let planner = Planner::train_for_kind(&device, "linear", 500, 47);
+    // a small fixed shape pool so keys collide and churn
+    let shapes: Vec<OpConfig> = (0..8)
+        .map(|i| OpConfig::Linear(LinearConfig::new(8 + i, 64, 128 + 8 * i)))
+        .collect();
+    // plans are deterministic: prime the expected plan per (shape, threads)
+    let mut expected: HashMap<(usize, usize), Plan> = HashMap::new();
+    for (s, op) in shapes.iter().enumerate() {
+        for threads in 1..=2 {
+            expected.insert((s, threads), planner.plan_with_threads(op, threads));
+        }
+    }
+
+    let mut rng = SplitMix64::new(13);
+    for case in 0..4 {
+        let clock = Arc::new(ManualClock::new());
+        let ttl_ms = 40 + 40 * case as u64;
+        const CAP: usize = 4;
+        let cache = PlanCache::with_config(
+            1, // one shard: every key contends for the same capacity
+            CAP,
+            Some(Duration::from_millis(ttl_ms)),
+            clock.clone(),
+        );
+        // shadow model: key -> (insertion stamp, last-use tick)
+        let mut shadow: HashMap<(usize, usize), (u64, u64)> = HashMap::new();
+        let mut tick = 0u64;
+        let mut flushed = 0usize;
+        let mut predicted_misses = 0u64;
+
+        for step in 0..120 {
+            // jump time by 0-30ms: short next to the TTL sometimes, far
+            // past it after a few quiet steps
+            clock.advance_ms(rng.gen_range(0, 30) as u64);
+            let now = clock.now_ms();
+            let key = (rng.gen_range(0, shapes.len() - 1), rng.gen_range(1, 2));
+            tick += 1;
+            let live = shadow
+                .get(&key)
+                .is_some_and(|(stamp, _)| now.saturating_sub(*stamp) <= ttl_ms);
+            if live {
+                shadow.get_mut(&key).unwrap().1 = tick; // recency bump
+            } else {
+                predicted_misses += 1;
+                // the cache drops a touched-but-expired entry first, then
+                // purges expired before evicting LRU on a full shard
+                shadow.remove(&key);
+                shadow.retain(|_, (stamp, _)| now.saturating_sub(*stamp) <= ttl_ms);
+                if shadow.len() >= CAP {
+                    let lru = *shadow.iter().min_by_key(|(_, (_, t))| *t).map(|(k, _)| k).unwrap();
+                    shadow.remove(&lru);
+                }
+                shadow.insert(key, (now, tick));
+            }
+
+            let misses_before = cache.misses();
+            let plan = cache.get_or_plan(&planner, &shapes[key.0], key.1);
+            assert_eq!(
+                plan, expected[&key],
+                "case {case} step {step}: a cached/re-planned entry diverged"
+            );
+            let was_miss = cache.misses() > misses_before;
+            assert_eq!(
+                was_miss, !live,
+                "case {case} step {step}: cache and shadow disagree on hit/miss for {key:?}"
+            );
+
+            // occasional full flush, mirrored in the shadow
+            if rng.next_f64() < 0.04 {
+                flushed += cache.flush();
+                shadow.clear();
+            }
+
+            // conservation: every miss inserted exactly one entry; entries
+            // only leave by eviction, expiry, or flush (len() sweeps, so
+            // the live count is exact at observation time)
+            assert_eq!(
+                cache.misses() as usize,
+                cache.len() + cache.evictions() as usize + cache.expired() as usize + flushed,
+                "case {case} step {step}: counter conservation violated"
+            );
+            assert_eq!(cache.misses(), predicted_misses, "case {case} step {step}");
+        }
+    }
 }
 
 /// Property: measurement noise is unbiased (mean factor ~1) and

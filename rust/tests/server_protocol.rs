@@ -266,9 +266,22 @@ fn every_err_path_over_loopback() {
         ("PLAN_MODEL alexnet 3", "ERR unknown model alexnet"),
         ("PLAN_MODEL resnet18", "ERR bad model spec"),
         ("PLAN_MODEL resnet18 0", "ERR threads must be >= 1"),
+        // calibration: bad names, missing base, bad keys/values — every
+        // failure is an ERR that mutates neither registry nor cache
+        ("CALIBRATE", "ERR bad calibration (expected"),
+        ("CALIBRATE phone!", "ERR bad device name"),
+        ("CALIBRATE 9phone base=pixel5", "ERR bad device name"),
+        ("CALIBRATE all base=pixel5", "ERR bad device name"),
+        ("CALIBRATE nodev cpu.launch_us=5", "ERR unknown device nodev"),
+        ("CALIBRATE nodev base=iphone15", "ERR unknown base device iphone15"),
+        ("CALIBRATE nodev base=pixel5 bogus.key=1", "ERR unknown calibration key"),
+        ("CALIBRATE nodev base=pixel5 gpu.clock_ghz=slow", "ERR malformed calibration value"),
+        ("CALIBRATE nodev base=pixel5 sync.noise_sigma=0.9", "ERR calibration value"),
+        ("CALIBRATE nodev base=pixel5 gpu.compute_units=2.5", "ERR calibration value"),
+        ("CALIBRATE nodev base=pixel5 threads", "ERR bad calibration parameter"),
         // known verbs with wrong arity name the verb, not "unknown command"
         ("PING extra", "ERR bad request (expected: PING)"),
-        ("FLUSH now", "ERR bad request (expected: FLUSH)"),
+        ("FLUSH now", "ERR bad request (expected: FLUSH [all])"),
         ("STATS now", "ERR bad request (expected: STATS)"),
         // unknown command / empty line
         ("FROBNICATE 1 2", "ERR unknown command FROBNICATE"),
@@ -373,6 +386,161 @@ fn flush_drops_plans_and_resolutions_over_loopback() {
     assert_eq!(c.request("FLUSH"), "OK flushed=0");
 }
 
+#[test]
+fn flush_is_scoped_to_the_session_device() {
+    // regression: a global FLUSH used to evict every device's hot plans
+    // when only one device's calibration changed — flushing device A must
+    // leave device B's entries as warm hits
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 400, 59));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    let on_pixel5 = c.request("PLAN linear 50 768 1024 2");
+    c.request("DEVICE moto2022");
+    let on_moto = c.request("PLAN linear 50 768 1024 2");
+    assert!(on_moto.starts_with("OK "), "{on_moto}");
+
+    // flushing while on moto drops exactly moto's one entry
+    assert_eq!(c.request("FLUSH"), "OK flushed=1");
+
+    // pixel5 stayed warm: byte-identical reply, via the cache
+    let hits = state.cache.hits();
+    c.request("DEVICE pixel5");
+    assert_eq!(c.request("PLAN linear 50 768 1024 2"), on_pixel5);
+    assert_eq!(state.cache.hits(), hits + 1, "flushing A must leave B warm");
+
+    // moto re-plans (deterministically, same bytes)
+    let misses = state.cache.misses();
+    c.request("DEVICE moto2022");
+    assert_eq!(c.request("PLAN linear 50 768 1024 2"), on_moto);
+    assert_eq!(state.cache.misses(), misses + 1, "flushed device must re-plan");
+
+    // FLUSH all keeps the old global behavior
+    let entries = state.cache.len();
+    assert!(entries >= 2);
+    assert_eq!(c.request("FLUSH all"), format!("OK flushed={entries}"));
+    assert!(state.cache.is_empty());
+}
+
+// ------------------------------------------------------------ CALIBRATE --
+
+#[test]
+fn calibrate_roundtrip_serves_every_verb_like_a_builtin() {
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 400, 61));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    // baseline plan on the built-in base device
+    let base_plan = c.request("PLAN linear 50 768 3072 2");
+
+    // upload a pixel5 variant with a much faster GPU, then select it
+    let reply = c.request("CALIBRATE labphone base=pixel5 gpu.clock_ghz=0.95 gpu.compute_units=8");
+    assert_eq!(reply, "OK calibrated labphone flushed=0");
+    assert_eq!(c.request("DEVICE labphone"), "OK device labphone");
+
+    // PLAN: deterministic, warm-cached, and actually *different* from the
+    // base device (the calibration must reach the planner)
+    let plan = c.request("PLAN linear 50 768 3072 2");
+    assert!(plan.starts_with("OK "), "{plan}");
+    assert_ne!(plan, base_plan, "a faster GPU must change the plan");
+    let hits = state.cache.hits();
+    assert_eq!(c.request("PLAN linear 50 768 3072 2"), plan, "warm plan byte-identical");
+    assert_eq!(state.cache.hits(), hits + 1, "repeat must be a cache hit");
+
+    // auto resolves once and shares the entry with its fixed equivalent
+    let auto = c.request("PLAN linear 64 512 2048 auto");
+    assert!(auto.starts_with("OK "), "{auto}");
+    let threads = kv(&auto, "threads").to_string();
+    let mech = kv(&auto, "mech").to_string();
+    let hits = state.cache.hits();
+    assert_eq!(c.request("PLAN linear 64 512 2048 auto"), auto, "warm auto byte-identical");
+    if mech == "svm_polling" {
+        let fixed = c.request(&format!("PLAN linear 64 512 2048 {threads}"));
+        assert_eq!(plan_nums(&fixed), plan_nums(&auto), "fixed shares the auto entry");
+    }
+    assert!(state.cache.hits() > hits, "warm auto must hit");
+
+    // RUN and PLAN_BATCH flow through the same cache
+    let run = c.request("RUN linear 50 768 3072 2");
+    assert!(run.starts_with("OK "), "{run}");
+    assert_eq!(kv(&run, "threads"), "2");
+    let lines = c.request_batch("PLAN_BATCH linear 50 768 3072 2; linear 50 768 3072 2");
+    assert_eq!(lines.len(), 2);
+    assert_eq!(lines[0], plan, "batch shares the single-PLAN entry");
+    assert_eq!(lines[1], lines[0]);
+
+    // PLAN_MODEL (auto) works end to end on the calibrated device
+    let pm = c.request("PLAN_MODEL resnet18 auto");
+    assert!(pm.starts_with("OK model=resnet18"), "{pm}");
+
+    // telemetry: the verb is first-class in STATS
+    let stats = c.request("STATS");
+    assert_eq!(kv(&stats, "calibrate.req"), "1", "{stats}");
+
+    // recalibrate: only labphone's entries drop; pixel5 stays warm
+    let pixel5_entries_probe = {
+        let hits = state.cache.hits();
+        let mut probe = Client::connect(&addr);
+        assert_eq!(probe.request("PLAN linear 50 768 3072 2"), base_plan);
+        state.cache.hits() > hits
+    };
+    assert!(pixel5_entries_probe, "pixel5's original entry must still be warm");
+    let flushed: usize = {
+        let reply = c.request("CALIBRATE labphone gpu.clock_ghz=0.6");
+        assert!(reply.starts_with("OK calibrated labphone flushed="), "{reply}");
+        reply.rsplit_once('=').unwrap().1.parse().unwrap()
+    };
+    assert!(flushed >= 2, "labphone's plans must have been invalidated: {flushed}");
+    let hits = state.cache.hits();
+    let mut probe = Client::connect(&addr);
+    assert_eq!(probe.request("PLAN linear 50 768 3072 2"), base_plan);
+    assert_eq!(state.cache.hits(), hits + 1, "recalibrating labphone must leave pixel5 warm");
+
+    // the recalibrated labphone re-plans against its *new* spec
+    let misses = state.cache.misses();
+    let replanned = c.request("PLAN linear 50 768 3072 2");
+    assert!(replanned.starts_with("OK "), "{replanned}");
+    assert_eq!(state.cache.misses(), misses + 1, "post-calibration plan must miss");
+    assert_ne!(replanned, plan, "a slower GPU must change the plan");
+}
+
+#[test]
+fn stale_resolution_cannot_pin_pre_recalibration_strategy() {
+    // calibration audit: the auto-resolution index must die with the
+    // plans on CALIBRATE — a stale resolution would otherwise pin the
+    // pre-recalibration strategy on the next auto request
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 400, 53));
+    let mut session = state.session();
+    let auto = state.handle(&mut session, "PLAN linear 64 512 2048 auto");
+    assert!(auto.starts_with("OK "), "{auto}");
+    let akey = AutoKey {
+        device: Device::pixel5().name(),
+        epoch: 0,
+        op: OpConfig::Linear(LinearConfig::new(64, 512, 2048)),
+        req: mobile_coexec::partition::PlanRequest::auto(),
+    };
+    assert!(state.cache.peek_resolution(&akey).is_some());
+
+    let reply = state.handle(
+        &mut session,
+        "CALIBRATE pixel5 cpu.gmacs_per_thread=50 cpu.mem_bw_gbps=40",
+    );
+    assert!(reply.starts_with("OK calibrated pixel5 flushed="), "{reply}");
+    assert!(
+        state.cache.peek_resolution(&akey).is_none(),
+        "stale resolution must not survive CALIBRATE"
+    );
+
+    // the re-request re-resolves against the new calibration (a planning
+    // miss), instead of riding the dead resolution
+    let misses = state.cache.misses();
+    let re = state.handle(&mut session, "PLAN linear 64 512 2048 auto");
+    assert!(re.starts_with("OK "), "{re}");
+    assert_eq!(state.cache.misses(), misses + 1, "post-calibration auto must re-resolve");
+}
+
 // ------------------------------------------------------ format stability --
 
 #[test]
@@ -424,7 +592,7 @@ fn response_formats_are_stable() {
         assert!(kv.contains('='), "non key=value token {kv:?} in {stats}");
     }
     let mut last = 0;
-    for key in ["hits=", "misses=", "entries="] {
+    for key in ["hits=", "misses=", "entries=", "evictions=", "expired="] {
         let pos = body.find(key).unwrap_or_else(|| panic!("missing {key}"));
         assert!(pos >= last, "{key} out of order");
         last = pos;
@@ -435,6 +603,7 @@ fn response_formats_are_stable() {
         "plan_batch",
         "run",
         "device",
+        "calibrate",
         "plan_model",
         "flush",
         "stats",
@@ -467,11 +636,11 @@ fn threads_clamped_to_device_core_count() {
     let device = Device::pixel5().name();
     let mech = mobile_coexec::device::SyncMechanism::SvmPolling;
     assert!(
-        state.cache.peek(&PlanKey { device, op, threads: 3, mech }).is_some(),
+        state.cache.peek(&PlanKey { device, epoch: 0, op, threads: 3, mech }).is_some(),
         "clamped request must be cached under threads=3"
     );
     assert!(
-        state.cache.peek(&PlanKey { device, op, threads: 99, mech }).is_none(),
+        state.cache.peek(&PlanKey { device, epoch: 0, op, threads: 99, mech }).is_none(),
         "no unclamped key may be created"
     );
 }
@@ -615,6 +784,7 @@ fn auto_resolution_survives_plan_eviction() {
 
     let akey = AutoKey {
         device: Device::pixel5().name(),
+        epoch: 0,
         op: OpConfig::Linear(LinearConfig::new(64, 512, 2048)),
         req: mobile_coexec::partition::PlanRequest::auto(),
     };
