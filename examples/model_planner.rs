@@ -45,10 +45,11 @@ fn main() {
                     if plan.split.is_coexec() {
                         coexec_layers += 1;
                         println!(
-                            "  [{i:2}] {op} -> CPU {:4} | GPU {:4}  ({} thr, {:?}, pred {:.0} us)",
+                            "  [{i:2}] {op} -> CPU {:4} | GPU {:4}  ({} thr on {}, {:?}, pred {:.0} us)",
                             plan.split.c_cpu,
                             plan.split.c_gpu,
                             plan.threads,
+                            plan.cluster,
                             plan.mech,
                             plan.t_total_us
                         );

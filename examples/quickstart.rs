@@ -9,7 +9,7 @@
 //! (50, 768) x (768, 3072), and compares the measured co-execution latency
 //! against GPU-only execution — the paper's headline workflow in ~40 lines.
 
-use mobile_coexec::device::{Device, Processor, SyncMechanism};
+use mobile_coexec::device::{ClusterId, Device, Processor, SyncMechanism};
 use mobile_coexec::ops::{LinearConfig, OpConfig};
 use mobile_coexec::partition::{grid_search, Planner};
 
@@ -39,7 +39,8 @@ fn main() {
     println!("co-execution:         {t_co:.0} us  -> {:.2}x speedup", t_gpu / t_co);
 
     // 4. Sanity: how close is the plan to the measured grid-search oracle?
-    let (oracle_split, t_oracle) = grid_search(&device, &op, 3, SyncMechanism::SvmPolling, 16);
+    let (oracle_split, t_oracle) =
+        grid_search(&device, &op, ClusterId::Prime, 3, SyncMechanism::SvmPolling, 16);
     println!(
         "grid-search oracle: CPU {} | GPU {} at {t_oracle:.0} us ({:.2}x) — planner is within {:.1}%",
         oracle_split.c_cpu,

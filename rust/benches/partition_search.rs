@@ -2,13 +2,18 @@
 //! Cout, the joint strategy search's overhead vs a fixed plan, and the
 //! measured grid-search oracle cost both replace.
 //!
-//! Gate: a fully `Auto` plan (3 thread counts x 2 mechanisms) must stay
-//! within 4x the cost of a fixed plan. Shared GPU predictions, the
-//! analytic mechanism prune, and the per-candidate dominated-thread prune
-//! (see `partition` module docs) keep it there.
+//! Gates: a fully `Auto` plan (3 thread counts x 2 mechanisms on the big
+//! cluster) must stay within 4x the cost of a fixed plan, and a 4-axis
+//! cluster-`Auto` plan (every cluster x its thread budget x 2
+//! mechanisms — 10 placements on pixel5) within the same 4x multiple of
+//! the `Auto` plan. Shared GPU predictions, the analytic mechanism
+//! prune, and the per-candidate dominated-placement prune (see
+//! `partition` module docs) keep both there: each extra strategy point
+//! costs at most one extra (usually pruned) CPU GBDT evaluation per
+//! candidate split, never its own split sweep.
 
 use mobile_coexec::benchutil::{bench, report_scalar};
-use mobile_coexec::device::{Device, SyncMechanism};
+use mobile_coexec::device::{ClusterId, Device, SyncMechanism};
 use mobile_coexec::ops::{LinearConfig, OpConfig};
 use mobile_coexec::partition::{grid_search, PlanRequest, Planner};
 
@@ -39,8 +44,33 @@ fn main() {
         "acceptance: auto planning must stay within 4x a fixed plan ({ratio:.2}x)"
     );
 
+    // the 4-axis gate: the bench() warm-up iterations absorb the one-time
+    // lazy training of the gold/silver placement predictors, so the timed
+    // region measures the search itself
+    let cluster_auto = bench("plan_cluster_auto_cout3072", 2, 30, || {
+        std::hint::black_box(planner.plan_request(&op, PlanRequest::cluster_auto()));
+    });
+    let cratio = cluster_auto.mean_us / auto.mean_us;
+    report_scalar("plan_cluster_auto", "cluster_auto_over_auto_cost", cratio);
+    report_scalar(
+        "plan_cluster_auto",
+        "cluster_auto_over_fixed_cost",
+        cluster_auto.mean_us / fixed.mean_us,
+    );
+    assert!(
+        cratio <= 4.0,
+        "acceptance: the 4-axis search must stay within 4x the auto plan ({cratio:.2}x)"
+    );
+
     // the oracle the planner replaces (simulated measurements, step 8)
     bench("grid_search_oracle_cout3072", 1, 10, || {
-        std::hint::black_box(grid_search(&device, &op, 3, SyncMechanism::SvmPolling, 5));
+        std::hint::black_box(grid_search(
+            &device,
+            &op,
+            ClusterId::Prime,
+            3,
+            SyncMechanism::SvmPolling,
+            5,
+        ));
     });
 }

@@ -1,16 +1,31 @@
-//! XNNPACK-like mobile CPU cost model.
+//! XNNPACK-like mobile CPU cost model over a heterogeneous cluster set.
 //!
 //! The paper's CPU side runs XNNPACK GEMM/IGEMM micro-kernels (its §1:
 //! "high-performance implementations based on advanced SIMD instructions
-//! for ARM CPUs") with 1–3 threads pinned to the big cores. The model
-//! reproduces the structure that matters for partitioning decisions:
+//! for ARM CPUs") with 1–3 threads pinned to the big cores. Real mobile
+//! SoCs expose more placement freedom than that: prime / gold / silver
+//! CPU clusters differ several-fold in throughput, bandwidth share, and
+//! wake-up cost (see "Characterizing Mobile SoC for Accelerating
+//! Heterogeneous LLM Inference", PAPERS.md), and co-execution wins or
+//! loses on *which* cluster runs the CPU half as much as on how many
+//! threads it uses. The model therefore reproduces, per cluster, the
+//! structure that matters for partitioning decisions:
 //!
 //! * `mr x nr` micro-kernel tiling — work is the *padded* output tile grid,
 //!   so latency steps at tile boundaries (ceil effects);
-//! * thread scaling through a per-device efficiency table — mobile SoCs are
-//!   heterogeneous (1 prime + N gold + M silver), so the 3rd thread often
-//!   adds less than the 2nd (visible in the paper's Table 2 deltas);
-//! * a bandwidth floor and a small per-op launch overhead.
+//! * thread scaling through a per-cluster, per-count efficiency table
+//!   whose *length* is the cluster's thread budget — nothing hardcodes a
+//!   1..=3 range, [`ClusterSpec::max_threads`] is data-driven;
+//! * a per-cluster bandwidth share and per-op launch overhead (little
+//!   clusters are slower per MAC but often cheaper to wake, so tiny ops
+//!   can genuinely prefer them).
+//!
+//! A [`CpuSpec`] is the ordered set of clusters one SoC offers. Its first
+//! cluster is always [`ClusterId::Prime`] — the paper's big-core set —
+//! and is the default placement everywhere (protocol requests without a
+//! `cluster=` parameter, [`crate::device::Processor::Cpu`], the
+//! pre-cluster `cpu.*` calibration keys), which keeps every pre-cluster
+//! request byte-compatible with the single-cluster model this replaced.
 
 use crate::ops::{ConvConfig, LinearConfig};
 
@@ -19,41 +34,116 @@ pub const MR: usize = 6;
 /// XNNPACK f32 GEMM micro-kernel columns.
 pub const NR: usize = 8;
 
-/// One CPU cluster's parameters (calibrated per device, see `soc.rs`).
+/// Most threads a single cluster's efficiency table may model: real
+/// mobile clusters top out at 4-6 cores, and the calibration surface
+/// (`cpu.<cluster>.effN`) must stay enumerable.
+pub const MAX_CLUSTER_THREADS: usize = 8;
+
+/// Which CPU cluster of the SoC runs the CPU side of an op.
+///
+/// The discriminant is stable (it keys measurement-noise streams and
+/// reporting order), and the wire names are the serving protocol's
+/// `cluster=` values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ClusterId {
+    /// The big-core set the paper pins its 1-3 threads to (prime +
+    /// performance cores) — always present, always the default.
+    Prime,
+    /// Mid/performance cores scheduled as their own cluster.
+    Gold,
+    /// Little / efficiency cores.
+    Silver,
+}
+
+impl ClusterId {
+    /// Every cluster id, in reporting order (prime first).
+    pub const ALL: [ClusterId; 3] = [ClusterId::Prime, ClusterId::Gold, ClusterId::Silver];
+
+    /// Wire name (`cluster=` protocol values, calibration-key segment).
+    pub fn wire(self) -> &'static str {
+        match self {
+            ClusterId::Prime => "prime",
+            ClusterId::Gold => "gold",
+            ClusterId::Silver => "silver",
+        }
+    }
+
+    /// Parse a wire name, case-insensitively.
+    pub fn parse(s: &str) -> Option<ClusterId> {
+        ClusterId::ALL.into_iter().find(|c| c.wire().eq_ignore_ascii_case(s))
+    }
+
+    /// Stable small index (noise-stream tags, distribution ordering).
+    pub fn index(self) -> usize {
+        match self {
+            ClusterId::Prime => 0,
+            ClusterId::Gold => 1,
+            ClusterId::Silver => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for ClusterId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.wire())
+    }
+}
+
+/// One CPU cluster's calibrated parameters (see `soc.rs` for the four
+/// paper phones' values and the `cpu.<cluster>.*` calibration keys).
 #[derive(Debug, Clone)]
-pub struct CpuSpec {
-    /// Sustained f32 GMACs/s of one big-core thread on GEMM.
+pub struct ClusterSpec {
+    pub id: ClusterId,
+    /// Sustained f32 GMACs/s of one thread of this cluster on GEMM.
     pub gmacs_per_thread: f64,
-    /// Cumulative scaling for 1..=3 threads (heterogeneous big.LITTLE:
-    /// `[1.0, ~1.9, ~2.2-2.8]`).
-    pub thread_efficiency: [f64; 3],
-    /// Effective memory bandwidth available to the CPU cluster, GB/s.
+    /// Cumulative scaling for `1..=max_threads` threads; `efficiency[0]`
+    /// is 1.0 by definition and the table length *is* the cluster's
+    /// thread budget (e.g. prime `[1.0, ~1.9, ~2.2-2.8]`, a 4-core
+    /// silver cluster `[1.0, ~1.95, ~2.8, ~3.6]`).
+    pub efficiency: Vec<f64>,
+    /// Effective memory bandwidth share of this cluster, GB/s.
     pub mem_bw_gbps: f64,
     /// Per-op launch overhead in microseconds (thread-pool wake + pack).
     pub launch_us: f64,
-    /// Measurement noise sigma (multiplicative lognormal).
-    pub noise_sigma: f64,
 }
 
-impl CpuSpec {
+impl ClusterSpec {
+    /// Largest thread count this cluster's cost model supports — the
+    /// length of its calibrated efficiency table, entirely data-driven.
+    pub fn max_threads(&self) -> usize {
+        self.efficiency.len()
+    }
+
     fn rate_gmacs(&self, threads: usize) -> f64 {
-        assert!((1..=3).contains(&threads), "paper uses 1-3 CPU threads");
-        self.gmacs_per_thread * self.thread_efficiency[threads - 1]
+        assert!(
+            (1..=self.max_threads()).contains(&threads),
+            "{} cluster supports 1..={} threads, got {threads}",
+            self.id,
+            self.max_threads()
+        );
+        self.gmacs_per_thread * self.efficiency[threads - 1]
     }
 
     /// GEMM over a padded `ceil(M/mr) x ceil(N/nr)` tile grid, with the tile
     /// columns distributed across threads (XNNPACK parallelizes the `N`
     /// dimension for inference GEMMs); ragged division leaves threads idle.
     fn gemm_us(&self, m: usize, n: usize, k: usize, threads: usize) -> f64 {
+        assert!(
+            (1..=self.max_threads()).contains(&threads),
+            "{} cluster supports 1..={} threads, got {threads}",
+            self.id,
+            self.max_threads()
+        );
         let row_tiles = m.div_ceil(MR);
         let col_tiles = n.div_ceil(NR);
         // per-thread share of column tiles, ceil -> the slowest thread
         // bounds the op's latency
         let share = col_tiles.div_ceil(threads);
         let slowest_macs = (row_tiles * MR * share * NR) as f64 * k as f64;
-        // thread_efficiency folds contention: the per-thread rate drops to
-        // eff/threads of the single-thread rate when `threads` run together.
-        let eff = self.thread_efficiency[threads - 1] / threads as f64;
+        // the efficiency table folds contention: the per-thread rate drops
+        // to eff/threads of the single-thread rate when `threads` run
+        // together.
+        let eff = self.efficiency[threads - 1] / threads as f64;
         slowest_macs / (self.gmacs_per_thread * 1e3 * eff)
     }
 
@@ -82,12 +172,76 @@ impl CpuSpec {
     pub fn effective_gmacs(&self, threads: usize) -> f64 {
         self.rate_gmacs(threads)
     }
+}
 
-    /// Largest thread count the cost model supports — the device's
-    /// big-core budget (the paper pins 1-3 threads to the big cluster).
-    /// The serving layer clamps client-requested thread counts to this.
+/// A device's full CPU complex: every cluster the planner may place the
+/// CPU half of an op on, plus the device-wide measurement-noise level.
+#[derive(Debug, Clone)]
+pub struct CpuSpec {
+    /// The placement options, default (prime, the paper's big-core set)
+    /// first. Validated by `SocSpec::validate`: non-empty, prime-led,
+    /// ids unique.
+    pub clusters: Vec<ClusterSpec>,
+    /// Measurement noise sigma (multiplicative lognormal), shared by all
+    /// clusters — it models the *measurement* substrate, not a core type.
+    pub noise_sigma: f64,
+}
+
+impl CpuSpec {
+    /// The default placement: the paper's big-core cluster (always the
+    /// first entry, always [`ClusterId::Prime`]).
+    pub fn default_cluster(&self) -> &ClusterSpec {
+        &self.clusters[0]
+    }
+
+    /// The default cluster's id ([`ClusterId::Prime`] on every valid spec).
+    pub fn default_cluster_id(&self) -> ClusterId {
+        self.default_cluster().id
+    }
+
+    /// Look up a cluster by id (`None` if this SoC does not expose it).
+    pub fn cluster(&self, id: ClusterId) -> Option<&ClusterSpec> {
+        self.clusters.iter().find(|c| c.id == id)
+    }
+
+    /// Mutable cluster lookup (the calibration surface).
+    pub fn cluster_mut(&mut self, id: ClusterId) -> Option<&mut ClusterSpec> {
+        self.clusters.iter_mut().find(|c| c.id == id)
+    }
+
+    /// Thread budget of the *default* (prime) cluster — what a plan
+    /// request without a cluster choice clamps against, matching the
+    /// pre-cluster behavior of this type.
     pub fn max_threads(&self) -> usize {
-        self.thread_efficiency.len()
+        self.default_cluster().max_threads()
+    }
+
+    /// Largest thread budget across all clusters (normalization bound for
+    /// requests that leave the cluster choice to the planner).
+    pub fn max_threads_any(&self) -> usize {
+        self.clusters.iter().map(ClusterSpec::max_threads).max().unwrap_or(1)
+    }
+
+    /// Linear-layer latency on a cluster (noiseless), microseconds.
+    /// Panics if the SoC has no such cluster (the serving layer validates
+    /// cluster choices per device before planning).
+    pub fn linear_latency_us(&self, cfg: &LinearConfig, cluster: ClusterId, threads: usize) -> f64 {
+        self.expect_cluster(cluster).linear_latency_us(cfg, threads)
+    }
+
+    /// Convolution latency on a cluster (noiseless), microseconds.
+    pub fn conv_latency_us(&self, cfg: &ConvConfig, cluster: ClusterId, threads: usize) -> f64 {
+        self.expect_cluster(cluster).conv_latency_us(cfg, threads)
+    }
+
+    /// Effective GMACs/s of a cluster at a thread count.
+    pub fn effective_gmacs(&self, cluster: ClusterId, threads: usize) -> f64 {
+        self.expect_cluster(cluster).effective_gmacs(threads)
+    }
+
+    fn expect_cluster(&self, id: ClusterId) -> &ClusterSpec {
+        self.cluster(id)
+            .unwrap_or_else(|| panic!("device has no {id} cluster"))
     }
 }
 
@@ -95,19 +249,35 @@ impl CpuSpec {
 mod tests {
     use super::*;
 
-    fn spec() -> CpuSpec {
-        CpuSpec {
+    fn prime() -> ClusterSpec {
+        ClusterSpec {
+            id: ClusterId::Prime,
             gmacs_per_thread: 20.0,
-            thread_efficiency: [1.0, 1.9, 2.6],
+            efficiency: vec![1.0, 1.9, 2.6],
             mem_bw_gbps: 15.0,
             launch_us: 6.0,
+        }
+    }
+
+    fn spec() -> CpuSpec {
+        CpuSpec {
+            clusters: vec![
+                prime(),
+                ClusterSpec {
+                    id: ClusterId::Silver,
+                    gmacs_per_thread: 5.0,
+                    efficiency: vec![1.0, 1.95, 2.8, 3.6],
+                    mem_bw_gbps: 8.0,
+                    launch_us: 3.5,
+                },
+            ],
             noise_sigma: 0.0,
         }
     }
 
     #[test]
     fn more_threads_is_faster_but_sublinear() {
-        let s = spec();
+        let s = prime();
         let cfg = LinearConfig::new(50, 768, 3072);
         let t1 = s.linear_latency_us(&cfg, 1);
         let t2 = s.linear_latency_us(&cfg, 2);
@@ -118,7 +288,7 @@ mod tests {
 
     #[test]
     fn latency_scales_with_channels() {
-        let s = spec();
+        let s = prime();
         let half = s.linear_latency_us(&LinearConfig::new(50, 768, 1536), 1);
         let full = s.linear_latency_us(&LinearConfig::new(50, 768, 3072), 1);
         assert!(full > 1.8 * half && full < 2.2 * half);
@@ -127,7 +297,7 @@ mod tests {
     #[test]
     fn tile_ceil_steps() {
         // crossing an NR boundary adds a full tile column of work
-        let s = spec();
+        let s = prime();
         let a = s.linear_latency_us(&LinearConfig::new(50, 768, 64), 1);
         let b = s.linear_latency_us(&LinearConfig::new(50, 768, 65), 1);
         let c = s.linear_latency_us(&LinearConfig::new(50, 768, 72), 1);
@@ -140,7 +310,7 @@ mod tests {
     fn conv_igemm_vs_linear_equivalence() {
         // A 1x1 conv over P positions == linear with L = P (modulo the
         // small IGEMM factor).
-        let s = spec();
+        let s = prime();
         let conv = ConvConfig::new(32, 32, 128, 256, 1, 1);
         let lin = LinearConfig::new(32 * 32, 128, 256);
         let tc = s.conv_latency_us(&conv, 2);
@@ -150,23 +320,59 @@ mod tests {
 
     #[test]
     fn launch_floor() {
-        let s = spec();
+        let s = prime();
         assert!(s.linear_latency_us(&LinearConfig::new(1, 4, 4), 1) >= s.launch_us);
     }
 
     #[test]
     #[should_panic]
     fn zero_threads_rejected() {
-        spec().effective_gmacs(0);
+        prime().effective_gmacs(0);
     }
 
     #[test]
-    fn max_threads_matches_efficiency_table() {
+    #[should_panic]
+    fn over_budget_threads_rejected() {
+        // no hardcoded 1..=3 anywhere: the budget is the table length
+        prime().effective_gmacs(4);
+    }
+
+    #[test]
+    fn max_threads_is_table_driven_per_cluster() {
         let s = spec();
-        assert_eq!(s.max_threads(), 3);
-        // the whole supported range must be valid
-        for t in 1..=s.max_threads() {
-            assert!(s.effective_gmacs(t) > 0.0);
+        assert_eq!(s.max_threads(), 3, "default = prime budget");
+        assert_eq!(s.max_threads_any(), 4, "silver's longer table wins");
+        assert_eq!(s.cluster(ClusterId::Silver).unwrap().max_threads(), 4);
+        assert!(s.cluster(ClusterId::Gold).is_none());
+        // the whole supported range of every cluster must be valid
+        for c in &s.clusters {
+            for t in 1..=c.max_threads() {
+                assert!(c.effective_gmacs(t) > 0.0);
+            }
         }
+    }
+
+    #[test]
+    fn little_cluster_is_slower_but_cheaper_to_launch() {
+        let s = spec();
+        let cfg = LinearConfig::new(50, 768, 3072);
+        let big = s.linear_latency_us(&cfg, ClusterId::Prime, 3);
+        let little = s.linear_latency_us(&cfg, ClusterId::Silver, 4);
+        assert!(little > big, "silver must lose on a large GEMM");
+        // ...but a tiny op is launch-dominated and can prefer silver
+        let tiny = LinearConfig::new(1, 8, 8);
+        let big_tiny = s.linear_latency_us(&tiny, ClusterId::Prime, 1);
+        let little_tiny = s.linear_latency_us(&tiny, ClusterId::Silver, 1);
+        assert!(little_tiny < big_tiny, "silver must win the launch-bound op");
+    }
+
+    #[test]
+    fn cluster_ids_roundtrip_wire_names() {
+        for id in ClusterId::ALL {
+            assert_eq!(ClusterId::parse(id.wire()), Some(id));
+            assert_eq!(ClusterId::parse(&id.wire().to_uppercase()), Some(id));
+        }
+        assert_eq!(ClusterId::parse("mega"), None);
+        assert_eq!(ClusterId::Prime.index(), 0);
     }
 }

@@ -16,7 +16,7 @@ pub mod noise;
 pub mod soc;
 pub mod sync_model;
 
-pub use cpu::CpuSpec;
+pub use cpu::{ClusterId, ClusterSpec, CpuSpec};
 pub use gpu::{GpuDispatch, GpuSpec, KernelImpl};
 pub use soc::{validate_device_name, SocSpec, CALIBRATION_KEYS};
 pub use sync_model::{SyncMechanism, SyncSpec};
@@ -42,9 +42,15 @@ pub fn intern_device_name(name: &str) -> &'static str {
 }
 
 /// A compute processor choice for one op.
+///
+/// `Cpu(n)` means `n` threads on the device's *default* (prime) cluster —
+/// the paper's processor set. The cluster axis is threaded explicitly
+/// through the cluster-aware APIs (`measure_cpu`, `measure_coexec`,
+/// `PredictorSet::predict_cpu_us`); this enum stays the paper-shaped
+/// surface that figures, tables, and datasets are written against.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Processor {
-    /// CPU with `n` threads (paper: 1..=3).
+    /// CPU with `n` threads on the default (prime) cluster.
     Cpu(usize),
     Gpu,
 }
@@ -133,11 +139,11 @@ impl Device {
 
     // ---- noiseless model latencies ----
 
-    /// Model CPU latency (µs) for an op at a thread count.
-    pub fn cpu_model_us(&self, op: &OpConfig, threads: usize) -> f64 {
+    /// Model CPU latency (µs) for an op on a cluster at a thread count.
+    pub fn cpu_model_us(&self, op: &OpConfig, cluster: ClusterId, threads: usize) -> f64 {
         match op {
-            OpConfig::Linear(c) => self.spec.cpu.linear_latency_us(c, threads),
-            OpConfig::Conv(c) => self.spec.cpu.conv_latency_us(c, threads),
+            OpConfig::Linear(c) => self.spec.cpu.linear_latency_us(c, cluster, threads),
+            OpConfig::Conv(c) => self.spec.cpu.conv_latency_us(c, cluster, threads),
         }
     }
 
@@ -156,10 +162,16 @@ impl Device {
 
     // ---- noisy measurements ----
 
-    /// One noisy CPU latency measurement (µs).
-    pub fn measure_cpu(&self, op: &OpConfig, threads: usize, trial: u64) -> f64 {
-        let model = self.cpu_model_us(op, threads);
-        model * lognormal_factor(self.op_key(op, 100 + threads as u64, trial), self.spec.cpu.noise_sigma)
+    /// One noisy CPU latency measurement (µs) on a cluster.
+    ///
+    /// Each `(cluster, threads)` pair draws from its own noise stream; the
+    /// prime cluster's tag is the pre-cluster `100 + threads` value, so
+    /// every measurement the single-cluster model produced is reproduced
+    /// bit-for-bit.
+    pub fn measure_cpu(&self, op: &OpConfig, cluster: ClusterId, threads: usize, trial: u64) -> f64 {
+        let model = self.cpu_model_us(op, cluster, threads);
+        let tag = 100 + threads as u64 + 1000 * cluster.index() as u64;
+        model * lognormal_factor(self.op_key(op, tag, trial), self.spec.cpu.noise_sigma)
     }
 
     /// One noisy GPU latency measurement (µs).
@@ -168,10 +180,13 @@ impl Device {
         model * lognormal_factor(self.op_key(op, 200, trial), self.spec.gpu.noise_sigma)
     }
 
-    /// One noisy measurement on a given processor (µs).
+    /// One noisy measurement on a given processor (µs); `Cpu(t)` runs on
+    /// the default (prime) cluster.
     pub fn measure(&self, op: &OpConfig, proc: Processor, trial: u64) -> f64 {
         match proc {
-            Processor::Cpu(t) => self.measure_cpu(op, t, trial),
+            Processor::Cpu(t) => {
+                self.measure_cpu(op, self.spec.cpu.default_cluster_id(), t, trial)
+            }
             Processor::Gpu => self.measure_gpu(op, trial),
         }
     }
@@ -188,25 +203,28 @@ impl Device {
 
     /// One noisy co-execution measurement (µs):
     /// `T_overhead + max(T_cpu(c1), T_gpu(c2))`, with `T_overhead = 0` for
-    /// exclusive execution (paper Section 2's objective).
+    /// exclusive execution (paper Section 2's objective). The CPU half
+    /// runs `threads` threads on `cluster`; the GPU half and the sync
+    /// overhead are cluster-invariant.
     pub fn measure_coexec(
         &self,
         op: &OpConfig,
         split: ChannelSplit,
+        cluster: ClusterId,
         threads: usize,
         mech: SyncMechanism,
         trial: u64,
     ) -> f64 {
         assert_eq!(split.total(), op.cout());
         if split.c_gpu == 0 {
-            return self.measure_cpu(op, threads, trial);
+            return self.measure_cpu(op, cluster, threads, trial);
         }
         if split.c_cpu == 0 {
             return self.measure_gpu(op, trial);
         }
         let cpu_part = op.with_cout(split.c_cpu);
         let gpu_part = op.with_cout(split.c_gpu);
-        let t_cpu = self.measure_cpu(&cpu_part, threads, trial);
+        let t_cpu = self.measure_cpu(&cpu_part, cluster, threads, trial);
         let t_gpu = self.measure_gpu(&gpu_part, trial);
         let overhead = self.sync_overhead_us(mech, op.kind())
             * lognormal_factor(self.op_key(op, 300, trial), self.spec.sync.noise_sigma);
@@ -218,12 +236,13 @@ impl Device {
         &self,
         op: &OpConfig,
         split: ChannelSplit,
+        cluster: ClusterId,
         threads: usize,
         mech: SyncMechanism,
         n: u64,
     ) -> f64 {
         (0..n)
-            .map(|t| self.measure_coexec(op, split, threads, mech, t))
+            .map(|t| self.measure_coexec(op, split, cluster, threads, mech, t))
             .sum::<f64>()
             / n as f64
     }
@@ -256,9 +275,23 @@ mod tests {
     fn noise_is_small_relative() {
         let d = Device::moto2022();
         let op = OpConfig::Linear(LinearConfig::vit_fc1());
-        let model = d.cpu_model_us(&op, 2);
-        let m = d.measure_cpu(&op, 2, 3);
+        let model = d.cpu_model_us(&op, ClusterId::Prime, 2);
+        let m = d.measure_cpu(&op, ClusterId::Prime, 2, 3);
         assert!((m / model - 1.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn clusters_have_independent_noise_streams() {
+        // same op, same thread count: a gold measurement must not reuse
+        // prime's noise draw (and prime's must match the Processor path)
+        let d = Device::pixel4();
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        let prime = d.measure_cpu(&op, ClusterId::Prime, 2, 5);
+        let gold = d.measure_cpu(&op, ClusterId::Gold, 2, 5);
+        let prime_noise = prime / d.cpu_model_us(&op, ClusterId::Prime, 2);
+        let gold_noise = gold / d.cpu_model_us(&op, ClusterId::Gold, 2);
+        assert_ne!(prime_noise, gold_noise, "noise streams must be per-cluster");
+        assert_eq!(d.measure(&op, Processor::Cpu(2), 5), prime);
     }
 
     #[test]
@@ -268,6 +301,7 @@ mod tests {
         let gpu_only = d.measure_coexec(
             &op,
             ChannelSplit::gpu_only(3072),
+            ClusterId::Prime,
             3,
             SyncMechanism::SvmPolling,
             0,
@@ -287,6 +321,7 @@ mod tests {
                 d.measure_coexec_mean(
                     &op,
                     ChannelSplit::new(c1, 3072 - c1),
+                    ClusterId::Prime,
                     3,
                     SyncMechanism::SvmPolling,
                     16,
@@ -306,6 +341,7 @@ mod tests {
         let t = d.measure_coexec(
             &op,
             ChannelSplit::new(64, 128),
+            ClusterId::Prime,
             2,
             SyncMechanism::EventWait,
             0,
@@ -315,6 +351,7 @@ mod tests {
         let tp = d.measure_coexec(
             &op,
             ChannelSplit::new(64, 128),
+            ClusterId::Prime,
             2,
             SyncMechanism::SvmPolling,
             0,

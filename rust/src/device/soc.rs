@@ -9,13 +9,23 @@
 //! * Pixel 4's CPU measurements are the noisiest (its 1-thread CPU MAPE in
 //!   Table 1 is 11.5%); Moto/OnePlus CPUs are very stable (2.4-3.1%);
 //! * the Moto sync constants are the paper's own §4/§5.5 numbers.
+//!
+//! Each phone's CPU is a multi-cluster complex (`device/cpu.rs`): the
+//! `prime` cluster carries the exact single-cluster constants this model
+//! shipped with (the paper's big-core set — byte-compatible defaults),
+//! and the `gold`/`silver` clusters add the mid/little cores with their
+//! own throughput, scaling tables, bandwidth shares, and launch costs,
+//! following the several-fold prime/gold/silver spreads reported by
+//! "Characterizing Mobile SoC for Accelerating Heterogeneous LLM
+//! Inference" (PAPERS.md). Little clusters are slower per MAC but cheaper
+//! to wake, so launch-bound ops can genuinely prefer them.
 
-use super::cpu::CpuSpec;
+use super::cpu::{ClusterId, ClusterSpec, CpuSpec, MAX_CLUSTER_THREADS};
 use super::gpu::GpuSpec;
 use super::sync_model::SyncSpec;
 use anyhow::{anyhow, ensure, Result};
 
-/// A complete mobile SoC model: CPU cluster + GPU + sync fabric.
+/// A complete mobile SoC model: CPU cluster complex + GPU + sync fabric.
 #[derive(Debug, Clone)]
 pub struct SocSpec {
     pub name: &'static str,
@@ -26,17 +36,48 @@ pub struct SocSpec {
 
 /// The calibration surface of a [`SocSpec`]: every `<key>=<value>`
 /// parameter the serving layer's `CALIBRATE` verb accepts, one per spec
-/// field (`cpu.eff2`/`cpu.eff3` are the cumulative 2-/3-thread scaling
-/// entries of `thread_efficiency`; the 1-thread entry is 1.0 by
-/// definition). Kept in one table so the parser, the validator, and the
-/// protocol docs cannot drift apart.
-pub const CALIBRATION_KEYS: [&str; 19] = [
+/// field. CPU keys come in two layers:
+///
+/// * the pre-cluster `cpu.<field>` keys address the **prime** (default
+///   big) cluster, so every calibration line written against the
+///   single-cluster model keeps working unchanged;
+/// * `cpu.<cluster>.<field>` keys (`prime`/`gold`/`silver`) address one
+///   cluster explicitly. `effN` is the cumulative N-thread scaling entry
+///   (`eff1` is 1.0 by definition); setting `effN` one past the table's
+///   end *extends* the cluster's thread budget to N — calibration can
+///   unlock a core the shipped table didn't model, which is also why
+///   `max_threads` is data-driven everywhere. The wire surface is
+///   exactly this table: `effN` stops at [`MAX_CALIBRATED_EFF`]
+///   (embedders constructing [`SocSpec`]s directly may model up to
+///   [`MAX_CLUSTER_THREADS`] threads).
+///
+/// Kept in one table so the parser, the validator, and the protocol docs
+/// cannot drift apart.
+pub const CALIBRATION_KEYS: [&str; 37] = [
     "cpu.gmacs_per_thread",
     "cpu.eff2",
     "cpu.eff3",
     "cpu.mem_bw_gbps",
     "cpu.launch_us",
     "cpu.noise_sigma",
+    "cpu.prime.gmacs_per_thread",
+    "cpu.prime.eff2",
+    "cpu.prime.eff3",
+    "cpu.prime.eff4",
+    "cpu.prime.mem_bw_gbps",
+    "cpu.prime.launch_us",
+    "cpu.gold.gmacs_per_thread",
+    "cpu.gold.eff2",
+    "cpu.gold.eff3",
+    "cpu.gold.eff4",
+    "cpu.gold.mem_bw_gbps",
+    "cpu.gold.launch_us",
+    "cpu.silver.gmacs_per_thread",
+    "cpu.silver.eff2",
+    "cpu.silver.eff3",
+    "cpu.silver.eff4",
+    "cpu.silver.mem_bw_gbps",
+    "cpu.silver.launch_us",
     "gpu.compute_units",
     "gpu.wave_size",
     "gpu.clock_ghz",
@@ -54,7 +95,7 @@ pub const CALIBRATION_KEYS: [&str; 19] = [
 
 /// Validate and canonicalize (lowercase) a client-supplied device name
 /// for registration: 1-32 chars of `[a-z0-9_-]`, starting with a letter,
-/// and not a protocol keyword (`all`, `auto`, `base`).
+/// and not a protocol keyword (`all`, `auto`, `base`, cluster names).
 pub fn validate_device_name(name: &str) -> Result<String> {
     let lower = name.to_ascii_lowercase();
     ensure!(
@@ -69,11 +110,17 @@ pub fn validate_device_name(name: &str) -> Result<String> {
         "bad device name {name:?} (letters, digits, '_', '-'; must start with a letter)"
     );
     ensure!(
-        !matches!(lower.as_str(), "all" | "auto" | "base"),
+        !matches!(lower.as_str(), "all" | "auto" | "base")
+            && ClusterId::parse(&lower).is_none(),
         "bad device name {name:?} (reserved word)"
     );
     Ok(lower)
 }
+
+/// Largest thread-efficiency entry settable over the wire: exactly the
+/// `effN` keys [`CALIBRATION_KEYS`] enumerates, so the accepted surface
+/// and the advertised surface cannot drift apart.
+pub const MAX_CALIBRATED_EFF: usize = 4;
 
 /// Largest accepted calibration value: the cost models divide by most of
 /// these fields, so they must be positive, and products of a few of them
@@ -110,12 +157,27 @@ impl SocSpec {
     /// cross-field checks (e.g. thread-efficiency monotonicity) happen in
     /// [`SocSpec::validate`] once every override has been applied.
     pub fn set_param(&mut self, key: &str, value: f64) -> Result<()> {
+        // cluster-qualified CPU keys: cpu.<prime|gold|silver>.<field>
+        if let Some(rest) = key.strip_prefix("cpu.") {
+            if let Some((cl, field)) = rest.split_once('.') {
+                if let Some(id) = ClusterId::parse(cl) {
+                    return self.set_cluster_param(id, field, value, key);
+                }
+            }
+        }
         match key {
-            "cpu.gmacs_per_thread" => self.cpu.gmacs_per_thread = positive(value, key)?,
-            "cpu.eff2" => self.cpu.thread_efficiency[1] = positive(value, key)?,
-            "cpu.eff3" => self.cpu.thread_efficiency[2] = positive(value, key)?,
-            "cpu.mem_bw_gbps" => self.cpu.mem_bw_gbps = positive(value, key)?,
-            "cpu.launch_us" => self.cpu.launch_us = positive(value, key)?,
+            // pre-cluster aliases: the prime (default big) cluster
+            "cpu.gmacs_per_thread" => {
+                return self.set_cluster_param(ClusterId::Prime, "gmacs_per_thread", value, key)
+            }
+            "cpu.eff2" => return self.set_cluster_param(ClusterId::Prime, "eff2", value, key),
+            "cpu.eff3" => return self.set_cluster_param(ClusterId::Prime, "eff3", value, key),
+            "cpu.mem_bw_gbps" => {
+                return self.set_cluster_param(ClusterId::Prime, "mem_bw_gbps", value, key)
+            }
+            "cpu.launch_us" => {
+                return self.set_cluster_param(ClusterId::Prime, "launch_us", value, key)
+            }
             "cpu.noise_sigma" => self.cpu.noise_sigma = sigma(value, key)?,
             "gpu.compute_units" => self.gpu.compute_units = integer(value, key)?,
             "gpu.wave_size" => self.gpu.wave_size = integer(value, key)?,
@@ -140,25 +202,100 @@ impl SocSpec {
         Ok(())
     }
 
+    /// One cluster's calibration field. `effN` overwrites entry N of the
+    /// cumulative efficiency table, or appends it when N is exactly one
+    /// past the table (growing the cluster's thread budget); gaps are
+    /// rejected so the table stays dense.
+    fn set_cluster_param(
+        &mut self,
+        id: ClusterId,
+        field: &str,
+        value: f64,
+        key: &str,
+    ) -> Result<()> {
+        let cluster = self
+            .cpu
+            .cluster_mut(id)
+            .ok_or_else(|| anyhow!("device has no {id} cluster to calibrate ({key})"))?;
+        if let Some(digits) = field.strip_prefix("eff") {
+            let n: usize = digits
+                .parse()
+                .map_err(|_| anyhow!("unknown calibration key {key}"))?;
+            // only the canonical spelling is a key ("eff+3"/"eff04" parse
+            // to the same number but are not on the advertised surface)
+            ensure!(digits == n.to_string(), "unknown calibration key {key}");
+            ensure!(
+                (2..=MAX_CALIBRATED_EFF).contains(&n),
+                "calibration key {key}: thread-efficiency entries run eff2..eff{MAX_CALIBRATED_EFF}"
+            );
+            let v = positive(value, key)?;
+            match n - 1 {
+                i if i < cluster.efficiency.len() => cluster.efficiency[i] = v,
+                i if i == cluster.efficiency.len() => cluster.efficiency.push(v),
+                _ => {
+                    return Err(anyhow!(
+                        "calibration key {key}: set eff{} first (the table is dense, {} entries so far)",
+                        cluster.efficiency.len() + 1,
+                        cluster.efficiency.len()
+                    ))
+                }
+            }
+            return Ok(());
+        }
+        match field {
+            "gmacs_per_thread" => cluster.gmacs_per_thread = positive(value, key)?,
+            "mem_bw_gbps" => cluster.mem_bw_gbps = positive(value, key)?,
+            "launch_us" => cluster.launch_us = positive(value, key)?,
+            _ => {
+                return Err(anyhow!(
+                    "unknown calibration key {key} (valid: {})",
+                    CALIBRATION_KEYS.join(", ")
+                ))
+            }
+        }
+        Ok(())
+    }
+
     /// Whole-spec consistency: everything [`SocSpec::set_param`] checks
     /// per field, plus the cross-field constraints a sequence of
     /// individually valid overrides could still break.
     pub fn validate(&self) -> Result<()> {
         ensure!(!self.name.is_empty(), "device name must be non-empty");
-        positive(self.cpu.gmacs_per_thread, "cpu.gmacs_per_thread")?;
-        positive(self.cpu.mem_bw_gbps, "cpu.mem_bw_gbps")?;
-        positive(self.cpu.launch_us, "cpu.launch_us")?;
+        ensure!(!self.cpu.clusters.is_empty(), "cpu must have at least one cluster");
+        ensure!(
+            self.cpu.clusters[0].id == ClusterId::Prime,
+            "the first cpu cluster must be prime (the default big-core set)"
+        );
+        for (i, c) in self.cpu.clusters.iter().enumerate() {
+            ensure!(
+                !self.cpu.clusters[..i].iter().any(|o| o.id == c.id),
+                "duplicate cpu cluster {}",
+                c.id
+            );
+            let k = c.id.wire();
+            positive(c.gmacs_per_thread, &format!("cpu.{k}.gmacs_per_thread"))?;
+            positive(c.mem_bw_gbps, &format!("cpu.{k}.mem_bw_gbps"))?;
+            positive(c.launch_us, &format!("cpu.{k}.launch_us"))?;
+            ensure!(
+                (1..=MAX_CLUSTER_THREADS).contains(&c.efficiency.len()),
+                "cpu.{k} thread-efficiency table must model 1..={MAX_CLUSTER_THREADS} threads"
+            );
+            ensure!(
+                c.efficiency[0] == 1.0,
+                "cpu.{k} thread_efficiency[0] must be 1.0 by definition"
+            );
+            for (i, &e) in c.efficiency.iter().enumerate().skip(1) {
+                let prev = c.efficiency[i - 1];
+                let linear = (i + 1) as f64;
+                ensure!(
+                    (prev..=linear).contains(&e),
+                    "cpu.{k}.eff{n}={e} must be cumulative {n}-thread scaling in [eff{p}, {n}]",
+                    n = i + 1,
+                    p = i
+                );
+            }
+        }
         sigma(self.cpu.noise_sigma, "cpu.noise_sigma")?;
-        let [e1, e2, e3] = self.cpu.thread_efficiency;
-        ensure!(e1 == 1.0, "cpu thread_efficiency[0] must be 1.0 by definition");
-        ensure!(
-            (1.0..=2.0).contains(&e2),
-            "cpu.eff2={e2} must be cumulative 2-thread scaling in [1, 2]"
-        );
-        ensure!(
-            (e2..=3.0).contains(&e3),
-            "cpu.eff3={e3} must be cumulative 3-thread scaling in [eff2, 3]"
-        );
         integer(self.gpu.compute_units as f64, "gpu.compute_units")?;
         integer(self.gpu.wave_size as f64, "gpu.wave_size")?;
         integer(self.gpu.const_mem_kb as f64, "gpu.const_mem_kb")?;
@@ -176,17 +313,39 @@ impl SocSpec {
     }
 }
 
+/// Shorthand for the cluster tables below.
+fn cluster(
+    id: ClusterId,
+    gmacs_per_thread: f64,
+    efficiency: &[f64],
+    mem_bw_gbps: f64,
+    launch_us: f64,
+) -> ClusterSpec {
+    ClusterSpec {
+        id,
+        gmacs_per_thread,
+        efficiency: efficiency.to_vec(),
+        mem_bw_gbps,
+        launch_us,
+    }
+}
+
 impl SocSpec {
-    /// Google Pixel 4 — Snapdragon 855 (1x A76 prime + 3x A76 gold,
-    /// Adreno 640). Narrow CPU/GPU gap, noisy CPU clocks.
+    /// Google Pixel 4 — Snapdragon 855 (1x A76 prime + 3x A76 gold +
+    /// 4x A55 silver, Adreno 640). Narrow CPU/GPU gap, noisy CPU clocks.
     pub fn pixel4() -> Self {
         SocSpec {
             name: "Pixel 4",
             cpu: CpuSpec {
-                gmacs_per_thread: 13.0,
-                thread_efficiency: [1.0, 1.92, 2.75],
-                mem_bw_gbps: 12.0,
-                launch_us: 8.0,
+                clusters: vec![
+                    // the paper's big-core set: 1 prime + gold A76s
+                    cluster(ClusterId::Prime, 13.0, &[1.0, 1.92, 2.75], 12.0, 8.0),
+                    // the 3 gold A76s alone (lower boost clock, homogeneous
+                    // scaling)
+                    cluster(ClusterId::Gold, 10.5, &[1.0, 1.95, 2.82], 10.0, 6.5),
+                    // 4x A55: several-fold slower, cheapest to wake
+                    cluster(ClusterId::Silver, 3.2, &[1.0, 1.95, 2.85, 3.6], 7.0, 5.0),
+                ],
                 noise_sigma: 0.075,
             },
             gpu: GpuSpec {
@@ -215,10 +374,15 @@ impl SocSpec {
         SocSpec {
             name: "Pixel 5",
             cpu: CpuSpec {
-                gmacs_per_thread: 12.5,
-                thread_efficiency: [1.0, 1.86, 2.18], // 3rd thread lands on an A55
-                mem_bw_gbps: 10.0,
-                launch_us: 8.0,
+                clusters: vec![
+                    // 3rd thread of the paper's big set lands on an A55
+                    cluster(ClusterId::Prime, 12.5, &[1.0, 1.86, 2.18], 10.0, 8.0),
+                    // the two A76s scheduled alone (no A55 pollution, so
+                    // better 2-thread scaling — but only 2 threads)
+                    cluster(ClusterId::Gold, 10.0, &[1.0, 1.9], 9.0, 6.5),
+                    // 6x A55, modelled to 4 useful GEMM threads
+                    cluster(ClusterId::Silver, 3.0, &[1.0, 1.95, 2.85, 3.7], 6.5, 5.0),
+                ],
                 noise_sigma: 0.045,
             },
             gpu: GpuSpec {
@@ -241,16 +405,18 @@ impl SocSpec {
         }
     }
 
-    /// Motorola Edge+ 2022 — Snapdragon 8 Gen 1 (1x X2 + 3x A710,
-    /// Adreno 730). Sync constants are the paper's own measurements.
+    /// Motorola Edge+ 2022 — Snapdragon 8 Gen 1 (1x X2 + 3x A710 +
+    /// 4x A510, Adreno 730). Sync constants are the paper's own
+    /// measurements.
     pub fn moto2022() -> Self {
         SocSpec {
             name: "Moto 2022",
             cpu: CpuSpec {
-                gmacs_per_thread: 36.0,
-                thread_efficiency: [1.0, 1.9, 2.7],
-                mem_bw_gbps: 18.0,
-                launch_us: 5.0,
+                clusters: vec![
+                    cluster(ClusterId::Prime, 36.0, &[1.0, 1.9, 2.7], 18.0, 5.0),
+                    cluster(ClusterId::Gold, 27.0, &[1.0, 1.95, 2.85], 15.0, 4.0),
+                    cluster(ClusterId::Silver, 9.0, &[1.0, 1.9, 2.7, 3.4], 10.0, 3.5),
+                ],
                 noise_sigma: 0.016,
             },
             gpu: GpuSpec {
@@ -273,16 +439,20 @@ impl SocSpec {
         }
     }
 
-    /// OnePlus 11 — Snapdragon 8 Gen 2 (1x X3 + 4x A715/A710, Adreno 740).
-    /// The widest CPU/GPU gap: the smallest co-execution speedups.
+    /// OnePlus 11 — Snapdragon 8 Gen 2 (1x X3 + 4x A715/A710 + 3x A510,
+    /// Adreno 740). The widest CPU/GPU gap: the smallest co-execution
+    /// speedups.
     pub fn oneplus11() -> Self {
         SocSpec {
             name: "OnePlus 11",
             cpu: CpuSpec {
-                gmacs_per_thread: 44.0,
-                thread_efficiency: [1.0, 1.9, 2.75],
-                mem_bw_gbps: 22.0,
-                launch_us: 4.0,
+                clusters: vec![
+                    cluster(ClusterId::Prime, 44.0, &[1.0, 1.9, 2.75], 22.0, 4.0),
+                    // 4 mid cores: the only phone whose gold budget beats
+                    // prime's
+                    cluster(ClusterId::Gold, 33.0, &[1.0, 1.95, 2.85, 3.6], 18.0, 3.2),
+                    cluster(ClusterId::Silver, 11.0, &[1.0, 1.9, 2.7], 12.0, 3.0),
+                ],
                 noise_sigma: 0.02,
             },
             gpu: GpuSpec {
@@ -355,15 +525,43 @@ mod tests {
     }
 
     #[test]
+    fn builtin_cluster_hierarchy_is_coherent() {
+        // every phone: all three clusters present, prime first, and the
+        // per-thread rate strictly ordered prime > gold > silver (the
+        // several-fold spread the SoC-characterization paper reports)
+        for spec in [
+            SocSpec::pixel4(),
+            SocSpec::pixel5(),
+            SocSpec::moto2022(),
+            SocSpec::oneplus11(),
+        ] {
+            assert_eq!(spec.cpu.default_cluster_id(), ClusterId::Prime, "{}", spec.name);
+            let rate = |id: ClusterId| spec.cpu.cluster(id).unwrap().gmacs_per_thread;
+            assert!(
+                rate(ClusterId::Prime) > rate(ClusterId::Gold)
+                    && rate(ClusterId::Gold) > rate(ClusterId::Silver),
+                "{}: cluster rates must be ordered",
+                spec.name
+            );
+            // little cores are cheaper to wake on every phone
+            let launch = |id: ClusterId| spec.cpu.cluster(id).unwrap().launch_us;
+            assert!(launch(ClusterId::Silver) < launch(ClusterId::Prime), "{}", spec.name);
+        }
+    }
+
+    #[test]
     fn set_param_covers_every_calibration_key() {
         // every advertised key must be settable, and a set must round-trip
-        // through validate() when given an in-range value
+        // through validate() when given an in-range value; per-cluster
+        // effN keys are set in ascending order so eff4 extends the
+        // shorter tables (pixel5's gold has a 2-entry table out of the box)
         let mut spec = SocSpec::pixel5();
         for key in CALIBRATION_KEYS {
             let value = match key {
                 k if k.ends_with("noise_sigma") => 0.05,
-                "cpu.eff2" => 1.8,
-                "cpu.eff3" => 2.4,
+                k if k.ends_with("eff2") => 1.8,
+                k if k.ends_with("eff3") => 2.4,
+                k if k.ends_with("eff4") => 2.9,
                 "gpu.compute_units" | "gpu.wave_size" | "gpu.const_mem_kb" => 16.0,
                 _ => 12.0,
             };
@@ -371,7 +569,46 @@ mod tests {
                 .unwrap_or_else(|e| panic!("set_param({key}): {e}"));
         }
         spec.validate().expect("fully overridden spec validates");
+        // eff4 extended every table to a 4-thread budget
+        for id in ClusterId::ALL {
+            assert_eq!(spec.cpu.cluster(id).unwrap().max_threads(), 4, "{id}");
+        }
         assert!(spec.set_param("bogus.key", 1.0).is_err());
+        assert!(spec.set_param("cpu.mega.launch_us", 1.0).is_err(), "unknown cluster");
+        assert!(spec.set_param("cpu.prime.bogus", 1.0).is_err());
+    }
+
+    #[test]
+    fn legacy_cpu_keys_address_the_prime_cluster() {
+        let mut spec = SocSpec::pixel5();
+        spec.set_param("cpu.gmacs_per_thread", 20.0).unwrap();
+        spec.set_param("cpu.eff2", 1.7).unwrap();
+        spec.set_param("cpu.launch_us", 6.0).unwrap();
+        let prime = spec.cpu.cluster(ClusterId::Prime).unwrap();
+        assert_eq!(prime.gmacs_per_thread, 20.0);
+        assert_eq!(prime.efficiency[1], 1.7);
+        assert_eq!(prime.launch_us, 6.0);
+        // other clusters untouched
+        assert_eq!(spec.cpu.cluster(ClusterId::Gold).unwrap().gmacs_per_thread, 10.0);
+    }
+
+    #[test]
+    fn eff_extension_is_dense_and_bounded() {
+        let mut spec = SocSpec::pixel5();
+        // gold ships a 2-entry table: eff4 before eff3 would leave a gap
+        assert!(spec.set_param("cpu.gold.eff4", 2.9).is_err());
+        spec.set_param("cpu.gold.eff3", 2.4).unwrap();
+        spec.set_param("cpu.gold.eff4", 2.9).unwrap();
+        assert_eq!(spec.cpu.cluster(ClusterId::Gold).unwrap().max_threads(), 4);
+        spec.validate().unwrap();
+        // entries beyond the enumerated wire surface are rejected, even
+        // though directly-constructed specs may model longer tables
+        assert!(spec.set_param("cpu.gold.eff1", 1.0).is_err());
+        assert!(spec.set_param("cpu.gold.eff5", 3.2).is_err());
+        assert!(spec.set_param("cpu.gold.eff99", 9.0).is_err());
+        // non-canonical spellings of valid entries are not keys either
+        assert!(spec.set_param("cpu.gold.eff03", 2.4).is_err());
+        assert!(spec.set_param("cpu.gold.eff+3", 2.4).is_err());
     }
 
     #[test]
@@ -381,6 +618,7 @@ mod tests {
         assert!(spec.set_param("cpu.gmacs_per_thread", -3.0).is_err());
         assert!(spec.set_param("cpu.gmacs_per_thread", f64::NAN).is_err());
         assert!(spec.set_param("cpu.gmacs_per_thread", 1e9).is_err());
+        assert!(spec.set_param("cpu.silver.launch_us", -1.0).is_err());
         assert!(spec.set_param("gpu.compute_units", 2.5).is_err(), "integer field");
         assert!(spec.set_param("gpu.compute_units", 0.0).is_err());
         assert!(spec.set_param("sync.noise_sigma", 0.9).is_err(), "sigma cap");
@@ -395,6 +633,24 @@ mod tests {
         spec.set_param("cpu.eff2", 1.9).unwrap();
         spec.set_param("cpu.eff3", 1.2).unwrap();
         assert!(spec.validate().is_err());
+        // same rule per cluster
+        let mut spec = SocSpec::pixel5();
+        spec.set_param("cpu.silver.eff3", 1.2).unwrap();
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("cpu.silver.eff3"), "{err}");
+    }
+
+    #[test]
+    fn validate_requires_prime_led_unique_clusters() {
+        let mut spec = SocSpec::pixel5();
+        spec.cpu.clusters[0].id = ClusterId::Gold;
+        assert!(spec.validate().is_err(), "first cluster must be prime");
+        let mut spec = SocSpec::pixel5();
+        spec.cpu.clusters[1].id = ClusterId::Prime;
+        assert!(spec.validate().is_err(), "duplicate cluster ids rejected");
+        let mut spec = SocSpec::pixel5();
+        spec.cpu.clusters.clear();
+        assert!(spec.validate().is_err(), "at least one cluster required");
     }
 
     #[test]
@@ -402,6 +658,7 @@ mod tests {
         assert_eq!(validate_device_name("PhoneX").unwrap(), "phonex");
         assert_eq!(validate_device_name("sm8550_lab-2").unwrap(), "sm8550_lab-2");
         for bad in ["", "9phone", "has space", "emoji🚀", "all", "AUTO", "base",
+                    "prime", "Gold", "silver",
                     "x234567890123456789012345678901234567890"] {
             assert!(validate_device_name(bad).is_err(), "{bad:?} must be rejected");
         }
@@ -412,7 +669,7 @@ mod tests {
         // CPU3/GPU rate ratio: Pixel 5 narrowest gap, OnePlus 11 widest.
         let ratio = |s: SocSpec| {
             let cfg = LinearConfig::new(512, 1024, 1024);
-            let c = s.cpu.linear_latency_us(&cfg, 3);
+            let c = s.cpu.linear_latency_us(&cfg, ClusterId::Prime, 3);
             let g = s.gpu.linear_latency_us(&cfg).0;
             g / c // larger = CPU relatively stronger
         };

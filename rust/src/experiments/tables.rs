@@ -2,7 +2,7 @@
 
 use super::{print_table, write_csv, Scale};
 use crate::dataset;
-use crate::device::{noise::SplitMix64, Device, Processor, SyncMechanism};
+use crate::device::{noise::SplitMix64, ClusterId, Device, Processor, SyncMechanism};
 use crate::gbdt::GbdtParams;
 use crate::metrics::mean;
 use crate::models::Model;
@@ -28,7 +28,8 @@ pub fn table1(scale: Scale) -> Vec<(String, String, [f64; 4])> {
                     let mut mapes = [0.0f64; 4];
                     mapes[0] = gpu.evaluate(device, &test);
                     for t in 1..=3 {
-                        let cp = CpuPredictor::train(device, &train, t, params);
+                        let cp =
+                            CpuPredictor::train(device, &train, ClusterId::Prime, t, params);
                         mapes[t] = cp.evaluate(device, &test);
                     }
                     results.lock().unwrap().push((
@@ -106,7 +107,7 @@ fn search_speedups(device: &Device, ops: &[OpConfig], threads: usize, trials: u6
         .iter()
         .map(|op| {
             let (_, t_best) =
-                grid_search(device, op, threads, SyncMechanism::SvmPolling, trials);
+                grid_search(device, op, ClusterId::Prime, threads, SyncMechanism::SvmPolling, trials);
             let t_gpu = device.measure_mean(op, Processor::Gpu, trials);
             t_gpu / t_best
         })
@@ -199,9 +200,13 @@ pub fn table2(scale: Scale) -> Vec<Table2Row> {
 }
 
 /// Table 3: end-to-end speedups for the four models, at the paper's fixed
-/// strategy (GPU + 3 CPU threads, SVM polling) and with per-layer `auto`
-/// strategy selection. Returns `(fixed, auto)` report pairs.
-pub fn table3(scale: Scale) -> Vec<(E2eReport, E2eReport)> {
+/// strategy (GPU + 3 CPU threads, SVM polling), with per-layer `auto`
+/// (threads × mech) strategy selection, and with the full 4-axis
+/// per-layer `cluster-auto` selection (split × cluster × threads ×
+/// mech — the cluster-auto column also trains the gold/silver placement
+/// predictors lazily, so it dominates this table's cost at full scale).
+/// Returns `(fixed, auto, cluster_auto)` report triples.
+pub fn table3(scale: Scale) -> Vec<(E2eReport, E2eReport, E2eReport)> {
     let devices = Device::all();
     let reports = std::sync::Mutex::new(Vec::new());
     std::thread::scope(|s| {
@@ -210,32 +215,33 @@ pub fn table3(scale: Scale) -> Vec<(E2eReport, E2eReport)> {
             s.spawn(move || {
                 let lp = Planner::train_for_kind(device, "linear", scale.train_n, 42);
                 let cp = Planner::train_for_kind(device, "conv", scale.train_n, 42);
-                let fixed_sched = ModelScheduler {
+                let sched = |req: PlanRequest| ModelScheduler {
                     device,
                     linear_planner: &lp,
                     conv_planner: &cp,
-                    req: PlanRequest::fixed(3, SyncMechanism::SvmPolling),
+                    req,
                 };
-                let auto_sched = ModelScheduler {
-                    device,
-                    linear_planner: &lp,
-                    conv_planner: &cp,
-                    req: PlanRequest::auto(),
-                };
+                let fixed_sched = sched(PlanRequest::fixed(3, SyncMechanism::SvmPolling));
+                let auto_sched = sched(PlanRequest::auto());
+                let cauto_sched = sched(PlanRequest::cluster_auto());
                 let mut local = Vec::new();
                 for model in Model::paper_models() {
-                    local.push((fixed_sched.evaluate(&model), auto_sched.evaluate(&model)));
+                    local.push((
+                        fixed_sched.evaluate(&model),
+                        auto_sched.evaluate(&model),
+                        cauto_sched.evaluate(&model),
+                    ));
                 }
                 reports.lock().unwrap().extend(local);
             });
         }
     });
     let mut all = reports.into_inner().unwrap();
-    all.sort_by_key(|(r, _)| (order(r.device), r.model));
+    all.sort_by_key(|(r, _, _)| (order(r.device), r.model));
 
     let rows: Vec<Vec<String>> = all
         .iter()
-        .map(|(fixed, auto)| {
+        .map(|(fixed, auto, cauto)| {
             vec![
                 fixed.device.to_string(),
                 fixed.model.to_string(),
@@ -245,37 +251,28 @@ pub fn table3(scale: Scale) -> Vec<(E2eReport, E2eReport)> {
                 format!("{:.1}", fixed.e2e_ms),
                 format!("{:.2}x", fixed.e2e_speedup()),
                 format!("{:.2}x", auto.e2e_speedup()),
+                format!("{:.2}x", cauto.e2e_speedup()),
             ]
         })
         .collect();
+    let header = [
+        "device",
+        "model",
+        "baseline_ms",
+        "indiv_ms",
+        "indiv_speedup",
+        "e2e_ms",
+        "e2e_speedup",
+        "auto_speedup",
+        "cluster_auto_speedup",
+    ];
     print_table(
-        "Table 3 — end-to-end speedups (fixed: GPU + 3 CPU threads | auto: per-layer strategy)",
-        &[
-            "device",
-            "model",
-            "baseline_ms",
-            "indiv_ms",
-            "indiv_speedup",
-            "e2e_ms",
-            "e2e_speedup",
-            "auto_speedup",
-        ],
+        "Table 3 — end-to-end speedups (fixed: GPU + 3 CPU threads | auto: per-layer \
+         threads x mech | cluster-auto: per-layer cluster x threads x mech)",
+        &header,
         &rows,
     );
-    write_csv(
-        "table3.csv",
-        &[
-            "device",
-            "model",
-            "baseline_ms",
-            "indiv_ms",
-            "indiv_speedup",
-            "e2e_ms",
-            "e2e_speedup",
-            "auto_speedup",
-        ],
-        &rows,
-    );
+    write_csv("table3.csv", &header, &rows);
     all
 }
 

@@ -39,9 +39,11 @@
 //! let device = Device::pixel5();
 //! let op = OpConfig::Linear(LinearConfig { l: 50, cin: 768, cout: 3072 });
 //! let planner = Planner::train_for(&device, 2000, 42);
-//! let plan = planner.plan(&op); // 3 CPU threads, SVM polling
+//! let plan = planner.plan(&op); // 3 big-cluster CPU threads, SVM polling
 //! // or: planner.plan_request(&op, mobile_coexec::partition::PlanRequest::auto())
-//! // to jointly search split x threads x sync mechanism
+//! // to jointly search split x threads x sync mechanism, or
+//! // PlanRequest::cluster_auto() to also search the CPU cluster
+//! // (prime/gold/silver) the CPU half runs on
 //! println!("CPU gets {} channels, GPU gets {}", plan.split.c_cpu, plan.split.c_gpu);
 //! ```
 

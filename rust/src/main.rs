@@ -8,6 +8,7 @@
 //! repro table --id 1|2|3|4       [--quick]   regenerate a paper table
 //! repro sync                                 §4 sync-overhead comparison
 //! repro plan  --device <name> --linear L,CIN,COUT [--threads N|auto]
+//!             [--cluster prime|gold|silver|auto]
 //! repro coexec [--c1 N]                      REAL PJRT co-execution demo
 //! repro serve --device <name> [--addr A] [--workers N] [--queue N] [--ttl SECS]
 //!                                            plan-caching multi-device server
@@ -21,10 +22,10 @@
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
-use mobile_coexec::device::{Device, SyncMechanism};
+use mobile_coexec::device::{ClusterId, Device, SyncMechanism};
 use mobile_coexec::experiments::{figures, tables, Scale};
 use mobile_coexec::ops::{LinearConfig, OpConfig};
-use mobile_coexec::partition::{PlanRequest, Planner};
+use mobile_coexec::partition::{Choice, PlanRequest, Planner};
 use mobile_coexec::server::mech_wire;
 
 fn main() {
@@ -93,6 +94,20 @@ fn main() {
                     SyncMechanism::SvmPolling,
                 )
             };
+            let req = match get("--cluster") {
+                None => req,
+                Some(c) if c.eq_ignore_ascii_case("auto") => {
+                    req.with_cluster(Choice::Auto)
+                }
+                Some(c) => {
+                    let id = ClusterId::parse(&c)
+                        .unwrap_or_else(|| usage("--cluster must be prime|gold|silver|auto"));
+                    if device.spec.cpu.cluster(id).is_none() {
+                        usage(&format!("{} has no {id} cluster", device.name()));
+                    }
+                    req.with_cluster(Choice::Fixed(id))
+                }
+            };
             let op = OpConfig::Linear(LinearConfig::new(d[0], d[1], d[2]));
             eprintln!("training planner for {} ...", device.name());
             let planner = Planner::train_for_kind(&device, "linear", scale.train_n, 42);
@@ -101,12 +116,13 @@ fn main() {
             let gpu_only =
                 device.measure_mean(&op, mobile_coexec::device::Processor::Gpu, 16);
             println!(
-                "{op} on {} ({} request):\n  plan: CPU {} ch | GPU {} ch, {} CPU threads, {} sync (predicted {:.1} us)\n  measured co-exec {:.1} us vs GPU-only {:.1} us -> {:.2}x speedup",
+                "{op} on {} ({} request):\n  plan: CPU {} ch | GPU {} ch, {} threads on the {} cluster, {} sync (predicted {:.1} us)\n  measured co-exec {:.1} us vs GPU-only {:.1} us -> {:.2}x speedup",
                 device.name(),
                 if req.is_fixed() { "fixed" } else { "auto" },
                 plan.split.c_cpu,
                 plan.split.c_gpu,
                 plan.threads,
+                plan.cluster,
                 mech_wire(plan.mech),
                 plan.t_total_us,
                 measured,
@@ -173,7 +189,7 @@ fn main() {
                 "repro — CPU-GPU co-execution reproduction (EPEW 2025)\n\n\
                  usage:\n  repro fig   --id 2|3|5|6a|6b|7 [--quick]\n  \
                  repro table --id 1|2|3|4 [--quick]\n  repro sync\n  \
-                 repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto]\n  \
+                 repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto] [--cluster prime|gold|silver|auto]\n  \
                  repro coexec [--c1 N]\n  \
                  repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N] [--ttl SECS]\n  \
                  repro all [--quick]"

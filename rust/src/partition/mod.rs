@@ -16,29 +16,35 @@
 //!
 //! The paper observes that CPU/GPU times depend on "the dynamic selection
 //! of implementations and parallelism level" — so the split is only one
-//! axis of the decision. [`Planner::plan_request`] searches the full
-//! strategy space: a [`PlanRequest`] pins or frees each of the thread
-//! count and the sync mechanism, and the search jointly minimizes the
-//! predicted total over `(split × threads × mechanism)`. Two structural
+//! axis of the decision. On a real SoC there is a third CPU axis: *which
+//! cluster* (prime/gold/silver, [`crate::device::ClusterId`]) runs the
+//! CPU half. [`Planner::plan_request`] searches the full strategy space:
+//! a [`PlanRequest`] pins or frees each of the cluster, the thread count,
+//! and the sync mechanism, and the search jointly minimizes the predicted
+//! total over `(split × cluster × threads × mechanism)`. Three structural
 //! facts keep the joint search within a small multiple of a fixed plan:
 //!
 //! * **The mechanism axis is pruned analytically.** Sync overhead is an
 //!   additive per-mechanism constant (zero for exclusive splits), so both
 //!   mechanisms' totals derive from one `max(T_cpu, T_gpu)` evaluation —
 //!   the dominated mechanism never costs a separate split search.
-//! * **Dominated thread counts are pruned per candidate.** The GPU side
-//!   and the overhead are thread-invariant, so `t_total >= T_gpu(c2) +
-//!   T_overhead` holds before any CPU prediction is made; thread counts
-//!   whose incumbents a candidate provably cannot beat skip their CPU
-//!   GBDT evaluation entirely. The prune only discards candidates that
-//!   could not have changed the result, so an `Auto` plan is *never worse*
-//!   than any fixed `(threads, mech)` plan (a property-tested invariant).
+//! * **Dominated placements are pruned per candidate.** The GPU side and
+//!   the overhead are invariant in both the thread count *and* the
+//!   cluster, so `t_total >= T_gpu(c2) + T_overhead` holds before any CPU
+//!   prediction is made; `(cluster, threads)` placements whose incumbents
+//!   a candidate provably cannot beat skip their CPU GBDT evaluation
+//!   entirely. The prune only discards candidates that could not have
+//!   changed the result, so an `Auto` plan is *never worse* than any
+//!   fixed `(cluster, threads, mech)` plan (a property-tested invariant).
+//! * **GPU predictions are shared across the whole strategy grid** — one
+//!   GPU evaluation per candidate split serves every placement and both
+//!   mechanisms.
 //!
 //! [`grid_search`] is the paper's measured oracle baseline (§5.3): try every
 //! split with step 8, **measure** each, keep the best. It is not deployable
 //! (minutes of profiling per op) but bounds the achievable speedup.
 
-use crate::device::{Device, Processor, SyncMechanism};
+use crate::device::{ClusterId, Device, Processor, SyncMechanism};
 use crate::gbdt::GbdtParams;
 use crate::ops::{ChannelSplit, OpConfig};
 use crate::predictor::{FeatureMode, PredictorSet};
@@ -56,11 +62,12 @@ pub enum Choice<T> {
     Auto,
 }
 
-/// A fully resolved execution strategy: how many big-core CPU threads the
-/// CPU side runs with, and which rendezvous mechanism synchronizes the
-/// two sides.
+/// A fully resolved execution strategy: which CPU cluster runs the CPU
+/// side, how many of its threads it uses, and which rendezvous mechanism
+/// synchronizes the two sides.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Strategy {
+    pub cluster: ClusterId,
     pub threads: usize,
     pub mech: SyncMechanism,
 }
@@ -69,35 +76,75 @@ pub struct Strategy {
 /// or `Auto` (searched jointly with the channel split).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PlanRequest {
+    pub cluster: Choice<ClusterId>,
     pub threads: Choice<usize>,
     pub mech: Choice<SyncMechanism>,
 }
 
 impl PlanRequest {
-    /// Both axes pinned — the classic fixed-strategy plan.
+    /// The classic fixed-strategy plan on the default big cluster: every
+    /// axis pinned, cluster = prime.
     pub fn fixed(threads: usize, mech: SyncMechanism) -> Self {
-        Self { threads: Choice::Fixed(threads), mech: Choice::Fixed(mech) }
+        Self::fixed_on(ClusterId::Prime, threads, mech)
     }
 
-    /// Both axes free: jointly search split × threads × mechanism.
+    /// Every axis pinned, on an explicit cluster.
+    pub fn fixed_on(cluster: ClusterId, threads: usize, mech: SyncMechanism) -> Self {
+        Self {
+            cluster: Choice::Fixed(cluster),
+            threads: Choice::Fixed(threads),
+            mech: Choice::Fixed(mech),
+        }
+    }
+
+    /// The paper-shaped strategy search: jointly search split × threads ×
+    /// mechanism on the default big cluster (cluster pinned to prime, so
+    /// pre-cluster callers keep their exact behavior and cost).
     pub fn auto() -> Self {
-        Self { threads: Choice::Auto, mech: Choice::Auto }
+        Self {
+            cluster: Choice::Fixed(ClusterId::Prime),
+            threads: Choice::Auto,
+            mech: Choice::Auto,
+        }
+    }
+
+    /// The full 4-axis search: split × cluster × threads × mechanism.
+    pub fn cluster_auto() -> Self {
+        Self { cluster: Choice::Auto, threads: Choice::Auto, mech: Choice::Auto }
+    }
+
+    /// This request with a different cluster choice (the serving layer's
+    /// `cluster=` parameter).
+    pub fn with_cluster(self, cluster: Choice<ClusterId>) -> Self {
+        Self { cluster, ..self }
     }
 
     /// True iff no axis needs searching.
     pub fn is_fixed(&self) -> bool {
-        matches!((self.threads, self.mech), (Choice::Fixed(_), Choice::Fixed(_)))
+        matches!(
+            (self.cluster, self.threads, self.mech),
+            (Choice::Fixed(_), Choice::Fixed(_), Choice::Fixed(_))
+        )
     }
 
     /// Canonical form for a device: a fixed thread count is clamped to
-    /// `1..=max_threads`, so equivalent requests (e.g. `threads=99` and
-    /// `threads=3` on a 3-big-core SoC) compare and hash identically.
-    pub fn normalized(self, max_threads: usize) -> Self {
+    /// the requested cluster's budget (or the device's largest budget
+    /// when the cluster is searched), so equivalent requests (e.g.
+    /// `threads=99` and `threads=3` on a 3-big-core SoC) compare and hash
+    /// identically.
+    pub fn normalized(self, cpu: &crate::device::CpuSpec) -> Self {
+        let max = match self.cluster {
+            Choice::Fixed(c) => cpu
+                .cluster(c)
+                .map(|cl| cl.max_threads())
+                .unwrap_or_else(|| cpu.max_threads()),
+            Choice::Auto => cpu.max_threads_any(),
+        };
         let threads = match self.threads {
-            Choice::Fixed(t) => Choice::Fixed(t.clamp(1, max_threads)),
+            Choice::Fixed(t) => Choice::Fixed(t.clamp(1, max)),
             Choice::Auto => Choice::Auto,
         };
-        Self { threads, mech: self.mech }
+        Self { threads, ..self }
     }
 }
 
@@ -109,6 +156,9 @@ impl PlanRequest {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Plan {
     pub split: ChannelSplit,
+    /// CPU cluster the CPU side runs on (prime for every pre-cluster
+    /// request).
+    pub cluster: ClusterId,
     pub threads: usize,
     pub mech: SyncMechanism,
     /// Predicted CPU-side latency (µs, 0 if no CPU work).
@@ -120,15 +170,16 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// The resolved (threads, mech) strategy this plan executes with.
+    /// The resolved (cluster, threads, mech) strategy this plan executes
+    /// with.
     pub fn strategy(&self) -> Strategy {
-        Strategy { threads: self.threads, mech: self.mech }
+        Strategy { cluster: self.cluster, threads: self.threads, mech: self.mech }
     }
 }
 
 /// The partition planner: predictors + overhead model for one device.
-/// Strategy (thread count, sync mechanism) is per-request, not per-planner
-/// — see [`PlanRequest`].
+/// Strategy (cluster, thread count, sync mechanism) is per-request, not
+/// per-planner — see [`PlanRequest`].
 pub struct Planner {
     pub device: Device,
     pub predictors: PredictorSet,
@@ -159,15 +210,15 @@ impl Planner {
         &self,
         op: &OpConfig,
         split: ChannelSplit,
-        threads: usize,
-        mech: SyncMechanism,
+        strategy: Strategy,
     ) -> Plan {
         let (t_cpu, t_gpu) = (
             if split.c_cpu > 0 {
-                self.predictors.predict_us(
+                self.predictors.predict_cpu_us(
                     &self.device,
                     &op.with_cout(split.c_cpu),
-                    Processor::Cpu(threads),
+                    strategy.cluster,
+                    strategy.threads,
                 )
             } else {
                 0.0
@@ -180,14 +231,15 @@ impl Planner {
             },
         );
         let overhead = if split.is_coexec() {
-            self.device.sync_overhead_us(mech, op.kind())
+            self.device.sync_overhead_us(strategy.mech, op.kind())
         } else {
             0.0
         };
         Plan {
             split,
-            threads,
-            mech,
+            cluster: strategy.cluster,
+            threads: strategy.threads,
+            mech: strategy.mech,
             t_cpu_us: t_cpu,
             t_gpu_us: t_gpu,
             t_total_us: t_cpu.max(t_gpu) + overhead,
@@ -201,14 +253,15 @@ impl Planner {
     }
 
     /// Solve with an explicit CPU thread count and the paper's SVM-polling
-    /// mechanism (the classic fixed-strategy entry point).
+    /// mechanism on the big cluster (the classic fixed-strategy entry
+    /// point).
     pub fn plan_with_threads(&self, op: &OpConfig, threads: usize) -> Plan {
         self.plan_request(op, PlanRequest::fixed(threads, SyncMechanism::SvmPolling))
     }
 
     /// Solve over the requested strategy space: jointly minimize predicted
-    /// `t_total_us` over `(split × threads × mechanism)`, where each axis
-    /// is either pinned by `req` or searched.
+    /// `t_total_us` over `(split × cluster × threads × mechanism)`, where
+    /// each axis is either pinned by `req` or searched.
     ///
     /// Per strategy point this is the same coarse-to-fine split search as
     /// a fixed plan: a stride-32 sweep finds the basin, then a
@@ -217,15 +270,38 @@ impl Planner {
     /// from the trees, so the basin is wide; coarse-to-fine costs ~7x fewer
     /// GBDT evaluations than a flat stride-4 scan — EXPERIMENTS.md §Perf.)
     /// Shared GPU predictions, the analytic mechanism prune, and the
-    /// per-candidate dominated-thread prune (module docs) keep a fully
-    /// `Auto` plan within ~4x the cost of a fixed one, and the result is
-    /// exactly `min` over every fixed strategy's plan. Ties resolve to the
-    /// lowest thread count and `SvmPolling`.
+    /// per-candidate dominated-placement prune (module docs) keep a fully
+    /// `Auto` (threads × mech) plan within ~4x the cost of a fixed one and
+    /// a 4-axis cluster-`Auto` plan within ~4x of that (both bench-gated
+    /// in `benches/partition_search.rs` — the extra multiple is the extra
+    /// placements), and the result is exactly `min` over every fixed
+    /// strategy's plan. Ties resolve to the first placement in device
+    /// cluster order (prime first) at the lowest thread count, with
+    /// `SvmPolling` preferred.
+    ///
+    /// Panics if `req` pins a cluster the device does not expose (the
+    /// serving layer validates cluster choices per device before planning).
     pub fn plan_request(&self, op: &OpConfig, req: PlanRequest) -> Plan {
-        let max_threads = self.device.spec.cpu.max_threads();
-        let threads: Vec<usize> = match req.threads {
-            Choice::Fixed(t) => vec![t.clamp(1, max_threads)],
-            Choice::Auto => (1..=max_threads).collect(),
+        let cpu_spec = &self.device.spec.cpu;
+        // the (cluster, threads) placement grid, in device cluster order
+        let placements: Vec<(ClusterId, usize)> = match req.cluster {
+            Choice::Fixed(c) => {
+                let cl = cpu_spec
+                    .cluster(c)
+                    .unwrap_or_else(|| panic!("device {} has no {c} cluster", self.device.name()));
+                match req.threads {
+                    Choice::Fixed(t) => vec![(c, t.clamp(1, cl.max_threads()))],
+                    Choice::Auto => (1..=cl.max_threads()).map(|t| (c, t)).collect(),
+                }
+            }
+            Choice::Auto => cpu_spec
+                .clusters
+                .iter()
+                .flat_map(|cl| match req.threads {
+                    Choice::Fixed(t) => vec![(cl.id, t.clamp(1, cl.max_threads()))],
+                    Choice::Auto => (1..=cl.max_threads()).map(|t| (cl.id, t)).collect(),
+                })
+                .collect(),
         };
         let mechs: Vec<SyncMechanism> = match req.mech {
             Choice::Fixed(m) => vec![m],
@@ -235,23 +311,24 @@ impl Planner {
             mechs.iter().map(|&m| self.device.sync_overhead_us(m, op.kind())).collect();
         let cout = op.cout();
 
-        // Incumbent per (threads, mech) strategy point, seeded with the
+        // Incumbent per (placement, mech) strategy point, seeded with the
         // exclusive assignments exactly like the fixed search. Exclusive
-        // predictions are shared: GPU-only latency is thread- and
-        // mech-invariant, CPU-only is per thread count, and neither pays
-        // sync overhead, so one GPU eval + one CPU eval per thread count
-        // seed the whole grid.
+        // predictions are shared: GPU-only latency is invariant in every
+        // CPU axis, CPU-only is per placement, and neither pays sync
+        // overhead, so one GPU eval + one CPU eval per placement seed the
+        // whole grid.
         let t_gpu_full = self.predictors.predict_us(&self.device, op, Processor::Gpu);
-        let mut best: Vec<Vec<Plan>> = threads
+        let mut best: Vec<Vec<Plan>> = placements
             .iter()
-            .map(|&t| {
+            .map(|&(c, t)| {
                 let t_cpu_full =
-                    self.predictors.predict_us(&self.device, op, Processor::Cpu(t));
+                    self.predictors.predict_cpu_us(&self.device, op, c, t);
                 mechs
                     .iter()
                     .map(|&m| {
                         let gpu = Plan {
                             split: ChannelSplit::gpu_only(cout),
+                            cluster: c,
                             threads: t,
                             mech: m,
                             t_cpu_us: 0.0,
@@ -260,6 +337,7 @@ impl Planner {
                         };
                         let cpu = Plan {
                             split: ChannelSplit::cpu_only(cout),
+                            cluster: c,
                             threads: t,
                             mech: m,
                             t_cpu_us: t_cpu_full,
@@ -277,8 +355,8 @@ impl Planner {
             .collect();
 
         // One co-executed candidate: a single shared GPU prediction, CPU
-        // predictions only for thread counts the candidate could still
-        // win for, per-mechanism totals derived from the same base.
+        // predictions only for placements the candidate could still win
+        // for, per-mechanism totals derived from the same base.
         let consider = |c1: usize, best: &mut Vec<Vec<Plan>>| {
             if c1 == 0 || c1 >= cout {
                 return;
@@ -289,25 +367,27 @@ impl Planner {
                 &op.with_cout(split.c_gpu),
                 Processor::Gpu,
             );
-            for (ti, &t) in threads.iter().enumerate() {
-                // dominated-thread prune: t_total >= t_gpu + overhead for
-                // any CPU prediction, so skip the CPU evaluation when this
-                // candidate provably cannot beat thread count t's
+            for (pi, &(c, t)) in placements.iter().enumerate() {
+                // dominated-placement prune: t_total >= t_gpu + overhead
+                // for any CPU prediction, so skip the CPU evaluation when
+                // this candidate provably cannot beat placement (c, t)'s
                 // incumbents under any mechanism.
-                if (0..mechs.len()).all(|mi| t_gpu + overheads[mi] > best[ti][mi].t_total_us) {
+                if (0..mechs.len()).all(|mi| t_gpu + overheads[mi] > best[pi][mi].t_total_us) {
                     continue;
                 }
-                let t_cpu = self.predictors.predict_us(
+                let t_cpu = self.predictors.predict_cpu_us(
                     &self.device,
                     &op.with_cout(split.c_cpu),
-                    Processor::Cpu(t),
+                    c,
+                    t,
                 );
                 let base = t_cpu.max(t_gpu);
                 for (mi, &m) in mechs.iter().enumerate() {
                     let total = base + overheads[mi];
-                    if total < best[ti][mi].t_total_us {
-                        best[ti][mi] = Plan {
+                    if total < best[pi][mi].t_total_us {
+                        best[pi][mi] = Plan {
                             split,
+                            cluster: c,
                             threads: t,
                             mech: m,
                             t_cpu_us: t_cpu,
@@ -328,7 +408,7 @@ impl Planner {
             c += step;
         }
 
-        // Refinement is per strategy point: each (threads, mech) point
+        // Refinement is per strategy point: each (placement, mech) point
         // refines around — and is only updated from — its own coarse
         // winner, exactly like a fixed-strategy search. (Cross-window
         // updates would occasionally find better plans, but would make an
@@ -336,16 +416,16 @@ impl Planner {
         // strategy; reproducibility is worth more than that sliver.)
         // Points whose coarse winner is exclusive skip refinement, as in
         // the fixed search; points sharing a center share one sweep, with
-        // the GPU prediction and per-thread CPU predictions shared.
+        // the GPU prediction and per-placement CPU predictions shared.
         if coarse {
             let mut windows: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
-            for (ti, row) in best.iter().enumerate() {
+            for (pi, row) in best.iter().enumerate() {
                 for (mi, p) in row.iter().enumerate() {
                     if p.split.is_coexec() {
                         let center = p.split.c_cpu;
                         match windows.iter().position(|(c, _)| *c == center) {
-                            Some(w) => windows[w].1.push((ti, mi)),
-                            None => windows.push((center, vec![(ti, mi)])),
+                            Some(w) => windows[w].1.push((pi, mi)),
+                            None => windows.push((center, vec![(pi, mi)])),
                         }
                     }
                 }
@@ -362,27 +442,31 @@ impl Planner {
                         Processor::Gpu,
                     );
                     let mut cpu_memo: Vec<(usize, f64)> = Vec::new();
-                    for &(ti, mi) in &members {
-                        if t_gpu + overheads[mi] > best[ti][mi].t_total_us {
+                    for &(pi, mi) in &members {
+                        if t_gpu + overheads[mi] > best[pi][mi].t_total_us {
                             continue; // provably cannot beat this incumbent
                         }
-                        let t_cpu = match cpu_memo.iter().position(|&(i, _)| i == ti) {
+                        let t_cpu = match cpu_memo.iter().position(|&(i, _)| i == pi) {
                             Some(hit) => cpu_memo[hit].1,
                             None => {
-                                let v = self.predictors.predict_us(
+                                let (c, t) = placements[pi];
+                                let v = self.predictors.predict_cpu_us(
                                     &self.device,
                                     &op.with_cout(split.c_cpu),
-                                    Processor::Cpu(threads[ti]),
+                                    c,
+                                    t,
                                 );
-                                cpu_memo.push((ti, v));
+                                cpu_memo.push((pi, v));
                                 v
                             }
                         };
                         let total = t_cpu.max(t_gpu) + overheads[mi];
-                        if total < best[ti][mi].t_total_us {
-                            best[ti][mi] = Plan {
+                        if total < best[pi][mi].t_total_us {
+                            let (c, t) = placements[pi];
+                            best[pi][mi] = Plan {
                                 split,
-                                threads: threads[ti],
+                                cluster: c,
+                                threads: t,
                                 mech: mechs[mi],
                                 t_cpu_us: t_cpu,
                                 t_gpu_us: t_gpu,
@@ -410,8 +494,14 @@ impl Planner {
     /// the paper reports in Table 2: plans are chosen by prediction but
     /// *scored* by measurement). The plan carries its own strategy.
     pub fn measure_plan_us(&self, op: &OpConfig, plan: &Plan, trials: u64) -> f64 {
-        self.device
-            .measure_coexec_mean(op, plan.split, plan.threads, plan.mech, trials)
+        self.device.measure_coexec_mean(
+            op,
+            plan.split,
+            plan.cluster,
+            plan.threads,
+            plan.mech,
+            trials,
+        )
     }
 }
 
@@ -420,15 +510,16 @@ impl Planner {
 pub fn grid_search(
     device: &Device,
     op: &OpConfig,
+    cluster: ClusterId,
     threads: usize,
     mech: SyncMechanism,
     trials: u64,
 ) -> (ChannelSplit, f64) {
     let cout = op.cout();
     let mut best_split = ChannelSplit::gpu_only(cout);
-    let mut best = device.measure_coexec_mean(op, best_split, threads, mech, trials);
+    let mut best = device.measure_coexec_mean(op, best_split, cluster, threads, mech, trials);
     let consider = |split: ChannelSplit, best: &mut f64, best_split: &mut ChannelSplit| {
-        let t = device.measure_coexec_mean(op, split, threads, mech, trials);
+        let t = device.measure_coexec_mean(op, split, cluster, threads, mech, trials);
         if t < *best {
             *best = t;
             *best_split = split;
@@ -475,7 +566,8 @@ mod tests {
         let op = OpConfig::Linear(LinearConfig::new(160, 512, 1024));
         let plan = p.plan(&op);
         let measured = p.measure_plan_us(&op, &plan, 8);
-        let (_, oracle) = grid_search(&device, &op, 3, SyncMechanism::SvmPolling, 8);
+        let (_, oracle) =
+            grid_search(&device, &op, ClusterId::Prime, 3, SyncMechanism::SvmPolling, 8);
         // GBDT slice predictions carry ~9% MAPE at this training size
         // (see EXPERIMENTS.md §Perf); allow 25% headroom over the oracle.
         assert!(
@@ -488,9 +580,16 @@ mod tests {
     fn grid_search_never_worse_than_exclusive() {
         let device = Device::oneplus11();
         let op = OpConfig::Linear(LinearConfig::new(50, 768, 512));
-        let (_, t) = grid_search(&device, &op, 2, SyncMechanism::SvmPolling, 4);
-        let gpu = device.measure_coexec_mean(&op, ChannelSplit::gpu_only(512), 2, SyncMechanism::SvmPolling, 4);
-        let cpu = device.measure_coexec_mean(&op, ChannelSplit::cpu_only(512), 2, SyncMechanism::SvmPolling, 4);
+        let (_, t) =
+            grid_search(&device, &op, ClusterId::Prime, 2, SyncMechanism::SvmPolling, 4);
+        let gpu = device.measure_coexec_mean(
+            &op, ChannelSplit::gpu_only(512), ClusterId::Prime, 2,
+            SyncMechanism::SvmPolling, 4,
+        );
+        let cpu = device.measure_coexec_mean(
+            &op, ChannelSplit::cpu_only(512), ClusterId::Prime, 2,
+            SyncMechanism::SvmPolling, 4,
+        );
         assert!(t <= gpu + 1e-9 && t <= cpu + 1e-9);
     }
 
@@ -501,6 +600,7 @@ mod tests {
         let op = OpConfig::Linear(LinearConfig::new(50, 768, 3000));
         let plan = p.plan_with_threads(&op, 2);
         assert_eq!(plan.split.total(), 3000);
+        assert_eq!(plan.cluster, ClusterId::Prime);
         assert_eq!(plan.threads, 2);
         assert_eq!(plan.mech, SyncMechanism::SvmPolling);
         assert!(plan.t_total_us > 0.0);
@@ -516,6 +616,7 @@ mod tests {
             OpConfig::Linear(LinearConfig::new(8, 64, 96)), // below coarse threshold
         ] {
             let auto = p.plan_request(&op, PlanRequest::auto());
+            assert_eq!(auto.cluster, ClusterId::Prime, "auto() stays on the big cluster");
             let mut grid_best = f64::MAX;
             for t in 1..=device.spec.cpu.max_threads() {
                 for m in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
@@ -535,6 +636,59 @@ mod tests {
     }
 
     #[test]
+    fn cluster_auto_minimizes_over_every_placement() {
+        let device = Device::pixel5();
+        let p = planner(device.clone());
+        for op in [
+            OpConfig::Linear(LinearConfig::new(64, 512, 900)),
+            OpConfig::Linear(LinearConfig::new(2, 16, 24)), // launch-bound
+        ] {
+            let auto = p.plan_request(&op, PlanRequest::cluster_auto());
+            let mut grid_best = f64::MAX;
+            for cl in &device.spec.cpu.clusters {
+                for t in 1..=cl.max_threads() {
+                    for m in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+                        let fixed = p.plan_request(&op, PlanRequest::fixed_on(cl.id, t, m));
+                        assert_eq!((fixed.cluster, fixed.threads, fixed.mech), (cl.id, t, m));
+                        grid_best = grid_best.min(fixed.t_total_us);
+                    }
+                }
+            }
+            assert!(
+                auto.t_total_us <= grid_best + 1e-9,
+                "{op}: cluster-auto {:.2} worse than best fixed {:.2}",
+                auto.t_total_us,
+                grid_best
+            );
+            // exactness: replaying the resolved strategy reproduces the plan
+            let s = auto.strategy();
+            let replay =
+                p.plan_request(&op, PlanRequest::fixed_on(s.cluster, s.threads, s.mech));
+            assert_eq!(replay, auto, "{op}: cluster-auto plan not reproducible");
+        }
+    }
+
+    #[test]
+    fn cluster_axis_pins_search_to_the_requested_cluster() {
+        let device = Device::pixel5();
+        let p = planner(device.clone());
+        let op = OpConfig::Linear(LinearConfig::new(64, 512, 900));
+        let silver = p.plan_request(
+            &op,
+            PlanRequest::auto().with_cluster(Choice::Fixed(ClusterId::Silver)),
+        );
+        assert_eq!(silver.cluster, ClusterId::Silver);
+        let budget = device.spec.cpu.cluster(ClusterId::Silver).unwrap().max_threads();
+        assert!((1..=budget).contains(&silver.threads));
+        // fixed-on clamps to the *cluster's* budget, not prime's
+        let clamped = p.plan_request(
+            &op,
+            PlanRequest::fixed_on(ClusterId::Silver, 99, SyncMechanism::SvmPolling),
+        );
+        assert_eq!(clamped.threads, budget);
+    }
+
+    #[test]
     fn fixed_request_clamps_threads_to_device_budget() {
         let device = Device::moto2022();
         let p = planner(device);
@@ -546,11 +700,20 @@ mod tests {
 
     #[test]
     fn request_normalization_is_canonical() {
-        let a = PlanRequest::fixed(99, SyncMechanism::SvmPolling).normalized(3);
-        let b = PlanRequest::fixed(3, SyncMechanism::SvmPolling).normalized(3);
+        let cpu = crate::device::SocSpec::pixel5().cpu;
+        let a = PlanRequest::fixed(99, SyncMechanism::SvmPolling).normalized(&cpu);
+        let b = PlanRequest::fixed(3, SyncMechanism::SvmPolling).normalized(&cpu);
         assert_eq!(a, b);
-        let auto = PlanRequest::auto().normalized(3);
+        let auto = PlanRequest::auto().normalized(&cpu);
         assert_eq!(auto, PlanRequest::auto());
         assert!(!auto.is_fixed() && a.is_fixed());
+        // fixed-cluster requests clamp against that cluster's own budget
+        let gold = PlanRequest::fixed_on(ClusterId::Gold, 99, SyncMechanism::SvmPolling)
+            .normalized(&cpu);
+        assert_eq!(gold.threads, Choice::Fixed(2), "pixel5 gold models 2 threads");
+        // a freed cluster normalizes against the largest budget (silver: 4)
+        let free = PlanRequest::cluster_auto();
+        let t9 = PlanRequest { threads: Choice::Fixed(9), ..free }.normalized(&cpu);
+        assert_eq!(t9.threads, Choice::Fixed(4));
     }
 }

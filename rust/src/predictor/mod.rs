@@ -4,7 +4,11 @@
 //!   [`FeatureMode::Augmented`] mode it trains **one GBDT per kernel
 //!   implementation** with dispatch features appended (the paper's §3.2);
 //!   in Basic mode it is the black-box baseline of prior work.
-//! * [`CpuPredictor`] — GBDT per CPU thread count.
+//! * [`CpuPredictor`] — GBDT per `(CPU cluster, thread count)` placement.
+//!   [`PredictorSet`] trains the default (prime) cluster's models eagerly
+//!   — the paper's offline compilation step — and the gold/silver
+//!   placements lazily on first prediction, so the cluster axis costs
+//!   nothing until a plan request actually explores it.
 //! * [`LinearRegPredictor`] — least-squares on (FLOPs, bytes, 1): the
 //!   linear-model baseline the paper's Fig. 3 shows failing (ref [2]).
 //!
@@ -16,11 +20,12 @@ pub mod features;
 
 pub use features::{cpu_features, feature_names, gpu_features, FeatureMode};
 
-use crate::device::{Device, Processor};
+use crate::device::{ClusterId, Device, Processor};
 use crate::gbdt::{Gbdt, GbdtParams};
 use crate::metrics::mape;
 use crate::ops::OpConfig;
 use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// Number of repeated measurements averaged per training target (the paper
 /// averages repeated on-device runs).
@@ -127,8 +132,10 @@ impl GpuPredictor {
     }
 }
 
-/// GBDT latency predictor for the CPU at a fixed thread count.
+/// GBDT latency predictor for the CPU at a fixed `(cluster, threads)`
+/// placement.
 pub struct CpuPredictor {
+    pub cluster: ClusterId,
     pub threads: usize,
     model: Gbdt,
 }
@@ -137,6 +144,7 @@ impl CpuPredictor {
     pub fn train(
         device: &Device,
         ops: &[OpConfig],
+        cluster: ClusterId,
         threads: usize,
         params: &GbdtParams,
     ) -> Self {
@@ -145,13 +153,13 @@ impl CpuPredictor {
             .iter()
             .map(|op| {
                 let m = (0..TRAIN_TRIALS)
-                    .map(|t| device.measure_cpu(op, threads, t))
+                    .map(|t| device.measure_cpu(op, cluster, threads, t))
                     .sum::<f64>()
                     / TRAIN_TRIALS as f64;
                 m.ln()
             })
             .collect();
-        Self { threads, model: Gbdt::fit(&x, &y, params) }
+        Self { cluster, threads, model: Gbdt::fit(&x, &y, params) }
     }
 
     pub fn predict_us(&self, op: &OpConfig) -> f64 {
@@ -163,7 +171,7 @@ impl CpuPredictor {
             .iter()
             .map(|op| {
                 (0..TRAIN_TRIALS)
-                    .map(|t| device.measure_cpu(op, self.threads, 1000 + t))
+                    .map(|t| device.measure_cpu(op, self.cluster, self.threads, 1000 + t))
                     .sum::<f64>()
                     / TRAIN_TRIALS as f64
             })
@@ -233,14 +241,32 @@ fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
     x
 }
 
-/// Convenience: predict latency for any processor.
+/// A lazily trained CPU placement model: the `OnceLock` gives cold
+/// training single-flight semantics per `(cluster, threads)` key without
+/// holding the placement map's lock for the multi-second GBDT fit.
+type PlacementCell = Arc<OnceLock<CpuPredictor>>;
+
+/// Predict latency for any processor placement on one device.
+///
+/// CPU models are keyed by `(cluster, threads)`. The default (prime)
+/// cluster's models — the only placements the paper's fixed strategies
+/// ever touch — are trained eagerly by [`PredictorSet::train`]; other
+/// placements train lazily, on first prediction (or via
+/// [`PredictorSet::prewarm_placements`], which the serving layer runs off
+/// the request path), from the retained training set. Cold training is
+/// single-flight per placement, and deterministic either way
+/// (measurements are keyed by `(device, op, cluster, threads, trial)`).
 pub struct PredictorSet {
     pub gpu: GpuPredictor,
-    pub cpu: HashMap<usize, CpuPredictor>,
+    cpu: RwLock<HashMap<(ClusterId, usize), PlacementCell>>,
+    /// Retained §5.2 training sample for lazy placement training.
+    train_ops: Vec<OpConfig>,
+    params: GbdtParams,
 }
 
 impl PredictorSet {
-    /// Train GPU + CPU(1..=3) predictors on a device from sampled ops.
+    /// Train the GPU predictor and the default cluster's CPU predictors
+    /// (1..=its thread budget) on a device from sampled ops.
     pub fn train(
         device: &Device,
         ops: &[OpConfig],
@@ -248,17 +274,88 @@ impl PredictorSet {
         params: &GbdtParams,
     ) -> Self {
         let gpu = GpuPredictor::train(device, ops, mode, params);
-        let cpu = (1..=3)
-            .map(|t| (t, CpuPredictor::train(device, ops, t, params)))
+        let default = device.spec.cpu.default_cluster();
+        let cpu = (1..=default.max_threads())
+            .map(|t| {
+                let cell = OnceLock::new();
+                let _ = cell.set(CpuPredictor::train(device, ops, default.id, t, params));
+                ((default.id, t), Arc::new(cell))
+            })
             .collect();
-        Self { gpu, cpu }
+        Self {
+            gpu,
+            cpu: RwLock::new(cpu),
+            train_ops: ops.to_vec(),
+            params: *params,
+        }
     }
 
+    /// Predicted latency on a [`Processor`] (`Cpu(t)` = prime cluster).
     pub fn predict_us(&self, device: &Device, op: &OpConfig, proc: Processor) -> f64 {
         match proc {
             Processor::Gpu => self.gpu.predict_us(device, op),
-            Processor::Cpu(t) => self.cpu[&t].predict_us(op),
+            Processor::Cpu(t) => {
+                self.predict_cpu_us(device, op, device.spec.cpu.default_cluster_id(), t)
+            }
         }
+    }
+
+    /// The placement's cell, creating an empty one if the key is new; the
+    /// map lock is only ever held for the lookup/insert, never training.
+    fn placement_cell(&self, key: (ClusterId, usize)) -> PlacementCell {
+        if let Some(cell) = self.cpu.read().unwrap_or_else(|p| p.into_inner()).get(&key) {
+            return cell.clone();
+        }
+        let mut map = self.cpu.write().unwrap_or_else(|p| p.into_inner());
+        map.entry(key).or_default().clone()
+    }
+
+    /// The placement's trained model, training it on first use (cold
+    /// callers for the same placement block on one training, not N).
+    fn placement<'a>(
+        &self,
+        cell: &'a PlacementCell,
+        device: &Device,
+        (cluster, threads): (ClusterId, usize),
+    ) -> &'a CpuPredictor {
+        cell.get_or_init(|| {
+            CpuPredictor::train(device, &self.train_ops, cluster, threads, &self.params)
+        })
+    }
+
+    /// Predicted CPU latency at an explicit `(cluster, threads)`
+    /// placement, training that placement's model on first use.
+    pub fn predict_cpu_us(
+        &self,
+        device: &Device,
+        op: &OpConfig,
+        cluster: ClusterId,
+        threads: usize,
+    ) -> f64 {
+        let cell = self.placement_cell((cluster, threads));
+        self.placement(&cell, device, (cluster, threads)).predict_us(op)
+    }
+
+    /// Train every placement of every cluster the device exposes that has
+    /// no model yet. The serving layer calls this from its background
+    /// pre-warm so a cold cluster-`Auto` request never pays GBDT training
+    /// on the request path.
+    pub fn prewarm_placements(&self, device: &Device) {
+        for cl in &device.spec.cpu.clusters {
+            for t in 1..=cl.max_threads() {
+                let cell = self.placement_cell((cl.id, t));
+                self.placement(&cell, device, (cl.id, t));
+            }
+        }
+    }
+
+    /// Placements with a trained model right now (telemetry/tests).
+    pub fn trained_placements(&self) -> Vec<(ClusterId, usize)> {
+        let map = self.cpu.read().unwrap_or_else(|p| p.into_inner());
+        let mut keys: Vec<_> =
+            map.iter().filter(|(_, c)| c.get().is_some()).map(|(k, _)| *k).collect();
+        keys.sort_unstable_by_key(|(c, t)| (c.index(), *t));
+        keys
     }
 }
 
@@ -292,9 +389,34 @@ mod tests {
     fn cpu_predictor_accurate() {
         let device = Device::moto2022();
         let (train, test) = dataset::training_split("linear", 1500, 10);
-        let p = CpuPredictor::train(&device, &train, 2, &quick_params());
+        let p = CpuPredictor::train(&device, &train, ClusterId::Prime, 2, &quick_params());
         let e = p.evaluate(&device, &test);
         assert!(e < 0.08, "cpu MAPE {e:.4}");
+    }
+
+    #[test]
+    fn non_default_placements_train_lazily_and_accurately() {
+        let device = Device::moto2022();
+        let (train, test) = dataset::training_split("linear", 1200, 10);
+        let set = PredictorSet::train(&device, &train, FeatureMode::Augmented, &quick_params());
+        // eager training covers exactly the prime budget
+        let prime_budget = device.spec.cpu.max_threads();
+        assert_eq!(
+            set.trained_placements(),
+            (1..=prime_budget).map(|t| (ClusterId::Prime, t)).collect::<Vec<_>>()
+        );
+        // a silver prediction trains that placement on demand...
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 1024));
+        let pred = set.predict_cpu_us(&device, &op, ClusterId::Silver, 2);
+        assert!(pred.is_finite() && pred > 0.0);
+        assert!(set.trained_placements().contains(&(ClusterId::Silver, 2)));
+        // ...and matches a directly trained model exactly (determinism)
+        let direct = CpuPredictor::train(&device, &train, ClusterId::Silver, 2, &quick_params());
+        assert_eq!(pred, direct.predict_us(&op));
+        assert!(direct.evaluate(&device, &test) < 0.08, "silver MAPE");
+        // the Processor path is the prime placement
+        let via_proc = set.predict_us(&device, &op, Processor::Cpu(2));
+        assert_eq!(via_proc, set.predict_cpu_us(&device, &op, ClusterId::Prime, 2));
     }
 
     #[test]

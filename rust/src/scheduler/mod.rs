@@ -3,14 +3,15 @@
 //! For every partitionable layer the planner's offline decision is applied;
 //! pooling stays on the GPU. Scheduling is strategy-space-aware: the
 //! scheduler carries a [`PlanRequest`], and with `Auto` axes every layer
-//! independently gets its own winning `(split, threads, mech)` strategy —
-//! a big early layer may saturate 3 CPU threads while a skinny late layer
-//! stays GPU-only. End-to-end latency adds an inter-layer memory handoff
+//! independently gets its own winning `(split, cluster, threads, mech)`
+//! strategy — a big early layer may saturate 3 prime threads while a
+//! launch-bound late layer drops to the silver cluster or stays GPU-only.
+//! End-to-end latency adds an inter-layer memory handoff
 //! term (the paper observes end-to-end speedups slightly below the sum of
 //! individual ops, "potentially due to memory access overhead between
 //! layers").
 
-use crate::device::{Device, SyncMechanism};
+use crate::device::{ClusterId, Device, SyncMechanism};
 use crate::models::{Layer, Model};
 use crate::ops::OpConfig;
 use crate::partition::{Plan, PlanRequest, Planner};
@@ -23,10 +24,12 @@ pub struct LayerSchedule {
     pub plan: Option<Plan>,
 }
 
-/// How often each CPU thread count (ascending) and each sync mechanism
-/// were chosen across a model's planned layers. Only chosen values appear.
+/// How often each CPU cluster (prime first), each thread count
+/// (ascending), and each sync mechanism were chosen across a model's
+/// planned layers. Only chosen values appear.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StrategyDist {
+    pub clusters: Vec<(ClusterId, usize)>,
     pub threads: Vec<(usize, usize)>,
     pub mechs: Vec<(SyncMechanism, usize)>,
 }
@@ -35,6 +38,10 @@ pub struct StrategyDist {
 pub fn strategy_distribution(schedule: &[LayerSchedule]) -> StrategyDist {
     let mut dist = StrategyDist::default();
     for plan in schedule.iter().filter_map(|ls| ls.plan.as_ref()) {
+        match dist.clusters.iter().position(|(c, _)| *c == plan.cluster) {
+            Some(i) => dist.clusters[i].1 += 1,
+            None => dist.clusters.push((plan.cluster, 1)),
+        }
         match dist.threads.iter().position(|(t, _)| *t == plan.threads) {
             Some(i) => dist.threads[i].1 += 1,
             None => dist.threads.push((plan.threads, 1)),
@@ -44,6 +51,7 @@ pub fn strategy_distribution(schedule: &[LayerSchedule]) -> StrategyDist {
             None => dist.mechs.push((plan.mech, 1)),
         }
     }
+    dist.clusters.sort_unstable_by_key(|(c, _)| c.index());
     dist.threads.sort_unstable_by_key(|(t, _)| *t);
     dist
 }
@@ -174,6 +182,7 @@ impl<'a> ModelScheduler<'a> {
                     let co = self.device.measure_coexec_mean(
                         &op,
                         plan.split,
+                        plan.cluster,
                         plan.threads,
                         plan.mech,
                         E2E_TRIALS,
@@ -281,8 +290,11 @@ mod tests {
         let schedule = s.plan(&m);
         let planned = schedule.iter().filter(|ls| ls.plan.is_some()).count();
         let dist = strategy_distribution(&schedule);
+        assert_eq!(dist.clusters.iter().map(|(_, n)| n).sum::<usize>(), planned);
         assert_eq!(dist.threads.iter().map(|(_, n)| n).sum::<usize>(), planned);
         assert_eq!(dist.mechs.iter().map(|(_, n)| n).sum::<usize>(), planned);
+        // auto() stays on the big cluster: a degenerate cluster dist
+        assert_eq!(dist.clusters, vec![(crate::device::ClusterId::Prime, planned)]);
         // threads are reported in ascending order, each at most once
         assert!(dist.threads.windows(2).all(|w| w[0].0 < w[1].0));
         // the fixed request degenerates to a single strategy point
@@ -290,8 +302,15 @@ mod tests {
             &scheduler(&device, &lp, &cp, PlanRequest::fixed(2, SyncMechanism::SvmPolling))
                 .plan(&m),
         );
+        assert_eq!(fixed_dist.clusters, vec![(crate::device::ClusterId::Prime, planned)]);
         assert_eq!(fixed_dist.threads, vec![(2, planned)]);
         assert_eq!(fixed_dist.mechs, vec![(SyncMechanism::SvmPolling, planned)]);
+        // a cluster-auto schedule's cluster dist still covers every layer
+        let cauto_dist = strategy_distribution(
+            &scheduler(&device, &lp, &cp, PlanRequest::cluster_auto()).plan(&m),
+        );
+        assert_eq!(cauto_dist.clusters.iter().map(|(_, n)| n).sum::<usize>(), planned);
+        assert!(cauto_dist.clusters.windows(2).all(|w| w[0].0.index() < w[1].0.index()));
     }
 
     #[test]

@@ -9,14 +9,15 @@
 //!
 //! Two maps back the cache:
 //!
-//! * **plans** — `(device, calibration epoch, op, threads, mech)`
-//!   ([`PlanKey`], fully resolved) → [`Plan`]. Every cached plan lives
-//!   here.
+//! * **plans** — `(device, calibration epoch, op, cluster, threads,
+//!   mech)` ([`PlanKey`], fully resolved) → [`Plan`]. Every cached plan
+//!   lives here.
 //! * **auto resolutions** — `(device, epoch, op, normalized request)`
-//!   ([`AutoKey`], at least one `Auto` axis) → the winning [`Strategy`].
-//!   An `Auto` request resolves once, then indexes into **plans** under
-//!   its resolved key — so the `auto` request and the equivalent fixed
-//!   request share one cache entry and hit each other.
+//!   ([`AutoKey`], at least one `Auto` axis — cluster, threads, or
+//!   mechanism) → the winning [`Strategy`]. An `Auto` request resolves
+//!   once, then indexes into **plans** under its resolved key — so the
+//!   `auto` request and the equivalent fixed request share one cache
+//!   entry and hit each other, across the cluster axis too.
 //!
 //! Concurrency contract: misses compute *while holding the shard lock*
 //! (the auto-key shard for requests with an `Auto` axis, the plan-key
@@ -25,7 +26,12 @@
 //! never two misses — which the protocol stress tests rely on
 //! (`hits == requests - distinct keys`). Planning costs ~3-4 ms worst
 //! case; with [`DEFAULT_SHARDS`] shards the collateral blocking of
-//! unrelated keys is negligible at serving concurrency. Lock order is
+//! unrelated keys is negligible at serving concurrency. (A cluster-`Auto`
+//! request on a device whose gold/silver placement predictors have not
+//! been trained yet additionally pays that training inside its compute —
+//! the serving binary keeps this off the request path by training every
+//! placement in its background pre-warm, the same lazy-compilation trade
+//! the registry makes for whole planners.) Lock order is
 //! auto-shard → plan-shard, never the reverse.
 //!
 //! Memory is bounded two ways:
@@ -52,7 +58,7 @@
 //! and plain `FLUSH`), while [`PlanCache::flush`] keeps the old global
 //! behavior (`FLUSH all`).
 
-use crate::device::SyncMechanism;
+use crate::device::{ClusterId, SyncMechanism};
 use crate::metrics::Counter;
 use crate::ops::OpConfig;
 use crate::partition::{Choice, Plan, PlanRequest, Planner, Strategy};
@@ -76,6 +82,8 @@ pub struct PlanKey {
     /// it is published after the calibration flush.
     pub epoch: u64,
     pub op: OpConfig,
+    /// CPU cluster the plan places its CPU half on.
+    pub cluster: ClusterId,
     pub threads: usize,
     pub mech: SyncMechanism,
 }
@@ -241,13 +249,27 @@ impl<K: Hash + Eq + Clone, V: Copy> LruMap<K, V> {
         None
     }
 
-    /// Drop every expired entry in a locked shard, counting them.
-    fn purge_expired(&self, shard: &mut LruShard<K, V>, now_ms: u64) {
-        if self.ttl_ms.is_some() {
-            let before = shard.map.len();
-            shard.map.retain(|_, slot| !self.is_expired(now_ms, slot.stamp_ms));
-            self.expired.add((before - shard.map.len()) as u64);
+    /// Drop every expired entry in a locked shard, counting them; returns
+    /// how many were dropped.
+    fn purge_expired(&self, shard: &mut LruShard<K, V>, now_ms: u64) -> usize {
+        if self.ttl_ms.is_none() {
+            return 0;
         }
+        let before = shard.map.len();
+        shard.map.retain(|_, slot| !self.is_expired(now_ms, slot.stamp_ms));
+        let dropped = before - shard.map.len();
+        self.expired.add(dropped as u64);
+        dropped
+    }
+
+    /// Drop every expired entry across all shards (the background TTL
+    /// sweeper's one operation); returns how many were dropped.
+    fn sweep(&self) -> usize {
+        let now_ms = self.clock.now_ms();
+        self.shards
+            .iter()
+            .map(|s| self.purge_expired(&mut Self::lock(s), now_ms))
+            .sum()
     }
 
     /// Insert into a locked shard. A full shard first drops expired
@@ -414,10 +436,12 @@ impl PlanCache {
     ) -> Plan {
         let device = planner.device.name();
         let epoch = planner.device.epoch;
-        let req = req.normalized(planner.device.spec.cpu.max_threads());
-        if let (Choice::Fixed(threads), Choice::Fixed(mech)) = (req.threads, req.mech) {
+        let req = req.normalized(&planner.device.spec.cpu);
+        if let (Choice::Fixed(cluster), Choice::Fixed(threads), Choice::Fixed(mech)) =
+            (req.cluster, req.threads, req.mech)
+        {
             return self.get_or_insert_with(
-                PlanKey { device, epoch, op: *op, threads, mech },
+                PlanKey { device, epoch, op: *op, cluster, threads, mech },
                 || planner.plan_request(op, req),
             );
         }
@@ -430,8 +454,15 @@ impl PlanCache {
             // strategy reproduces it exactly, at a fraction of the joint
             // search's cost.
             return self.get_or_insert_with(
-                PlanKey { device, epoch, op: *op, threads: s.threads, mech: s.mech },
-                || planner.plan_request(op, PlanRequest::fixed(s.threads, s.mech)),
+                PlanKey {
+                    device,
+                    epoch,
+                    op: *op,
+                    cluster: s.cluster,
+                    threads: s.threads,
+                    mech: s.mech,
+                },
+                || planner.plan_request(op, PlanRequest::fixed_on(s.cluster, s.threads, s.mech)),
             );
         }
         // Cold auto request: resolve under the auto-shard lock (single
@@ -443,7 +474,14 @@ impl PlanCache {
             let plan = planner.plan_request(op, req);
             self.misses.inc();
             self.plans.publish(
-                PlanKey { device, epoch, op: *op, threads: plan.threads, mech: plan.mech },
+                PlanKey {
+                    device,
+                    epoch,
+                    op: *op,
+                    cluster: plan.cluster,
+                    threads: plan.threads,
+                    mech: plan.mech,
+                },
                 plan,
             );
             computed = Some(plan);
@@ -454,8 +492,20 @@ impl PlanCache {
             // lost the single-flight race: the resolver published the plan
             // (re-plan at the resolved strategy if it was already evicted)
             None => self.get_or_insert_with(
-                PlanKey { device, epoch, op: *op, threads: strategy.threads, mech: strategy.mech },
-                || planner.plan_request(op, PlanRequest::fixed(strategy.threads, strategy.mech)),
+                PlanKey {
+                    device,
+                    epoch,
+                    op: *op,
+                    cluster: strategy.cluster,
+                    threads: strategy.threads,
+                    mech: strategy.mech,
+                },
+                || {
+                    planner.plan_request(
+                        op,
+                        PlanRequest::fixed_on(strategy.cluster, strategy.threads, strategy.mech),
+                    )
+                },
             ),
         }
     }
@@ -498,6 +548,26 @@ impl PlanCache {
     /// Plans dropped because they outlived the TTL.
     pub fn expired(&self) -> u64 {
         self.plans.expired.get()
+    }
+
+    /// The configured TTL, if any (the server uses this to decide whether
+    /// a background sweeper is worth spawning).
+    pub fn ttl(&self) -> Option<Duration> {
+        self.plans.ttl_ms.map(Duration::from_millis)
+    }
+
+    /// Drop every expired plan and auto resolution now, instead of
+    /// waiting for a touch, capacity pressure, or a `STATS`/[`len`]
+    /// sweep — the background TTL sweeper's periodic call (idle-memory
+    /// reclaim for long-lived servers). Expired plans land in the same
+    /// [`PlanCache::expired`] counter as lazy expiry; returns how many
+    /// plans were dropped. A no-op without a TTL.
+    ///
+    /// [`len`]: PlanCache::len
+    pub fn sweep_expired(&self) -> usize {
+        let n = self.plans.sweep();
+        self.auto.sweep();
+        n
     }
 
     /// Number of live cached plans across all shards (expired entries are
@@ -764,8 +834,14 @@ mod tests {
 
         let other = OpConfig::Linear(LinearConfig::new(8, 64, 256));
         cache.get_or_plan(&p, &other, 1); // evicts the auto plan
-        let key =
-            PlanKey { device: p.device.name(), epoch: 0, op, threads: auto.threads, mech: auto.mech };
+        let key = PlanKey {
+            device: p.device.name(),
+            epoch: 0,
+            op,
+            cluster: auto.cluster,
+            threads: auto.threads,
+            mech: auto.mech,
+        };
         assert!(cache.peek(&key).is_none(), "plan entry must be evicted");
 
         // the resolution outlived its plan entry: the re-request must
@@ -891,5 +967,82 @@ mod tests {
         cache.get_or_plan(&p, &op, max);
         cache.get_or_plan(&p, &op, 99); // clamps to max: same key, a hit
         assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn cluster_requests_get_distinct_keys_and_share_auto_entries() {
+        use crate::device::ClusterId;
+        let p = planner();
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 1024));
+        // same (threads, mech) on two clusters: two distinct entries
+        cache.get_or_plan_request(
+            &p,
+            &op,
+            PlanRequest::fixed_on(ClusterId::Prime, 2, SyncMechanism::SvmPolling),
+        );
+        cache.get_or_plan_request(
+            &p,
+            &op,
+            PlanRequest::fixed_on(ClusterId::Silver, 2, SyncMechanism::SvmPolling),
+        );
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 2, 2));
+        // a cluster-auto request resolves once and its fixed equivalent
+        // hits the published entry
+        let auto = cache.get_or_plan_request(&p, &op, PlanRequest::cluster_auto());
+        let s = auto.strategy();
+        let fixed = cache.get_or_plan_request(
+            &p,
+            &op,
+            PlanRequest::fixed_on(s.cluster, s.threads, s.mech),
+        );
+        assert_eq!(fixed, auto);
+        let replays = cache.get_or_plan_request(&p, &op, PlanRequest::cluster_auto());
+        assert_eq!(replays, auto);
+        // the resolution is indexed under the full request (cluster choice
+        // included), separate from the prime-pinned auto() request
+        let akey = AutoKey {
+            device: p.device.name(),
+            epoch: 0,
+            op,
+            req: PlanRequest::cluster_auto(),
+        };
+        assert_eq!(cache.peek_resolution(&akey), Some(s));
+    }
+
+    #[test]
+    fn sweep_expired_reclaims_without_touches() {
+        let p = planner();
+        let (cache, clock) = manual_cache(8, 50);
+        let op_a = OpConfig::Linear(LinearConfig::new(8, 64, 256));
+        let op_b = OpConfig::Linear(LinearConfig::new(8, 64, 260));
+        let plan_a = cache.get_or_plan(&p, &op_a, 1);
+        cache.get_or_plan(&p, &op_b, 1);
+        cache.get_or_plan_request(&p, &op_a, PlanRequest::auto());
+        assert_eq!(cache.sweep_expired(), 0, "nothing expired yet");
+        let live = cache.len();
+        clock.advance_ms(51);
+        // peek is expiry-free: both plans still physically resident
+        let key_a = PlanKey {
+            device: p.device.name(),
+            epoch: 0,
+            op: op_a,
+            cluster: plan_a.cluster,
+            threads: 1,
+            mech: SyncMechanism::SvmPolling,
+        };
+        assert!(cache.peek(&key_a).is_some());
+        assert_eq!(cache.sweep_expired(), live, "sweep drops every expired plan");
+        assert!(cache.peek(&key_a).is_none(), "swept entries are physically gone");
+        assert_eq!(cache.expired(), live as u64, "sweeps land in the expired counter");
+        let akey =
+            AutoKey { device: p.device.name(), epoch: 0, op: op_a, req: PlanRequest::auto() };
+        assert!(cache.peek_resolution(&akey).is_none(), "resolutions sweep too");
+        assert_eq!(cache.sweep_expired(), 0, "idempotent once clean");
+        // no TTL -> never sweeps
+        let no_ttl = PlanCache::default();
+        no_ttl.get_or_plan(&p, &op_a, 1);
+        assert_eq!(no_ttl.ttl(), None);
+        assert_eq!(no_ttl.sweep_expired(), 0);
     }
 }

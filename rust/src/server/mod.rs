@@ -11,8 +11,8 @@
 //!   serving system that onboards real fleets must accept devices the
 //!   paper never measured;
 //! * a sharded **[`cache::PlanCache`]** — resolved plans keyed by
-//!   `(device, calibration-epoch, op-config, threads, sync-mechanism)`
-//!   plus an index mapping
+//!   `(device, calibration-epoch, op-config, cpu-cluster, threads,
+//!   sync-mechanism)` plus an index mapping
 //!   `auto` requests to their resolved strategy, with per-shard LRU
 //!   eviction and optional TTL expiry (drifting calibration must not pin
 //!   stale plans forever). Planning is deterministic per shape, so a plan
@@ -39,36 +39,48 @@
 //! ping       = "PING"                     ; -> OK pong
 //! plan       = "PLAN" op-spec             ; -> OK c_cpu c_gpu t_pred_us
 //!                                         ;      threads=<t> mech=<mech>
+//!                                         ;      cluster=<cluster>
 //! plan-batch = "PLAN_BATCH" op-spec *(";" op-spec)
+//!                                         ; at most 64 op-specs per line
 //!                                         ; -> OK n=<k> header, then one
 //!                                         ;    "OK ..."/"ERR ..." line per
 //!                                         ;    op-spec, in request order
 //! run        = "RUN" op-spec              ; -> OK t_coexec_us t_gpu_us
 //!                                         ;      speedup threads=<t>
-//!                                         ;      mech=<mech>
+//!                                         ;      mech=<mech> cluster=<cluster>
 //! device     = "DEVICE" name              ; -> OK device <name>
 //! calibrate  = "CALIBRATE" name *(param "=" value)
 //!                                         ; -> OK calibrated <name> flushed=<n>
-//! plan-model = "PLAN_MODEL" model threads ; -> OK model=<m> layers=<n>
+//! plan-model = "PLAN_MODEL" model threads ["cluster=" cluster-req]
+//!                                         ; -> OK model=<m> layers=<n>
 //!                                         ;      planned=<n> coexec=<n>
 //!                                         ;      threads=<t:n,...>
 //!                                         ;      mechs=<mech:n,...>
 //!                                         ;      t_pred_ms=<x>
+//!                                         ;      clusters=<cluster:n,...>
 //! flush      = "FLUSH" ["all"]            ; -> OK flushed=<n>
 //! stats      = "STATS"                    ; -> OK hits= misses= entries=
 //!                                         ;      evictions= expired=
 //!                                         ;      <verb>.req= .err= .p50_us= .p95_us= ...
-//! op-spec    = "linear" l cin cout threads
-//!            | "conv" h w cin cout k s threads
+//! op-spec    = "linear" l cin cout threads ["cluster=" cluster-req]
+//!            | "conv" h w cin cout k s threads ["cluster=" cluster-req]
 //! name       = "pixel4" | "pixel5" | "moto2022" | "oneplus11"   ; + aliases moto, oneplus
 //!            | custom-name               ; 1-32 of [a-z0-9_-], letter first
 //! param      = "base"                     ; spec to start from (device name)
 //!            | any `device::CALIBRATION_KEYS` entry, e.g. "gpu.clock_ghz"
+//!            ; cpu.<field> addresses the prime cluster;
+//!            ; cpu.<cluster>.<field> (e.g. cpu.silver.eff4) one cluster
 //! model      = "vgg16" | "resnet18" | "resnet34" | "inception_v3" | "vit_base32"
 //! threads    = 1..cores | "auto"
-//!            ; 0 is an error, larger values clamp to the device's
-//!            ; big-core count; "auto" jointly searches the thread count
-//!            ; and the sync mechanism per op (per *layer* in PLAN_MODEL)
+//!            ; 0 is an error, larger values clamp to the chosen
+//!            ; cluster's core budget; "auto" jointly searches the thread
+//!            ; count and the sync mechanism per op (per *layer* in
+//!            ; PLAN_MODEL)
+//! cluster-req = cluster | "auto"          ; omitted => prime (the paper's
+//!                                         ; big cores, the pre-cluster
+//!                                         ; behavior); "auto" adds the
+//!                                         ; cluster to the joint search
+//! cluster    = "prime" | "gold" | "silver"
 //! mech       = "svm_polling" | "event_wait"
 //! ```
 //!
@@ -84,9 +96,20 @@
 //! (validated; a failed `CALIBRATE` mutates nothing). On success exactly
 //! that device's cached plans and `auto` resolutions are dropped
 //! (`flushed=<n>`); every other device's entries stay warm. Its planners
-//! retrain lazily on first use, like any cold registry device. A
-//! calibrated device then serves every planning verb with the same
-//! caching/auto-resolution behavior as the built-in four.
+//! retrain lazily on first use, like any cold registry device — except
+//! in the long-lived serving binary, where a successful `CALIBRATE`
+//! kicks off that training (planners plus every cluster placement) in
+//! the background so no request pays it. A calibrated device then
+//! serves every planning verb with the same caching/auto-resolution
+//! behavior as the built-in four.
+//!
+//! The optional `cluster=` parameter picks which CPU cluster the plan's
+//! CPU half runs on (`prime`/`gold`/`silver`, or `auto` to let the
+//! planner search the cluster jointly with the split, threads, and
+//! mechanism). Omitting it pins the prime cluster — the paper's big-core
+//! set — so every pre-cluster request line, cache key, and plan is
+//! unchanged; replies simply append the resolved `cluster=<c>` field.
+//! Requesting a cluster the session device does not expose is an error.
 //!
 //! `FLUSH` drops the *session device's* cached plans and `auto`
 //! resolutions — for when one device's calibration changed out of band;
@@ -95,7 +118,15 @@
 //! not pin a worker in a near-endless partition sweep. A `PLAN_BATCH`
 //! line amortizes round-trips for compiler clients planning whole graphs;
 //! its per-op failures are reported in-band (per-op `ERR` lines) and do
-//! not fail the batch.
+//! not fail the batch, but a line carrying more than [`MAX_BATCH_OPS`]
+//! op-specs is rejected whole (`ERR too many ops`) — one request line
+//! must not monopolize a pool worker.
+//!
+//! With `--ttl` the server also runs a background sweeper thread that
+//! periodically drops expired cache entries per shard (counted in the
+//! `expired=` counter like lazy expiry) instead of leaving idle-memory
+//! reclaim to touches and capacity pressure; it shuts down with the
+//! [`Server`].
 //!
 //! # Example session
 //!
@@ -105,18 +136,24 @@
 //! > DEVICE pixel5
 //! < OK device pixel5
 //! > PLAN linear 50 768 3072 3
-//! < OK 592 2480 1628.4 threads=3 mech=svm_polling
+//! < OK 592 2480 1628.4 threads=3 mech=svm_polling cluster=prime
 //! > PLAN linear 50 768 3072 auto
-//! < OK 592 2480 1628.4 threads=3 mech=svm_polling   (auto resolved; cached
+//! < OK 592 2480 1628.4 threads=3 mech=svm_polling cluster=prime
+//!                                                   (auto resolved; cached
 //!                                                    once, shared with the
 //!                                                    fixed request above)
+//! > PLAN linear 2 16 24 auto cluster=auto
+//! < OK 24 0 11.2 threads=1 mech=svm_polling cluster=silver
+//!                                                   (4-axis search: a
+//!                                                    launch-bound op lands
+//!                                                    on the little cores)
 //! > PLAN_BATCH linear 50 768 3072 3; linear 0 768 3072 3
 //! < OK n=2
-//! < OK 592 2480 1628.4 threads=3 mech=svm_polling
+//! < OK 592 2480 1628.4 threads=3 mech=svm_polling cluster=prime
 //! < ERR zero-sized shape
 //! > PLAN_MODEL resnet18 auto
 //! < OK model=resnet18 layers=<n> planned=<n> coexec=<n> threads=<t:n,...>
-//!      mechs=<mech:n,...> t_pred_ms=<x>
+//!      mechs=<mech:n,...> t_pred_ms=<x> clusters=<cluster:n,...>
 //! > CALIBRATE lab_phone base=pixel5 gpu.clock_ghz=0.71 sync.polling_linear_us=7.5
 //! < OK calibrated lab_phone flushed=0
 //! > DEVICE lab_phone
@@ -138,17 +175,19 @@ pub mod pool;
 
 use self::cache::PlanCache;
 use self::pool::{SubmitError, WorkerPool};
-use crate::device::{intern_device_name, validate_device_name, Device, Processor, SyncMechanism};
+use crate::device::{
+    intern_device_name, validate_device_name, ClusterId, Device, Processor, SyncMechanism,
+};
 use crate::metrics::{Counter, LatencyRecorder};
 use crate::models::{self, Model};
 use crate::ops::{ConvConfig, LinearConfig, OpConfig};
-use crate::partition::{Plan, PlanRequest, Planner};
+use crate::partition::{Choice, Plan, PlanRequest, Planner};
 use crate::scheduler::{pool_gpu_us, strategy_distribution, ModelScheduler};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{mpsc, Arc, OnceLock, RwLock, RwLockReadGuard};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock, RwLock, RwLockReadGuard};
+use std::time::{Duration, Instant};
 
 /// The paper's four evaluation devices: single source of truth for
 /// `(canonical key, aliases, constructor)` — the registry, name
@@ -282,6 +321,16 @@ const VERBS: [(&str, &str); 9] = [
 /// Metrics key collecting unrecognized verbs (reported last by `STATS`).
 const OTHER_KEY: &str = "other";
 
+/// The op-spec grammar, quoted by every malformed-op-spec error (one
+/// copy, so the self-describing errors cannot drift from each other).
+const OP_SPEC_USAGE: &str = "bad op spec (expected: \
+    linear <l> <cin> <cout> <threads|auto> [cluster=<c>|auto] | \
+    conv <h> <w> <cin> <cout> <k> <s> <threads|auto> [cluster=<c>|auto])";
+
+/// The `PLAN_MODEL` grammar, quoted by its malformed-spec errors.
+const MODEL_SPEC_USAGE: &str =
+    "bad model spec (expected: PLAN_MODEL <model> <threads> [cluster=<c>|auto])";
+
 impl ServerMetrics {
     fn new() -> Self {
         Self {
@@ -359,6 +408,12 @@ pub struct ServerState {
     default_device: &'static str,
     n_train: usize,
     seed: u64,
+    /// When set (the serving binary — see [`Server::serve`]), a
+    /// successful `CALIBRATE` kicks off background planner + placement
+    /// training for the (re)calibrated device, so its first planning
+    /// request does not pay multi-second GBDT training on a pool worker.
+    /// Off by default: embedders and tests control their own training.
+    prewarm_calibrated: std::sync::atomic::AtomicBool,
     pub cache: PlanCache,
     pub metrics: ServerMetrics,
 }
@@ -405,22 +460,40 @@ impl ServerState {
             default_device,
             n_train,
             seed,
+            prewarm_calibrated: std::sync::atomic::AtomicBool::new(false),
             cache: PlanCache::default(),
             metrics: ServerMetrics::new(),
         }
     }
 
-    /// Train planners for every registry device that has none yet. Called
-    /// off the request path (see [`Server::serve`]): without it, the first
+    /// Enable background training of newly `CALIBRATE`d devices (see
+    /// `prewarm_calibrated`); the long-lived serving path turns this on.
+    pub fn enable_calibration_prewarm(&self) {
+        self.prewarm_calibrated.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Train one registry entry's planners and every CPU-cluster
+    /// placement predictor (idempotent; `OnceLock`/single-flight make
+    /// concurrent calls cheap).
+    fn prewarm_entry(entry: &DeviceEntry, n_train: usize, seed: u64) {
+        let planners = entry.planners(n_train, seed);
+        planners.linear.predictors.prewarm_placements(&entry.device);
+        planners.conv.predictors.prewarm_placements(&entry.device);
+    }
+
+    /// Train planners — and every CPU cluster placement's predictors —
+    /// for every registry device that has none yet. Called off the
+    /// request path (see [`Server::serve`]): without it, the first
     /// request for a cold device pins a pool worker for the whole GBDT
-    /// training — and four cold-device requests would pin the entire
-    /// default pool.
+    /// training (and the first cluster-`Auto` request would pin one for
+    /// the gold/silver placement training) — four cold-device requests
+    /// would pin the entire default pool.
     pub fn prewarm_all(&self) {
         // snapshot the Arcs so multi-second training never holds the
         // registry lock (CALIBRATE would block behind it)
         let entries: Vec<Arc<DeviceEntry>> = self.read_registry().clone();
         for entry in entries {
-            entry.planners(self.n_train, self.seed);
+            Self::prewarm_entry(&entry, self.n_train, self.seed);
         }
     }
 
@@ -532,18 +605,20 @@ impl ServerState {
                 let t_co = planner.measure_plan_us(&op, &plan, 8);
                 let t_gpu = entry.device.measure_mean(&op, Processor::Gpu, 8);
                 Ok(format!(
-                    "{:.1} {:.1} {:.3} threads={} mech={}",
+                    "{:.1} {:.1} {:.3} threads={} mech={} cluster={}",
                     t_co,
                     t_gpu,
                     t_gpu / t_co,
                     plan.threads,
-                    mech_wire(plan.mech)
+                    mech_wire(plan.mech),
+                    plan.cluster.wire()
                 ))
             }
-            ["PLAN_MODEL", model, threads] => self.plan_model(session, model, threads),
-            ["PLAN_MODEL", ..] => {
-                Err(anyhow!("bad model spec (expected: PLAN_MODEL <model> <threads>)"))
+            ["PLAN_MODEL", model, threads] => self.plan_model(session, model, threads, None),
+            ["PLAN_MODEL", model, threads, cluster] => {
+                self.plan_model(session, model, threads, Some(cluster))
             }
+            ["PLAN_MODEL", ..] => Err(anyhow!(MODEL_SPEC_USAGE)),
             ["FLUSH"] => {
                 // calibration-scoped: only the session device's plans (and
                 // auto resolutions) drop; other devices stay warm
@@ -562,12 +637,21 @@ impl ServerState {
     }
 
     /// Plan every partitionable layer of a named model through the cache
-    /// (repeated shapes inside one model already hit). With `auto` each
-    /// layer resolves its own strategy; the reply reports the distribution
-    /// of chosen thread counts and mechanisms.
-    fn plan_model(&self, session: &Session, name: &str, threads: &str) -> Result<String> {
+    /// (repeated shapes inside one model already hit). With `auto` axes
+    /// each layer resolves its own strategy; the reply reports the
+    /// distribution of chosen clusters, thread counts, and mechanisms.
+    fn plan_model(
+        &self,
+        session: &Session,
+        name: &str,
+        threads: &str,
+        cluster: Option<&str>,
+    ) -> Result<String> {
         let entry = self.session_entry(session);
-        let req = self.parse_request(&entry, threads)?;
+        if cluster.is_some_and(|c| !c.starts_with("cluster=")) {
+            return Err(anyhow!(MODEL_SPEC_USAGE));
+        }
+        let req = self.parse_request(&entry, threads, cluster)?;
         let model = model_by_name(name).ok_or_else(|| anyhow!("unknown model {name}"))?;
         let planners = self.planners_for(&entry);
         let sched = ModelScheduler {
@@ -596,48 +680,63 @@ impl ServerState {
             dist.threads.iter().map(|(t, n)| format!("{t}:{n}")).collect();
         let mechs_s: Vec<String> =
             dist.mechs.iter().map(|(m, n)| format!("{}:{n}", mech_wire(*m))).collect();
+        let clusters_s: Vec<String> =
+            dist.clusters.iter().map(|(c, n)| format!("{}:{n}", c.wire())).collect();
+        // clusters= is appended *after* the pre-cluster fields so replies
+        // stay position-compatible for existing clients
         Ok(format!(
-            "model={} layers={} planned={planned} coexec={coexec} threads={} mechs={} t_pred_ms={:.2}",
+            "model={} layers={} planned={planned} coexec={coexec} threads={} mechs={} t_pred_ms={:.2} clusters={}",
             model.name,
             model.layers.len(),
             threads_s.join(","),
             mechs_s.join(","),
-            t_pred_us / 1e3
+            t_pred_us / 1e3,
+            clusters_s.join(",")
         ))
     }
 
     /// One `PLAN_BATCH` line: `;`-separated op-specs, one `OK`/`ERR` line
     /// per spec after an `OK n=<k>` framing header. Blank segments (e.g. a
     /// trailing `;`) are skipped; per-op failures are in-band and do not
-    /// fail the batch.
+    /// fail the batch. At most [`MAX_BATCH_OPS`] op-specs are accepted —
+    /// the split loop would otherwise be attacker-sized, letting one
+    /// request line monopolize a pool worker — and the bound is checked
+    /// before any planning happens, so an oversized batch plans nothing.
     fn plan_batch(&self, session: &Session, specs: &str) -> Result<String> {
-        let mut lines: Vec<String> = Vec::new();
-        for spec in specs.split(';') {
-            let parts: Vec<&str> = spec.split_whitespace().collect();
-            if parts.is_empty() {
-                continue;
-            }
-            lines.push(
-                match self.parse_op(session, &parts).map(|(op, req)| {
-                    plan_body(&self.plan_cached(session, &op, req))
-                }) {
-                    Ok(body) => format!("OK {body}"),
-                    Err(e) => format!("ERR {e}"),
-                },
-            );
-        }
-        if lines.is_empty() {
+        let batches: Vec<Vec<&str>> = specs
+            .split(';')
+            .map(|spec| spec.split_whitespace().collect::<Vec<&str>>())
+            .filter(|parts| !parts.is_empty())
+            .collect();
+        if batches.is_empty() {
             return Err(anyhow!(
                 "empty batch (expected: PLAN_BATCH <op-spec>[; <op-spec>]...)"
             ));
         }
+        if batches.len() > MAX_BATCH_OPS {
+            return Err(anyhow!(
+                "too many ops in batch ({}, max {MAX_BATCH_OPS})",
+                batches.len()
+            ));
+        }
+        let lines: Vec<String> = batches
+            .iter()
+            .map(|parts| {
+                match self.parse_op(session, parts).map(|(op, req)| {
+                    plan_body(&self.plan_cached(session, &op, req))
+                }) {
+                    Ok(body) => format!("OK {body}"),
+                    Err(e) => format!("ERR {e}"),
+                }
+            })
+            .collect();
         Ok(format!("n={}\n{}", lines.len(), lines.join("\n")))
     }
 
     fn parse_op(&self, session: &Session, parts: &[&str]) -> Result<(OpConfig, PlanRequest)> {
         let entry = self.session_entry(session);
         match parts {
-            ["linear", l, cin, cout, thr] => {
+            ["linear", l, cin, cout, thr, cl @ ..] if cl.len() <= 1 => {
                 let cfg = LinearConfig::new(
                     field(l, "l")?,
                     field(cin, "cin")?,
@@ -646,9 +745,10 @@ impl ServerState {
                 if cfg.l == 0 || cfg.cin == 0 || cfg.cout == 0 {
                     return Err(anyhow!("zero-sized shape"));
                 }
-                Ok((OpConfig::Linear(cfg), self.parse_request(&entry, thr)?))
+                let req = self.parse_request(&entry, thr, cl.first().copied())?;
+                Ok((OpConfig::Linear(cfg), req))
             }
-            ["conv", h, w, cin, cout, k, s, thr] => {
+            ["conv", h, w, cin, cout, k, s, thr, cl @ ..] if cl.len() <= 1 => {
                 let cfg = ConvConfig::new(
                     field(h, "h")?,
                     field(w, "w")?,
@@ -666,35 +766,61 @@ impl ServerState {
                 {
                     return Err(anyhow!("zero-sized shape"));
                 }
-                Ok((OpConfig::Conv(cfg), self.parse_request(&entry, thr)?))
+                let req = self.parse_request(&entry, thr, cl.first().copied())?;
+                Ok((OpConfig::Conv(cfg), req))
             }
             [kind, ..] if *kind != "linear" && *kind != "conv" => {
                 Err(anyhow!("unknown op kind {kind}"))
             }
-            _ => Err(anyhow!(
-                "bad op spec (expected: linear <l> <cin> <cout> <threads|auto> | \
-                 conv <h> <w> <cin> <cout> <k> <s> <threads|auto>)"
-            )),
+            _ => Err(anyhow!(OP_SPEC_USAGE)),
         }
     }
 
-    /// Parse a threads token into a [`PlanRequest`]: `auto` frees both
-    /// strategy axes; a number pins `(threads, SvmPolling)`. 0 is an
-    /// error; anything above the device's big-core budget clamps to it (a
-    /// client asking for 99 threads must not make the cost model
-    /// extrapolate nonsense).
-    fn parse_request(&self, entry: &DeviceEntry, tok: &str) -> Result<PlanRequest> {
-        if tok.eq_ignore_ascii_case("auto") {
-            return Ok(PlanRequest::auto());
-        }
-        let t: usize = field(tok, "threads")?;
-        if t == 0 {
-            return Err(anyhow!("threads must be >= 1"));
-        }
-        Ok(PlanRequest::fixed(
-            t.min(entry.device.spec.cpu.max_threads()),
-            SyncMechanism::SvmPolling,
-        ))
+    /// Parse the strategy tokens into a [`PlanRequest`]: `auto` threads
+    /// free the thread and mechanism axes; a number pins
+    /// `(threads, SvmPolling)` (0 is an error; anything above the chosen
+    /// cluster's budget clamps to it — a client asking for 99 threads
+    /// must not make the cost model extrapolate nonsense). The optional
+    /// `cluster=` token pins a cluster the session device must expose, or
+    /// frees the cluster axis with `cluster=auto`; omitted means prime —
+    /// the exact pre-cluster behavior.
+    fn parse_request(
+        &self,
+        entry: &DeviceEntry,
+        tok: &str,
+        cluster_tok: Option<&str>,
+    ) -> Result<PlanRequest> {
+        let cluster = match cluster_tok {
+            None => Choice::Fixed(entry.device.spec.cpu.default_cluster_id()),
+            Some(ctok) => {
+                let v = ctok
+                    .strip_prefix("cluster=")
+                    .ok_or_else(|| anyhow!(OP_SPEC_USAGE))?;
+                if v.eq_ignore_ascii_case("auto") {
+                    Choice::Auto
+                } else {
+                    let id = ClusterId::parse(v).ok_or_else(|| {
+                        anyhow!("unknown cluster {v} (prime|gold|silver|auto)")
+                    })?;
+                    if entry.device.spec.cpu.cluster(id).is_none() {
+                        return Err(anyhow!("device {} has no {id} cluster", entry.key));
+                    }
+                    Choice::Fixed(id)
+                }
+            }
+        };
+        let req = if tok.eq_ignore_ascii_case("auto") {
+            PlanRequest::auto()
+        } else {
+            let t: usize = field(tok, "threads")?;
+            if t == 0 {
+                return Err(anyhow!("threads must be >= 1"));
+            }
+            PlanRequest::fixed(t, SyncMechanism::SvmPolling)
+        };
+        // normalization (per-cluster thread clamping) happens in the
+        // cache, against the same CpuSpec every planner sees
+        Ok(req.with_cluster(cluster))
     }
 
     /// Resolve a client-supplied device name to its registry entry:
@@ -766,6 +892,15 @@ impl ServerState {
         // auto-invalidate exactly the recalibrated device: its old plans
         // and auto resolutions are stale, every other device stays warm
         let flushed = self.cache.flush_device(spec_name);
+        // in the serving binary, retrain the fresh entry off the request
+        // path (startup's prewarm_all only covered the devices of its
+        // time); tests and embedders keep training explicit
+        if self.prewarm_calibrated.load(std::sync::atomic::Ordering::Relaxed) {
+            if let Some(entry) = self.entry(&key) {
+                let (n_train, seed) = (self.n_train, self.seed);
+                std::thread::spawn(move || Self::prewarm_entry(&entry, n_train, seed));
+            }
+        }
         Ok(format!("calibrated {key} flushed={flushed}"))
     }
 
@@ -798,15 +933,17 @@ impl ServerState {
 }
 
 /// The `PLAN` reply body for a resolved plan: split, predicted total, and
-/// the chosen strategy.
+/// the chosen strategy (`cluster=` appended last so pre-cluster clients
+/// keep their field positions).
 fn plan_body(plan: &Plan) -> String {
     format!(
-        "{} {} {:.1} threads={} mech={}",
+        "{} {} {:.1} threads={} mech={} cluster={}",
         plan.split.c_cpu,
         plan.split.c_gpu,
         plan.t_total_us,
         plan.threads,
-        mech_wire(plan.mech)
+        mech_wire(plan.mech),
+        plan.cluster.wire()
     )
 }
 
@@ -815,10 +952,14 @@ fn plan_body(plan: &Plan) -> String {
 const ACCEPT_BACKOFF: std::time::Duration = std::time::Duration::from_millis(50);
 
 /// Largest accepted request line in bytes: a client streaming data with
-/// no newline must not grow per-connection buffers without limit. Also
-/// the practical bound on `PLAN_BATCH` size (~150 op-specs per line) —
-/// large graphs split across a few batch lines.
+/// no newline must not grow per-connection buffers without limit.
 const MAX_LINE_BYTES: u64 = 4096;
+
+/// Most op-specs one `PLAN_BATCH` line may carry. The byte cap alone
+/// would admit ~150 specs — and up to that many cold planning sweeps on
+/// one pool worker — so the batch size is bounded explicitly; larger
+/// graphs split across a few batch lines.
+pub const MAX_BATCH_OPS: usize = 64;
 
 /// Largest accepted value for any numeric request field: covers the model
 /// zoo (which tops out at VGG16's classifier `cin = 25088`), small enough
@@ -859,18 +1000,92 @@ impl Default for ServerConfig {
     }
 }
 
-/// A running server: shared state + the worker pool executing requests.
+/// Background TTL sweeper: a thread that periodically calls
+/// [`PlanCache::sweep_expired`] so long-idle entries are reclaimed
+/// without waiting for a touch, capacity pressure, or a `STATS` sweep
+/// (ROADMAP's idle-memory-reclaim item). Swept entries land in the same
+/// `expired=` counter as lazy expiry. Stops promptly — not at the next
+/// tick — when dropped, so it shuts down cleanly with the [`Server`]
+/// that owns it.
+pub struct CacheSweeper {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CacheSweeper {
+    /// Spawn a sweeper over `state.cache`, ticking every `interval`.
+    pub fn spawn(state: Arc<ServerState>, interval: Duration) -> Self {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("cache-ttl-sweeper".into())
+            .spawn(move || {
+                let (lock, cv) = &*flag;
+                let mut stopped = lock.lock().unwrap_or_else(|p| p.into_inner());
+                while !*stopped {
+                    let (guard, timeout) = cv
+                        .wait_timeout(stopped, interval)
+                        .unwrap_or_else(|p| p.into_inner());
+                    stopped = guard;
+                    if !*stopped && timeout.timed_out() {
+                        state.cache.sweep_expired();
+                    }
+                }
+            })
+            .expect("spawn cache sweeper");
+        Self { stop, handle: Some(handle) }
+    }
+
+    /// Signal the sweeper thread to exit; joining happens in `Drop`.
+    pub fn stop(&self) {
+        let (lock, cv) = &*self.stop;
+        *lock.lock().unwrap_or_else(|p| p.into_inner()) = true;
+        cv.notify_all();
+    }
+}
+
+impl Drop for CacheSweeper {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// How often the auto-spawned sweeper ticks for a given TTL: frequent
+/// enough that expired entries linger at most a fraction of their
+/// lifetime, bounded below so tiny TTLs cannot busy-spin the thread.
+fn sweep_interval(ttl: Duration) -> Duration {
+    (ttl / 4).clamp(Duration::from_millis(100), Duration::from_secs(60))
+}
+
+/// A running server: shared state + the worker pool executing requests +
+/// (when the cache expires entries) the background TTL sweeper.
 pub struct Server {
     pub state: Arc<ServerState>,
     pub pool: Arc<WorkerPool>,
+    /// Present iff the cache has a TTL; dropped (stopped + joined) with
+    /// the server.
+    sweeper: Option<CacheSweeper>,
 }
 
 impl Server {
     pub fn new(state: Arc<ServerState>, config: ServerConfig) -> Self {
+        let sweeper = state
+            .cache
+            .ttl()
+            .map(|ttl| CacheSweeper::spawn(state.clone(), sweep_interval(ttl)));
         Self {
             state,
             pool: Arc::new(WorkerPool::new(config.workers, config.queue_cap)),
+            sweeper,
         }
+    }
+
+    /// Whether a background TTL sweeper is running (telemetry/tests).
+    pub fn has_sweeper(&self) -> bool {
+        self.sweeper.is_some()
     }
 
     /// Serve forever on `addr` (e.g. "127.0.0.1:7077"). Non-default
@@ -878,6 +1093,7 @@ impl Server {
     /// pin pool workers on planner training.
     pub fn serve(&self, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
+        self.state.enable_calibration_prewarm();
         let warm = self.state.clone();
         std::thread::spawn(move || warm.prewarm_all());
         eprintln!(
@@ -1155,7 +1371,9 @@ mod tests {
             ("CALIBRATE newphone gpu.clock_ghz=fast", "ERR malformed calibration value"),
             ("CALIBRATE newphone gpu.clock_ghz=-1", "ERR calibration value"),
             ("CALIBRATE newphone gpu.compute_units=2.5", "ERR calibration value"),
-            ("CALIBRATE newphone cpu.eff2=1.99 cpu.eff3=1.2", "ERR cpu.eff3"),
+            ("CALIBRATE newphone cpu.eff2=1.99 cpu.eff3=1.2", "ERR cpu.prime.eff3"),
+            ("CALIBRATE newphone cpu.silver.eff3=1.1", "ERR cpu.silver.eff3"),
+            ("CALIBRATE newphone cpu.mega.launch_us=2", "ERR unknown calibration key"),
             ("CALIBRATE newphone threads", "ERR bad calibration parameter"),
             ("CALIBRATE other base=fridge", "ERR unknown base device fridge"),
             ("CALIBRATE 9bad base=pixel5", "ERR bad device name"),

@@ -2,7 +2,7 @@
 //! planner -> scheduler, at quick scale.
 
 use mobile_coexec::dataset;
-use mobile_coexec::device::{Device, Processor, SyncMechanism};
+use mobile_coexec::device::{ClusterId, Device, Processor, SyncMechanism};
 use mobile_coexec::experiments::{figures, Scale};
 use mobile_coexec::gbdt::GbdtParams;
 use mobile_coexec::models;
@@ -44,7 +44,8 @@ fn planner_tracks_grid_search_across_random_ops() {
         let op = OpConfig::Linear(*cfg);
         let plan = planner.plan_with_threads(&op, 3);
         let t_plan = planner.measure_plan_us(&op, &plan, 6);
-        let (_, t_oracle) = grid_search(&device, &op, 3, SyncMechanism::SvmPolling, 6);
+        let (_, t_oracle) =
+            grid_search(&device, &op, ClusterId::Prime, 3, SyncMechanism::SvmPolling, 6);
         if t_plan > t_oracle * 1.25 {
             worse += 1;
         }
@@ -77,8 +78,10 @@ fn event_wait_erases_coexec_gains_on_small_ops() {
     let device = Device::moto2022();
     let op = OpConfig::Linear(LinearConfig::new(64, 256, 512)); // ~17 MFLOPs
     let split = ChannelSplit::new(128, 384);
-    let t_poll = device.measure_coexec_mean(&op, split, 2, SyncMechanism::SvmPolling, 12);
-    let t_event = device.measure_coexec_mean(&op, split, 2, SyncMechanism::EventWait, 12);
+    let t_poll =
+        device.measure_coexec_mean(&op, split, ClusterId::Prime, 2, SyncMechanism::SvmPolling, 12);
+    let t_event =
+        device.measure_coexec_mean(&op, split, ClusterId::Prime, 2, SyncMechanism::EventWait, 12);
     assert!(
         t_event > t_poll + 100.0,
         "event {t_event:.0}us vs polling {t_poll:.0}us"

@@ -5,7 +5,7 @@
 //! deterministic, with the failing case printed on assert.
 
 use mobile_coexec::device::noise::SplitMix64;
-use mobile_coexec::device::{Device, SyncMechanism};
+use mobile_coexec::device::{ClusterId, Device, SyncMechanism};
 use mobile_coexec::gbdt::{Gbdt, GbdtParams};
 use mobile_coexec::metrics;
 use mobile_coexec::ops::{ChannelSplit, ConvConfig, LinearConfig, OpConfig, Partitionable};
@@ -67,11 +67,14 @@ fn prop_coexec_latency_bounds() {
         let c1 = rng.gen_range(1, cout - 1);
         let split = ChannelSplit::new(c1, cout - c1);
         let threads = rng.gen_range(1, 2);
+        // the latency bound holds on every cluster, not just prime
+        let clusters = &device.spec.cpu.clusters;
+        let cluster = clusters[rng.gen_range(0, clusters.len() - 1)].id;
         let trial = case as u64;
-        let t_cpu = device.measure_cpu(&op.with_cout(c1), threads, trial);
+        let t_cpu = device.measure_cpu(&op.with_cout(c1), cluster, threads, trial);
         let t_gpu = device.measure_gpu(&op.with_cout(cout - c1), trial);
         let t_co =
-            device.measure_coexec(&op, split, threads, SyncMechanism::SvmPolling, trial);
+            device.measure_coexec(&op, split, cluster, threads, SyncMechanism::SvmPolling, trial);
         let floor = t_cpu.max(t_gpu);
         let ceil = floor + device.sync_overhead_us(SyncMechanism::SvmPolling, op.kind()) * 3.0;
         assert!(
@@ -92,6 +95,7 @@ fn prop_exclusive_no_overhead() {
         let gpu_only = device.measure_coexec(
             &op,
             ChannelSplit::gpu_only(op.cout()),
+            ClusterId::Prime,
             1,
             SyncMechanism::EventWait,
             trial,
@@ -138,8 +142,9 @@ fn prop_cpu_monotone_in_tiles() {
         }
         let smaller = OpConfig::Linear(cfg.with_cout(cfg.cout - 8));
         let bigger = OpConfig::Linear(cfg);
-        let t_small = device.cpu_model_us(&smaller, 2);
-        let t_big = device.cpu_model_us(&bigger, 2);
+        let cluster = device.spec.cpu.clusters[case % device.spec.cpu.clusters.len()].id;
+        let t_small = device.cpu_model_us(&smaller, cluster, 2);
+        let t_big = device.cpu_model_us(&bigger, cluster, 2);
         assert!(
             t_big >= t_small - 1e-9,
             "case {case}: cpu latency decreased {t_small} -> {t_big} for {bigger}"
@@ -236,6 +241,73 @@ fn prop_auto_plan_never_worse_than_any_fixed_strategy() {
     }
 }
 
+/// Property: a cluster-`Auto` plan's predicted total is never worse than
+/// any fixed `(cluster, threads, mech)` plan for the same op — the 4-axis
+/// joint search's pruning (analytic mechanism collapse, per-candidate
+/// dominated-placement skips, shared GPU predictions) must never discard
+/// a candidate that could have won on *any* cluster — and the plan is
+/// exactly reproducible at its resolved strategy.
+#[test]
+fn prop_cluster_auto_never_worse_than_any_fixed_placement() {
+    use mobile_coexec::partition::{PlanRequest, Planner};
+
+    let device = Device::pixel5();
+    let linear = Planner::train_for_kind(&device, "linear", 600, 31);
+    let conv = Planner::train_for_kind(&device, "conv", 600, 31);
+    let mut rng = SplitMix64::new(14);
+    for case in 0..12 {
+        // mix random shapes with tiny launch-bound ones, where the little
+        // clusters' cheaper wake-up actually wins placements
+        let op = if case % 3 == 0 {
+            OpConfig::Linear(LinearConfig::new(
+                rng.gen_range(1, 8),
+                rng.gen_range(1, 32),
+                rng.gen_range(2, 64),
+            ))
+        } else {
+            random_op(&mut rng)
+        };
+        let planner = match op {
+            OpConfig::Linear(_) => &linear,
+            OpConfig::Conv(_) => &conv,
+        };
+        let auto = planner.plan_request(&op, PlanRequest::cluster_auto());
+        let budget = device
+            .spec
+            .cpu
+            .cluster(auto.cluster)
+            .expect("resolved cluster exists on the device")
+            .max_threads();
+        assert!(
+            (1..=budget).contains(&auto.threads),
+            "case {case} {op}: resolved {} threads outside the {} budget",
+            auto.threads,
+            auto.cluster
+        );
+        for cl in &device.spec.cpu.clusters {
+            for threads in 1..=cl.max_threads() {
+                for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+                    let fixed =
+                        planner.plan_request(&op, PlanRequest::fixed_on(cl.id, threads, mech));
+                    assert!(
+                        auto.t_total_us <= fixed.t_total_us + 1e-9,
+                        "case {case} {op}: cluster-auto {:.3}us worse than fixed \
+                         ({}, {threads}, {mech:?}) {:.3}us",
+                        auto.t_total_us,
+                        cl.id,
+                        fixed.t_total_us
+                    );
+                }
+            }
+        }
+        // the auto plan *is* one of the fixed plans (exactness, not just
+        // dominance): re-planning at its resolved strategy reproduces it
+        let s = auto.strategy();
+        let replay = planner.plan_request(&op, PlanRequest::fixed_on(s.cluster, s.threads, s.mech));
+        assert_eq!(replay, auto, "case {case} {op}: cluster-auto plan not reproducible");
+    }
+}
+
 /// Property: the serving layer's plan cache is *transparent* — for random
 /// ops, a cached plan is identical to a freshly computed plan — and cache
 /// keys never collide across distinct `(op, threads, mech)` tuples.
@@ -250,7 +322,7 @@ fn prop_plan_cache_transparent_and_keys_collision_free() {
     let conv = Planner::train_for_kind(&device, "conv", 500, 21);
     let cache = PlanCache::default();
     let mut rng = SplitMix64::new(8);
-    let mut tuples: HashSet<(OpConfig, usize, SyncMechanism)> = HashSet::new();
+    let mut tuples: HashSet<(OpConfig, ClusterId, usize, SyncMechanism)> = HashSet::new();
     let mut keys: HashSet<PlanKey> = HashSet::new();
     for case in 0..60 {
         let op = random_op(&mut rng);
@@ -266,19 +338,30 @@ fn prop_plan_cache_transparent_and_keys_collision_free() {
         let hit = cache.get_or_plan(planner, &op, threads);
         assert_eq!(hit, fresh, "case {case}: cache hit diverged for {op}");
         // key uniqueness: one key per distinct tuple, for both mechanisms
+        // and every cluster
         for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
-            tuples.insert((op, threads, mech));
-            keys.insert(PlanKey { device: device.name(), epoch: 0, op, threads, mech });
+            for cluster in ClusterId::ALL {
+                tuples.insert((op, cluster, threads, mech));
+                keys.insert(PlanKey {
+                    device: device.name(),
+                    epoch: 0,
+                    op,
+                    cluster,
+                    threads,
+                    mech,
+                });
+            }
         }
     }
     assert_eq!(
         keys.len(),
         tuples.len(),
-        "distinct (op, threads, mech) tuples must map to distinct keys"
+        "distinct (op, cluster, threads, mech) tuples must map to distinct keys"
     );
     // and the cache held exactly one entry per distinct (op, threads)
+    // (planning above only touched the prime cluster)
     let planned: HashSet<(OpConfig, usize)> =
-        tuples.iter().map(|(op, t, _)| (*op, *t)).collect();
+        tuples.iter().map(|(op, _, t, _)| (*op, *t)).collect();
     assert_eq!(cache.len(), planned.len());
     assert_eq!(cache.misses() as usize, planned.len());
 }
@@ -392,7 +475,7 @@ fn prop_ttl_lru_expiry_never_resurrects_and_counters_conserve() {
 fn prop_noise_unbiased() {
     let device = Device::pixel4();
     let op = OpConfig::Linear(LinearConfig::vit_fc1());
-    let model = device.cpu_model_us(&op, 1);
+    let model = device.cpu_model_us(&op, ClusterId::Prime, 1);
     let mean_measured = device.measure_mean(
         &op,
         mobile_coexec::device::Processor::Cpu(1),

@@ -221,6 +221,99 @@ fn auto_spec_dominates_fixed_and_caches_once() {
     assert_eq!(total, planned, "threads distribution covers planned layers");
 }
 
+// ---------------------------------------------------------- cluster axis --
+
+#[test]
+fn cluster_axis_roundtrips_and_shares_the_cache() {
+    // fresh state: this test reasons about exact cache counters
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 500, 67));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    // byte-compat: an explicit cluster=prime is the same request as the
+    // pre-cluster line — one plan entry, the second request is a pure hit
+    let bare = c.request("PLAN linear 50 768 3072 3");
+    assert_eq!(kv(&bare, "cluster"), "prime");
+    let explicit = c.request("PLAN linear 50 768 3072 3 cluster=prime");
+    assert_eq!(explicit, bare, "explicit prime must be byte-identical");
+    assert_eq!(
+        (state.cache.hits(), state.cache.misses()),
+        (1, 1),
+        "cluster=prime must share the pre-cluster cache entry"
+    );
+
+    // a fixed silver plan is a different entry with its own strategy
+    let silver = c.request("PLAN linear 50 768 3072 3 cluster=silver");
+    assert!(silver.starts_with("OK "), "{silver}");
+    assert_eq!(kv(&silver, "cluster"), "silver");
+    assert_ne!(plan_nums(&silver), plan_nums(&bare), "silver must re-plan its own split");
+    assert_eq!(state.cache.misses(), 2);
+
+    // cluster=auto resolves every axis and reports the winning cluster
+    let auto = c.request("PLAN linear 50 768 3072 auto cluster=auto");
+    assert!(auto.starts_with("OK "), "{auto}");
+    let cluster = kv(&auto, "cluster").to_string();
+    let threads = kv(&auto, "threads").to_string();
+    let mech = kv(&auto, "mech").to_string();
+    assert!(["prime", "gold", "silver"].contains(&cluster.as_str()), "{auto}");
+    // warm 4-axis auto is a hit, byte-identically
+    let hits = state.cache.hits();
+    assert_eq!(c.request("PLAN linear 50 768 3072 auto cluster=auto"), auto);
+    assert_eq!(state.cache.hits(), hits + 1, "warm cluster-auto must hit");
+    // the fixed request at the resolved strategy shares the auto entry
+    if mech == "svm_polling" {
+        let fixed =
+            c.request(&format!("PLAN linear 50 768 3072 {threads} cluster={cluster}"));
+        assert_eq!(plan_nums(&fixed), plan_nums(&auto), "fixed must share the auto entry");
+        assert_eq!(kv(&fixed, "cluster"), cluster);
+    }
+
+    // threads clamp against the *chosen* cluster's budget (pixel5 gold
+    // models 2 threads)
+    let gold_max = c.request("PLAN linear 60 512 2048 2 cluster=gold");
+    let gold_clamped = c.request("PLAN linear 60 512 2048 99 cluster=gold");
+    assert_eq!(gold_clamped, gold_max, "oversized threads clamp to the gold budget");
+    assert_eq!(kv(&gold_max, "threads"), "2");
+
+    // cluster= flows through RUN, PLAN_BATCH, and PLAN_MODEL
+    let run = c.request("RUN linear 50 768 3072 3 cluster=silver");
+    assert!(run.starts_with("OK "), "{run}");
+    assert_eq!(kv(&run, "cluster"), "silver");
+    let lines = c.request_batch(
+        "PLAN_BATCH linear 50 768 3072 3 cluster=silver; linear 50 768 3072 3 cluster=mega",
+    );
+    assert_eq!(lines.len(), 2);
+    assert_eq!(lines[0], silver, "batch shares the single-PLAN silver entry");
+    assert!(lines[1].starts_with("ERR unknown cluster mega"), "{}", lines[1]);
+    let pm = c.request("PLAN_MODEL resnet18 3 cluster=silver");
+    assert!(pm.starts_with("OK model=resnet18"), "{pm}");
+    let planned = kv(&pm, "planned");
+    assert_eq!(kv(&pm, "clusters"), format!("silver:{planned}"), "{pm}");
+}
+
+#[test]
+fn missing_cluster_on_a_device_is_an_err() {
+    // an embedder can register a prime-only custom SoC: fixed requests
+    // for absent clusters must be rejected before planning, and
+    // cluster=auto must still work (searching only what exists)
+    let mut spec = mobile_coexec::device::SocSpec::pixel5();
+    spec.cpu.clusters.truncate(1); // prime only
+    spec.name = "primeonly";
+    let state = Arc::new(ServerState::new_lazy(Device::new(spec), 400, 71));
+    let mut session = state.session();
+    let reply = state.handle(&mut session, "PLAN linear 50 768 1024 2 cluster=gold");
+    assert!(
+        reply.starts_with("ERR device primeonly has no gold cluster"),
+        "{reply}"
+    );
+    let reply = state.handle(&mut session, "PLAN linear 50 768 1024 2 cluster=silver");
+    assert!(reply.starts_with("ERR device primeonly has no silver cluster"), "{reply}");
+    let auto = state.handle(&mut session, "PLAN linear 50 768 1024 auto cluster=auto");
+    assert!(auto.starts_with("OK "), "{auto}");
+    assert!(auto.ends_with("cluster=prime"), "only prime exists to resolve to: {auto}");
+}
+
 // ------------------------------------------------------------ ERR paths --
 
 #[test]
@@ -255,9 +348,18 @@ fn every_err_path_over_loopback() {
         // zero threads (regression: must be rejected, not planned)
         ("PLAN linear 50 768 3072 0", "ERR threads must be >= 1"),
         ("RUN linear 50 768 3072 0", "ERR threads must be >= 1"),
+        // cluster parameter: unknown values and malformed tokens
+        ("PLAN linear 50 768 3072 3 cluster=mega", "ERR unknown cluster mega"),
+        ("RUN linear 50 768 3072 auto cluster=big.LITTLE", "ERR unknown cluster"),
+        ("PLAN linear 50 768 3072 3 clusters=prime", "ERR bad op spec"),
+        ("PLAN linear 50 768 3072 3 cluster=prime extra", "ERR bad op spec"),
+        ("PLAN_MODEL resnet18 3 cluster=mega", "ERR unknown cluster mega"),
+        ("PLAN_MODEL resnet18 3 prime", "ERR bad model spec"),
         // batches must carry at least one op-spec
         ("PLAN_BATCH", "ERR empty batch"),
         ("PLAN_BATCH ; ;", "ERR empty batch"),
+        // calibration keys: per-cluster form exists, unknown clusters don't
+        ("CALIBRATE pixel5 cpu.mega.launch_us=2", "ERR unknown calibration key"),
         // unknown device / bad device spec
         ("DEVICE iphone15", "ERR unknown device iphone15"),
         ("DEVICE", "ERR bad device spec"),
@@ -356,6 +458,37 @@ fn plan_batch_replies_per_op_in_order() {
     // and the whole batch counted as one request in telemetry
     assert_eq!(state.metrics.endpoint("plan_batch").requests.get(), 1);
     assert_eq!(state.metrics.endpoint("plan_batch").errors.get(), 0);
+}
+
+#[test]
+fn plan_batch_is_bounded_at_max_batch_ops() {
+    use mobile_coexec::server::MAX_BATCH_OPS;
+    // fresh state: this test reasons about exact cache counters
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 400, 73));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    // exactly at the cap: accepted, one line per op (repeats are hits)
+    let spec = "linear 8 64 128 1";
+    let at_cap = format!("PLAN_BATCH {}", vec![spec; MAX_BATCH_OPS].join("; "));
+    assert!(at_cap.len() < 4000, "cap test must fit the line limit");
+    let lines = c.request_batch(&at_cap);
+    assert_eq!(lines.len(), MAX_BATCH_OPS);
+    assert!(lines.iter().all(|l| l == &lines[0]), "repeated specs are identical");
+
+    // one past the cap: the whole batch is rejected, nothing planned
+    let misses = state.cache.misses();
+    let over = format!("PLAN_BATCH {}", vec!["linear 9 64 128 1"; MAX_BATCH_OPS + 1].join("; "));
+    let reply = c.request(&over);
+    assert!(
+        reply.starts_with("ERR too many ops in batch"),
+        "oversized batch must be rejected whole: {reply}"
+    );
+    assert_eq!(state.cache.misses(), misses, "a rejected batch must plan nothing");
+    // blank segments don't count toward the cap
+    let trailing = format!("PLAN_BATCH {};;", vec![spec; MAX_BATCH_OPS].join("; "));
+    assert_eq!(c.request_batch(&trailing).len(), MAX_BATCH_OPS);
 }
 
 // --------------------------------------------------------------- FLUSH --
@@ -548,10 +681,12 @@ fn response_formats_are_stable() {
     let (_, addr) = shared();
     let mut c = Client::connect(&addr);
 
-    // PLAN: "OK <usize> <usize> <float:.1> threads=<t> mech=<mech>"
+    // PLAN: "OK <usize> <usize> <float:.1> threads=<t> mech=<mech>
+    //        cluster=<cluster>" — cluster= is appended last so
+    // pre-cluster clients keep their field positions
     let plan = c.request("PLAN linear 50 768 1024 2");
     let toks: Vec<&str> = plan.split_whitespace().collect();
-    assert_eq!(toks.len(), 6, "{plan}");
+    assert_eq!(toks.len(), 7, "{plan}");
     assert_eq!(toks[0], "OK");
     toks[1].parse::<usize>().unwrap();
     toks[2].parse::<usize>().unwrap();
@@ -559,17 +694,22 @@ fn response_formats_are_stable() {
     assert_eq!(frac.len(), 1, "{plan}");
     kv(&plan, "threads").parse::<usize>().unwrap();
     assert!(["svm_polling", "event_wait"].contains(&kv(&plan, "mech")), "{plan}");
+    assert_eq!(kv(&plan, "cluster"), "prime", "omitted cluster must pin prime");
+    assert!(toks[6].starts_with("cluster="), "cluster= must come last: {plan}");
 
-    // RUN: "OK <float:.1> <float:.1> <float:.3> threads=<t> mech=<mech>"
+    // RUN: "OK <float:.1> <float:.1> <float:.3> threads=<t> mech=<mech>
+    //       cluster=<cluster>"
     let run = c.request("RUN linear 50 768 1024 2");
     let toks: Vec<&str> = run.split_whitespace().collect();
-    assert_eq!(toks.len(), 6, "{run}");
+    assert_eq!(toks.len(), 7, "{run}");
     assert_eq!(toks[3].split_once('.').unwrap().1.len(), 3, "{run}");
+    assert_eq!(kv(&run, "cluster"), "prime", "{run}");
 
     // DEVICE: "OK device <canonical>"
     assert_eq!(c.request("DEVICE pixel5"), "OK device pixel5");
 
-    // PLAN_MODEL: fixed key=value fields in order
+    // PLAN_MODEL: fixed key=value fields in order (clusters= appended
+    // after the pre-cluster fields)
     let pm = c.request("PLAN_MODEL resnet18 3");
     let body = pm.strip_prefix("OK ").unwrap();
     let keys: Vec<&str> = body
@@ -578,12 +718,13 @@ fn response_formats_are_stable() {
         .collect();
     assert_eq!(
         keys,
-        ["model", "layers", "planned", "coexec", "threads", "mechs", "t_pred_ms"]
+        ["model", "layers", "planned", "coexec", "threads", "mechs", "t_pred_ms", "clusters"]
     );
     // a fixed request degenerates to one strategy bin covering all layers
     let planned = kv(&pm, "planned");
     assert_eq!(kv(&pm, "threads"), format!("3:{planned}"), "{pm}");
     assert_eq!(kv(&pm, "mechs"), format!("svm_polling:{planned}"), "{pm}");
+    assert_eq!(kv(&pm, "clusters"), format!("prime:{planned}"), "{pm}");
 
     // STATS: cache counters then per-verb blocks, in declaration order
     let stats = c.request("STATS");
@@ -635,12 +776,19 @@ fn threads_clamped_to_device_core_count() {
     let op = OpConfig::Linear(LinearConfig::new(60, 512, 2048));
     let device = Device::pixel5().name();
     let mech = mobile_coexec::device::SyncMechanism::SvmPolling;
+    let cluster = mobile_coexec::device::ClusterId::Prime;
     assert!(
-        state.cache.peek(&PlanKey { device, epoch: 0, op, threads: 3, mech }).is_some(),
+        state
+            .cache
+            .peek(&PlanKey { device, epoch: 0, op, cluster, threads: 3, mech })
+            .is_some(),
         "clamped request must be cached under threads=3"
     );
     assert!(
-        state.cache.peek(&PlanKey { device, epoch: 0, op, threads: 99, mech }).is_none(),
+        state
+            .cache
+            .peek(&PlanKey { device, epoch: 0, op, cluster, threads: 99, mech })
+            .is_none(),
         "no unclamped key may be created"
     );
 }
@@ -789,6 +937,77 @@ fn auto_resolution_survives_plan_eviction() {
         req: mobile_coexec::partition::PlanRequest::auto(),
     };
     assert!(state.cache.peek_resolution(&akey).is_some(), "resolution must persist");
+}
+
+// ------------------------------------------------------- TTL sweeper --
+
+#[test]
+fn background_sweeper_reclaims_expired_entries_and_shuts_down() {
+    use mobile_coexec::device::{ClusterId, SyncMechanism};
+    use mobile_coexec::server::cache::ManualClock;
+    use mobile_coexec::server::CacheSweeper;
+    use std::time::Duration;
+
+    // a TTL cache on a hand-advanced clock: the sweeper thread ticks on
+    // real time (every 1ms), expiry is decided by the manual clock, so
+    // the test is deterministic about *what* expires and only waits for
+    // *when* the sweeper gets to it
+    let clock = Arc::new(ManualClock::new());
+    let mut raw = ServerState::new_lazy(Device::pixel5(), 400, 79);
+    raw.cache = PlanCache::with_config(
+        4,
+        64,
+        Some(Duration::from_millis(100)),
+        clock.clone(),
+    );
+    let state = Arc::new(raw);
+    let mut session = state.session();
+    assert!(state.handle(&mut session, "PLAN linear 8 64 128 1").starts_with("OK "));
+    assert!(state.handle(&mut session, "PLAN linear 8 64 132 1").starts_with("OK "));
+    let key = PlanKey {
+        device: Device::pixel5().name(),
+        epoch: 0,
+        op: OpConfig::Linear(LinearConfig::new(8, 64, 128)),
+        cluster: ClusterId::Prime,
+        threads: 1,
+        mech: SyncMechanism::SvmPolling,
+    };
+    assert!(state.cache.peek(&key).is_some(), "plan resident before expiry");
+
+    let sweeper = CacheSweeper::spawn(state.clone(), Duration::from_millis(1));
+    // nothing expires while entries are within their lease, however many
+    // ticks pass
+    std::thread::sleep(Duration::from_millis(20));
+    assert_eq!(state.cache.expired(), 0, "sweeper must not reap live entries");
+
+    clock.advance_ms(101); // both entries are now past their lease
+    // no requests touch the cache: only the background sweeper can reap.
+    // peek() is expiry-free, so observing the entry disappear observes
+    // the sweeper itself (bounded wait, ~2s worst case).
+    let mut reaped = false;
+    for _ in 0..2000 {
+        if state.cache.peek(&key).is_none() {
+            reaped = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(reaped, "background sweeper must reclaim expired entries");
+    assert_eq!(state.cache.expired(), 2, "sweeps land in the expired counter");
+
+    // clean shutdown: drop stops the thread and joins it (a wedged
+    // sweeper would hang the test right here)
+    drop(sweeper);
+
+    // a server built over a TTL cache owns a sweeper; without a TTL none
+    let with_ttl = Server::new(state.clone(), ServerConfig::default());
+    assert!(with_ttl.has_sweeper());
+    drop(with_ttl);
+    let no_ttl = Server::new(
+        Arc::new(ServerState::new_lazy(Device::pixel4(), 100, 83)),
+        ServerConfig::default(),
+    );
+    assert!(!no_ttl.has_sweeper());
 }
 
 // ----------------------------------------------------- backpressure --
