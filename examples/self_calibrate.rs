@@ -1,0 +1,79 @@
+//! Self-calibration demo: profile a built-in phone, fit a fresh spec
+//! from its own measurements, and print the per-group residuals.
+//!
+//! The fit starts from a deliberately *mis-calibrated* base (every
+//! constant nudged 25-40% off), so the recovery is real work, not a
+//! no-op: the solver has to pull throughput, thread-efficiency,
+//! bandwidth, launch, GPU, and sync constants back to the phone's truth
+//! from nothing but `(op, placement, observed_us)` records — exactly
+//! what the serving layer's `FIT` verb does with an uploaded profiling
+//! run.
+//!
+//! ```bash
+//! cargo run --release --example self_calibrate [-- pixel4|pixel5|moto2022|oneplus11]
+//! ```
+
+use mobile_coexec::calibration::{fit_spec, SampleSet};
+use mobile_coexec::device::{ClusterId, Device, SyncMechanism};
+use mobile_coexec::ops::{LinearConfig, OpConfig};
+
+fn main() -> anyhow::Result<()> {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "pixel5".into());
+    let device = mobile_coexec::server::canonical_device_key(&which)
+        .and_then(mobile_coexec::server::device_by_key)
+        .unwrap_or_else(|| {
+            eprintln!("unknown device {which}");
+            std::process::exit(2);
+        });
+
+    // a mis-calibrated starting point: the same phone with every fitted
+    // constant pushed off by 25-40%
+    let mut base = device.spec.clone();
+    base.apply_params(&[
+        ("cpu.prime.gmacs_per_thread", base.cpu.clusters[0].gmacs_per_thread * 1.35),
+        ("cpu.prime.launch_us", base.cpu.clusters[0].launch_us * 0.7),
+        ("gpu.macs_per_cu_cycle", base.gpu.macs_per_cu_cycle * 0.75),
+        ("gpu.dispatch_us", base.gpu.dispatch_us * 1.4),
+        ("sync.polling_linear_us", base.sync.polling_linear_us * 1.6),
+        ("sync.event_linear_us", base.sync.event_linear_us * 0.75),
+    ])?;
+
+    println!("profiling {} (synthesized measure_* campaign) ...", device.name());
+    let samples = SampleSet::synthesize(&device, 12);
+    println!("fitting {} samples against the mis-calibrated base ...\n", samples.len());
+    let report = fit_spec(&base, &samples)?;
+    println!("{}", report.render());
+
+    // the loop closes: the quantity plans minimize — predicted co-exec
+    // latency — lands back on the phone's truth
+    println!("\npredicted latency, truth vs mis-calibrated vs fitted:");
+    println!(
+        "{:<28} {:>10} {:>12} {:>10}",
+        "op (prime, 2 threads)", "truth_us", "miscal_us", "fitted_us"
+    );
+    for op in [
+        OpConfig::Linear(LinearConfig::vit_fc1()),
+        OpConfig::Linear(LinearConfig::new(64, 512, 1024)),
+        OpConfig::Linear(LinearConfig::new(2, 16, 24)),
+    ] {
+        let pred = |d: &Device| {
+            let cpu = d.cpu_model_us(&op, ClusterId::Prime, 2);
+            let (gpu, _) = d.gpu_model_us(&op);
+            let sync = d.sync_overhead_us(SyncMechanism::SvmPolling, op.kind());
+            cpu.max(gpu) + sync
+        };
+        println!(
+            "{op:<28} {:>10.1} {:>12.1} {:>10.1}",
+            pred(&device),
+            pred(&Device::new(base.clone())),
+            pred(&Device::new(report.spec.clone())),
+        );
+    }
+    println!(
+        "\n{} of {} groups fitted, overall residual {:.2}%",
+        report.fitted_groups(),
+        report.groups.len(),
+        report.overall_resid() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Bench: calibration-fit convergence — wall time and residual gates for
+//! the `calibration/` subsystem on a full self-profiling campaign.
+//!
+//! Gates: fitting a complete pixel5 campaign (~90 samples, every
+//! parameter group) must converge every group, land the sample-weighted
+//! residual under 10%, and finish well inside the per-request budget a
+//! `FIT` verb gets on a pool worker (2 s — measured means are ~40x
+//! faster in practice; the gate only catches complexity regressions in
+//! the staged-grid descent).
+
+use mobile_coexec::benchutil::{bench, report_scalar};
+use mobile_coexec::calibration::{fit_spec, SampleSet};
+use mobile_coexec::device::{Device, SocSpec};
+
+fn main() {
+    let device = Device::pixel5();
+    let samples = SampleSet::synthesize(&device, 8);
+    let base = SocSpec::pixel5();
+
+    let r = bench("fit_pixel5_full_campaign", 1, 8, || {
+        std::hint::black_box(fit_spec(&base, &samples).expect("fit"));
+    });
+    assert!(
+        r.mean_us <= 2e6,
+        "acceptance: a full-campaign fit must stay under 2s ({:.0}us)",
+        r.mean_us
+    );
+
+    let report = fit_spec(&base, &samples).expect("fit");
+    report_scalar("fit_convergence", "fitted_groups", report.fitted_groups() as f64);
+    report_scalar("fit_convergence", "overall_resid", report.overall_resid());
+    assert_eq!(
+        report.fitted_groups(),
+        report.groups.len(),
+        "acceptance: every parameter group must converge on a full campaign:\n{}",
+        report.render()
+    );
+    assert!(
+        report.overall_resid() <= 0.10,
+        "acceptance: full-campaign residual must stay under 10% ({:.2}%)\n{}",
+        report.overall_resid() * 100.0,
+        report.render()
+    );
+
+    // fitting cost scales with samples x parameters, not with noise: a
+    // sparse batch (GPU group only) must be proportionally cheaper
+    let mut sparse = SampleSet::default();
+    for s in samples.samples().iter().filter(|s| {
+        matches!(s.placement, mobile_coexec::calibration::Placement::Gpu)
+    }) {
+        sparse.push(*s).expect("bounded");
+    }
+    let rs = bench("fit_pixel5_gpu_only", 1, 8, || {
+        std::hint::black_box(fit_spec(&base, &sparse).expect("fit"));
+    });
+    report_scalar("fit_convergence", "sparse_over_full_cost", rs.mean_us / r.mean_us);
+    assert!(
+        rs.mean_us <= r.mean_us,
+        "acceptance: a sparse batch must not cost more than the full campaign"
+    );
+}

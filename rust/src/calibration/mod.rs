@@ -1,0 +1,442 @@
+//! Measurement-driven calibration: fit a full [`SocSpec`] from profiling
+//! samples.
+//!
+//! The planner is only as good as its device constants, and hand-picking
+//! `CALIBRATE` values for a fleet of real phones does not scale — and
+//! per-unit constants drift even across devices of the same model (see
+//! PAPERS.md: per-device latency models must be *fit to profiling runs*
+//! to be accurate). This subsystem closes the ROADMAP's
+//! measurement-driven-calibration loop: a client uploads raw
+//! `(op, placement, observed_us)` records from its own profiling run,
+//! and the server turns them into a validated spec — the pipeline grows
+//! a stage: **measure → fit → calibrate → plan**.
+//!
+//! * [`SampleSet`] (`sample.rs`) — a bounded, validated batch of
+//!   [`Sample`] records with a wire grammar (the `FIT` verb's payload)
+//!   and a [`SampleSet::synthesize`] self-profiling campaign that replays
+//!   a device's own `measure_*` output.
+//! * `solver.rs` — per-parameter-group least squares against the analytic
+//!   cost models: per-cluster CPU throughput / thread-efficiency tables /
+//!   bandwidth / launch cost on `cpu_model_us` residuals, the GPU's
+//!   continuous kernel/dispatch constants, and sync overheads read off
+//!   paired co-execution samples; robust (median/MAD) outlier rejection
+//!   throughout.
+//! * [`fit_spec`] — orchestrates the groups and produces a [`FitReport`]:
+//!   per-group residuals and coverage, with under-sampled or
+//!   ill-conditioned groups *falling back to the base spec* instead of
+//!   fitting garbage, and a final spec built by pushing every fitted
+//!   parameter through the one existing calibration surface
+//!   ([`SocSpec::apply_params`] → `set_param` → `validate`) — a spec
+//!   that never validated can never leave this module.
+//!
+//! Measurement-noise sigmas are *not* fitted: samples are means of
+//! repeated runs, so their scatter under-reports the raw per-run noise
+//! by an unknown averaging factor; the base spec's sigmas survive.
+//!
+//! ```no_run
+//! use mobile_coexec::calibration::{fit_spec, SampleSet};
+//! use mobile_coexec::device::{Device, SocSpec};
+//!
+//! // self-calibration: profile a phone, fit a spec from its own numbers
+//! let phone = Device::pixel5();
+//! let samples = SampleSet::synthesize(&phone, 12);
+//! let report = fit_spec(&SocSpec::pixel5(), &samples).unwrap();
+//! println!("{}", report.render());
+//! assert!(report.fitted_groups() > 0);
+//! ```
+
+pub mod sample;
+mod solver;
+
+pub use sample::{Placement, Sample, SampleSet, MAX_FIT_SAMPLES};
+pub use solver::{MAX_GROUP_RESID, MIN_GROUP_SAMPLES};
+
+use crate::device::{ClusterId, SocSpec};
+use crate::ops::OpConfig;
+use anyhow::{ensure, Result};
+
+/// One parameter group's fitting outcome.
+#[derive(Debug, Clone)]
+pub struct GroupFit {
+    /// Group name: `cpu.<cluster>`, `gpu`, or `sync`.
+    pub group: String,
+    /// Samples addressed to this group.
+    pub n_samples: usize,
+    /// Samples the fit actually used (usable ∩ inliers).
+    pub n_used: usize,
+    /// Post-fit mean absolute relative residual over the used samples.
+    pub resid_mape: f64,
+    /// Whether the group's parameters enter the final spec; `false`
+    /// means the base spec's values survive untouched.
+    pub fitted: bool,
+    /// Why coverage is partial or the group fell back (empty if clean).
+    pub note: String,
+    /// The fitted `(calibration key, value)` pairs (empty on fallback).
+    pub params: Vec<(String, f64)>,
+}
+
+/// The result of fitting a [`SampleSet`] against a base [`SocSpec`].
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    /// Per-group outcomes, in spec order (CPU clusters, GPU, sync).
+    pub groups: Vec<GroupFit>,
+    /// The base spec with every *fitted* group's parameters applied
+    /// through the calibration surface and re-validated. Groups that
+    /// fell back keep their base values.
+    pub spec: SocSpec,
+}
+
+impl FitReport {
+    /// Every fitted `(calibration key, value)` pair, in application
+    /// order — exactly what a `CALIBRATE` line reproducing this fit
+    /// would carry.
+    pub fn overrides(&self) -> Vec<(String, f64)> {
+        self.groups.iter().filter(|g| g.fitted).flat_map(|g| g.params.clone()).collect()
+    }
+
+    /// Number of groups whose parameters entered the spec.
+    pub fn fitted_groups(&self) -> usize {
+        self.groups.iter().filter(|g| g.fitted).count()
+    }
+
+    pub fn samples_total(&self) -> usize {
+        self.groups.iter().map(|g| g.n_samples).sum()
+    }
+
+    pub fn samples_used(&self) -> usize {
+        self.groups.iter().map(|g| g.n_used).sum()
+    }
+
+    /// Sample-weighted mean residual over the fitted groups (0 when
+    /// nothing fitted).
+    pub fn overall_resid(&self) -> f64 {
+        let (num, den) = self
+            .groups
+            .iter()
+            .filter(|g| g.fitted)
+            .fold((0.0, 0usize), |(n, d), g| (n + g.resid_mape * g.n_used as f64, d + g.n_used));
+        if den == 0 {
+            0.0
+        } else {
+            num / den as f64
+        }
+    }
+
+    /// Human-readable multi-line summary (the CLI's output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fit vs base {:?}: {}/{} groups fitted, {}/{} samples used, resid {:.2}%",
+            self.spec.name,
+            self.fitted_groups(),
+            self.groups.len(),
+            self.samples_used(),
+            self.samples_total(),
+            self.overall_resid() * 100.0
+        );
+        for g in &self.groups {
+            out.push_str(&format!(
+                "\n  {:<11} {} n={}/{} resid={:.2}%{}",
+                g.group,
+                if g.fitted { "fitted  " } else { "fallback" },
+                g.n_used,
+                g.n_samples,
+                g.resid_mape * 100.0,
+                if g.note.is_empty() { String::new() } else { format!("  [{}]", g.note) }
+            ));
+            for (k, v) in &g.params {
+                out.push_str(&format!("\n    {k}={v:.4}"));
+            }
+        }
+        out
+    }
+}
+
+/// Fit a full spec from a sample batch against `base`, per-parameter
+/// group (module docs). Errors only on structural problems (an empty
+/// set, or a fitted parameter failing the calibration surface — which
+/// the solvers' range clamps preclude); a fit where every group fell
+/// back is *not* an error here, it is a report with
+/// `fitted_groups() == 0` — the serving layer decides that publishing
+/// it would be pointless.
+pub fn fit_spec(base: &SocSpec, set: &SampleSet) -> Result<FitReport> {
+    ensure!(!set.is_empty(), "no samples to fit");
+
+    // partition the batch by parameter group
+    let mut cpu: Vec<(ClusterId, Vec<(OpConfig, usize, f64)>)> =
+        base.cpu.clusters.iter().map(|c| (c.id, Vec::new())).collect();
+    let mut orphans: Vec<(ClusterId, usize)> = Vec::new();
+    let mut gpu: Vec<(OpConfig, f64)> = Vec::new();
+    let mut coexec: Vec<solver::CoexecSample> = Vec::new();
+    for s in set.samples() {
+        match s.placement {
+            Placement::Cpu { cluster, threads } => {
+                match cpu.iter_mut().find(|(id, _)| *id == cluster) {
+                    Some((_, v)) => v.push((s.op, threads, s.observed_us)),
+                    None => match orphans.iter_mut().find(|(id, _)| *id == cluster) {
+                        Some((_, n)) => *n += 1,
+                        None => orphans.push((cluster, 1)),
+                    },
+                }
+            }
+            Placement::Gpu => gpu.push((s.op, s.observed_us)),
+            Placement::Coexec { c_cpu, cluster, threads, mech } => {
+                coexec.push((s.op, c_cpu, cluster, threads, mech, s.observed_us));
+            }
+        }
+    }
+
+    let mut groups: Vec<GroupFit> = Vec::new();
+    for (id, samples) in &cpu {
+        let cl = base.cpu.cluster(*id).expect("partitioned by base clusters");
+        groups.push(solver::fit_cluster(cl, samples));
+    }
+    // samples for clusters the base spec does not expose: there is no
+    // base value to fit around, so they can only be reported
+    for (id, n) in orphans {
+        groups.push(GroupFit {
+            group: format!("cpu.{}", id.wire()),
+            n_samples: n,
+            n_used: 0,
+            resid_mape: 0.0,
+            fitted: false,
+            note: format!("base spec has no {id} cluster"),
+            params: Vec::new(),
+        });
+    }
+    groups.push(solver::fit_gpu(&base.gpu, &gpu));
+
+    // sync overheads are read off coexec samples *after* the compute
+    // halves are fitted: apply what we have so far to a scratch spec
+    let mut scratch = base.clone();
+    let so_far: Vec<(String, f64)> =
+        groups.iter().filter(|g| g.fitted).flat_map(|g| g.params.clone()).collect();
+    scratch.apply_params(&so_far)?;
+    groups.push(solver::fit_sync(&scratch, &coexec));
+
+    // the final spec goes through the same calibration surface a
+    // CALIBRATE upload would — set_param range checks + whole-spec
+    // validate — so an invalid fit cannot escape as a spec
+    let mut spec = base.clone();
+    let report = FitReport { groups, spec: base.clone() };
+    spec.apply_params(&report.overrides())?;
+    Ok(FitReport { spec, ..report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+
+    /// A perturbed pixel5 with zero measurement noise: fits against it
+    /// must recover the perturbation almost exactly.
+    fn noiseless_truth() -> SocSpec {
+        let mut truth = SocSpec::pixel5();
+        truth
+            .apply_params(&[
+                ("cpu.prime.gmacs_per_thread", 16.0),
+                ("cpu.prime.eff2", 1.7),
+                ("cpu.prime.launch_us", 10.0),
+                ("cpu.silver.gmacs_per_thread", 2.4),
+                ("gpu.macs_per_cu_cycle", 17.0),
+                ("gpu.dispatch_us", 80.0),
+                ("sync.polling_linear_us", 12.0),
+                ("sync.event_conv_us", 220.0),
+                ("cpu.noise_sigma", 0.0),
+                ("gpu.noise_sigma", 0.0),
+                ("sync.noise_sigma", 0.0),
+            ])
+            .unwrap();
+        truth
+    }
+
+    #[test]
+    fn noiseless_fit_recovers_a_perturbed_spec() {
+        let truth = noiseless_truth();
+        let set = SampleSet::synthesize(&Device::new(truth.clone()), 1);
+        let report = fit_spec(&SocSpec::pixel5(), &set).unwrap();
+        assert_eq!(
+            report.fitted_groups(),
+            report.groups.len(),
+            "every group must fit on noiseless data:\n{}",
+            report.render()
+        );
+        let within = |key: &str, want: f64, tol: f64| {
+            let got = report
+                .overrides()
+                .iter()
+                .find(|(k, _)| k.as_str() == key)
+                .unwrap_or_else(|| panic!("{key} not fitted:\n{}", report.render()))
+                .1;
+            assert!(
+                (got / want - 1.0).abs() < tol,
+                "{key}: fitted {got:.4}, truth {want} (tol {tol}):\n{}",
+                report.render()
+            );
+        };
+        within("cpu.prime.gmacs_per_thread", 16.0, 0.03);
+        within("cpu.prime.eff2", 1.7, 0.03);
+        within("cpu.prime.launch_us", 10.0, 0.10);
+        within("cpu.silver.gmacs_per_thread", 2.4, 0.03);
+        within("gpu.macs_per_cu_cycle", 17.0, 0.05);
+        within("gpu.dispatch_us", 80.0, 0.10);
+        within("sync.polling_linear_us", 12.0, 0.10);
+        within("sync.event_conv_us", 220.0, 0.10);
+        assert!(report.overall_resid() < 0.05, "{}", report.render());
+        // the published spec validates and carries the fitted values
+        report.spec.validate().unwrap();
+    }
+
+    #[test]
+    fn under_sampled_groups_fall_back_to_base() {
+        // a GPU-only batch: every CPU cluster and sync group must keep
+        // its base values, only the GPU group fits
+        let device = Device::pixel5();
+        let full = SampleSet::synthesize(&device, 2);
+        let mut set = SampleSet::default();
+        for s in full.samples().iter().filter(|s| s.placement == Placement::Gpu) {
+            set.push(*s).unwrap();
+        }
+        let base = SocSpec::pixel5();
+        let report = fit_spec(&base, &set).unwrap();
+        assert_eq!(report.fitted_groups(), 1, "{}", report.render());
+        let gpu = report.groups.iter().find(|g| g.group == "gpu").unwrap();
+        assert!(gpu.fitted);
+        for g in report.groups.iter().filter(|g| g.group != "gpu") {
+            assert!(!g.fitted, "{} must fall back: {}", g.group, report.render());
+            assert!(g.note.contains("under-sampled") || g.n_samples == 0, "{}", g.note);
+        }
+        // fallback means *identical* base values for the CPU side
+        for (a, b) in base.cpu.clusters.iter().zip(&report.spec.cpu.clusters) {
+            assert_eq!(a.gmacs_per_thread, b.gmacs_per_thread);
+            assert_eq!(a.efficiency, b.efficiency);
+            assert_eq!(a.launch_us, b.launch_us);
+        }
+        assert_eq!(base.sync.polling_linear_us, report.spec.sync.polling_linear_us);
+    }
+
+    #[test]
+    fn orphan_cluster_samples_are_reported_not_fitted() {
+        let mut base = SocSpec::pixel5();
+        base.cpu.clusters.truncate(1); // prime only
+        let set = SampleSet::parse_segments([
+            "cpu linear 64 768 2048 silver 2 900.0",
+            "gpu linear 8 64 128 50.0",
+        ])
+        .unwrap();
+        let report = fit_spec(&base, &set).unwrap();
+        let orphan = report
+            .groups
+            .iter()
+            .find(|g| g.group == "cpu.silver")
+            .expect("orphan group reported");
+        assert!(!orphan.fitted);
+        assert!(orphan.note.contains("no silver cluster"), "{}", orphan.note);
+        assert_eq!(orphan.n_samples, 1);
+    }
+
+    #[test]
+    fn empty_set_is_an_error() {
+        assert!(fit_spec(&SocSpec::pixel5(), &SampleSet::default()).is_err());
+    }
+
+    #[test]
+    fn garbage_samples_make_groups_fall_back_not_corrupt() {
+        // constant nonsense latencies: no analytic model fits them, so
+        // every group must fall back (ill-conditioned) or under-sample,
+        // and fit_spec still returns a clean base spec
+        let mut set = SampleSet::default();
+        for i in 1..=12usize {
+            set.push(Sample {
+                op: OpConfig::Linear(crate::ops::LinearConfig::new(i, 64 * i, 128 * i)),
+                placement: Placement::Cpu { cluster: ClusterId::Prime, threads: 1 + i % 3 },
+                observed_us: if i % 2 == 0 { 1.0 } else { 1e6 },
+            })
+            .unwrap();
+        }
+        let base = SocSpec::pixel5();
+        let report = fit_spec(&base, &set).unwrap();
+        let prime = report.groups.iter().find(|g| g.group == "cpu.prime").unwrap();
+        assert!(!prime.fitted, "garbage must not fit: {}", report.render());
+        assert_eq!(report.fitted_groups(), 0);
+        assert_eq!(report.spec.cpu.clusters[0].gmacs_per_thread, base.cpu.clusters[0].gmacs_per_thread);
+        report.spec.validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_reproduce_the_report_spec_via_calibrate_keys() {
+        let set = SampleSet::synthesize(&Device::pixel5(), 4);
+        let base = SocSpec::pixel5();
+        let report = fit_spec(&base, &set).unwrap();
+        assert!(report.fitted_groups() > 0);
+        // applying the advertised overrides to the base reproduces the
+        // published spec exactly (the report IS a CALIBRATE line)
+        let mut rebuilt = base.clone();
+        rebuilt.apply_params(&report.overrides()).unwrap();
+        assert_eq!(format!("{rebuilt:?}"), format!("{:?}", report.spec));
+        // and sigmas are never fitted
+        assert_eq!(rebuilt.cpu.noise_sigma, base.cpu.noise_sigma);
+        assert!(report.overrides().iter().all(|(k, _)| !k.contains("noise_sigma")));
+    }
+
+    #[test]
+    fn throttled_coexec_sample_cannot_bend_a_sync_constant() {
+        // one 3x-throttled profiling run in a minimum-coverage bucket:
+        // the median/MAD cut must reject it, and a bucket left with too
+        // few clean samples falls back to the base constant instead of
+        // publishing a bent one
+        let device = Device::pixel5();
+        let clean = SampleSet::synthesize(&device, 12);
+        let mut corrupted = SampleSet::default();
+        let mut poisoned = false;
+        for s in clean.samples() {
+            let mut s = *s;
+            if !poisoned
+                && s.op.kind() == "linear"
+                && matches!(
+                    s.placement,
+                    Placement::Coexec { mech: crate::device::SyncMechanism::SvmPolling, .. }
+                )
+            {
+                s.observed_us *= 3.0;
+                poisoned = true;
+            }
+            corrupted.push(s).unwrap();
+        }
+        assert!(poisoned);
+        let base = SocSpec::pixel5();
+        let report = fit_spec(&base, &corrupted).unwrap();
+        let sync = report.groups.iter().find(|g| g.group == "sync").unwrap();
+        assert!(sync.fitted, "{}", report.render());
+        // the poisoned bucket fell back: polling_linear keeps its base
+        // value exactly, the other three constants still fit
+        assert_eq!(report.spec.sync.polling_linear_us, base.sync.polling_linear_us);
+        assert!(sync.note.contains("sync.polling_linear_us kept"), "{}", sync.note);
+        assert_eq!(sync.params.len(), 3, "{}", report.render());
+        for key in ["sync.polling_conv_us", "sync.event_linear_us", "sync.event_conv_us"] {
+            assert!(
+                sync.params.iter().any(|(k, _)| k.as_str() == key),
+                "{key} must still fit: {}",
+                report.render()
+            );
+        }
+    }
+
+    #[test]
+    fn coexec_only_batch_cannot_fit_sync_without_compute_groups() {
+        // sync constants derive from obs - max(cpu, gpu) under the
+        // *fitted* halves; with no cpu/gpu samples the halves stay base,
+        // which is fine — sync still fits if the residuals are clean
+        let device = Device::pixel5();
+        let full = SampleSet::synthesize(&device, 4);
+        let mut set = SampleSet::default();
+        for s in full.samples() {
+            if matches!(s.placement, Placement::Coexec { .. }) {
+                set.push(*s).unwrap();
+            }
+        }
+        let report = fit_spec(&SocSpec::pixel5(), &set).unwrap();
+        let sync = report.groups.iter().find(|g| g.group == "sync").unwrap();
+        assert!(sync.fitted, "clean coexec residuals over base halves: {}", report.render());
+        assert_eq!(sync.params.len(), 4, "all four constants covered");
+    }
+}

@@ -1,0 +1,486 @@
+//! Profiling samples: the input side of measurement-driven calibration.
+//!
+//! A [`Sample`] is one observed latency — `(op-spec, placement,
+//! observed_us)` — exactly what a client-side profiling run produces by
+//! timing real ops on its own SoC. A [`SampleSet`] is a bounded,
+//! validated batch of them: every record is range-checked on entry
+//! (shapes bounded like the serving protocol's numeric fields, latencies
+//! positive and finite, thread counts within the modelable budget), and
+//! the set refuses to grow past [`MAX_FIT_SAMPLES`] so one upload can
+//! never balloon server memory or fitting time.
+//!
+//! The wire grammar (one sample per `;`-separated segment of a `FIT`
+//! request line, or one per line in a `repro fit --samples` file) is:
+//!
+//! ```text
+//! sample   = "cpu"    op-shape cluster threads t_us
+//!          | "gpu"    op-shape t_us
+//!          | "coexec" op-shape c_cpu cluster threads mech t_us
+//! op-shape = "linear" l cin cout | "conv" h w cin cout k s
+//! cluster  = "prime" | "gold" | "silver"
+//! mech     = "svm_polling" | "event_wait"
+//! t_us     = observed mean latency in microseconds (positive float)
+//! ```
+//!
+//! `coexec` samples must genuinely split (`0 < c_cpu < cout`): exclusive
+//! runs carry no sync overhead, so they belong in `cpu`/`gpu` records.
+//! [`Sample::wire`] renders exactly this grammar, so a profiling client
+//! (or [`SampleSet::synthesize`], the simulator's stand-in for one) can
+//! build `FIT` lines without string-formatting knowledge of its own.
+
+use crate::device::cpu::MAX_CLUSTER_THREADS;
+use crate::device::{ClusterId, Device, SyncMechanism};
+use crate::ops::{ChannelSplit, ConvConfig, LinearConfig, OpConfig};
+use anyhow::{anyhow, ensure, Result};
+
+/// Most samples one fit may ingest — the `FIT` analogue of the serving
+/// layer's `PLAN_BATCH` cap, checked *before* any parsing work. A full
+/// per-cluster campaign on the richest built-in phone is ~90 samples;
+/// 512 leaves room for denser client sweeps while keeping worst-case
+/// request lines and fitting cost bounded.
+pub const MAX_FIT_SAMPLES: usize = 512;
+
+/// Largest accepted op-shape field, mirroring the serving protocol's
+/// `MAX_FIELD` bound and for the same reasons: the analytic cost models
+/// multiply several fields together, and a fit evaluates them thousands
+/// of times per sample.
+pub const MAX_SAMPLE_FIELD: usize = 1 << 15;
+
+/// Largest accepted observed latency (µs): bounded shapes complete in
+/// far less than this on any plausible device; anything bigger is a
+/// client-side unit error (seconds vs µs) worth rejecting loudly.
+pub const MAX_OBSERVED_US: f64 = 1e9;
+
+/// Where one profiling sample ran.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Placement {
+    /// CPU-only on one cluster at a thread count.
+    Cpu { cluster: ClusterId, threads: usize },
+    /// GPU-only (the delegate's dispatch path).
+    Gpu,
+    /// Strict co-execution: `c_cpu` output channels on `cluster`'s
+    /// `threads` threads, the rest on the GPU, rendezvous via `mech`.
+    Coexec { c_cpu: usize, cluster: ClusterId, threads: usize, mech: SyncMechanism },
+}
+
+/// One observed latency record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub op: OpConfig,
+    pub placement: Placement,
+    /// Observed (mean) latency, microseconds.
+    pub observed_us: f64,
+}
+
+fn op_wire(op: &OpConfig) -> String {
+    match op {
+        OpConfig::Linear(c) => format!("linear {} {} {}", c.l, c.cin, c.cout),
+        OpConfig::Conv(c) => {
+            format!("conv {} {} {} {} {} {}", c.h, c.w, c.cin, c.cout, c.k, c.stride)
+        }
+    }
+}
+
+/// Parse the leading op-shape tokens; returns the op and the rest.
+fn parse_op_shape<'a>(parts: &'a [&'a str]) -> Result<(OpConfig, &'a [&'a str])> {
+    let field = |tok: &str, name: &str| -> Result<usize> {
+        let v: usize =
+            tok.parse().map_err(|_| anyhow!("bad sample: malformed field {name}={tok}"))?;
+        ensure!(
+            (1..=MAX_SAMPLE_FIELD).contains(&v),
+            "bad sample: field {name}={v} out of range (1..={MAX_SAMPLE_FIELD})"
+        );
+        Ok(v)
+    };
+    match parts {
+        ["linear", l, cin, cout, rest @ ..] => Ok((
+            OpConfig::Linear(LinearConfig::new(
+                field(l, "l")?,
+                field(cin, "cin")?,
+                field(cout, "cout")?,
+            )),
+            rest,
+        )),
+        ["conv", h, w, cin, cout, k, s, rest @ ..] => Ok((
+            OpConfig::Conv(ConvConfig::new(
+                field(h, "h")?,
+                field(w, "w")?,
+                field(cin, "cin")?,
+                field(cout, "cout")?,
+                field(k, "k")?,
+                field(s, "s")?,
+            )),
+            rest,
+        )),
+        _ => Err(anyhow!(
+            "bad sample: expected op-shape (linear <l> <cin> <cout> | conv <h> <w> <cin> <cout> <k> <s>)"
+        )),
+    }
+}
+
+impl Sample {
+    /// Render this sample in the wire grammar (module docs).
+    pub fn wire(&self) -> String {
+        let op = op_wire(&self.op);
+        match self.placement {
+            Placement::Cpu { cluster, threads } => {
+                format!("cpu {op} {} {threads} {:.3}", cluster.wire(), self.observed_us)
+            }
+            Placement::Gpu => format!("gpu {op} {:.3}", self.observed_us),
+            Placement::Coexec { c_cpu, cluster, threads, mech } => format!(
+                "coexec {op} {c_cpu} {} {threads} {} {:.3}",
+                cluster.wire(),
+                mech.wire(),
+                self.observed_us
+            ),
+        }
+    }
+
+    /// Parse one wire-grammar sample (whitespace-tokenized; the caller
+    /// strips `;` framing). Validation happens in [`SampleSet::push`].
+    pub fn parse(line: &str) -> Result<Sample> {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let observed = |tok: &str| -> Result<f64> {
+            tok.parse::<f64>().map_err(|_| anyhow!("bad sample: malformed latency {tok}"))
+        };
+        let cluster_of = |tok: &str| -> Result<ClusterId> {
+            ClusterId::parse(tok)
+                .ok_or_else(|| anyhow!("bad sample: unknown cluster {tok} (prime|gold|silver)"))
+        };
+        let threads_of = |tok: &str| -> Result<usize> {
+            tok.parse().map_err(|_| anyhow!("bad sample: malformed threads {tok}"))
+        };
+        match parts.as_slice() {
+            ["cpu", rest @ ..] => {
+                let (op, rest) = parse_op_shape(rest)?;
+                match rest {
+                    [cl, t, us] => Ok(Sample {
+                        op,
+                        placement: Placement::Cpu {
+                            cluster: cluster_of(cl)?,
+                            threads: threads_of(t)?,
+                        },
+                        observed_us: observed(us)?,
+                    }),
+                    _ => Err(anyhow!(
+                        "bad sample: expected cpu <op-shape> <cluster> <threads> <t_us>"
+                    )),
+                }
+            }
+            ["gpu", rest @ ..] => {
+                let (op, rest) = parse_op_shape(rest)?;
+                match rest {
+                    [us] => Ok(Sample { op, placement: Placement::Gpu, observed_us: observed(us)? }),
+                    _ => Err(anyhow!("bad sample: expected gpu <op-shape> <t_us>")),
+                }
+            }
+            ["coexec", rest @ ..] => {
+                let (op, rest) = parse_op_shape(rest)?;
+                match rest {
+                    [c_cpu, cl, t, mech, us] => Ok(Sample {
+                        op,
+                        placement: Placement::Coexec {
+                            c_cpu: threads_of(c_cpu)
+                                .map_err(|_| anyhow!("bad sample: malformed c_cpu {c_cpu}"))?,
+                            cluster: cluster_of(cl)?,
+                            threads: threads_of(t)?,
+                            mech: SyncMechanism::parse(mech).ok_or_else(|| {
+                                anyhow!("bad sample: unknown mech {mech} (svm_polling|event_wait)")
+                            })?,
+                        },
+                        observed_us: observed(us)?,
+                    }),
+                    _ => Err(anyhow!(
+                        "bad sample: expected coexec <op-shape> <c_cpu> <cluster> <threads> <mech> <t_us>"
+                    )),
+                }
+            }
+            [kind, ..] => Err(anyhow!("bad sample: unknown placement {kind} (cpu|gpu|coexec)")),
+            [] => Err(anyhow!("bad sample: empty")),
+        }
+    }
+}
+
+/// A bounded, validated batch of profiling samples.
+#[derive(Debug, Clone, Default)]
+pub struct SampleSet {
+    samples: Vec<Sample>,
+}
+
+impl SampleSet {
+    /// Validate and add one sample. Rejects: a full set (the
+    /// [`MAX_FIT_SAMPLES`] bound), non-positive/non-finite/oversized
+    /// latencies, thread counts outside `1..=MAX_CLUSTER_THREADS`, and
+    /// `coexec` records that do not strictly split the output channels.
+    /// (Whether the *base device* exposes a sample's cluster is a fitting
+    /// concern, not a parsing one — see `fit_spec`.)
+    pub fn push(&mut self, s: Sample) -> Result<()> {
+        ensure!(
+            self.samples.len() < MAX_FIT_SAMPLES,
+            "too many samples (max {MAX_FIT_SAMPLES})"
+        );
+        ensure!(
+            s.observed_us.is_finite() && s.observed_us > 0.0 && s.observed_us <= MAX_OBSERVED_US,
+            "bad sample: latency {} out of range (0, {MAX_OBSERVED_US:e}]",
+            s.observed_us
+        );
+        let threads_ok = |t: usize| (1..=MAX_CLUSTER_THREADS).contains(&t);
+        match s.placement {
+            Placement::Cpu { threads, .. } => {
+                ensure!(
+                    threads_ok(threads),
+                    "bad sample: threads {threads} out of range (1..={MAX_CLUSTER_THREADS})"
+                );
+            }
+            Placement::Gpu => {}
+            Placement::Coexec { c_cpu, threads, .. } => {
+                ensure!(
+                    threads_ok(threads),
+                    "bad sample: threads {threads} out of range (1..={MAX_CLUSTER_THREADS})"
+                );
+                ensure!(
+                    c_cpu > 0 && c_cpu < s.op.cout(),
+                    "bad sample: coexec must strictly split (0 < c_cpu={c_cpu} < cout={})",
+                    s.op.cout()
+                );
+            }
+        }
+        self.samples.push(s);
+        Ok(())
+    }
+
+    /// Parse `;`/newline-framed sample segments (blank segments skipped),
+    /// enforcing the set bound as it goes.
+    pub fn parse_segments<'a>(segments: impl IntoIterator<Item = &'a str>) -> Result<SampleSet> {
+        let mut set = SampleSet::default();
+        for seg in segments {
+            if seg.trim().is_empty() {
+                continue;
+            }
+            set.push(Sample::parse(seg)?)?;
+        }
+        Ok(set)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Render the whole set in the wire grammar, `"; "`-joined — the body
+    /// of a `FIT` request line.
+    pub fn wire(&self) -> String {
+        self.samples.iter().map(Sample::wire).collect::<Vec<_>>().join("; ")
+    }
+
+    /// A full self-profiling campaign on a device: replay its own
+    /// `measure_*` output (each sample the mean of `trials` runs, as the
+    /// paper's tool averages repeated executions) shaped so every
+    /// parameter group is identifiable:
+    ///
+    /// * per `(cluster, threads)`: compute-bound GEMMs (throughput +
+    ///   thread scaling), a wide skinny GEMM that turns memory-bound at
+    ///   high thread counts (bandwidth), and launch-dominated tiny ops;
+    /// * a GPU sweep covering every kernel implementation (vec4/scalar
+    ///   linear, constant/winograd/generic conv) plus dispatch-bound
+    ///   tiny shapes;
+    /// * strict-coexec pairs per `(kind, mechanism)` on small ops, where
+    ///   the sync overhead is a visible fraction of the total.
+    pub fn synthesize(device: &Device, trials: u64) -> SampleSet {
+        let mut set = SampleSet::default();
+        let mut add = |s: Sample| set.push(s).expect("synthesized campaign stays in bounds");
+
+        let cpu_ops = [
+            OpConfig::Linear(LinearConfig::new(64, 768, 2048)),
+            OpConfig::Linear(LinearConfig::new(16, 256, 512)),
+            OpConfig::Linear(LinearConfig::new(1, 2048, 2048)),
+            OpConfig::Linear(LinearConfig::new(1, 16, 32)),
+            OpConfig::Conv(ConvConfig::new(32, 32, 128, 256, 3, 1)),
+            OpConfig::Conv(ConvConfig::new(8, 8, 16, 32, 3, 1)),
+        ];
+        for cl in &device.spec.cpu.clusters {
+            for threads in 1..=cl.max_threads() {
+                for op in &cpu_ops {
+                    add(Sample {
+                        op: *op,
+                        placement: Placement::Cpu { cluster: cl.id, threads },
+                        observed_us: device.measure_cpu_mean(op, cl.id, threads, trials),
+                    });
+                }
+            }
+        }
+
+        let gpu_ops = [
+            OpConfig::Linear(LinearConfig::new(50, 768, 3072)), // vec4
+            OpConfig::Linear(LinearConfig::new(50, 768, 8192)),
+            OpConfig::Linear(LinearConfig::new(50, 768, 1026)), // scalar tail
+            OpConfig::Linear(LinearConfig::new(8, 256, 256)),
+            OpConfig::Linear(LinearConfig::new(1, 16, 32)), // dispatch-bound
+            OpConfig::Linear(LinearConfig::new(2, 32, 16)),
+            OpConfig::Conv(ConvConfig::fig6b(96)),  // conv_constant
+            OpConfig::Conv(ConvConfig::fig6b(256)), // winograd
+            OpConfig::Conv(ConvConfig::new(64, 64, 128, 512, 3, 2)), // conv_generic
+            OpConfig::Conv(ConvConfig::new(8, 8, 16, 32, 3, 1)),
+        ];
+        for op in &gpu_ops {
+            add(Sample {
+                op: *op,
+                placement: Placement::Gpu,
+                observed_us: device.measure_gpu_mean(op, trials),
+            });
+        }
+
+        let cluster = device.spec.cpu.default_cluster_id();
+        let coexec_ops: [(OpConfig, usize); 4] = [
+            (OpConfig::Linear(LinearConfig::new(2, 16, 24)), 8),
+            (OpConfig::Linear(LinearConfig::new(4, 32, 64)), 16),
+            (OpConfig::Conv(ConvConfig::new(8, 8, 16, 48, 3, 1)), 16),
+            (OpConfig::Conv(ConvConfig::new(12, 12, 24, 64, 3, 1)), 24),
+        ];
+        for mech in SyncMechanism::ALL {
+            for &(op, c_cpu) in &coexec_ops {
+                for shift in [0usize, 4] {
+                    let c1 = c_cpu + shift;
+                    add(Sample {
+                        op,
+                        placement: Placement::Coexec { c_cpu: c1, cluster, threads: 1, mech },
+                        observed_us: device.measure_coexec_mean(
+                            &op,
+                            ChannelSplit::new(c1, op.cout() - c1),
+                            cluster,
+                            1,
+                            mech,
+                            trials,
+                        ),
+                    });
+                }
+            }
+        }
+        set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(line: &str) -> Sample {
+        Sample::parse(line).unwrap_or_else(|e| panic!("{line:?}: {e}"))
+    }
+
+    #[test]
+    fn wire_roundtrips_every_placement() {
+        for line in [
+            "cpu linear 64 768 2048 prime 3 512.250",
+            "cpu conv 32 32 128 256 3 1 silver 4 9841.000",
+            "gpu linear 50 768 3072 2480.125",
+            "gpu conv 64 64 128 512 3 2 8000.000",
+            "coexec linear 4 32 64 16 prime 1 svm_polling 151.500",
+            "coexec conv 8 8 16 48 16 gold 2 event_wait 310.000",
+        ] {
+            let s = sample(line);
+            assert_eq!(s.wire(), line, "wire() must reproduce the grammar");
+            assert_eq!(sample(&s.wire()), s);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_samples() {
+        for bad in [
+            "",
+            "cpu",
+            "tpu linear 1 1 8 prime 1 5.0",
+            "cpu linear 1 1 prime 1 5.0",          // missing cout
+            "cpu linear 1 1 8 mega 1 5.0",         // unknown cluster
+            "cpu linear 1 1 8 prime one 5.0",      // malformed threads
+            "cpu linear 0 1 8 prime 1 5.0",        // zero field
+            "cpu linear 1 99999 8 prime 1 5.0",    // oversized field
+            "gpu linear 1 1 8",                    // missing latency
+            "gpu linear 1 1 8 fast",               // malformed latency
+            "coexec linear 1 1 8 4 prime 1 tls 5", // unknown mech
+            "coexec linear 1 1 8 4 prime 1 5.0",   // missing mech
+        ] {
+            assert!(Sample::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn push_validates_latency_threads_and_splits() {
+        let mut set = SampleSet::default();
+        let ok = sample("cpu linear 8 64 128 prime 2 42.0");
+        set.push(ok).unwrap();
+        for bad in [
+            "cpu linear 8 64 128 prime 2 0.0",
+            "cpu linear 8 64 128 prime 2 -3.0",
+            "cpu linear 8 64 128 prime 2 nan",
+            "cpu linear 8 64 128 prime 2 1e12",
+            "cpu linear 8 64 128 prime 0 42.0",
+            "cpu linear 8 64 128 prime 99 42.0",
+            "coexec linear 8 64 128 128 prime 1 svm_polling 42.0", // not a split
+            "coexec linear 8 64 128 200 prime 1 svm_polling 42.0",
+        ] {
+            let s = Sample::parse(bad).expect("parses; push rejects");
+            assert!(set.push(s).is_err(), "{bad:?} must be rejected by push");
+        }
+        assert_eq!(set.len(), 1, "rejected samples must not enter the set");
+    }
+
+    #[test]
+    fn set_is_bounded() {
+        let mut set = SampleSet::default();
+        let s = sample("gpu linear 8 64 128 42.0");
+        for _ in 0..MAX_FIT_SAMPLES {
+            set.push(s).unwrap();
+        }
+        assert!(set.push(s).is_err(), "the {MAX_FIT_SAMPLES}-sample bound must hold");
+        // parse_segments enforces the same bound
+        let many = vec!["gpu linear 8 64 128 42.0"; MAX_FIT_SAMPLES + 1];
+        assert!(SampleSet::parse_segments(many).is_err());
+    }
+
+    #[test]
+    fn parse_segments_skips_blanks() {
+        let set =
+            SampleSet::parse_segments(["", "  ", "gpu linear 8 64 128 42.0", " "]).unwrap();
+        assert_eq!(set.len(), 1);
+    }
+
+    #[test]
+    fn synthesized_campaign_is_bounded_and_covers_every_group() {
+        let device = Device::pixel5();
+        let set = SampleSet::synthesize(&device, 4);
+        assert!(set.len() <= MAX_FIT_SAMPLES, "{} samples", set.len());
+        for cl in &device.spec.cpu.clusters {
+            for t in 1..=cl.max_threads() {
+                assert!(
+                    set.samples().iter().any(|s| matches!(
+                        s.placement,
+                        Placement::Cpu { cluster, threads } if cluster == cl.id && threads == t
+                    )),
+                    "no sample for ({}, {t})",
+                    cl.id
+                );
+            }
+        }
+        assert!(set.samples().iter().any(|s| s.placement == Placement::Gpu));
+        for mech in SyncMechanism::ALL {
+            for kind in ["linear", "conv"] {
+                assert!(
+                    set.samples().iter().any(|s| s.op.kind() == kind
+                        && matches!(s.placement, Placement::Coexec { mech: m, .. } if m == mech)),
+                    "no coexec sample for ({kind}, {mech:?})"
+                );
+            }
+        }
+        // every synthesized sample survives the wire round trip
+        let replayed = SampleSet::parse_segments(set.wire().split(';')).unwrap();
+        assert_eq!(replayed.len(), set.len());
+    }
+}

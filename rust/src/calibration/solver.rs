@@ -1,0 +1,552 @@
+//! Per-parameter-group solvers: least squares against the analytic cost
+//! models.
+//!
+//! Each solver minimizes the mean squared **log** residual of the crate's
+//! own cost model over a group's samples (latencies span four decades and
+//! the measurement noise is multiplicative lognormal, so log residuals
+//! weight every sample evenly and the least-squares optimum is the noise
+//! model's maximum-likelihood fit). Minimization is staged-grid
+//! coordinate descent: the cost models are piecewise (tile ceilings,
+//! `max(compute, memory)` regime switches, workgroup jumps), so anything
+//! assuming smoothness or unimodality (gradients, golden-section) can
+//! silently lock onto the wrong piece — a bounded grid pass per
+//! coordinate cannot. Three structural rules keep the fits honest:
+//!
+//! * **A parameter with no signal stays put.** Every line search keeps
+//!   the incumbent value unless a candidate *strictly* improves the
+//!   objective, so a sample set with, say, no memory-bound op leaves the
+//!   base spec's bandwidth untouched instead of letting it drift across
+//!   a flat objective.
+//! * **Outliers are rejected robustly.** After a first fit, samples whose
+//!   log residual sits more than 3 scaled-MADs from the median residual
+//!   are dropped and the group is refitted from the base spec — one
+//!   thermally-throttled profiling run must not bend the whole cluster.
+//! * **Ill-conditioned groups fall back.** A group whose post-fit
+//!   inlier residual still exceeds [`MAX_GROUP_RESID`] (or that never had
+//!   [`MIN_GROUP_SAMPLES`] usable samples) reports `fitted = false` and
+//!   contributes nothing to the final spec — the base values survive.
+//!
+//! Sync overheads are not descended at all: with the CPU and GPU halves
+//! already fitted, each paired co-execution sample yields a direct
+//! overhead observation `obs - max(T_cpu, T_gpu)`, and the per
+//! `(mechanism, kind)` constant is the median of the observations that
+//! survive the same median/MAD cut (on total-latency log residuals); a
+//! bucket left under [`MIN_SYNC_SAMPLES`] clean samples keeps its base
+//! constant.
+
+use super::GroupFit;
+use crate::device::soc::MAX_CALIBRATED_EFF;
+use crate::device::{ClusterId, ClusterSpec, GpuSpec, SocSpec, SyncMechanism};
+use crate::ops::OpConfig;
+
+/// Fewest usable samples a group may be fitted from.
+pub const MIN_GROUP_SAMPLES: usize = 6;
+/// Fewest samples an individual thread-efficiency entry (`effN`) needs
+/// at its thread count before it is fitted rather than kept from the
+/// base spec.
+pub const MIN_KEY_SAMPLES: usize = 2;
+/// Post-fit inlier-residual gate (MAPE): a group fitting worse than this
+/// is ill-conditioned — applying it would trade known-good base values
+/// for garbage — so it falls back instead.
+pub const MAX_GROUP_RESID: f64 = 0.20;
+
+/// Scalar search bracket half-width as a multiplicative factor around the
+/// base value: generous enough to cross the several-fold spreads between
+/// real phones, bounded so a degenerate sample set cannot send a
+/// parameter to infinity.
+const BRACKET_FACTOR: f64 = 6.0;
+/// Coordinate-descent sweeps over the parameter list.
+const ROUNDS: usize = 6;
+/// Grid points per line-search stage.
+const GRID: usize = 16;
+/// Staged refinements per line search (resolution ~0.2% of the bracket —
+/// the sync solver reads overheads off residuals of the fitted compute
+/// halves, so their precision floors its accuracy).
+const STAGES: usize = 4;
+/// Outlier cut floor: a residual within 10% of the median is never an
+/// outlier, whatever the MAD says (tiny-noise groups must keep samples).
+const OUTLIER_MIN_LOG: f64 = 0.10;
+/// Ridge weight pulling each parameter toward its base value. Sized to
+/// be invisible next to any real signal (a residual gradient from even a
+/// 1% model error dwarfs it) but decisive on a *flat* direction — a
+/// parameter the samples cannot identify (e.g. a cluster's bandwidth
+/// with no memory-bound op) must sit at its base value, not wander to a
+/// bracket edge chasing noise. Validated empirically: without it, an
+/// unidentified bandwidth drifted ~4x off under measurement noise;
+/// with it, identified parameters still recover to <0.5%.
+const REG_TOWARD_BASE: f64 = 3e-5;
+
+/// Sync constants are strictly positive; a fit can observe ~0 on a noisy
+/// near-free rendezvous, so clamp up to a physical floor.
+const MIN_SYNC_US: f64 = 0.05;
+/// Fewest clean samples a sync bucket needs: below 4 the median/MAD cut
+/// cannot tell an outlier from the signal (with 2 samples the median IS
+/// their mean, so one throttled run would bend the constant several-fold
+/// while the group-level residual gate still passed).
+pub const MIN_SYNC_SAMPLES: usize = 4;
+/// Upper clamp for every fitted scalar (the calibration surface's own
+/// `MAX_PARAM`).
+const MAX_FITTED: f64 = 1e6;
+
+fn sq_log_resid(model: f64, obs: f64) -> f64 {
+    let r = (model.max(1e-9) / obs).ln();
+    r * r
+}
+
+/// Minimize `f` over `[lo, hi]` by staged grid refinement, returning
+/// `cur` unless some candidate strictly improves on it.
+fn line_search(lo0: f64, hi0: f64, cur: f64, log_space: bool, f: &dyn Fn(f64) -> f64) -> f64 {
+    if hi0 <= lo0 {
+        return cur;
+    }
+    let cur_obj = f(cur);
+    let (mut lo, mut hi) = (lo0, hi0);
+    let mut best = (cur, cur_obj);
+    for _ in 0..STAGES {
+        for i in 0..=GRID {
+            let t = i as f64 / GRID as f64;
+            let v = if log_space { lo * (hi / lo).powf(t) } else { lo + (hi - lo) * t };
+            let obj = f(v);
+            if obj < best.1 {
+                best = (v, obj);
+            }
+        }
+        // refine one grid step around the incumbent, inside the original
+        // bracket (eff entries must respect their neighbors' range)
+        if log_space {
+            let step = (hi / lo).powf(1.0 / GRID as f64);
+            (lo, hi) = ((best.0 / step).max(lo0), (best.0 * step).min(hi0));
+        } else {
+            let step = (hi - lo) / GRID as f64;
+            (lo, hi) = ((best.0 - step).max(lo0), (best.0 + step).min(hi0));
+        }
+    }
+    if best.1 < cur_obj - (1e-12 + cur_obj * 1e-9) {
+        best.0
+    } else {
+        cur
+    }
+}
+
+/// One fittable scalar of a model `M`: its calibration key, accessors,
+/// and a search bracket (computed against the *current* model state, so
+/// efficiency entries track their moving neighbors).
+struct Param<M> {
+    key: String,
+    get: Box<dyn Fn(&M) -> f64>,
+    set: Box<dyn Fn(&mut M, f64)>,
+    /// `(lo, hi, log_space)`.
+    bracket: Box<dyn Fn(&M) -> (f64, f64, bool)>,
+}
+
+fn scalar_bracket(base: f64) -> (f64, f64, bool) {
+    ((base / BRACKET_FACTOR).max(1e-6), (base * BRACKET_FACTOR).min(MAX_FITTED), true)
+}
+
+/// Robust staged-grid coordinate descent: fit on all samples, reject
+/// outliers by median/MAD on log residuals, refit from the base on the
+/// inliers. Returns the fitted model, the inlier indices, and the inlier
+/// MAPE.
+fn descend<M: Clone, S>(
+    base: &M,
+    params: &[Param<M>],
+    samples: &[S],
+    model_us: &dyn Fn(&M, &S) -> f64,
+    obs_us: &dyn Fn(&S) -> f64,
+) -> (M, Vec<usize>, f64) {
+    let base_vals: Vec<f64> = params.iter().map(|p| (p.get)(base)).collect();
+    let objective = |m: &M, idx: &[usize]| -> f64 {
+        let resid = idx
+            .iter()
+            .map(|&i| sq_log_resid(model_us(m, &samples[i]), obs_us(&samples[i])))
+            .sum::<f64>()
+            / idx.len() as f64;
+        let ridge: f64 = params
+            .iter()
+            .zip(&base_vals)
+            .map(|(p, &bv)| {
+                let r = ((p.get)(m).max(1e-9) / bv).ln();
+                r * r
+            })
+            .sum();
+        resid + REG_TOWARD_BASE * ridge
+    };
+    let fit = |idx: &[usize]| -> M {
+        let mut m = base.clone();
+        for _ in 0..ROUNDS {
+            for p in params {
+                let (lo, hi, log_space) = (p.bracket)(&m);
+                let cur = (p.get)(&m);
+                let v = line_search(lo, hi, cur, log_space, &|v| {
+                    let mut scratch = m.clone();
+                    (p.set)(&mut scratch, v);
+                    objective(&scratch, idx)
+                });
+                (p.set)(&mut m, v);
+            }
+        }
+        m
+    };
+    let all: Vec<usize> = (0..samples.len()).collect();
+    let first = fit(&all);
+    let resids: Vec<f64> = all
+        .iter()
+        .map(|&i| (model_us(&first, &samples[i]).max(1e-9) / obs_us(&samples[i])).ln())
+        .collect();
+    let inliers = inlier_indices(&resids);
+    let fitted = if inliers.len() < samples.len() && inliers.len() >= MIN_GROUP_SAMPLES {
+        fit(&inliers)
+    } else {
+        first
+    };
+    let mape = inliers
+        .iter()
+        .map(|&i| (model_us(&fitted, &samples[i]) / obs_us(&samples[i]) - 1.0).abs())
+        .sum::<f64>()
+        / inliers.len().max(1) as f64;
+    (fitted, inliers, mape)
+}
+
+fn median(sorted: &[f64]) -> f64 {
+    let n = sorted.len();
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    }
+}
+
+/// Indices surviving a median/MAD cut on log residuals.
+fn inlier_indices(resids: &[f64]) -> Vec<usize> {
+    let mut sorted = resids.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = median(&sorted);
+    let mut devs: Vec<f64> = resids.iter().map(|r| (r - med).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // 1.4826 scales the MAD to a Gaussian sigma
+    let cut = (3.0 * 1.4826 * median(&devs)).max(OUTLIER_MIN_LOG);
+    (0..resids.len()).filter(|&i| (resids[i] - med).abs() <= cut).collect()
+}
+
+fn cluster_model_us(cl: &ClusterSpec, op: &OpConfig, threads: usize) -> f64 {
+    match op {
+        OpConfig::Linear(c) => cl.linear_latency_us(c, threads),
+        OpConfig::Conv(c) => cl.conv_latency_us(c, threads),
+    }
+}
+
+/// Fit one CPU cluster's throughput, thread-efficiency table, bandwidth
+/// share, and launch overhead from `(op, threads, observed_us)` samples.
+pub(crate) fn fit_cluster(
+    base: &ClusterSpec,
+    samples: &[(OpConfig, usize, f64)],
+) -> GroupFit {
+    let group = format!("cpu.{}", base.id.wire());
+    let key = |field: &str| format!("{group}.{field}");
+    let budget = base.max_threads();
+    // threads the base table cannot model are unusable (the wire surface
+    // can extend a table via CALIBRATE effN, but a fit cannot invent
+    // scaling entries it has no base value to anchor)
+    let usable: Vec<(OpConfig, usize, f64)> =
+        samples.iter().filter(|(_, t, _)| *t <= budget).copied().collect();
+    let dropped = samples.len() - usable.len();
+    let mut note = if dropped > 0 {
+        format!("{dropped} samples beyond the {budget}-thread budget dropped")
+    } else {
+        String::new()
+    };
+    if usable.len() < MIN_GROUP_SAMPLES {
+        return GroupFit {
+            group,
+            n_samples: samples.len(),
+            n_used: 0,
+            resid_mape: 0.0,
+            fitted: false,
+            note: format!("under-sampled ({} usable, need {MIN_GROUP_SAMPLES})", usable.len()),
+            params: Vec::new(),
+        };
+    }
+
+    let mut params: Vec<Param<ClusterSpec>> = Vec::new();
+    let b = base.gmacs_per_thread;
+    params.push(Param {
+        key: key("gmacs_per_thread"),
+        get: Box::new(|c: &ClusterSpec| c.gmacs_per_thread),
+        set: Box::new(|c: &mut ClusterSpec, v| c.gmacs_per_thread = v),
+        bracket: Box::new(move |_| scalar_bracket(b)),
+    });
+    // effN entries with sample coverage at that thread count (and on the
+    // enumerable calibration surface); the rest keep their base values
+    let mut eff_partial = 0usize;
+    for n in 2..=budget.min(MAX_CALIBRATED_EFF) {
+        if usable.iter().filter(|(_, t, _)| *t == n).count() < MIN_KEY_SAMPLES {
+            eff_partial += 1;
+            continue;
+        }
+        params.push(Param {
+            key: key(&format!("eff{n}")),
+            get: Box::new(move |c: &ClusterSpec| c.efficiency[n - 1]),
+            set: Box::new(move |c: &mut ClusterSpec, v| c.efficiency[n - 1] = v),
+            bracket: Box::new(move |c: &ClusterSpec| {
+                // cumulative scaling stays monotone and at most linear,
+                // against the *current* neighbor values
+                let lo = c.efficiency[n - 2];
+                let hi = c.efficiency.get(n).copied().unwrap_or(n as f64).min(n as f64);
+                (lo, hi, false)
+            }),
+        });
+    }
+    if eff_partial > 0 {
+        if !note.is_empty() {
+            note.push_str("; ");
+        }
+        note.push_str(&format!("{eff_partial} eff entries kept from base (under-sampled)"));
+    }
+    let b = base.mem_bw_gbps;
+    params.push(Param {
+        key: key("mem_bw_gbps"),
+        get: Box::new(|c: &ClusterSpec| c.mem_bw_gbps),
+        set: Box::new(|c: &mut ClusterSpec, v| c.mem_bw_gbps = v),
+        bracket: Box::new(move |_| scalar_bracket(b)),
+    });
+    let b = base.launch_us;
+    params.push(Param {
+        key: key("launch_us"),
+        get: Box::new(|c: &ClusterSpec| c.launch_us),
+        set: Box::new(|c: &mut ClusterSpec, v| c.launch_us = v),
+        bracket: Box::new(move |_| scalar_bracket(b)),
+    });
+
+    let model = |c: &ClusterSpec, s: &(OpConfig, usize, f64)| cluster_model_us(c, &s.0, s.1);
+    let obs = |s: &(OpConfig, usize, f64)| s.2;
+    let (fitted_cl, inliers, mape) = descend(base, &params, &usable, &model, &obs);
+    finish_group(group, samples.len(), inliers.len(), mape, note, &params, &fitted_cl)
+}
+
+fn gpu_model_us(g: &GpuSpec, op: &OpConfig) -> f64 {
+    match op {
+        OpConfig::Linear(c) => g.linear_latency_us(c).0,
+        OpConfig::Conv(c) => g.conv_latency_us(c).0,
+    }
+}
+
+/// Fit the GPU's continuous kernel/dispatch constants from
+/// `(op, observed_us)` samples. The discrete microarchitecture fields
+/// (compute units, wave size, constant memory) stay from the base spec:
+/// they are not continuously identifiable from latencies, and the
+/// per-CU throughput absorbs their product anyway.
+pub(crate) fn fit_gpu(base: &GpuSpec, samples: &[(OpConfig, f64)]) -> GroupFit {
+    let group = "gpu".to_string();
+    if samples.len() < MIN_GROUP_SAMPLES {
+        return GroupFit {
+            group,
+            n_samples: samples.len(),
+            n_used: 0,
+            resid_mape: 0.0,
+            fitted: false,
+            note: format!("under-sampled ({} samples, need {MIN_GROUP_SAMPLES})", samples.len()),
+            params: Vec::new(),
+        };
+    }
+    let mut params: Vec<Param<GpuSpec>> = Vec::new();
+    let b = base.macs_per_cu_cycle;
+    params.push(Param {
+        key: "gpu.macs_per_cu_cycle".into(),
+        get: Box::new(|g: &GpuSpec| g.macs_per_cu_cycle),
+        set: Box::new(|g: &mut GpuSpec, v| g.macs_per_cu_cycle = v),
+        bracket: Box::new(move |_| scalar_bracket(b)),
+    });
+    let b = base.mem_bw_gbps;
+    params.push(Param {
+        key: "gpu.mem_bw_gbps".into(),
+        get: Box::new(|g: &GpuSpec| g.mem_bw_gbps),
+        set: Box::new(|g: &mut GpuSpec, v| g.mem_bw_gbps = v),
+        bracket: Box::new(move |_| scalar_bracket(b)),
+    });
+    let b = base.dispatch_us;
+    params.push(Param {
+        key: "gpu.dispatch_us".into(),
+        get: Box::new(|g: &GpuSpec| g.dispatch_us),
+        set: Box::new(|g: &mut GpuSpec, v| g.dispatch_us = v),
+        bracket: Box::new(move |_| scalar_bracket(b)),
+    });
+    let model = |g: &GpuSpec, s: &(OpConfig, f64)| gpu_model_us(g, &s.0);
+    let obs = |s: &(OpConfig, f64)| s.1;
+    let (fitted_gpu, inliers, mape) = descend(base, &params, samples, &model, &obs);
+    finish_group(group, samples.len(), inliers.len(), mape, String::new(), &params, &fitted_gpu)
+}
+
+/// Shared tail: read the fitted values back out through the param list
+/// and apply the ill-conditioned gate.
+fn finish_group<M>(
+    group: String,
+    n_samples: usize,
+    n_used: usize,
+    mape: f64,
+    mut note: String,
+    params: &[Param<M>],
+    fitted_model: &M,
+) -> GroupFit {
+    let fitted = mape <= MAX_GROUP_RESID;
+    if !fitted {
+        if !note.is_empty() {
+            note.push_str("; ");
+        }
+        note.push_str(&format!(
+            "ill-conditioned (resid {:.1}% > {:.0}%), base kept",
+            mape * 100.0,
+            MAX_GROUP_RESID * 100.0
+        ));
+    }
+    GroupFit {
+        group,
+        n_samples,
+        n_used,
+        resid_mape: mape,
+        fitted,
+        note,
+        params: if fitted {
+            params.iter().map(|p| (p.key.clone(), (p.get)(fitted_model))).collect()
+        } else {
+            Vec::new()
+        },
+    }
+}
+
+/// One coexec sample as the sync solver consumes it.
+pub(crate) type CoexecSample = (OpConfig, usize, ClusterId, usize, SyncMechanism, f64);
+
+/// Derive the four sync-overhead constants from paired co-execution
+/// samples, given a spec whose CPU/GPU halves are already fitted: each
+/// strict split yields a direct overhead observation
+/// `obs - max(T_cpu, T_gpu)`; the per-`(mechanism, kind)` constant is
+/// the (positive-clamped) median.
+pub(crate) fn fit_sync(spec: &SocSpec, samples: &[CoexecSample]) -> GroupFit {
+    let group = "sync".to_string();
+    let mut params: Vec<(String, f64)> = Vec::new();
+    let mut notes: Vec<String> = Vec::new();
+    let mut n_used = 0usize;
+    let mut resid_sum = 0.0;
+    let mut skipped = 0usize;
+    for mech in SyncMechanism::ALL {
+        for kind in ["linear", "conv"] {
+            // (observed overhead, observed total, modeled halves)
+            let mut bucket: Vec<(f64, f64, f64)> = Vec::new();
+            for (op, c_cpu, cluster, threads, m, obs) in samples {
+                if *m != mech || op.kind() != kind {
+                    continue;
+                }
+                let budget = spec.cpu.cluster(*cluster).map(|c| c.max_threads());
+                if !budget.is_some_and(|b| *threads <= b) {
+                    skipped += 1; // base exposes no such placement to model
+                    continue;
+                }
+                let t_cpu = match op.with_cout(*c_cpu) {
+                    OpConfig::Linear(c) => spec.cpu.linear_latency_us(&c, *cluster, *threads),
+                    OpConfig::Conv(c) => spec.cpu.conv_latency_us(&c, *cluster, *threads),
+                };
+                let t_gpu = gpu_model_us(&spec.gpu, &op.with_cout(op.cout() - c_cpu));
+                bucket.push((obs - t_cpu.max(t_gpu), *obs, t_cpu.max(t_gpu)));
+            }
+            let wire_key = format!(
+                "sync.{}_{kind}_us",
+                match mech {
+                    SyncMechanism::SvmPolling => "polling",
+                    SyncMechanism::EventWait => "event",
+                }
+            );
+            if bucket.len() < MIN_SYNC_SAMPLES {
+                notes.push(format!("{wire_key} kept from base ({} samples)", bucket.len()));
+                continue;
+            }
+            // first-pass median, then the same median/MAD cut the
+            // descent solvers use — on total-latency log residuals, so
+            // one throttled profiling run cannot bend the constant
+            let mut overheads: Vec<f64> = bucket.iter().map(|(o, _, _)| *o).collect();
+            overheads.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let const0 = median(&overheads).clamp(MIN_SYNC_US, MAX_FITTED);
+            let resids: Vec<f64> =
+                bucket.iter().map(|(_, obs, halves)| (obs / (halves + const0)).ln()).collect();
+            let keep = inlier_indices(&resids);
+            if keep.len() < MIN_SYNC_SAMPLES {
+                notes.push(format!(
+                    "{wire_key} kept from base ({} clean of {} samples)",
+                    keep.len(),
+                    bucket.len()
+                ));
+                continue;
+            }
+            let mut kept: Vec<f64> = keep.iter().map(|&i| bucket[i].0).collect();
+            kept.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let constant = median(&kept).clamp(MIN_SYNC_US, MAX_FITTED);
+            n_used += keep.len();
+            resid_sum += keep
+                .iter()
+                .map(|&i| ((bucket[i].2 + constant) / bucket[i].1 - 1.0).abs())
+                .sum::<f64>();
+            params.push((wire_key, constant));
+        }
+    }
+    if skipped > 0 {
+        notes.push(format!("{skipped} samples on unmodelable placements skipped"));
+    }
+    let resid = if n_used > 0 { resid_sum / n_used as f64 } else { 0.0 };
+    let fitted = !params.is_empty() && resid <= MAX_GROUP_RESID;
+    if !params.is_empty() && !fitted {
+        notes.push(format!(
+            "ill-conditioned (resid {:.1}% > {:.0}%), base kept",
+            resid * 100.0,
+            MAX_GROUP_RESID * 100.0
+        ));
+    }
+    GroupFit {
+        group,
+        n_samples: samples.len(),
+        n_used,
+        resid_mape: resid,
+        fitted,
+        note: notes.join("; "),
+        params: if fitted { params } else { Vec::new() },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_search_finds_a_quadratic_minimum() {
+        let f = |v: f64| (v - 3.7) * (v - 3.7);
+        let v = line_search(1.0, 10.0, 5.0, false, &f);
+        assert!((v - 3.7).abs() < 0.05, "{v}");
+        let v = line_search(0.1, 100.0, 1.0, true, &f);
+        assert!((v - 3.7).abs() / 3.7 < 0.02, "{v}");
+    }
+
+    #[test]
+    fn line_search_keeps_incumbent_on_flat_objectives() {
+        // no signal: the incumbent must survive exactly
+        assert_eq!(line_search(1.0, 10.0, 4.2, false, &|_| 1.0), 4.2);
+        assert_eq!(line_search(1.0, 10.0, 4.2, true, &|_| 0.0), 4.2);
+        // degenerate bracket
+        assert_eq!(line_search(5.0, 5.0, 4.2, false, &|v| v), 4.2);
+    }
+
+    #[test]
+    fn inlier_cut_drops_gross_outliers_only() {
+        let mut resids = vec![0.01, -0.02, 0.015, 0.0, -0.01, 0.02, 0.005];
+        resids.push(1.5); // one throttled run
+        let keep = inlier_indices(&resids);
+        assert_eq!(keep.len(), 7);
+        assert!(!keep.contains(&7));
+        // tight clusters keep everything (the MAD floor)
+        let all = inlier_indices(&[0.001, -0.002, 0.0005, 0.0]);
+        assert_eq!(all.len(), 4);
+    }
+
+    #[test]
+    fn median_even_and_odd() {
+        assert_eq!(median(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[1.0, 2.0, 3.0, 4.0]), 2.5);
+    }
+}

@@ -196,6 +196,24 @@ impl Device {
         (0..n).map(|t| self.measure(op, proc, t)).sum::<f64>() / n as f64
     }
 
+    /// Mean of `n` CPU measurements on an explicit cluster (the
+    /// calibration subsystem's profiling campaigns average repeated runs
+    /// exactly like the paper's benchmarking tool).
+    pub fn measure_cpu_mean(
+        &self,
+        op: &OpConfig,
+        cluster: ClusterId,
+        threads: usize,
+        n: u64,
+    ) -> f64 {
+        (0..n).map(|t| self.measure_cpu(op, cluster, threads, t)).sum::<f64>() / n as f64
+    }
+
+    /// Mean of `n` GPU measurements.
+    pub fn measure_gpu_mean(&self, op: &OpConfig, n: u64) -> f64 {
+        (0..n).map(|t| self.measure_gpu(op, t)).sum::<f64>() / n as f64
+    }
+
     /// Mean synchronization overhead for a mechanism and op kind (µs).
     pub fn sync_overhead_us(&self, mech: SyncMechanism, kind: &str) -> f64 {
         self.spec.sync.overhead_us(mech, kind)

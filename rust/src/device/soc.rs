@@ -256,6 +256,20 @@ impl SocSpec {
         Ok(())
     }
 
+    /// Apply a sequence of `(key, value)` overrides through
+    /// [`SocSpec::set_param`], then [`SocSpec::validate`] the result —
+    /// the one code path every calibration producer (the `CALIBRATE`
+    /// verb's hand-picked keys, the `FIT` verb's fitted groups) funnels
+    /// through, so a spec that never validated can never be published.
+    /// On error the spec may be partially overridden: callers apply to a
+    /// scratch clone and publish only on `Ok`.
+    pub fn apply_params<K: AsRef<str>>(&mut self, params: &[(K, f64)]) -> Result<()> {
+        for (k, v) in params {
+            self.set_param(k.as_ref(), *v)?;
+        }
+        self.validate()
+    }
+
     /// Whole-spec consistency: everything [`SocSpec::set_param`] checks
     /// per field, plus the cross-field constraints a sequence of
     /// individually valid overrides could still break.

@@ -26,6 +26,24 @@ pub enum SyncMechanism {
     EventWait,
 }
 
+impl SyncMechanism {
+    /// Both mechanisms, in reporting order.
+    pub const ALL: [SyncMechanism; 2] = [SyncMechanism::SvmPolling, SyncMechanism::EventWait];
+
+    /// Wire name (`mech=` protocol fields, `FIT` sample lines).
+    pub fn wire(self) -> &'static str {
+        match self {
+            SyncMechanism::SvmPolling => "svm_polling",
+            SyncMechanism::EventWait => "event_wait",
+        }
+    }
+
+    /// Parse a wire name, case-insensitively.
+    pub fn parse(s: &str) -> Option<SyncMechanism> {
+        SyncMechanism::ALL.into_iter().find(|m| m.wire().eq_ignore_ascii_case(s))
+    }
+}
+
 /// Per-device synchronization overhead constants (µs).
 #[derive(Debug, Clone)]
 pub struct SyncSpec {
@@ -67,5 +85,14 @@ mod tests {
                 < s.overhead_us(SyncMechanism::EventWait, "linear") / 10.0
         );
         assert_eq!(s.overhead_us(SyncMechanism::EventWait, "conv"), 141.0);
+    }
+
+    #[test]
+    fn mechanisms_roundtrip_wire_names() {
+        for m in SyncMechanism::ALL {
+            assert_eq!(SyncMechanism::parse(m.wire()), Some(m));
+            assert_eq!(SyncMechanism::parse(&m.wire().to_uppercase()), Some(m));
+        }
+        assert_eq!(SyncMechanism::parse("semaphore"), None);
     }
 }

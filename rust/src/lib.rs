@@ -26,8 +26,10 @@
 //! [`models`] zoo (VGG16, ResNet-18/34, Inception-v3, ViT-Base-32), the
 //! end-to-end [`scheduler`], the measurement [`device`] simulator standing
 //! in for the paper's four phones (see DESIGN.md §Hardware-Adaptation), the
-//! [`dataset`] generators of §5.2/§5.3, and the [`experiments`] harness
-//! that regenerates every table and figure of the paper.
+//! [`calibration`] subsystem that *fits* a device model from raw profiling
+//! samples (the serving layer's `FIT` verb — measure → fit → calibrate →
+//! plan), the [`dataset`] generators of §5.2/§5.3, and the [`experiments`]
+//! harness that regenerates every table and figure of the paper.
 //!
 //! ## Quick start
 //!
@@ -48,6 +50,7 @@
 //! ```
 
 pub mod benchutil;
+pub mod calibration;
 pub mod coexec;
 pub mod dataset;
 pub mod device;

@@ -9,6 +9,13 @@
 //! repro sync                                 §4 sync-overhead comparison
 //! repro plan  --device <name> --linear L,CIN,COUT [--threads N|auto]
 //!             [--cluster prime|gold|silver|auto]
+//! repro fit   --samples <file> --device <name>
+//!                                            fit a SocSpec from profiling
+//!                                            samples (one per line, same
+//!                                            grammar as the FIT verb) against
+//!                                            the device's spec; prints the
+//!                                            per-group residuals and the
+//!                                            equivalent CALIBRATE line
 //! repro coexec [--c1 N]                      REAL PJRT co-execution demo
 //! repro serve --device <name> [--addr A] [--workers N] [--queue N] [--ttl SECS]
 //!                                            plan-caching multi-device server
@@ -130,6 +137,35 @@ fn main() {
                 gpu_only / measured
             );
         }
+        "fit" => {
+            let path = get("--samples").unwrap_or_else(|| usage("fit needs --samples <file>"));
+            let device = parse_device(&get("--device").unwrap_or_else(|| "pixel5".into()));
+            let text = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| usage(&format!("cannot read {path}: {e}")));
+            // one sample per line (';' also accepted); '#' starts a comment
+            let segments = text
+                .lines()
+                .map(|l| l.split('#').next().unwrap_or(""))
+                .flat_map(|l| l.split(';'))
+                .map(str::trim)
+                .filter(|l| !l.is_empty());
+            let set = mobile_coexec::calibration::SampleSet::parse_segments(segments)
+                .unwrap_or_else(|e| usage(&format!("bad samples in {path}: {e}")));
+            println!("fitting {} samples against {} ...", set.len(), device.name());
+            let report = mobile_coexec::calibration::fit_spec(&device.spec, &set)
+                .unwrap_or_else(|e| usage(&format!("fit failed: {e}")));
+            println!("{}", report.render());
+            let overrides = report.overrides();
+            if overrides.is_empty() {
+                println!("\nno group was well-conditioned; the base spec stands");
+            } else {
+                let kvs: Vec<String> =
+                    overrides.iter().map(|(k, v)| format!("{k}={v:.4}")).collect();
+                println!("\nequivalent serving-protocol line:\nCALIBRATE <name> base={} {}",
+                    get("--device").unwrap_or_else(|| "pixel5".into()),
+                    kvs.join(" "));
+            }
+        }
         "coexec" => {
             let c1: usize = get("--c1").map(|s| s.parse().expect("c1")).unwrap_or(592);
             run_real_coexec(c1).unwrap_or_else(|e| {
@@ -190,6 +226,7 @@ fn main() {
                  usage:\n  repro fig   --id 2|3|5|6a|6b|7 [--quick]\n  \
                  repro table --id 1|2|3|4 [--quick]\n  repro sync\n  \
                  repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto] [--cluster prime|gold|silver|auto]\n  \
+                 repro fit --samples FILE --device <name>\n  \
                  repro coexec [--c1 N]\n  \
                  repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N] [--ttl SECS]\n  \
                  repro all [--quick]"

@@ -35,7 +35,7 @@
 //!
 //! ```text
 //! request    = ping | plan | plan-batch | run | device | calibrate
-//!            | plan-model | flush | stats
+//!            | fit | plan-model | flush | stats
 //! ping       = "PING"                     ; -> OK pong
 //! plan       = "PLAN" op-spec             ; -> OK c_cpu c_gpu t_pred_us
 //!                                         ;      threads=<t> mech=<mech>
@@ -51,6 +51,17 @@
 //! device     = "DEVICE" name              ; -> OK device <name>
 //! calibrate  = "CALIBRATE" name *(param "=" value)
 //!                                         ; -> OK calibrated <name> flushed=<n>
+//! fit        = "FIT" name ["base=" name] 1*(";" sample)
+//!                                         ; at most MAX_FIT_SAMPLES samples
+//!                                         ; (ERR too many samples, checked
+//!                                         ; before any sample is parsed)
+//!                                         ; -> OK fitted <name> groups=<g>/<G>
+//!                                         ;      samples=<used>/<n>
+//!                                         ;      resid=<x> flushed=<k>
+//! sample     = "cpu" op-shape cluster threads t_us
+//!            | "gpu" op-shape t_us
+//!            | "coexec" op-shape c_cpu cluster threads mech t_us
+//! op-shape   = "linear" l cin cout | "conv" h w cin cout k s
 //! plan-model = "PLAN_MODEL" model threads ["cluster=" cluster-req]
 //!                                         ; -> OK model=<m> layers=<n>
 //!                                         ;      planned=<n> coexec=<n>
@@ -102,6 +113,24 @@
 //! the background so no request pays it. A calibrated device then
 //! serves every planning verb with the same caching/auto-resolution
 //! behavior as the built-in four.
+//!
+//! `FIT` is `CALIBRATE` without the hand-picked values: instead of
+//! `<key>=<value>` overrides the client uploads raw profiling samples —
+//! `;`-separated `(op-shape, placement, observed_us)` records from
+//! timing real ops on its own SoC — and the server *fits* the spec
+//! against the analytic cost models ([`crate::calibration`]): per-CPU-
+//! cluster throughput/thread-efficiency/bandwidth/launch constants, the
+//! GPU's kernel/dispatch constants, and sync overheads from paired
+//! co-execution samples, with robust outlier rejection. Under-sampled or
+//! ill-conditioned parameter groups fall back to the base spec's values
+//! (the per-group residuals/coverage are summarized in the reply), and a
+//! fit where *every* group falls back — or any parse/validation failure
+//! — is an `ERR` that mutates nothing. A successful `FIT` publishes
+//! through exactly the `CALIBRATE` path: the fitted parameters are
+//! applied via the validated `set_param` surface, the device gets a
+//! fresh calibration epoch, and exactly its cached plans are flushed.
+//! Sample batches are bounded at [`MAX_FIT_SAMPLES`] — like
+//! `PLAN_BATCH`, the cap is checked before any parsing work.
 //!
 //! The optional `cluster=` parameter picks which CPU cluster the plan's
 //! CPU half runs on (`prime`/`gold`/`silver`, or `auto` to let the
@@ -160,6 +189,11 @@
 //! < OK device lab_phone
 //! > CALIBRATE lab_phone gpu.clock_ghz=0.74
 //! < OK calibrated lab_phone flushed=<n>   (only lab_phone's plans dropped)
+//! > FIT lab_phone; cpu linear 64 768 2048 prime 1 3795.1; gpu linear 50 768 3072 2512.4; ...
+//! < OK fitted lab_phone groups=5/5 samples=86/86 resid=0.0311 flushed=<n>
+//!                                         (spec refitted from the uploaded
+//!                                          profiling run; under-sampled
+//!                                          groups keep lab_phone's values)
 //! > FLUSH
 //! < OK flushed=<n>                        (session device only; FLUSH all
 //!                                          drops every device)
@@ -175,8 +209,10 @@ pub mod pool;
 
 use self::cache::PlanCache;
 use self::pool::{SubmitError, WorkerPool};
+use crate::calibration::{fit_spec, SampleSet};
 use crate::device::{
-    intern_device_name, validate_device_name, ClusterId, Device, Processor, SyncMechanism,
+    intern_device_name, validate_device_name, ClusterId, Device, Processor, SocSpec,
+    SyncMechanism,
 };
 use crate::metrics::{Counter, LatencyRecorder};
 use crate::models::{self, Model};
@@ -240,10 +276,7 @@ fn model_by_name(name: &str) -> Option<Model> {
 
 /// Wire name of a sync mechanism (`mech=` reply fields).
 pub fn mech_wire(mech: SyncMechanism) -> &'static str {
-    match mech {
-        SyncMechanism::SvmPolling => "svm_polling",
-        SyncMechanism::EventWait => "event_wait",
-    }
+    mech.wire()
 }
 
 /// Both planners for one device (trained together, lazily).
@@ -306,13 +339,14 @@ pub struct ServerMetrics {
 /// The protocol's verbs: wire token -> metrics key. Single source of
 /// truth for telemetry bookkeeping and the stable `STATS` reporting
 /// order (dispatch itself lives in `handle_inner`'s match).
-const VERBS: [(&str, &str); 9] = [
+const VERBS: [(&str, &str); 10] = [
     ("PING", "ping"),
     ("PLAN", "plan"),
     ("PLAN_BATCH", "plan_batch"),
     ("RUN", "run"),
     ("DEVICE", "device"),
     ("CALIBRATE", "calibrate"),
+    ("FIT", "fit"),
     ("PLAN_MODEL", "plan_model"),
     ("FLUSH", "flush"),
     ("STATS", "stats"),
@@ -568,11 +602,17 @@ impl ServerState {
     }
 
     fn handle_inner(&self, session: &mut Session, line: &str) -> Result<String> {
-        // PLAN_BATCH groups op-specs with ';', which whitespace-splitting
-        // would destroy — route it on the raw remainder of the line.
+        // PLAN_BATCH and FIT group their payloads with ';', which
+        // whitespace-splitting would destroy — route them on the raw
+        // remainder of the line.
         if let Some(rest) = line.strip_prefix("PLAN_BATCH") {
             if rest.is_empty() || rest.starts_with(char::is_whitespace) {
                 return self.plan_batch(session, rest);
+            }
+        }
+        if let Some(rest) = line.strip_prefix("FIT") {
+            if rest.is_empty() || rest.starts_with(char::is_whitespace) {
+                return self.fit(rest);
             }
         }
         let parts: Vec<&str> = line.split_whitespace().collect();
@@ -841,10 +881,6 @@ impl ServerState {
     /// and validated before any mutation — a failed `CALIBRATE` leaves
     /// the registry and cache untouched.
     fn calibrate(&self, name: &str, params: &[&str]) -> Result<String> {
-        let key = validate_device_name(name)?;
-        // aliases recalibrate their canonical built-in (moto -> moto2022)
-        let key = canonical_device_key(&key).map(str::to_string).unwrap_or(key);
-
         let mut base: Option<Arc<DeviceEntry>> = None;
         let mut overrides: Vec<(&str, f64)> = Vec::new();
         for tok in params {
@@ -861,47 +897,132 @@ impl ServerState {
                 overrides.push((k, value));
             }
         }
+        let (key, mut spec, seed) = self.calibration_target(name, &base)?;
+        spec.apply_params(&overrides)?;
+        let flushed = self.publish_device(&key, spec, seed)?;
+        Ok(format!("calibrated {key} flushed={flushed}"))
+    }
 
-        // exact key first (covers mixed-case custom devices registered by
-        // `ServerState::new_lazy` — recalibrate them, never shadow-register
-        // a lowercased twin), then the canonical/lowercased key
+    /// The `FIT` verb: measurement-driven calibration. Same target/base
+    /// resolution and publication path as `CALIBRATE`, but the spec comes
+    /// out of [`crate::calibration::fit_spec`] run over the uploaded
+    /// profiling samples instead of hand-picked `<key>=<value>` pairs.
+    /// Everything — the sample cap (checked before any parsing), sample
+    /// validation, the fit itself, and spec validation — happens before
+    /// any mutation: a failed or fully fallen-back fit mutates nothing.
+    fn fit(&self, rest: &str) -> Result<String> {
+        const USAGE: &str =
+            "bad fit (expected: FIT <name> [base=<device>] ; <sample> [; <sample> ...])";
+        let mut segments = rest.split(';');
+        let head: Vec<&str> = segments.next().unwrap_or("").split_whitespace().collect();
+        let (name, params) = match head.as_slice() {
+            [name, params @ ..] => (*name, params),
+            [] => return Err(anyhow!(USAGE)),
+        };
+        let mut base: Option<Arc<DeviceEntry>> = None;
+        for tok in params {
+            match tok.split_once('=') {
+                Some(("base", v)) => {
+                    base = Some(
+                        self.resolve_device(v)
+                            .ok_or_else(|| anyhow!("unknown base device {v}"))?,
+                    );
+                }
+                _ => return Err(anyhow!(USAGE)),
+            }
+        }
+        // the sample cap is enforced before any sample is parsed: an
+        // oversized upload costs the server one cheap count, nothing more
+        let samples: Vec<&str> = segments.filter(|s| !s.trim().is_empty()).collect();
+        if samples.len() > MAX_FIT_SAMPLES {
+            return Err(anyhow!("too many samples ({}, max {MAX_FIT_SAMPLES})", samples.len()));
+        }
+        if samples.is_empty() {
+            return Err(anyhow!("no samples ({USAGE})"));
+        }
+        let (key, base_spec, seed) = self.calibration_target(name, &base)?;
+        let set = SampleSet::parse_segments(samples)?;
+        let report = fit_spec(&base_spec, &set)?;
+        if report.fitted_groups() == 0 {
+            // publishing would re-register the base spec under a fresh
+            // epoch and flush warm plans for nothing
+            let why: Vec<String> = report
+                .groups
+                .iter()
+                .map(|g| {
+                    format!(
+                        "{}: {}",
+                        g.group,
+                        if g.note.is_empty() { "no signal" } else { g.note.as_str() }
+                    )
+                })
+                .collect();
+            return Err(anyhow!(
+                "fit rejected: no parameter group was well-conditioned ({})",
+                why.join("; ")
+            ));
+        }
+        let (fitted, total_groups) = (report.fitted_groups(), report.groups.len());
+        let (used, total) = (report.samples_used(), report.samples_total());
+        let resid = report.overall_resid();
+        let flushed = self.publish_device(&key, report.spec, seed)?;
+        Ok(format!(
+            "fitted {key} groups={fitted}/{total_groups} samples={used}/{total} \
+             resid={resid:.4} flushed={flushed}"
+        ))
+    }
+
+    /// Resolve a `CALIBRATE`/`FIT` target: the registry key to publish
+    /// under, the spec to start from, and the measurement seed.
+    ///
+    /// The key is the exact registry key when the name already resolves
+    /// (covers mixed-case custom devices registered by
+    /// `ServerState::new_lazy` — recalibrate them, never shadow-register
+    /// a lowercased twin), else the canonical/lowercased validated name.
+    /// The spec starts from the explicit `base=` device's *current* spec,
+    /// else the target's own current spec (recalibration); a brand-new
+    /// device must say what it is a variation of.
+    fn calibration_target(
+        &self,
+        name: &str,
+        base: &Option<Arc<DeviceEntry>>,
+    ) -> Result<(String, SocSpec, u64)> {
+        let key = validate_device_name(name)?;
+        // aliases recalibrate their canonical built-in (moto -> moto2022)
+        let key = canonical_device_key(&key).map(str::to_string).unwrap_or(key);
         let existing = self.entry(name).or_else(|| self.entry(&key));
         let key = match &existing {
             Some(e) => e.key.to_string(),
             None => key,
         };
-        // start from the base's current spec (explicit base=), else the
-        // device's own current spec (recalibration); a brand-new device
-        // must say what it is a variation of
-        let (mut spec, seed) = match (&base, &existing) {
-            (Some(b), _) => (b.device.spec.clone(), b.device.seed),
-            (None, Some(e)) => (e.device.spec.clone(), e.device.seed),
+        match (base, &existing) {
+            (Some(b), _) => Ok((key, b.device.spec.clone(), b.device.seed)),
+            (None, Some(e)) => Ok((key, e.device.spec.clone(), e.device.seed)),
             (None, None) => {
-                return Err(anyhow!("unknown device {key}: a new device needs base=<device>"))
+                Err(anyhow!("unknown device {key}: a new device needs base=<device>"))
             }
-        };
-        for (k, v) in &overrides {
-            spec.set_param(k, *v)?;
         }
-        spec.validate()?;
-        // a fresh epoch isolates the new calibration's cache namespace: a
-        // plan still in flight against the old entry publishes under the
-        // old epoch and can never be served to the recalibrated device
+    }
+
+    /// Shared `CALIBRATE`/`FIT` tail: stamp a fresh calibration epoch
+    /// (isolating the new calibration's cache namespace — a plan still in
+    /// flight against the old entry publishes under the old epoch and can
+    /// never be served to the recalibrated device), swap the registry
+    /// entry, drop exactly that device's cached plans and auto
+    /// resolutions, and — in the serving binary — retrain the fresh entry
+    /// off the request path (startup's prewarm_all only covered the
+    /// devices of its time; tests and embedders keep training explicit).
+    fn publish_device(&self, key: &str, spec: SocSpec, seed: u64) -> Result<usize> {
         let device = Device { spec, seed, epoch: crate::device::next_calibration_epoch() };
-        let spec_name = self.upsert_device(&key, device)?;
-        // auto-invalidate exactly the recalibrated device: its old plans
-        // and auto resolutions are stale, every other device stays warm
+        let spec_name = self.upsert_device(key, device)?;
         let flushed = self.cache.flush_device(spec_name);
-        // in the serving binary, retrain the fresh entry off the request
-        // path (startup's prewarm_all only covered the devices of its
-        // time); tests and embedders keep training explicit
         if self.prewarm_calibrated.load(std::sync::atomic::Ordering::Relaxed) {
-            if let Some(entry) = self.entry(&key) {
+            if let Some(entry) = self.entry(key) {
                 let (n_train, seed) = (self.n_train, self.seed);
                 std::thread::spawn(move || Self::prewarm_entry(&entry, n_train, seed));
             }
         }
-        Ok(format!("calibrated {key} flushed={flushed}"))
+        Ok(flushed)
     }
 
     /// Swap a registry entry for a freshly built one (planners retrain
@@ -952,14 +1073,22 @@ fn plan_body(plan: &Plan) -> String {
 const ACCEPT_BACKOFF: std::time::Duration = std::time::Duration::from_millis(50);
 
 /// Largest accepted request line in bytes: a client streaming data with
-/// no newline must not grow per-connection buffers without limit.
-const MAX_LINE_BYTES: u64 = 4096;
+/// no newline must not grow per-connection buffers without limit. Sized
+/// for the biggest legitimate line — a `FIT` upload of
+/// [`MAX_FIT_SAMPLES`] samples at ~60 bytes each — with headroom; every
+/// other verb fits in a fraction of this.
+const MAX_LINE_BYTES: u64 = 1 << 16;
 
 /// Most op-specs one `PLAN_BATCH` line may carry. The byte cap alone
-/// would admit ~150 specs — and up to that many cold planning sweeps on
-/// one pool worker — so the batch size is bounded explicitly; larger
-/// graphs split across a few batch lines.
+/// would admit thousands of specs — and up to that many cold planning
+/// sweeps on one pool worker — so the batch size is bounded explicitly;
+/// larger graphs split across a few batch lines.
 pub const MAX_BATCH_OPS: usize = 64;
+
+/// Most profiling samples one `FIT` line may carry (re-exported from
+/// [`crate::calibration`]): the fitting analogue of [`MAX_BATCH_OPS`],
+/// and like it checked before any parsing work.
+pub use crate::calibration::MAX_FIT_SAMPLES;
 
 /// Largest accepted value for any numeric request field: covers the model
 /// zoo (which tops out at VGG16's classifier `cin = 25088`), small enough

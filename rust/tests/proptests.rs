@@ -469,6 +469,138 @@ fn prop_ttl_lru_expiry_never_resurrects_and_counters_conserve() {
     }
 }
 
+/// Property: measurement-driven calibration round-trips. Synthesize a
+/// noisy self-profiling campaign from a *random valid* `SocSpec` (a
+/// built-in phone with every continuously fitted constant perturbed),
+/// fit it against the unperturbed base, and the recovered parameters
+/// must land within tolerance of the truth — with the analytic
+/// predictions plans are built from (per-side latencies and co-exec
+/// totals, across random ops, placements, and mechanisms) within a
+/// bounded error of ground truth. Tolerances carry 3-5x margin over the
+/// worst observed recovery error across seeds; the weakly identified
+/// parameters (cluster bandwidth — few ops are memory-bound) get the
+/// loose bounds, which is exactly why the solver regularizes them
+/// toward the base instead of letting them chase noise.
+#[test]
+fn prop_fit_round_trips_random_specs() {
+    use mobile_coexec::calibration::{fit_spec, SampleSet};
+    use mobile_coexec::device::SocSpec;
+
+    let mut rng = SplitMix64::new(17);
+    for case in 0..4u64 {
+        // random truth, perturbed field by field (eff entries clamped to
+        // stay cumulative-monotone and at most linear)
+        let base = SocSpec::pixel5();
+        let mut truth = base.clone();
+        let scale = |rng: &mut SplitMix64, lo: f64, hi: f64| lo + (hi - lo) * rng.next_f64();
+        for cl in &mut truth.cpu.clusters {
+            cl.gmacs_per_thread *= scale(&mut rng, 0.75, 1.35);
+            cl.mem_bw_gbps *= scale(&mut rng, 0.9, 1.15);
+            cl.launch_us *= scale(&mut rng, 0.75, 1.35);
+            for n in 2..=cl.efficiency.len() {
+                let cand = cl.efficiency[n - 1] * scale(&mut rng, 0.92, 1.05);
+                cl.efficiency[n - 1] = cand.clamp(cl.efficiency[n - 2], n as f64);
+            }
+        }
+        truth.gpu.macs_per_cu_cycle *= scale(&mut rng, 0.75, 1.35);
+        truth.gpu.mem_bw_gbps *= scale(&mut rng, 0.8, 1.25);
+        truth.gpu.dispatch_us *= scale(&mut rng, 0.75, 1.35);
+        truth.sync.polling_linear_us *= scale(&mut rng, 0.7, 1.4);
+        truth.sync.polling_conv_us *= scale(&mut rng, 0.7, 1.4);
+        truth.sync.event_linear_us *= scale(&mut rng, 0.7, 1.4);
+        truth.sync.event_conv_us *= scale(&mut rng, 0.7, 1.4);
+        truth.validate().unwrap_or_else(|e| panic!("case {case}: perturbed truth invalid: {e}"));
+
+        let device = Device { spec: truth.clone(), seed: 1000 + case, epoch: 0 };
+        let samples = SampleSet::synthesize(&device, 12);
+        let report = fit_spec(&base, &samples)
+            .unwrap_or_else(|e| panic!("case {case}: fit failed: {e}"));
+        assert_eq!(
+            report.fitted_groups(),
+            report.groups.len(),
+            "case {case}: every group must fit a full campaign:\n{}",
+            report.render()
+        );
+        let fit = &report.spec;
+
+        // parameter recovery
+        let within = |what: &str, got: f64, want: f64, tol: f64| {
+            assert!(
+                (got / want - 1.0).abs() <= tol,
+                "case {case}: {what} fitted {got:.4} vs truth {want:.4} (tol {tol})"
+            );
+        };
+        for (t, f) in truth.cpu.clusters.iter().zip(&fit.cpu.clusters) {
+            let w = |field: &str| format!("cpu.{}.{field}", t.id.wire());
+            within(&w("gmacs_per_thread"), f.gmacs_per_thread, t.gmacs_per_thread, 0.08);
+            within(&w("mem_bw_gbps"), f.mem_bw_gbps, t.mem_bw_gbps, 0.25);
+            within(&w("launch_us"), f.launch_us, t.launch_us, 0.08);
+            for n in 2..=t.efficiency.len() {
+                within(&w(&format!("eff{n}")), f.efficiency[n - 1], t.efficiency[n - 1], 0.08);
+            }
+        }
+        within("gpu.macs_per_cu_cycle", fit.gpu.macs_per_cu_cycle, truth.gpu.macs_per_cu_cycle, 0.05);
+        within("gpu.mem_bw_gbps", fit.gpu.mem_bw_gbps, truth.gpu.mem_bw_gbps, 0.20);
+        within("gpu.dispatch_us", fit.gpu.dispatch_us, truth.gpu.dispatch_us, 0.05);
+        within("sync.polling_linear_us", fit.sync.polling_linear_us, truth.sync.polling_linear_us, 0.30);
+        within("sync.polling_conv_us", fit.sync.polling_conv_us, truth.sync.polling_conv_us, 0.30);
+        within("sync.event_linear_us", fit.sync.event_linear_us, truth.sync.event_linear_us, 0.30);
+        within("sync.event_conv_us", fit.sync.event_conv_us, truth.sync.event_conv_us, 0.30);
+
+        // prediction transfer: the quantities plans minimize stay within
+        // bounded error of ground truth on random ops and strategies
+        let mut prng = SplitMix64::new(99 + case);
+        for probe in 0..40 {
+            let op = if prng.next_f64() < 0.5 {
+                OpConfig::Linear(LinearConfig::new(
+                    prng.gen_range(1, 512),
+                    prng.gen_range(1, 1024),
+                    prng.gen_range(2, 2048),
+                ))
+            } else {
+                OpConfig::Conv(ConvConfig::new(
+                    prng.gen_range(4, 64),
+                    prng.gen_range(4, 64),
+                    prng.gen_range(1, 256),
+                    prng.gen_range(2, 256),
+                    [1, 3, 5][prng.gen_range(0, 2)],
+                    [1, 2][prng.gen_range(0, 1)],
+                ))
+            };
+            let cid = truth.cpu.clusters[prng.gen_range(0, 2)].id;
+            let t = prng.gen_range(1, truth.cpu.cluster(cid).unwrap().max_threads());
+            let mech =
+                [SyncMechanism::SvmPolling, SyncMechanism::EventWait][prng.gen_range(0, 1)];
+            let cpu_us = |spec: &SocSpec, op: &OpConfig| match op {
+                OpConfig::Linear(c) => spec.cpu.linear_latency_us(c, cid, t),
+                OpConfig::Conv(c) => spec.cpu.conv_latency_us(c, cid, t),
+            };
+            let gpu_us = |spec: &SocSpec, op: &OpConfig| match op {
+                OpConfig::Linear(c) => spec.gpu.linear_latency_us(c).0,
+                OpConfig::Conv(c) => spec.gpu.conv_latency_us(c).0,
+            };
+            let bounded = |what: &str, got: f64, want: f64| {
+                assert!(
+                    (got / want - 1.0).abs() <= 0.10,
+                    "case {case} probe {probe} {op} ({cid}, {t}, {mech:?}): \
+                     {what} {got:.2} vs truth {want:.2}"
+                );
+            };
+            bounded("cpu side", cpu_us(fit, &op), cpu_us(&truth, &op));
+            bounded("gpu side", gpu_us(fit, &op), gpu_us(&truth, &op));
+            let c1 = (op.cout() / 3).max(4);
+            if c1 < op.cout() {
+                let total = |spec: &SocSpec| {
+                    spec.sync.overhead_us(mech, op.kind())
+                        + cpu_us(spec, &op.with_cout(c1))
+                            .max(gpu_us(spec, &op.with_cout(op.cout() - c1)))
+                };
+                bounded("coexec total", total(fit), total(&truth));
+            }
+        }
+    }
+}
+
 /// Property: measurement noise is unbiased (mean factor ~1) and
 /// deterministic per trial key.
 #[test]

@@ -416,9 +416,10 @@ fn invalid_utf8_line_gets_err_reply_and_connection_survives() {
 fn oversized_request_line_is_rejected_and_connection_closed() {
     let (_, addr) = shared();
     let mut c = Client::connect(&addr);
-    // ~10 KB with no newline until the very end: the server must cap the
-    // line instead of buffering it all
-    let reply = c.request(&"PING ".repeat(2000));
+    // ~90 KB with no newline until the very end (the cap is 64 KiB,
+    // sized for full FIT sample batches): the server must cap the line
+    // instead of buffering it all
+    let reply = c.request(&"PING ".repeat(18000));
     assert_eq!(reply, "ERR line too long");
     // a protocol violation closes the connection: next read sees EOF
     let mut rest = String::new();
@@ -674,6 +675,193 @@ fn stale_resolution_cannot_pin_pre_recalibration_strategy() {
     assert_eq!(state.cache.misses(), misses + 1, "post-calibration auto must re-resolve");
 }
 
+// ------------------------------------------------------------------- FIT --
+
+#[test]
+fn fit_err_paths_mutate_nothing() {
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 400, 83));
+    let mut session = state.session();
+    // a baseline plan to prove registry and cache survive every failure
+    let before = state.handle(&mut session, "PLAN linear 50 768 1024 2");
+    assert!(before.starts_with("OK "), "{before}");
+    let cases = [
+        ("FIT", "ERR bad fit (expected"),
+        ("FIT ; cpu linear 8 64 128 prime 1 50.0", "ERR bad fit (expected"),
+        ("FIT 9bad base=pixel5; gpu linear 8 64 128 50.0", "ERR bad device name"),
+        ("FIT all base=pixel5; gpu linear 8 64 128 50.0", "ERR bad device name"),
+        ("FIT newdev; gpu linear 8 64 128 50.0", "ERR unknown device newdev"),
+        ("FIT newdev base=fridge; gpu linear 8 64 128 50.0", "ERR unknown base device fridge"),
+        ("FIT newdev base=pixel5 extra=1; gpu linear 8 64 128 50.0", "ERR bad fit (expected"),
+        ("FIT pixel5", "ERR no samples"),
+        ("FIT pixel5; ;", "ERR no samples"),
+        ("FIT pixel5; tpu linear 8 64 128 50.0", "ERR bad sample"),
+        ("FIT pixel5; cpu linear 8 64 prime 1 50.0", "ERR bad sample"),
+        ("FIT pixel5; cpu linear 8 64 128 mega 1 50.0", "ERR bad sample"),
+        ("FIT pixel5; cpu linear 8 64 128 prime 0 50.0", "ERR bad sample"),
+        ("FIT pixel5; cpu linear 8 64 128 prime 1 -2.0", "ERR bad sample"),
+        ("FIT pixel5; gpu linear 8 64 99999 50.0", "ERR bad sample"),
+        ("FIT pixel5; coexec linear 8 64 128 128 prime 1 svm_polling 50.0", "ERR bad sample"),
+        ("FIT pixel5; coexec linear 8 64 128 32 prime 1 tls 50.0", "ERR bad sample"),
+    ];
+    for (req, want) in cases {
+        let reply = state.handle(&mut session, req);
+        assert!(
+            reply.starts_with(want),
+            "request {req:?}: got {reply:?}, want prefix {want:?}"
+        );
+    }
+    // ill-conditioned garbage parses fine but every group falls back:
+    // the fit is rejected whole instead of publishing the base spec
+    // under a fresh epoch
+    let garbage: Vec<String> = (1..=12)
+        .map(|i| {
+            format!(
+                "cpu linear {i} {} {} prime {} {}",
+                64 * i,
+                128 * i,
+                1 + i % 3,
+                if i % 2 == 0 { "1.0" } else { "1000000.0" }
+            )
+        })
+        .collect();
+    let reply = state.handle(&mut session, &format!("FIT pixel5; {}", garbage.join("; ")));
+    assert!(reply.starts_with("ERR fit rejected"), "{reply}");
+
+    // nothing mutated: the pre-failure plan is still a warm cache hit
+    // under the same epoch, byte-identically
+    let hits = state.cache.hits();
+    assert_eq!(state.handle(&mut session, "PLAN linear 50 768 1024 2"), before);
+    assert_eq!(state.cache.hits(), hits + 1, "failed FITs must not flush or re-register");
+    // telemetry: every failure above was counted against the fit verb
+    let ep = state.metrics.endpoint("fit");
+    assert_eq!(ep.requests.get(), ep.errors.get(), "every FIT above failed");
+    assert!(ep.errors.get() >= 18, "all ERR paths counted: {}", ep.errors.get());
+}
+
+#[test]
+fn fit_sample_batch_is_bounded_before_parsing() {
+    use mobile_coexec::server::MAX_FIT_SAMPLES;
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 400, 89));
+    let mut session = state.session();
+    // an over-cap batch of MALFORMED samples: the cap must fire before
+    // any of them is parsed, so the reply is the count error, not a
+    // parse error
+    let over = vec!["definitely not a sample"; MAX_FIT_SAMPLES + 1].join("; ");
+    let reply = state.handle(&mut session, &format!("FIT pixel5; {over}"));
+    let want = format!("ERR too many samples ({}, max {MAX_FIT_SAMPLES})", MAX_FIT_SAMPLES + 1);
+    assert_eq!(reply, want);
+    // exactly at the cap the batch proceeds to parsing (and the first
+    // malformed sample is rejected)
+    let at = vec!["definitely not a sample"; MAX_FIT_SAMPLES].join("; ");
+    let reply = state.handle(&mut session, &format!("FIT pixel5; {at}"));
+    assert!(reply.starts_with("ERR bad sample"), "{reply}");
+    // blank segments (e.g. a trailing ';') do not count toward the cap
+    let trailing = format!("FIT pixel5; {over};;");
+    assert!(state
+        .handle(&mut session, &trailing)
+        .starts_with(&format!("ERR too many samples ({}", MAX_FIT_SAMPLES + 1)));
+}
+
+#[test]
+fn fit_registers_devices_and_reports_partial_fallback() {
+    use mobile_coexec::calibration::{Placement, SampleSet};
+    let state = Arc::new(ServerState::new_lazy(Device::moto2022(), 400, 97));
+    let mut session = state.session();
+
+    // a GPU-only profiling run via an alias: only the GPU group can fit,
+    // every other group falls back to the base — reported, not fatal
+    let full = SampleSet::synthesize(&Device::moto2022(), 6);
+    let gpu_only: Vec<String> = full
+        .samples()
+        .iter()
+        .filter(|s| s.placement == Placement::Gpu)
+        .map(|s| s.wire())
+        .collect();
+    assert!(gpu_only.len() >= 6, "campaign must cover the GPU group");
+    let reply =
+        state.handle(&mut session, &format!("FIT moto; {}", gpu_only.join("; ")));
+    assert!(reply.starts_with("OK fitted moto2022 groups=1/5 "), "{reply}");
+
+    // a full campaign registers a brand-new device from a base
+    let campaign = SampleSet::synthesize(&Device::moto2022(), 6);
+    let reply = state.handle(
+        &mut session,
+        &format!("FIT labphone base=moto2022; {}", campaign.wire()),
+    );
+    assert!(reply.starts_with("OK fitted labphone groups=5/5 "), "{reply}");
+    assert_eq!(state.handle(&mut session, "DEVICE labphone"), "OK device labphone");
+    // ...and a FIT with no base recalibrates it in place
+    let reply =
+        state.handle(&mut session, &format!("FIT labphone; {}", campaign.wire()));
+    assert!(reply.starts_with("OK fitted labphone groups=5/5 "), "{reply}");
+}
+
+/// The acceptance loop: fitting a built-in phone's spec from its *own*
+/// synthesized measurements — no hand-set `CALIBRATE` key anywhere —
+/// reproduces its `PLAN` replies: same chosen strategy, predicted
+/// latency within tolerance. Recalibrating the device itself keeps its
+/// measurement-noise streams (keyed by device name + seed), so the only
+/// drift is the fit's own parameter error (~1%), well inside the plan
+/// margins.
+#[test]
+fn fit_self_calibration_reproduces_plan_replies() {
+    use mobile_coexec::calibration::SampleSet;
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 800, 7));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    let requests = [
+        "PLAN linear 50 768 3072 auto",
+        "PLAN linear 50 768 3072 2",
+        "PLAN conv 64 64 128 192 3 1 3",
+    ];
+    let before: Vec<String> = requests.iter().map(|r| c.request(r)).collect();
+    for reply in &before {
+        assert!(reply.starts_with("OK "), "{reply}");
+    }
+
+    // profile the phone itself and upload the measurements
+    let campaign = SampleSet::synthesize(&Device::pixel5(), 12);
+    let line = format!("FIT pixel5; {}", campaign.wire());
+    assert!(line.len() < (1 << 16), "a full campaign must fit the line cap");
+    let reply = c.request(&line);
+    assert!(reply.starts_with("OK fitted pixel5 "), "{reply}");
+    assert_eq!(kv(&reply, "groups"), "5/5", "full campaign fits every group: {reply}");
+    let resid: f64 = kv(&reply, "resid").parse().unwrap();
+    assert!(resid < 0.05, "self-fit must be tight: {reply}");
+    let flushed: usize = kv(&reply, "flushed").parse().unwrap();
+    assert!(flushed >= 1, "the device's warm plans must be invalidated: {reply}");
+
+    // the fitted spec replans (fresh epoch, fresh planners) to the same
+    // strategies, with predictions within tolerance of the originals
+    for (req, old) in requests.iter().zip(&before) {
+        let new = c.request(req);
+        assert!(new.starts_with("OK "), "{new}");
+        for field in ["threads", "mech", "cluster"] {
+            assert_eq!(
+                kv(&new, field),
+                kv(old, field),
+                "{req}: fitted spec must choose the same strategy\nold: {old}\nnew: {new}"
+            );
+        }
+        let (old_n, new_n) = (plan_nums(old), plan_nums(&new));
+        let cout = old_n[0] + old_n[1];
+        assert!(
+            (new_n[0] - old_n[0]).abs() <= 0.15 * cout,
+            "{req}: split drifted\nold: {old}\nnew: {new}"
+        );
+        assert!(
+            (new_n[2] / old_n[2] - 1.0).abs() <= 0.10,
+            "{req}: predicted latency outside tolerance\nold: {old}\nnew: {new}"
+        );
+    }
+    // telemetry: FIT is first-class in STATS
+    let stats = c.request("STATS");
+    assert_eq!(kv(&stats, "fit.req"), "1", "{stats}");
+    assert_eq!(kv(&stats, "fit.err"), "0", "{stats}");
+}
+
 // ------------------------------------------------------ format stability --
 
 #[test]
@@ -745,6 +933,7 @@ fn response_formats_are_stable() {
         "run",
         "device",
         "calibrate",
+        "fit",
         "plan_model",
         "flush",
         "stats",
