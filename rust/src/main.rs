@@ -195,6 +195,12 @@ fn main() {
             if ttl_secs == Some(0) {
                 usage("--ttl must be >= 1 second");
             }
+            let max_conns: usize = get("--max-conns")
+                .map(|m| m.parse().unwrap_or_else(|_| usage("--max-conns must be a number")))
+                .unwrap_or(mobile_coexec::server::DEFAULT_MAX_CONNS);
+            if max_conns == 0 {
+                usage("--max-conns must be >= 1");
+            }
             eprintln!("training planners (offline compilation step) ...");
             let mut state =
                 mobile_coexec::server::ServerState::new(device, scale.train_n, 42);
@@ -205,7 +211,9 @@ fn main() {
             }
             let state = std::sync::Arc::new(state);
             let config = mobile_coexec::server::ServerConfig { workers, queue_cap };
-            mobile_coexec::server::serve_with(state, &addr, config).expect("serve");
+            let mut server = mobile_coexec::server::Server::new(state, config);
+            server.max_conns = max_conns;
+            server.serve(&addr).expect("serve");
         }
         "all" => {
             figures::fig2(scale);
@@ -228,7 +236,7 @@ fn main() {
                  repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto] [--cluster prime|gold|silver|auto]\n  \
                  repro fit --samples FILE --device <name>\n  \
                  repro coexec [--c1 N]\n  \
-                 repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N] [--ttl SECS]\n  \
+                 repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N] [--ttl SECS] [--max-conns N]\n  \
                  repro all [--quick]"
             );
         }

@@ -58,7 +58,7 @@
 //! and plain `FLUSH`), while [`PlanCache::flush`] keeps the old global
 //! behavior (`FLUSH all`).
 
-use crate::device::{ClusterId, SyncMechanism};
+use crate::device::{ClusterId, CpuSpec, SyncMechanism};
 use crate::metrics::Counter;
 use crate::ops::OpConfig;
 use crate::partition::{Choice, Plan, PlanRequest, Planner, Strategy};
@@ -518,6 +518,45 @@ impl PlanCache {
             op,
             PlanRequest::fixed(threads, SyncMechanism::SvmPolling),
         )
+    }
+
+    /// Warm-path probe for the evented front-end: a recency-bumping
+    /// lookup that never computes and never counts. `Some(plan)` is
+    /// exactly what [`PlanCache::get_or_plan_request`] would return for
+    /// the same request; the caller credits the hit with
+    /// [`PlanCache::record_probe_hits`] once the *whole* request is known
+    /// to be served warm (a partially warm `PLAN_BATCH` falls back to the
+    /// slow path, which then counts each spec exactly once). `None` —
+    /// cold plan, evicted/expired entry, or unresolved `Auto` axis —
+    /// counts nothing: the slow path's planning records the miss.
+    pub fn probe_request(
+        &self,
+        device: &'static str,
+        epoch: u64,
+        cpu: &CpuSpec,
+        op: &OpConfig,
+        req: PlanRequest,
+    ) -> Option<Plan> {
+        let req = req.normalized(cpu);
+        if let (Choice::Fixed(cluster), Choice::Fixed(threads), Choice::Fixed(mech)) =
+            (req.cluster, req.threads, req.mech)
+        {
+            return self.plans.get(&PlanKey { device, epoch, op: *op, cluster, threads, mech });
+        }
+        let s = self.auto.get(&AutoKey { device, epoch, op: *op, req })?;
+        self.plans.get(&PlanKey {
+            device,
+            epoch,
+            op: *op,
+            cluster: s.cluster,
+            threads: s.threads,
+            mech: s.mech,
+        })
+    }
+
+    /// Credit `n` fast-path probe hits (see [`PlanCache::probe_request`]).
+    pub fn record_probe_hits(&self, n: u64) {
+        self.hits.add(n);
     }
 
     /// Peek a resolved plan without counting, touching recency, or
@@ -1008,6 +1047,37 @@ mod tests {
             req: PlanRequest::cluster_auto(),
         };
         assert_eq!(cache.peek_resolution(&akey), Some(s));
+    }
+
+    #[test]
+    fn probe_serves_warm_entries_without_counting() {
+        let p = planner();
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        let (dev, cpu) = (p.device.name(), &p.device.spec.cpu);
+        let fixed = PlanRequest::fixed(3, SyncMechanism::SvmPolling);
+        assert!(cache.probe_request(dev, 0, cpu, &op, fixed).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (0, 0), "cold probe counts nothing");
+
+        let plan = cache.get_or_plan(&p, &op, 3);
+        assert_eq!(cache.probe_request(dev, 0, cpu, &op, fixed), Some(plan));
+        assert_eq!(cache.hits(), 0, "the probe itself must not count");
+        cache.record_probe_hits(1);
+        assert_eq!(cache.hits(), 1, "the front-end credits served probes");
+
+        // an auto request probes through the resolution index
+        assert!(cache.probe_request(dev, 0, cpu, &op, PlanRequest::auto()).is_none());
+        let auto = cache.get_or_plan_request(&p, &op, PlanRequest::auto());
+        assert_eq!(cache.probe_request(dev, 0, cpu, &op, PlanRequest::auto()), Some(auto));
+
+        // probes normalize like the slow path: oversized threads clamp
+        let max = cpu.max_threads();
+        let clamped = PlanRequest::fixed(99, SyncMechanism::SvmPolling);
+        let at_max = PlanRequest::fixed(max, SyncMechanism::SvmPolling);
+        assert_eq!(
+            cache.probe_request(dev, 0, cpu, &op, clamped),
+            cache.probe_request(dev, 0, cpu, &op, at_max)
+        );
     }
 
     #[test]

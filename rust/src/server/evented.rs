@@ -1,0 +1,1245 @@
+//! Evented protocol front-end: one readiness loop instead of one thread
+//! per connection.
+//!
+//! The old accept loop spawned an OS thread per connection and bounced
+//! *every* request — even a `PING` or a warm cache hit — through a
+//! per-request `mpsc` channel into the worker pool, then wrote the reply
+//! as two syscalls on a socket that never disabled Nagle. For µs-scale
+//! warm replies those fixed costs dominate, exactly the paper's point
+//! about dispatch overhead erasing co-execution wins. This module
+//! replaces that path with a single `poll(2)`-driven loop:
+//!
+//! * **Readiness loop.** Every connection is non-blocking and registered
+//!   with `poll(2)` (raw FFI — the std runtime already links libc, so no
+//!   new dependency). One thread owns all connection state; workers wake
+//!   it through a loopback UDP socket pair when a deferred reply is
+//!   ready.
+//! * **Fast path on the loop.** `PING`, warm `PLAN`, and all-warm
+//!   `PLAN_BATCH` requests are parsed straight from the receive buffer
+//!   (`fastparse` — byte tokenizer, no `String`/`Vec<&str>` per request),
+//!   probed against the plan cache, and answered by appending
+//!   preformatted bytes to the connection's reply buffer. The fast path
+//!   is strictly conservative: anything it cannot serve byte-identically
+//!   to [`super::ServerState::handle`] — cold plans, semantic errors,
+//!   non-canonical spellings — falls back to the pool, whose replies are
+//!   authoritative.
+//! * **Pool for the expensive verbs.** Cold plans, `RUN`, `FIT`,
+//!   `PLAN_MODEL`, `CALIBRATE` etc. still run on the bounded worker
+//!   pool. While a connection has a job in flight it is `busy`: further
+//!   pipelined lines stay buffered (and `POLLIN` is not re-armed once
+//!   the buffer is full), so replies keep request order per connection
+//!   and a slow request applies TCP backpressure instead of growing
+//!   buffers without bound.
+//! * **Pipelining.** A client may write any number of request lines
+//!   before reading; replies come back in order. Per turn each
+//!   connection gets a bounded line budget so one pipelining client
+//!   cannot starve the rest.
+//! * **Bounded connections.** At most `max_conns` concurrent
+//!   connections; one over the bound is answered
+//!   `ERR busy (connection limit)` and hung up without ever being
+//!   registered with the loop.
+//! * **One write per reply, Nagle off.** Replies are coalesced into the
+//!   connection's write buffer (payload + newline in one buffer) and
+//!   `TCP_NODELAY` is set on every accepted socket — without it,
+//!   Nagle + delayed-ACK can add tens of milliseconds to a µs-scale
+//!   reply.
+//!
+//! Load shedding is checked *on the loop*, mirroring
+//! `WorkerPool::try_submit`'s order (shutdown first, then capacity), so
+//! a saturated queue sheds fast-path verbs too — `STATS` accounting via
+//! `record_shed` is identical to the old per-thread path.
+
+#[cfg(unix)]
+mod imp {
+    use crate::partition::{Plan, PlanRequest};
+    use crate::server::pool::{SubmitError, WorkerPool};
+    use crate::server::{verb_key, PlanBody, ServerState, Session, MAX_LINE_BYTES};
+    use std::io::{Read, Write};
+    use std::net::{Shutdown, TcpListener, TcpStream, UdpSocket};
+    use std::os::unix::io::AsRawFd;
+    use std::sync::mpsc::{channel, Receiver, Sender};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    /// Raw `poll(2)` via FFI: the std runtime links libc on every unix
+    /// target, so declaring the one symbol we need avoids a dependency.
+    mod sys {
+        use std::os::raw::c_int;
+        use std::os::unix::io::RawFd;
+
+        #[cfg(any(target_os = "linux", target_os = "android"))]
+        type NfdsT = std::os::raw::c_ulong;
+        #[cfg(not(any(target_os = "linux", target_os = "android")))]
+        type NfdsT = std::os::raw::c_uint;
+
+        pub const POLLIN: i16 = 0x001;
+        pub const POLLOUT: i16 = 0x004;
+        pub const POLLERR: i16 = 0x008;
+        pub const POLLHUP: i16 = 0x010;
+        pub const POLLNVAL: i16 = 0x020;
+
+        /// POSIX `struct pollfd` (identical layout across unixes).
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        pub struct PollFd {
+            pub fd: RawFd,
+            pub events: i16,
+            pub revents: i16,
+        }
+
+        extern "C" {
+            fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+        }
+
+        /// Wait for readiness; `timeout_ms < 0` blocks indefinitely.
+        /// Errors (EINTR included) report as "nothing ready" — the loop
+        /// simply re-polls.
+        pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) {
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+            if n < 0 {
+                for fd in fds.iter_mut() {
+                    fd.revents = 0;
+                }
+            }
+        }
+    }
+
+    /// Read chunk size for non-blocking socket reads.
+    const READ_CHUNK: usize = 4096;
+
+    /// Stop pulling bytes off a connection while this much unprocessed
+    /// request data is buffered (must exceed [`MAX_LINE_BYTES`] so a
+    /// maximum-size line can still arrive); TCP flow control holds the
+    /// rest at the sender.
+    const RBUF_HIGH: usize = (MAX_LINE_BYTES as usize) * 2;
+
+    /// Stop processing further pipelined lines while this many reply
+    /// bytes await a client that is not reading them.
+    const WBUF_HIGH: usize = 1 << 18;
+
+    /// Bytes of late client data drained after a protocol-fatal reply,
+    /// before close — dropping unread received bytes turns `close()`
+    /// into RST on Linux, which can destroy the reply in flight (same
+    /// bound as the old `reply_and_hang_up`).
+    const DRAIN_BUDGET: usize = 1 << 20;
+
+    /// Lines processed per connection per loop turn: enough to amortize
+    /// the turn, small enough that one pipelining client cannot starve
+    /// other connections.
+    const LINES_PER_TURN: usize = 64;
+
+    /// Pause after a failed `accept()` (fd exhaustion and friends): long
+    /// enough not to busy-spin, short enough to recover promptly. The
+    /// loop keeps serving existing connections while accepts are muted.
+    const ACCEPT_BACKOFF: std::time::Duration = std::time::Duration::from_millis(50);
+
+    /// Reply for a connection over the `max_conns` bound.
+    const CONN_LIMIT_REPLY: &[u8] = b"ERR busy (connection limit)\n";
+
+    /// Self-wake channel: a connected loopback UDP pair. Workers send a
+    /// 1-byte datagram after queuing a completion; the loop drains the
+    /// receive side each turn. A datagram can only be dropped when the
+    /// receive buffer is already full — i.e. when another wake is
+    /// pending — and the loop drains the completion queue fully on every
+    /// wake, so a lost datagram never strands a completion.
+    struct WakeRx {
+        rx: UdpSocket,
+    }
+
+    #[derive(Clone)]
+    struct Waker {
+        tx: Arc<UdpSocket>,
+    }
+
+    impl Waker {
+        fn wake(&self) {
+            let _ = self.tx.send(&[1]);
+        }
+    }
+
+    fn wake_pair() -> std::io::Result<(WakeRx, Waker)> {
+        let rx = UdpSocket::bind("127.0.0.1:0")?;
+        let tx = UdpSocket::bind("127.0.0.1:0")?;
+        tx.connect(rx.local_addr()?)?;
+        rx.set_nonblocking(true)?;
+        tx.set_nonblocking(true)?;
+        Ok((WakeRx { rx }, Waker { tx: Arc::new(tx) }))
+    }
+
+    /// A finished pool job's reply, routed back to its connection slot.
+    /// `generation` guards against slot reuse: a completion for a closed
+    /// connection must not leak into whoever owns the slot now.
+    struct Completion {
+        conn: usize,
+        generation: u64,
+        session: Session,
+        reply: String,
+    }
+
+    /// Guarantees a submitted job produces exactly one completion: if the
+    /// job panics inside `handle_timed`, the worker's `catch_unwind`
+    /// drops this guard, which reports `ERR internal error` (and counts
+    /// it) instead of leaving the connection wedged `busy` forever.
+    struct CompletionGuard {
+        state: Arc<ServerState>,
+        verb: &'static str,
+        conn: usize,
+        generation: u64,
+        session: Session,
+        tx: Sender<Completion>,
+        waker: Waker,
+        done: bool,
+    }
+
+    impl CompletionGuard {
+        fn complete(mut self, session: Session, reply: String) {
+            self.done = true;
+            let _ = self.tx.send(Completion {
+                conn: self.conn,
+                generation: self.generation,
+                session,
+                reply,
+            });
+            self.waker.wake();
+        }
+    }
+
+    impl Drop for CompletionGuard {
+        fn drop(&mut self) {
+            if self.done {
+                return;
+            }
+            self.state.record_internal_error(self.verb);
+            let _ = self.tx.send(Completion {
+                conn: self.conn,
+                generation: self.generation,
+                session: self.session,
+                reply: "ERR internal error".to_string(),
+            });
+            self.waker.wake();
+        }
+    }
+
+    /// Teardown state for a connection that got a protocol-fatal reply.
+    enum ConnPhase {
+        /// Serving requests normally.
+        Open,
+        /// Fatal reply queued: flush the write buffer, then half-close
+        /// and start draining.
+        CloseAfterFlush,
+        /// Write side shut; discarding client bytes until EOF or budget
+        /// exhaustion, then close for real.
+        Draining { budget: usize },
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        session: Session,
+        generation: u64,
+        /// Raw inbound bytes; `rstart..` is the unconsumed suffix.
+        rbuf: Vec<u8>,
+        rstart: usize,
+        /// Outbound bytes; `wpos..` not yet accepted by the kernel.
+        wbuf: Vec<u8>,
+        wpos: usize,
+        /// A pool job is in flight: line processing pauses so replies
+        /// keep request order.
+        busy: bool,
+        /// Client half-closed; finish buffered lines, flush, then close.
+        read_eof: bool,
+        phase: ConnPhase,
+    }
+
+    /// One framed request line (or the reason there isn't one yet).
+    enum LineStep {
+        /// No complete line buffered; wait for more bytes.
+        None,
+        /// The next line exceeds [`MAX_LINE_BYTES`]: protocol violation.
+        TooLong,
+        /// Line at `start..end` (newline excluded); consume to `next`.
+        Line { start: usize, end: usize, next: usize },
+    }
+
+    impl Conn {
+        fn next_line(&self) -> LineStep {
+            let pending = &self.rbuf[self.rstart..];
+            match pending.iter().position(|&b| b == b'\n') {
+                // a line *including* its newline may be MAX_LINE_BYTES
+                // long, matching the old `take(MAX).read_until` framing
+                Some(i) if (i as u64) + 1 > MAX_LINE_BYTES => LineStep::TooLong,
+                Some(i) => LineStep::Line {
+                    start: self.rstart,
+                    end: self.rstart + i,
+                    next: self.rstart + i + 1,
+                },
+                None if pending.len() as u64 >= MAX_LINE_BYTES => LineStep::TooLong,
+                // at EOF a final unterminated line is still a request
+                // (the old reader handled it the same way)
+                None if self.read_eof && !pending.is_empty() => LineStep::Line {
+                    start: self.rstart,
+                    end: self.rbuf.len(),
+                    next: self.rbuf.len(),
+                },
+                None => LineStep::None,
+            }
+        }
+
+        fn flushed(&self) -> bool {
+            self.wpos == self.wbuf.len()
+        }
+
+        /// Non-blocking read into `rbuf`; `Err` means the connection died.
+        fn fill(&mut self) -> Result<(), ()> {
+            if self.rstart > 0 {
+                self.rbuf.drain(..self.rstart);
+                self.rstart = 0;
+            }
+            let mut chunk = [0u8; READ_CHUNK];
+            while self.rbuf.len() < RBUF_HIGH {
+                match self.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        self.read_eof = true;
+                        break;
+                    }
+                    Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => return Err(()),
+                }
+            }
+            Ok(())
+        }
+
+        /// Non-blocking write of the buffered replies; `Err` means the
+        /// connection died.
+        fn flush(&mut self) -> Result<(), ()> {
+            while self.wpos < self.wbuf.len() {
+                match self.stream.write(&self.wbuf[self.wpos..]) {
+                    Ok(0) => return Err(()),
+                    Ok(n) => self.wpos += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => return Err(()),
+                }
+            }
+            if self.wpos > 0 && self.wpos == self.wbuf.len() {
+                self.wbuf.clear();
+                self.wpos = 0;
+            }
+            Ok(())
+        }
+
+        /// Discard client bytes in the `Draining` phase; `true` means
+        /// close the connection now.
+        fn drain_read(&mut self) -> bool {
+            let ConnPhase::Draining { budget } = &mut self.phase else {
+                return false;
+            };
+            let mut chunk = [0u8; READ_CHUNK];
+            loop {
+                if *budget == 0 {
+                    return true;
+                }
+                match self.stream.read(&mut chunk) {
+                    Ok(0) => return true,
+                    Ok(n) => *budget = budget.saturating_sub(n),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return false,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => return true,
+                }
+            }
+        }
+    }
+
+    /// Reused per-loop parse buffers: the batch fast path collects specs
+    /// and probed plans here, so steady state allocates nothing.
+    #[derive(Default)]
+    struct Scratch {
+        ops: Vec<(crate::ops::OpConfig, PlanRequest)>,
+        plans: Vec<Plan>,
+    }
+
+    /// The per-turn context handed to line processing (bundled so helper
+    /// signatures stay small and the borrows stay field-disjoint).
+    struct Ctx<'a> {
+        state: &'a Arc<ServerState>,
+        pool: &'a WorkerPool,
+        waker: &'a Waker,
+        done_tx: &'a Sender<Completion>,
+        scratch: &'a mut Scratch,
+    }
+
+    struct EventLoop {
+        listener: TcpListener,
+        state: Arc<ServerState>,
+        pool: Arc<WorkerPool>,
+        max_conns: usize,
+        log_errors: bool,
+        conns: Vec<Option<Conn>>,
+        free: Vec<usize>,
+        live: usize,
+        next_generation: u64,
+        wake: WakeRx,
+        waker: Waker,
+        done_tx: Sender<Completion>,
+        done_rx: Receiver<Completion>,
+        accept_muted_until: Option<Instant>,
+        /// Some connection still has framed lines it could not process
+        /// this turn (line budget): poll with a zero timeout.
+        deferred: bool,
+        pollfds: Vec<sys::PollFd>,
+        /// `pollfds[conn_base + k]` belongs to slot `poll_conns[k]`.
+        poll_conns: Vec<usize>,
+        scratch: Scratch,
+    }
+
+    /// Run the readiness loop forever on `listener`. Only setup errors
+    /// return; once the loop starts it owns the thread.
+    pub(crate) fn run(
+        listener: TcpListener,
+        state: Arc<ServerState>,
+        pool: Arc<WorkerPool>,
+        max_conns: usize,
+        log_errors: bool,
+    ) -> std::io::Result<()> {
+        listener.set_nonblocking(true)?;
+        let (wake, waker) = wake_pair()?;
+        let (done_tx, done_rx) = channel();
+        let mut el = EventLoop {
+            listener,
+            state,
+            pool,
+            max_conns,
+            log_errors,
+            conns: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            next_generation: 0,
+            wake,
+            waker,
+            done_tx,
+            done_rx,
+            accept_muted_until: None,
+            deferred: false,
+            pollfds: Vec::new(),
+            poll_conns: Vec::new(),
+            scratch: Scratch::default(),
+        };
+        loop {
+            el.turn();
+        }
+    }
+
+    impl EventLoop {
+        fn turn(&mut self) {
+            // -- build the readiness set --------------------------------
+            self.pollfds.clear();
+            self.poll_conns.clear();
+            self.pollfds.push(sys::PollFd {
+                fd: self.wake.rx.as_raw_fd(),
+                events: sys::POLLIN,
+                revents: 0,
+            });
+            let now = Instant::now();
+            let muted = self.accept_muted_until.is_some_and(|t| now < t);
+            if !muted {
+                self.accept_muted_until = None;
+                self.pollfds.push(sys::PollFd {
+                    fd: self.listener.as_raw_fd(),
+                    events: sys::POLLIN,
+                    revents: 0,
+                });
+            }
+            let conn_base = self.pollfds.len();
+            for (id, slot) in self.conns.iter().enumerate() {
+                let Some(conn) = slot else { continue };
+                let mut events = 0i16;
+                match conn.phase {
+                    ConnPhase::Open => {
+                        if !conn.busy
+                            && !conn.read_eof
+                            && conn.rbuf.len() - conn.rstart < RBUF_HIGH
+                        {
+                            events |= sys::POLLIN;
+                        }
+                        if !conn.flushed() {
+                            events |= sys::POLLOUT;
+                        }
+                    }
+                    ConnPhase::CloseAfterFlush => events |= sys::POLLOUT,
+                    ConnPhase::Draining { .. } => events |= sys::POLLIN,
+                }
+                // a connection with nothing armed (e.g. busy with a pool
+                // job, reply flushed) is left out entirely: registering
+                // it would make level-triggered POLLHUP spin the loop
+                // until its job completes
+                if events != 0 {
+                    self.pollfds.push(sys::PollFd {
+                        fd: conn.stream.as_raw_fd(),
+                        events,
+                        revents: 0,
+                    });
+                    self.poll_conns.push(id);
+                }
+            }
+
+            // -- wait ---------------------------------------------------
+            let timeout_ms = if self.deferred {
+                0
+            } else if let Some(t) = self.accept_muted_until {
+                t.saturating_duration_since(now).as_millis().clamp(1, 1000) as i32
+            } else {
+                -1
+            };
+            self.deferred = false;
+            sys::poll_fds(&mut self.pollfds, timeout_ms);
+
+            // -- wake, accept, connection I/O ---------------------------
+            if self.pollfds[0].revents != 0 {
+                let mut sink = [0u8; 16];
+                while self.wake.rx.recv(&mut sink).is_ok() {}
+            }
+            if !muted && self.pollfds[1].revents != 0 {
+                self.accept_ready();
+            }
+            for k in 0..self.poll_conns.len() {
+                let id = self.poll_conns[k];
+                let revents = self.pollfds[conn_base + k].revents;
+                if revents == 0 {
+                    continue;
+                }
+                if revents & (sys::POLLERR | sys::POLLNVAL) != 0 {
+                    self.close(id);
+                    continue;
+                }
+                if revents & sys::POLLOUT != 0 {
+                    let alive = match self.conns[id].as_mut() {
+                        Some(conn) => conn.flush().is_ok(),
+                        None => continue,
+                    };
+                    if !alive {
+                        self.close(id);
+                        continue;
+                    }
+                }
+                if revents & (sys::POLLIN | sys::POLLHUP) != 0 {
+                    let close = match self.conns[id].as_mut() {
+                        Some(conn) if matches!(conn.phase, ConnPhase::Draining { .. }) => {
+                            conn.drain_read()
+                        }
+                        Some(conn) if !conn.read_eof => conn.fill().is_err(),
+                        Some(_) => false,
+                        None => continue,
+                    };
+                    if close {
+                        self.close(id);
+                    }
+                }
+            }
+
+            // -- deferred replies from the pool -------------------------
+            while let Ok(done) = self.done_rx.try_recv() {
+                self.apply(done);
+            }
+
+            // -- process buffered request lines -------------------------
+            let mut ctx = Ctx {
+                state: &self.state,
+                pool: &self.pool,
+                waker: &self.waker,
+                done_tx: &self.done_tx,
+                scratch: &mut self.scratch,
+            };
+            let mut deferred = false;
+            for id in 0..self.conns.len() {
+                if let Some(conn) = self.conns[id].as_mut() {
+                    deferred |= process_conn(&mut ctx, conn, id);
+                }
+            }
+            self.deferred = deferred;
+
+            // -- flush replies, finish teardown -------------------------
+            enum Next {
+                Keep,
+                Close,
+                StartDrain,
+            }
+            for id in 0..self.conns.len() {
+                let next = match self.conns[id].as_mut() {
+                    None => continue,
+                    Some(conn) => {
+                        if conn.flush().is_err() {
+                            Next::Close
+                        } else {
+                            match conn.phase {
+                                ConnPhase::CloseAfterFlush if conn.flushed() => Next::StartDrain,
+                                ConnPhase::Open
+                                    if conn.read_eof
+                                        && !conn.busy
+                                        && conn.rstart == conn.rbuf.len()
+                                        && conn.flushed() =>
+                                {
+                                    Next::Close
+                                }
+                                _ => Next::Keep,
+                            }
+                        }
+                    }
+                };
+                match next {
+                    Next::Keep => {}
+                    Next::Close => self.close(id),
+                    Next::StartDrain => {
+                        let conn = self.conns[id].as_mut().expect("slot checked above");
+                        let _ = conn.stream.shutdown(Shutdown::Write);
+                        conn.rbuf.clear();
+                        conn.rstart = 0;
+                        conn.phase = ConnPhase::Draining { budget: DRAIN_BUDGET };
+                    }
+                }
+            }
+        }
+
+        fn accept_ready(&mut self) {
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, _)) => self.admit(stream),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        if self.log_errors {
+                            eprintln!("accept error (backing off): {e}");
+                        }
+                        self.accept_muted_until = Some(Instant::now() + ACCEPT_BACKOFF);
+                        break;
+                    }
+                }
+            }
+        }
+
+        fn admit(&mut self, stream: TcpStream) {
+            // Nagle off before the first reply: a one-line reply must
+            // leave in its own segment, not wait on delayed ACKs.
+            let _ = stream.set_nodelay(true);
+            if self.live >= self.max_conns {
+                // over the bound: terse reply, half-close, drop — the
+                // flood connection never touches loop or pool state
+                let mut stream = stream;
+                let _ = stream.write_all(CONN_LIMIT_REPLY);
+                let _ = stream.shutdown(Shutdown::Write);
+                return;
+            }
+            if stream.set_nonblocking(true).is_err() {
+                return;
+            }
+            let id = match self.free.pop() {
+                Some(id) => id,
+                None => {
+                    self.conns.push(None);
+                    self.conns.len() - 1
+                }
+            };
+            self.next_generation += 1;
+            self.conns[id] = Some(Conn {
+                stream,
+                session: self.state.session(),
+                generation: self.next_generation,
+                rbuf: Vec::new(),
+                rstart: 0,
+                wbuf: Vec::with_capacity(256),
+                wpos: 0,
+                busy: false,
+                read_eof: false,
+                phase: ConnPhase::Open,
+            });
+            self.live += 1;
+        }
+
+        fn close(&mut self, id: usize) {
+            if self.conns[id].take().is_some() {
+                self.free.push(id);
+                self.live -= 1;
+            }
+        }
+
+        fn apply(&mut self, done: Completion) {
+            let conn = match self.conns.get_mut(done.conn) {
+                Some(Some(conn)) => conn,
+                _ => return,
+            };
+            if conn.generation != done.generation || !conn.busy {
+                return; // the connection closed and the slot moved on
+            }
+            conn.busy = false;
+            conn.session = done.session;
+            conn.wbuf.extend_from_slice(done.reply.as_bytes());
+            conn.wbuf.push(b'\n');
+        }
+    }
+
+    /// Drain as many framed lines as this turn's budget allows; returns
+    /// whether processable lines remain (the loop then polls with a zero
+    /// timeout instead of sleeping).
+    fn process_conn(ctx: &mut Ctx<'_>, conn: &mut Conn, id: usize) -> bool {
+        let mut lines = 0usize;
+        while matches!(conn.phase, ConnPhase::Open)
+            && !conn.busy
+            && conn.wbuf.len() - conn.wpos < WBUF_HIGH
+        {
+            if lines == LINES_PER_TURN {
+                return !matches!(conn.next_line(), LineStep::None);
+            }
+            match conn.next_line() {
+                LineStep::None => break,
+                LineStep::TooLong => {
+                    // protocol violation, not a request: reply + hang up
+                    conn.rbuf.clear();
+                    conn.rstart = 0;
+                    conn.wbuf.extend_from_slice(b"ERR line too long\n");
+                    conn.phase = ConnPhase::CloseAfterFlush;
+                    break;
+                }
+                LineStep::Line { start, end, next } => {
+                    let rbuf = std::mem::take(&mut conn.rbuf);
+                    dispatch_line(ctx, conn, id, &rbuf[start..end]);
+                    conn.rbuf = rbuf;
+                    conn.rstart = next;
+                    if conn.rstart == conn.rbuf.len() {
+                        conn.rbuf.clear();
+                        conn.rstart = 0;
+                    }
+                    lines += 1;
+                }
+            }
+        }
+        false
+    }
+
+    /// Handle one raw request line: framing errors inline, shed checks,
+    /// then the zero-alloc fast path, else a pool job carrying the
+    /// enqueue timestamp (so `STATS` latency includes queue wait).
+    fn dispatch_line(ctx: &mut Ctx<'_>, conn: &mut Conn, id: usize, raw: &[u8]) {
+        let Ok(text) = std::str::from_utf8(raw) else {
+            // framing is intact, so the connection continues
+            conn.wbuf.extend_from_slice(b"ERR invalid utf-8\n");
+            return;
+        };
+        let text = text.trim();
+        // shed checks mirror try_submit's order: shutdown, then capacity.
+        // Checking here keeps fast-path verbs honest about overload — a
+        // saturated pool must shed PING exactly like the old front-end.
+        if ctx.pool.is_shutdown() {
+            ctx.state.record_shed(verb_key(text));
+            conn.wbuf.extend_from_slice(b"ERR shutting down\n");
+            conn.phase = ConnPhase::CloseAfterFlush;
+            return;
+        }
+        if ctx.pool.is_saturated() {
+            ctx.state.record_shed(verb_key(text));
+            conn.wbuf.extend_from_slice(b"ERR busy (queue full)\n");
+            return;
+        }
+        if try_fast(ctx.state, ctx.scratch, conn, text.as_bytes()) {
+            return;
+        }
+        // slow path: t0 is the *enqueue* stamp — the request's recorded
+        // latency must include its time in the bounded queue
+        let t0 = Instant::now();
+        let vk = verb_key(text);
+        let owned = text.to_string();
+        let st = ctx.state.clone();
+        let tx = ctx.done_tx.clone();
+        let wk = ctx.waker.clone();
+        let (generation, session) = (conn.generation, conn.session);
+        let submitted = ctx.pool.try_submit(Box::new(move || {
+            let guard = CompletionGuard {
+                state: st,
+                verb: vk,
+                conn: id,
+                generation,
+                session,
+                tx,
+                waker: wk,
+                done: false,
+            };
+            let mut sess = guard.session;
+            let reply = guard.state.handle_timed(&mut sess, &owned, t0);
+            guard.complete(sess, reply);
+        }));
+        match submitted {
+            Ok(()) => conn.busy = true,
+            Err(SubmitError::Busy) => {
+                ctx.state.record_shed(vk);
+                conn.wbuf.extend_from_slice(b"ERR busy (queue full)\n");
+            }
+            Err(SubmitError::Shutdown) => {
+                ctx.state.record_shed(vk);
+                conn.wbuf.extend_from_slice(b"ERR shutting down\n");
+                conn.phase = ConnPhase::CloseAfterFlush;
+            }
+        }
+    }
+
+    /// Serve `PING` / warm `PLAN` / all-warm `PLAN_BATCH` entirely on the
+    /// loop. Returns `true` iff a reply was appended — the reply is then
+    /// byte-identical to what [`ServerState::handle`] would have
+    /// produced, with identical telemetry and cache-counter effects.
+    /// *Any* uncertainty (non-ASCII, non-canonical spelling, semantic
+    /// error, cache miss) returns `false` and defers to the pool.
+    fn try_fast(state: &ServerState, scratch: &mut Scratch, conn: &mut Conn, line: &[u8]) -> bool {
+        if !line.is_ascii() {
+            // slow-path tokenizing is Unicode-aware; ours is not
+            return false;
+        }
+        let t0 = Instant::now();
+        let mut toks = fastparse::tokens(line);
+        let verb = match toks.next() {
+            Some(v) => v,
+            None => return false,
+        };
+        match verb {
+            b"PING" => {
+                if toks.next().is_some() {
+                    return false;
+                }
+                let ep = state.metrics.endpoint("ping");
+                ep.requests.inc();
+                conn.wbuf.extend_from_slice(b"OK pong\n");
+                ep.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+                true
+            }
+            b"PLAN" => {
+                let kind = match toks.next() {
+                    Some(k) => k,
+                    None => return false,
+                };
+                let entry = state.session_entry(&conn.session);
+                let cpu = &entry.device.spec.cpu;
+                let Some((op, req)) = fastparse::op_spec(cpu, kind, &mut toks) else {
+                    return false;
+                };
+                let probe = state.cache.probe_request(
+                    entry.device.name(),
+                    entry.device.epoch,
+                    cpu,
+                    &op,
+                    req,
+                );
+                let Some(plan) = probe else { return false };
+                let ep = state.metrics.endpoint("plan");
+                ep.requests.inc();
+                state.cache.record_probe_hits(1);
+                let _ = writeln!(conn.wbuf, "OK {}", PlanBody(&plan));
+                ep.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+                true
+            }
+            b"PLAN_BATCH" => {
+                let entry = state.session_entry(&conn.session);
+                let cpu = &entry.device.spec.cpu;
+                scratch.ops.clear();
+                for seg in toks.rest().split(|&b| b == b';') {
+                    let mut st = fastparse::tokens(seg);
+                    let Some(kind) = st.next() else { continue };
+                    match fastparse::op_spec(cpu, kind, &mut st) {
+                        Some(parsed) => scratch.ops.push(parsed),
+                        None => return false,
+                    }
+                    if scratch.ops.len() > crate::server::MAX_BATCH_OPS {
+                        return false;
+                    }
+                }
+                if scratch.ops.is_empty() {
+                    return false;
+                }
+                scratch.plans.clear();
+                for (op, req) in &scratch.ops {
+                    let probe = state.cache.probe_request(
+                        entry.device.name(),
+                        entry.device.epoch,
+                        cpu,
+                        op,
+                        *req,
+                    );
+                    match probe {
+                        Some(plan) => scratch.plans.push(plan),
+                        // one cold spec sends the whole batch to the
+                        // pool; nothing was counted yet, so no skew
+                        None => return false,
+                    }
+                }
+                let ep = state.metrics.endpoint("plan_batch");
+                ep.requests.inc();
+                state.cache.record_probe_hits(scratch.plans.len() as u64);
+                let _ = writeln!(conn.wbuf, "OK n={}", scratch.plans.len());
+                for plan in &scratch.plans {
+                    let _ = writeln!(conn.wbuf, "OK {}", PlanBody(plan));
+                }
+                ep.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Zero-allocation parsing of the hot verbs' op-specs, straight from
+    /// the receive buffer. Deliberately *stricter* than the slow parser:
+    /// it accepts only the canonical ASCII grammar (plain decimal
+    /// fields, in-range values, known clusters) and reports anything
+    /// else as "not mine", so the authoritative slow path — and its
+    /// exact error strings — still covers every divergent input.
+    mod fastparse {
+        use crate::device::{ClusterId, CpuSpec, SyncMechanism};
+        use crate::ops::{ConvConfig, LinearConfig, OpConfig};
+        use crate::partition::{Choice, PlanRequest};
+        use crate::server::MAX_FIELD;
+
+        /// Iterator over ASCII-whitespace-separated tokens; [`rest`]
+        /// exposes the unconsumed tail (for `;`-separated batches).
+        ///
+        /// [`rest`]: Tokens::rest
+        pub struct Tokens<'a> {
+            rest: &'a [u8],
+        }
+
+        pub fn tokens(line: &[u8]) -> Tokens<'_> {
+            Tokens { rest: line }
+        }
+
+        impl<'a> Tokens<'a> {
+            pub fn rest(&self) -> &'a [u8] {
+                self.rest
+            }
+        }
+
+        impl<'a> Iterator for Tokens<'a> {
+            type Item = &'a [u8];
+
+            fn next(&mut self) -> Option<&'a [u8]> {
+                let mut i = 0;
+                while i < self.rest.len() && self.rest[i].is_ascii_whitespace() {
+                    i += 1;
+                }
+                if i == self.rest.len() {
+                    self.rest = &[];
+                    return None;
+                }
+                let start = i;
+                while i < self.rest.len() && !self.rest[i].is_ascii_whitespace() {
+                    i += 1;
+                }
+                let tok = &self.rest[start..i];
+                self.rest = &self.rest[i..];
+                Some(tok)
+            }
+        }
+
+        /// Strict decimal numeric field within the protocol bound.
+        fn field(tok: &[u8]) -> Option<usize> {
+            if tok.is_empty() || tok.len() > 6 {
+                return None; // 6 digits cover every value <= MAX_FIELD
+            }
+            let mut v: usize = 0;
+            for &b in tok {
+                if !b.is_ascii_digit() {
+                    return None;
+                }
+                v = v * 10 + (b - b'0') as usize;
+            }
+            (v <= MAX_FIELD).then_some(v)
+        }
+
+        /// A non-zero field (the slow path rejects zero-sized shapes and
+        /// zero threads with dedicated errors — not ours to produce).
+        fn nz(toks: &mut Tokens<'_>) -> Option<usize> {
+            let v = field(toks.next()?)?;
+            (v > 0).then_some(v)
+        }
+
+        fn cluster_id(v: &[u8]) -> Option<ClusterId> {
+            if v.eq_ignore_ascii_case(b"prime") {
+                Some(ClusterId::Prime)
+            } else if v.eq_ignore_ascii_case(b"gold") {
+                Some(ClusterId::Gold)
+            } else if v.eq_ignore_ascii_case(b"silver") {
+                Some(ClusterId::Silver)
+            } else {
+                None
+            }
+        }
+
+        /// Parse one op-spec (everything after the verb): shape fields,
+        /// `<threads|auto>`, optional `cluster=`. Mirrors
+        /// `ServerState::parse_op` + `parse_request` for inputs both
+        /// accept; anything this returns `None` for goes to the pool.
+        pub fn op_spec(
+            cpu: &CpuSpec,
+            kind: &[u8],
+            toks: &mut Tokens<'_>,
+        ) -> Option<(OpConfig, PlanRequest)> {
+            let op = match kind {
+                b"linear" => {
+                    let (l, cin, cout) = (nz(toks)?, nz(toks)?, nz(toks)?);
+                    OpConfig::Linear(LinearConfig::new(l, cin, cout))
+                }
+                b"conv" => {
+                    let (h, w, cin) = (nz(toks)?, nz(toks)?, nz(toks)?);
+                    let (cout, k, s) = (nz(toks)?, nz(toks)?, nz(toks)?);
+                    OpConfig::Conv(ConvConfig::new(h, w, cin, cout, k, s))
+                }
+                _ => return None,
+            };
+            let thr = toks.next()?;
+            let req = if thr.eq_ignore_ascii_case(b"auto") {
+                PlanRequest::auto()
+            } else {
+                PlanRequest::fixed(nz_tok(thr)?, SyncMechanism::SvmPolling)
+            };
+            let cluster = match toks.next() {
+                None => Choice::Fixed(cpu.default_cluster_id()),
+                Some(tok) => {
+                    let v = tok.strip_prefix(b"cluster=")?;
+                    if v.eq_ignore_ascii_case(b"auto") {
+                        Choice::Auto
+                    } else {
+                        let id = cluster_id(v)?;
+                        // a cluster the device lacks is a semantic error
+                        // with its own message: slow path's job
+                        cpu.cluster(id)?;
+                        Choice::Fixed(id)
+                    }
+                }
+            };
+            if toks.next().is_some() {
+                return None; // trailing tokens: slow path decides
+            }
+            Some((op, req.with_cluster(cluster)))
+        }
+
+        fn nz_tok(tok: &[u8]) -> Option<usize> {
+            let v = field(tok)?;
+            (v > 0).then_some(v)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::fastparse;
+        use crate::device::Device;
+        use crate::server::ServerState;
+
+        /// The fast parser must agree with the authoritative slow parser
+        /// on every spec it accepts.
+        #[test]
+        fn fast_op_spec_agrees_with_slow_parser() {
+            let st = ServerState::new_lazy(Device::pixel5(), 700, 3);
+            let session = st.session();
+            let entry = st.session_entry(&session);
+            let cpu = &entry.device.spec.cpu;
+            for spec in [
+                "linear 50 768 3072 3",
+                "linear 50 768 3072 auto",
+                "linear 1 1 1 1",
+                "linear 50 768 3072 999",
+                "conv 7 7 64 128 3 1 4",
+                "conv 7 7 64 128 3 1 auto",
+                "linear 50 768 3072 3 cluster=gold",
+                "linear 50 768 3072 auto cluster=auto",
+                "conv 7 7 64 128 3 1 2 cluster=silver",
+            ] {
+                let parts: Vec<&str> = spec.split_whitespace().collect();
+                let (slow_op, slow_req) = st
+                    .parse_op(&session, &parts)
+                    .unwrap_or_else(|e| panic!("slow parser rejected {spec:?}: {e}"));
+                let mut toks = fastparse::tokens(spec.as_bytes());
+                let kind = toks.next().unwrap();
+                let (fast_op, fast_req) = fastparse::op_spec(cpu, kind, &mut toks)
+                    .unwrap_or_else(|| panic!("fast parser rejected {spec:?}"));
+                assert_eq!(fast_op, slow_op, "{spec}");
+                assert_eq!(fast_req, slow_req, "{spec}");
+            }
+        }
+
+        /// Everything non-canonical must be refused (→ slow path), never
+        /// mis-parsed: the slow path owns all error replies.
+        #[test]
+        fn fast_parser_refuses_non_canonical_specs() {
+            let st = ServerState::new_lazy(Device::pixel5(), 700, 3);
+            let session = st.session();
+            let entry = st.session_entry(&session);
+            let cpu = &entry.device.spec.cpu;
+            for spec in [
+                "linear 0 768 3072 3",        // zero-sized shape
+                "linear 50 768 3072 0",       // zero threads
+                "linear 50 768 3072",         // missing threads
+                "linear 50 768 3072 3 extra", // trailing token
+                "linear 50 768 40000 3",      // field over MAX_FIELD
+                "linear 50 768 3.5 3",        // non-decimal field
+                "linear 50 768 3072 3 cluster=mega", // unknown cluster
+                "linear 50 768 3072 3 gold",  // missing cluster= prefix
+                "matmul 50 768 3072 3",       // unknown op kind
+                "conv 7 7 64 128 3 4",        // conv with too few fields
+            ] {
+                let mut toks = fastparse::tokens(spec.as_bytes());
+                let kind = toks.next().unwrap();
+                assert!(
+                    fastparse::op_spec(cpu, kind, &mut toks).is_none(),
+                    "fast parser must refuse {spec:?}"
+                );
+            }
+        }
+
+        /// `silver` parses but pixel4 (no silver cluster) must refuse it
+        /// so the slow path can produce its "device has no X cluster"
+        /// error.
+        #[test]
+        fn fast_parser_refuses_clusters_the_device_lacks() {
+            let st = ServerState::new_lazy(Device::pixel4(), 700, 3);
+            let session = st.session();
+            let entry = st.session_entry(&session);
+            let cpu = &entry.device.spec.cpu;
+            let spec = "linear 8 8 8 1 cluster=silver";
+            let mut toks = fastparse::tokens(spec.as_bytes());
+            let kind = toks.next().unwrap();
+            if cpu.cluster(crate::device::ClusterId::Silver).is_none() {
+                assert!(fastparse::op_spec(cpu, kind, &mut toks).is_none());
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+pub(crate) use imp::run;
+
+/// Portability fallback for non-unix targets (no `poll(2)`): blocking
+/// accept with a bounded thread-per-connection loop. Keeps the same
+/// observable protocol — connection cap, `TCP_NODELAY`, single-write
+/// replies, queue-honest latency stamps — without the shared readiness
+/// loop or the zero-alloc fast path.
+#[cfg(not(unix))]
+mod imp {
+    use crate::server::pool::{SubmitError, WorkerPool};
+    use crate::server::{verb_key, ServerState, MAX_LINE_BYTES};
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::{Shutdown, TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{mpsc, Arc};
+    use std::time::Instant;
+
+    const ACCEPT_BACKOFF: std::time::Duration = std::time::Duration::from_millis(50);
+    const CONN_LIMIT_REPLY: &[u8] = b"ERR busy (connection limit)\n";
+
+    pub(crate) fn run(
+        listener: TcpListener,
+        state: Arc<ServerState>,
+        pool: Arc<WorkerPool>,
+        max_conns: usize,
+        log_errors: bool,
+    ) -> std::io::Result<()> {
+        let live = Arc::new(AtomicUsize::new(0));
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nodelay(true);
+                    if live.fetch_add(1, Ordering::AcqRel) >= max_conns {
+                        live.fetch_sub(1, Ordering::AcqRel);
+                        let mut stream = stream;
+                        let _ = stream.write_all(CONN_LIMIT_REPLY);
+                        let _ = stream.shutdown(Shutdown::Write);
+                        continue;
+                    }
+                    let (state, pool, live) = (state.clone(), pool.clone(), live.clone());
+                    std::thread::spawn(move || {
+                        let _ = serve_conn(&state, &pool, stream);
+                        live.fetch_sub(1, Ordering::AcqRel);
+                    });
+                }
+                Err(e) => {
+                    if log_errors {
+                        eprintln!("accept error (backing off): {e}");
+                    }
+                    std::thread::sleep(ACCEPT_BACKOFF);
+                }
+            }
+        }
+    }
+
+    fn reply_and_hang_up(
+        stream: &mut TcpStream,
+        reader: &mut BufReader<TcpStream>,
+        reply: &[u8],
+    ) -> std::io::Result<()> {
+        stream.write_all(reply)?;
+        let _ = stream.shutdown(Shutdown::Write);
+        let _ = std::io::copy(&mut reader.take(1 << 20), &mut std::io::sink());
+        Ok(())
+    }
+
+    fn serve_conn(
+        state: &Arc<ServerState>,
+        pool: &Arc<WorkerPool>,
+        stream: TcpStream,
+    ) -> std::io::Result<()> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut stream = stream;
+        let mut session = state.session();
+        let mut buf: Vec<u8> = Vec::new();
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            buf.clear();
+            let n = (&mut reader).take(MAX_LINE_BYTES).read_until(b'\n', &mut buf)?;
+            if n == 0 {
+                return Ok(());
+            }
+            if !buf.ends_with(b"\n") && n as u64 == MAX_LINE_BYTES {
+                return reply_and_hang_up(&mut stream, &mut reader, b"ERR line too long\n");
+            }
+            let req = match std::str::from_utf8(&buf) {
+                Ok(s) => s.trim().to_string(),
+                Err(_) => {
+                    stream.write_all(b"ERR invalid utf-8\n")?;
+                    continue;
+                }
+            };
+            let t0 = Instant::now(); // enqueue stamp: queue wait counts
+            let (tx, rx) = mpsc::channel();
+            let st = state.clone();
+            let mut sess = session;
+            let vk = verb_key(&req);
+            let submitted = pool.try_submit(Box::new(move || {
+                let reply = st.handle_timed(&mut sess, &req, t0);
+                let _ = tx.send((sess, reply));
+            }));
+            let reply = match submitted {
+                Ok(()) => match rx.recv() {
+                    Ok((sess, reply)) => {
+                        session = sess;
+                        reply
+                    }
+                    Err(_) => {
+                        state.record_internal_error(vk);
+                        "ERR internal error".to_string()
+                    }
+                },
+                Err(SubmitError::Busy) => {
+                    state.record_shed(vk);
+                    "ERR busy (queue full)".to_string()
+                }
+                Err(SubmitError::Shutdown) => {
+                    state.record_shed(vk);
+                    return reply_and_hang_up(&mut stream, &mut reader, b"ERR shutting down\n");
+                }
+            };
+            out.clear();
+            out.extend_from_slice(reply.as_bytes());
+            out.push(b'\n');
+            stream.write_all(&out)?;
+        }
+    }
+}
+
+#[cfg(not(unix))]
+pub(crate) use imp::run;
+
+/// Default bound on concurrently served connections (see
+/// [`crate::server::Server::max_conns`]).
+pub const DEFAULT_MAX_CONNS: usize = 1024;

@@ -21,10 +21,34 @@
 //!   calibration-scoped: `FLUSH` drops the session device's plans,
 //!   `FLUSH all` drops everything, and a successful `CALIBRATE`
 //!   auto-flushes exactly the recalibrated device;
-//! * a bounded **[`pool::WorkerPool`]** request executor: each connection
-//!   gets a thin I/O reader thread, but all planning/measuring runs on N
-//!   shared workers behind a bounded queue. When the queue is full the
-//!   server sheds load with `ERR busy` instead of melting down.
+//! * an **evented front-end** (`evented`) + a bounded
+//!   **[`pool::WorkerPool`]** request executor: all connections share one
+//!   `poll(2)`-driven readiness loop — no per-connection threads — which
+//!   answers `PING` and warm `PLAN`/`PLAN_BATCH` cache hits directly
+//!   (zero-allocation parse + cache probe) and runs everything expensive
+//!   (cold plans, `RUN`, `FIT`, `PLAN_MODEL`, ...) on N shared workers
+//!   behind a bounded queue. When the queue is full the server sheds
+//!   load with `ERR busy` instead of melting down.
+//!
+//! # Connection handling
+//!
+//! * **Pipelining.** Clients may write any number of request lines
+//!   before reading; replies always come back in request order on that
+//!   connection. Concurrency comes from many connections, not from
+//!   reordering within one.
+//! * **Bounded connections.** At most [`Server::max_conns`] connections
+//!   are served concurrently (default [`DEFAULT_MAX_CONNS`]); a
+//!   connection past the bound gets a single
+//!   `ERR busy (connection limit)` line and is hung up.
+//! * **`TCP_NODELAY`.** Set on every accepted socket (and by the
+//!   [`request`] helper): replies are µs-scale single segments, and
+//!   Nagle + delayed-ACK would add tens of milliseconds to each. Each
+//!   reply is coalesced into one `write`.
+//! * **Framing limits.** A request line may be at most [`MAX_LINE_BYTES`]
+//!   bytes including its newline (violations get `ERR line too long` and
+//!   a hang-up); a line that is not valid UTF-8 gets `ERR invalid utf-8`
+//!   and the connection continues — mid-pipeline, both behave the same
+//!   as they do alone.
 //!
 //! # Protocol grammar
 //!
@@ -205,10 +229,13 @@
 //! hits, so `entries` counts *distinct* planned shapes, not layers.)
 
 pub mod cache;
+mod evented;
 pub mod pool;
 
+pub use self::evented::DEFAULT_MAX_CONNS;
+
 use self::cache::PlanCache;
-use self::pool::{SubmitError, WorkerPool};
+use self::pool::WorkerPool;
 use crate::calibration::{fit_spec, SampleSet};
 use crate::device::{
     intern_device_name, validate_device_name, ClusterId, Device, Processor, SocSpec,
@@ -222,7 +249,7 @@ use crate::scheduler::{pool_gpu_us, strategy_distribution, ModelScheduler};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock, RwLock, RwLockReadGuard};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock, RwLockReadGuard};
 use std::time::{Duration, Instant};
 
 /// The paper's four evaluation devices: single source of truth for
@@ -587,7 +614,16 @@ impl ServerState {
     /// `ERR ...` — multi-line only for `PLAN_BATCH`, whose header frames
     /// the per-op lines), recording per-verb telemetry.
     pub fn handle(&self, session: &mut Session, line: &str) -> String {
-        let t0 = Instant::now();
+        self.handle_timed(session, line, Instant::now())
+    }
+
+    /// [`ServerState::handle`] with an explicit start-of-request stamp.
+    /// The serving front-end passes the *enqueue* time, so the latency
+    /// `STATS` reports includes the request's wait in the bounded pool
+    /// queue — measuring from inside the handler would under-report
+    /// exactly when the server is loaded. (Requests shed with `ERR busy`
+    /// never reach this and stay excluded from latency, as before.)
+    pub fn handle_timed(&self, session: &mut Session, line: &str, t0: Instant) -> String {
         let ep = self.metrics.endpoint(verb_key(line));
         ep.requests.inc();
         let reply = match self.handle_inner(session, line) {
@@ -1055,29 +1091,37 @@ impl ServerState {
 
 /// The `PLAN` reply body for a resolved plan: split, predicted total, and
 /// the chosen strategy (`cluster=` appended last so pre-cluster clients
-/// keep their field positions).
-fn plan_body(plan: &Plan) -> String {
-    format!(
-        "{} {} {:.1} threads={} mech={} cluster={}",
-        plan.split.c_cpu,
-        plan.split.c_gpu,
-        plan.t_total_us,
-        plan.threads,
-        mech_wire(plan.mech),
-        plan.cluster.wire()
-    )
+/// keep their field positions). One `Display` impl serves both the slow
+/// path (via [`plan_body`]) and the evented fast path, which formats
+/// straight into a connection's reply buffer — the two can't drift.
+struct PlanBody<'a>(&'a Plan);
+
+impl std::fmt::Display for PlanBody<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let plan = self.0;
+        write!(
+            f,
+            "{} {} {:.1} threads={} mech={} cluster={}",
+            plan.split.c_cpu,
+            plan.split.c_gpu,
+            plan.t_total_us,
+            plan.threads,
+            mech_wire(plan.mech),
+            plan.cluster.wire()
+        )
+    }
 }
 
-/// Pause after a failed `accept()` (fd exhaustion and friends): long
-/// enough not to busy-spin, short enough to recover promptly.
-const ACCEPT_BACKOFF: std::time::Duration = std::time::Duration::from_millis(50);
+fn plan_body(plan: &Plan) -> String {
+    PlanBody(plan).to_string()
+}
 
-/// Largest accepted request line in bytes: a client streaming data with
-/// no newline must not grow per-connection buffers without limit. Sized
-/// for the biggest legitimate line — a `FIT` upload of
-/// [`MAX_FIT_SAMPLES`] samples at ~60 bytes each — with headroom; every
-/// other verb fits in a fraction of this.
-const MAX_LINE_BYTES: u64 = 1 << 16;
+/// Largest accepted request line in bytes (newline included): a client
+/// streaming data with no newline must not grow per-connection buffers
+/// without limit. Sized for the biggest legitimate line — a `FIT` upload
+/// of [`MAX_FIT_SAMPLES`] samples at ~60 bytes each — with headroom;
+/// every other verb fits in a fraction of this.
+pub const MAX_LINE_BYTES: u64 = 1 << 16;
 
 /// Most op-specs one `PLAN_BATCH` line may carry. The byte cap alone
 /// would admit thousands of specs — and up to that many cold planning
@@ -1194,6 +1238,11 @@ fn sweep_interval(ttl: Duration) -> Duration {
 pub struct Server {
     pub state: Arc<ServerState>,
     pub pool: Arc<WorkerPool>,
+    /// Most concurrently served connections (default
+    /// [`DEFAULT_MAX_CONNS`]); one past the bound is answered
+    /// `ERR busy (connection limit)` and hung up. Set before calling
+    /// [`Server::serve`] / [`Server::spawn_ephemeral`].
+    pub max_conns: usize,
     /// Present iff the cache has a TTL; dropped (stopped + joined) with
     /// the server.
     sweeper: Option<CacheSweeper>,
@@ -1208,6 +1257,7 @@ impl Server {
         Self {
             state,
             pool: Arc::new(WorkerPool::new(config.workers, config.queue_cap)),
+            max_conns: DEFAULT_MAX_CONNS,
             sweeper,
         }
     }
@@ -1230,7 +1280,7 @@ impl Server {
             self.state.default_device,
             self.pool.worker_count()
         );
-        accept_loop(listener, self.state.clone(), self.pool.clone(), true);
+        evented::run(listener, self.state.clone(), self.pool.clone(), self.max_conns, true)?;
         Ok(())
     }
 
@@ -1239,7 +1289,10 @@ impl Server {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let (state, pool) = (self.state.clone(), self.pool.clone());
-        std::thread::spawn(move || accept_loop(listener, state, pool, false));
+        let max_conns = self.max_conns;
+        std::thread::spawn(move || {
+            let _ = evented::run(listener, state, pool, max_conns, false);
+        });
         Ok(addr)
     }
 }
@@ -1260,129 +1313,17 @@ pub fn spawn_ephemeral(state: Arc<ServerState>) -> Result<std::net::SocketAddr> 
     Server::new(state, ServerConfig::default()).spawn_ephemeral()
 }
 
-/// The shared accept loop: one thin reader thread per connection, all
-/// compute on the worker pool. Transient accept() errors (e.g. EMFILE
-/// under a burst) must neither take the server down nor busy-spin, so
-/// they back off; `serve` logs them, `spawn_ephemeral` (tests/examples,
-/// which also skip pre-warming to control their own training) stays
-/// quiet.
-fn accept_loop(
-    listener: TcpListener,
-    state: Arc<ServerState>,
-    pool: Arc<WorkerPool>,
-    log_errors: bool,
-) {
-    for stream in listener.incoming() {
-        match stream {
-            Ok(stream) => {
-                let (state, pool) = (state.clone(), pool.clone());
-                std::thread::spawn(move || {
-                    let _ = handle_conn(state, pool, stream);
-                });
-            }
-            Err(e) => {
-                if log_errors {
-                    eprintln!("accept error (backing off): {e}");
-                }
-                std::thread::sleep(ACCEPT_BACKOFF);
-            }
-        }
-    }
-}
-
-/// Reply, then close without a TCP RST: half-close our write side so the
-/// reply's delivery doesn't race the close, and drain (bounded) whatever
-/// the client already sent — on Linux, dropping a socket with unread
-/// received bytes turns close() into RST, which can destroy the reply in
-/// flight.
-fn reply_and_hang_up(
-    stream: &mut TcpStream,
-    reader: &mut BufReader<TcpStream>,
-    reply: &[u8],
-) -> Result<()> {
-    stream.write_all(reply)?;
-    let _ = stream.shutdown(std::net::Shutdown::Write);
-    let _ = std::io::copy(&mut reader.take(1 << 20), &mut std::io::sink());
-    Ok(())
-}
-
-/// Per-connection I/O loop: a thin reader thread that forwards each line
-/// to the worker pool and relays the reply. Requests on one connection are
-/// processed in order; concurrency comes from many connections sharing the
-/// pool. A full queue is answered with `ERR busy` immediately — the reader
-/// never blocks on pool capacity.
-fn handle_conn(
-    state: Arc<ServerState>,
-    pool: Arc<WorkerPool>,
-    stream: TcpStream,
-) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    let mut session = state.session();
-    let mut buf: Vec<u8> = Vec::new();
-    loop {
-        buf.clear();
-        // bytes, not read_line: invalid UTF-8 must get an ERR reply, not a
-        // dropped connection. The length cap's Take resets each iteration.
-        let n = (&mut reader).take(MAX_LINE_BYTES).read_until(b'\n', &mut buf)?;
-        if n == 0 {
-            return Ok(()); // client closed
-        }
-        if !buf.ends_with(b"\n") && n as u64 == MAX_LINE_BYTES {
-            // protocol violation, not a request: reply and hang up
-            return reply_and_hang_up(&mut stream, &mut reader, b"ERR line too long\n");
-        }
-        let req = match std::str::from_utf8(&buf) {
-            Ok(s) => s.trim().to_string(),
-            Err(_) => {
-                // line framing is intact, so the connection can continue
-                stream.write_all(b"ERR invalid utf-8\n")?;
-                continue;
-            }
-        };
-        let (tx, rx) = mpsc::channel();
-        let st = state.clone();
-        let mut sess = session;
-        // telemetry key outlives the request line, which moves into the job
-        let vk = verb_key(&req);
-        let submitted = pool.try_submit(Box::new(move || {
-            let reply = st.handle(&mut sess, &req);
-            let _ = tx.send((sess, reply));
-        }));
-        let reply = match submitted {
-            // a worker that panicked mid-job drops the sender; the client
-            // still gets a reply line rather than a dead connection
-            Ok(()) => match rx.recv() {
-                Ok((sess, reply)) => {
-                    session = sess; // DEVICE switches persist across the connection
-                    reply
-                }
-                Err(_) => {
-                    state.record_internal_error(vk);
-                    "ERR internal error".to_string()
-                }
-            },
-            Err(SubmitError::Busy) => {
-                state.record_shed(vk);
-                "ERR busy (queue full)".to_string()
-            }
-            Err(SubmitError::Shutdown) => {
-                // terminal, not transient: tell the client and hang up
-                state.record_shed(vk);
-                return reply_and_hang_up(&mut stream, &mut reader, b"ERR shutting down\n");
-            }
-        };
-        stream.write_all(reply.as_bytes())?;
-        stream.write_all(b"\n")?;
-    }
-}
-
 /// Tiny one-shot client helper for examples/tests (single-line replies;
 /// batch clients read the `PLAN_BATCH` header's `n=` further lines).
+/// `TCP_NODELAY` + a single coalesced write: the request must leave in
+/// one segment immediately, not wait on Nagle/delayed-ACK.
 pub fn request(addr: &std::net::SocketAddr, line: &str) -> Result<String> {
     let mut stream = TcpStream::connect(addr)?;
-    stream.write_all(line.as_bytes())?;
-    stream.write_all(b"\n")?;
+    stream.set_nodelay(true)?;
+    let mut buf = Vec::with_capacity(line.len() + 1);
+    buf.extend_from_slice(line.as_bytes());
+    buf.push(b'\n');
+    stream.write_all(&buf)?;
     let mut reader = BufReader::new(stream);
     let mut reply = String::new();
     reader.read_line(&mut reply)?;

@@ -13,11 +13,13 @@
 //! lets workers finish queued jobs, then joins them.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-/// A unit of work. Jobs carry their own reply channel when the caller
-/// needs the result (see `server::handle_conn`).
+/// A unit of work. Jobs carry their own completion channel when the
+/// caller needs the result (the evented front-end routes replies back to
+/// the readiness loop this way).
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Why a submission was rejected.
@@ -52,6 +54,12 @@ struct Shared {
     /// Signalled when a job is popped (blocking submitters wait).
     not_full: Condvar,
     cap: usize,
+    /// Mirror of `queue.jobs.len()`, maintained under the queue lock but
+    /// readable without it — the evented front-end polls this on every
+    /// fast-path request and must not contend with workers for the mutex.
+    len: AtomicUsize,
+    /// Mirror of `queue.shutdown`, same rationale as `len`.
+    shutdown: AtomicBool,
 }
 
 /// Fixed-size worker pool over a bounded job queue.
@@ -71,6 +79,8 @@ impl WorkerPool {
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             cap: queue_cap,
+            len: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
         });
         let workers = (0..workers)
             .map(|i| {
@@ -95,6 +105,7 @@ impl WorkerPool {
             return Err(SubmitError::Busy);
         }
         q.jobs.push_back(job);
+        self.shared.len.store(q.jobs.len(), Ordering::Release);
         drop(q);
         self.shared.not_empty.notify_one();
         Ok(())
@@ -110,6 +121,7 @@ impl WorkerPool {
             return Err(SubmitError::Shutdown);
         }
         q.jobs.push_back(job);
+        self.shared.len.store(q.jobs.len(), Ordering::Release);
         drop(q);
         self.shared.not_empty.notify_one();
         Ok(())
@@ -118,6 +130,20 @@ impl WorkerPool {
     /// Jobs waiting in the queue (not counting ones being executed).
     pub fn queued(&self) -> usize {
         self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Lock-free view of whether [`WorkerPool::try_submit`] would shed with
+    /// [`SubmitError::Busy`] right now. Racy by design: the answer can be
+    /// stale by the time the caller acts on it, exactly like the answer
+    /// `try_submit` itself gives a moment later.
+    pub fn is_saturated(&self) -> bool {
+        self.shared.len.load(Ordering::Acquire) >= self.shared.cap
+    }
+
+    /// Lock-free view of whether the pool has begun shutting down (every
+    /// submission would return [`SubmitError::Shutdown`]).
+    pub fn is_shutdown(&self) -> bool {
+        self.shared.shutdown.load(Ordering::Acquire)
     }
 
     pub fn worker_count(&self) -> usize {
@@ -129,6 +155,7 @@ impl WorkerPool {
     pub fn shutdown(&self) {
         let mut q = self.shared.queue.lock().unwrap();
         q.shutdown = true;
+        self.shared.shutdown.store(true, Ordering::Release);
         drop(q);
         self.shared.not_empty.notify_all();
         self.shared.not_full.notify_all();
@@ -150,6 +177,7 @@ fn worker_loop(shared: &Shared) {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if let Some(job) = q.jobs.pop_front() {
+                    shared.len.store(q.jobs.len(), Ordering::Release);
                     break job;
                 }
                 if q.shutdown {
@@ -206,6 +234,24 @@ mod tests {
         // deterministic: worker busy + queue full => Busy
         assert_eq!(pool.try_submit(Box::new(|| {})).unwrap_err(), SubmitError::Busy);
         assert_eq!(pool.queued(), 1);
+        release_tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn is_saturated_tracks_queue_occupancy() {
+        let pool = WorkerPool::new(1, 1);
+        assert!(!pool.is_saturated());
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        pool.try_submit(Box::new(move || {
+            started_tx.send(()).unwrap();
+            release_rx.recv().unwrap();
+        }))
+        .unwrap();
+        started_rx.recv().unwrap(); // worker busy, queue empty
+        assert!(!pool.is_saturated());
+        pool.try_submit(Box::new(|| {})).unwrap(); // queue now full
+        assert!(pool.is_saturated());
         release_tx.send(()).unwrap();
     }
 

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Collect `BENCH ...` lines into a consolidated per-PR trajectory JSON.
+
+The benchutil-based benches (plain `main()`s under rust/benches/) print one
+line per measurement in one of two shapes:
+
+    BENCH <name> iters=<n> mean_us=<x> p50_us=<x> p95_us=<x>
+    BENCH <name> <metric>=<value>
+
+This script folds every such line from a bench transcript into a single
+`{"benches": {name: {metric: value}}}` document, so each PR can commit a
+reviewable `BENCH_<n>.json` snapshot and CI can upload a fresh one per run
+(see BENCH.md). Anything that is not a BENCH line is ignored, so piping a
+whole `cargo bench` transcript through is fine.
+
+Usage:
+    collect_bench.py [input|-] [output] [--note TEXT]
+
+Defaults: stdin -> BENCH_6.json. The issue number is parsed from the
+output filename (BENCH_<n>.json) when it matches. `--note` records a free
+-form provenance string in the document.
+"""
+
+import json
+import re
+import sys
+
+TOKEN = re.compile(r"^([A-Za-z0-9_./-]+)=(-?[0-9.]+(?:[eE][-+]?[0-9]+)?)$")
+OUT_ISSUE = re.compile(r"BENCH_(\d+)\.json$")
+
+
+def collect(lines):
+    benches = {}
+    for line in lines:
+        parts = line.split()
+        if len(parts) < 3 or parts[0] != "BENCH":
+            continue
+        stats = benches.setdefault(parts[1], {})
+        for tok in parts[2:]:
+            m = TOKEN.match(tok)
+            if m:
+                stats[m.group(1)] = float(m.group(2))
+    return benches
+
+
+def main(argv):
+    note = None
+    if "--note" in argv:
+        i = argv.index("--note")
+        if i + 1 >= len(argv):
+            sys.exit("--note needs a value")
+        note = argv[i + 1]
+        del argv[i : i + 2]
+    src = argv[1] if len(argv) > 1 else "-"
+    dst = argv[2] if len(argv) > 2 else "BENCH_6.json"
+
+    if src == "-":
+        lines = sys.stdin.read().splitlines()
+    else:
+        with open(src) as f:
+            lines = f.read().splitlines()
+
+    benches = collect(lines)
+    if not benches:
+        sys.exit(f"no BENCH lines found in {src!r}")
+
+    doc = {"benches": benches}
+    m = OUT_ISSUE.search(dst)
+    if m:
+        doc["issue"] = int(m.group(1))
+    if note:
+        doc["note"] = note
+
+    with open(dst, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {dst}: {len(benches)} benches")
+
+
+if __name__ == "__main__":
+    main(sys.argv)
