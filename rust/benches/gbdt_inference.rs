@@ -2,7 +2,7 @@
 //! partition-plan costs. The paper plans one op in 3-4 ms; our budget in
 //! DESIGN.md §Perf is <10 µs per prediction and <5 ms per plan.
 
-use mobile_coexec::benchutil::bench;
+use mobile_coexec::benchutil::{bench, report_scalar};
 use mobile_coexec::dataset;
 use mobile_coexec::device::Device;
 use mobile_coexec::gbdt::{Gbdt, GbdtParams};
@@ -25,12 +25,32 @@ fn main() {
         std::hint::black_box(Gbdt::fit(&rows, &ys, &params));
     });
 
-    // single prediction
+    // single prediction (delegates to the packed SoA walker)
     let model = Gbdt::fit(&rows, &ys, &params);
     let x = &rows[17];
-    bench("gbdt_predict_single", 1000, 200_000, || {
+    let packed = bench("gbdt_predict_single", 1000, 200_000, || {
         std::hint::black_box(model.predict(x));
     });
+
+    // the pre-packing reference: recursion-free walk over the Vec<Node>
+    // enum trees (48-byte nodes, one discriminant match per split)
+    let unpacked = bench("gbdt_predict_single_unpacked", 1000, 200_000, || {
+        std::hint::black_box(model.predict_unpacked(x));
+    });
+    report_scalar("gbdt_packed", "single_speedup_vs_unpacked", unpacked.mean_us / packed.mean_us);
+
+    // candidate-matrix batch: flat row-major matrix, tree-major walk —
+    // the access pattern the planner's batched sweep issues
+    let n_rows = 256usize;
+    let flat: Vec<f64> = rows.iter().take(n_rows).flatten().copied().collect();
+    let mut out = Vec::new();
+    let batch = bench("gbdt_predict_batch_256rows", 5, 500, || {
+        model.predict_batch_into(&flat, n_rows, &mut out);
+        std::hint::black_box(out.last().copied());
+    });
+    let per_row_us = batch.mean_us / n_rows as f64;
+    report_scalar("gbdt_packed", "batch_per_row_us", per_row_us);
+    report_scalar("gbdt_packed", "batch_per_row_speedup_vs_single", packed.mean_us / per_row_us);
 
     // end-to-end plan (the paper's "3-4 ms" step)
     let planner = Planner::train_for_kind(&device, "linear", 3000, 42);

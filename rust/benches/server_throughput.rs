@@ -174,4 +174,32 @@ fn main() {
         "acceptance: coalesced NODELAY warm hits must measurably beat the two-write \
          Nagle path (old {baseline_mean_us:.1}us vs new {warm_mean_us:.1}us)"
     );
+
+    // cold PLAN_MODEL: serial vs fanned out across the worker pool. The
+    // same state object serves both passes — before `Server::new` no pool
+    // is attached, so planning runs inline layer-after-layer; after, the
+    // cold distinct shapes fan out and merge through the cache. Replies
+    // are byte-identical (pinned by tests/packed_planning.rs); only the
+    // wall-clock moves. Flushing between iterations keeps every pass cold.
+    let pm_state = Arc::new(ServerState::new(Device::pixel5(), 1500, 42));
+    let mut pm_session = pm_state.session();
+    let serial = bench("plan_model_cold_serial", 1, 8, || {
+        pm_state.cache.flush();
+        std::hint::black_box(pm_state.handle(&mut pm_session, "PLAN_MODEL resnet18 2"));
+    });
+    // attaching the server arms the planning pool for direct handles too
+    let _server = Server::new(pm_state.clone(), ServerConfig::default());
+    let parallel = bench("plan_model_cold_parallel", 1, 8, || {
+        pm_state.cache.flush();
+        std::hint::black_box(pm_state.handle(&mut pm_session, "PLAN_MODEL resnet18 2"));
+    });
+    let fan_speedup = serial.mean_us / parallel.mean_us;
+    report_scalar("plan_model_cold", "parallel_speedup", fan_speedup);
+    assert!(
+        fan_speedup >= 1.5,
+        "acceptance: fanned-out cold PLAN_MODEL must beat the serial pass \
+         (serial {:.0}us vs parallel {:.0}us, {fan_speedup:.2}x)",
+        serial.mean_us,
+        parallel.mean_us
+    );
 }

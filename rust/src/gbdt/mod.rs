@@ -7,9 +7,11 @@
 //! a random-search tuner over the same ranges the paper lists.
 
 pub mod binning;
+pub mod packed;
 pub mod tree;
 pub mod tuner;
 
+pub use packed::PackedForest;
 pub use tuner::{tune, TuneRange};
 
 use crate::device::noise::SplitMix64;
@@ -55,12 +57,18 @@ impl Default for GbdtParams {
 }
 
 /// A fitted GBDT regressor.
+///
+/// The `Node`-enum `trees` are the training-side representation (and the
+/// reference path for equivalence tests); every prediction entry point
+/// runs on the cache-packed [`PackedForest`] built once at the end of
+/// [`Gbdt::fit`], so no caller keeps the slow enum walk by accident.
 #[derive(Debug, Clone)]
 pub struct Gbdt {
     pub base: f64,
     pub learning_rate: f64,
     pub trees: Vec<Tree>,
     pub n_features: usize,
+    packed: PackedForest,
 }
 
 impl Gbdt {
@@ -122,11 +130,25 @@ impl Gbdt {
             }
             trees.push(t);
         }
-        Gbdt { base, learning_rate: params.learning_rate, trees, n_features }
+        let packed = PackedForest::pack(base, params.learning_rate, &trees, n_features);
+        Gbdt { base, learning_rate: params.learning_rate, trees, n_features, packed }
     }
 
-    /// Predict a single row of raw features.
+    /// The flattened SoA forest every prediction path runs on.
+    pub fn packed(&self) -> &PackedForest {
+        &self.packed
+    }
+
+    /// Predict a single row of raw features (packed iterative walk).
     pub fn predict(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.n_features);
+        self.packed.predict(x)
+    }
+
+    /// Reference prediction over the `Node`-enum trees (iterative, but
+    /// per-tree enum matching and full-precision f64 thresholds). Kept for
+    /// packed-vs-enum equivalence tests; serving paths use [`Gbdt::predict`].
+    pub fn predict_unpacked(&self, x: &[f64]) -> f64 {
         debug_assert_eq!(x.len(), self.n_features);
         let mut y = self.base;
         for t in &self.trees {
@@ -135,9 +157,16 @@ impl Gbdt {
         y
     }
 
-    /// Predict many rows.
+    /// Predict many rows (delegates to the packed tree-major batch walk).
     pub fn predict_batch(&self, rows: &[Vec<f64>]) -> Vec<f64> {
-        rows.iter().map(|r| self.predict(r)).collect()
+        let flat: Vec<f64> = rows.iter().flat_map(|r| r.iter().copied()).collect();
+        self.packed.predict_batch(&flat, rows.len())
+    }
+
+    /// Batched prediction over a flat row-major matrix into a reusable
+    /// buffer — the planner's no-allocation hot path.
+    pub fn predict_batch_into(&self, flat: &[f64], n_rows: usize, out: &mut Vec<f64>) {
+        self.packed.predict_batch_into(flat, n_rows, out);
     }
 
     /// Gain importance per feature (paper Fig. 7: "total loss improvement

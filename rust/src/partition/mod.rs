@@ -40,6 +40,26 @@
 //!   GPU evaluation per candidate split serves every placement and both
 //!   mechanisms.
 //!
+//! ## Batched candidate-matrix evaluation
+//!
+//! Since PR 7 the search is *batched*: instead of one GBDT walk per
+//! `(candidate, placement)` pair, each sweep assembles one flat row-major
+//! feature matrix for the shared GPU side (all candidates, grouped by
+//! kernel impl) and one CPU matrix per surviving placement, then runs the
+//! packed forest's tree-major batch walk ([`crate::gbdt::PackedForest`])
+//! over each matrix. The dominated-placement and mechanism prunes are
+//! applied as masks **before** matrix assembly, against the incumbents as
+//! of sweep entry. That mask is a superset of the serial evolving prune
+//! (a candidate the serial scan would have pruned mid-sweep may still get
+//! a row) — but every extra row is provably dominated
+//! (`t_total >= t_gpu + overhead > incumbent >= final best`), updates use
+//! strict `<` in the same ascending candidate order, and batch
+//! predictions are bit-identical to serial ones, so the chosen plan — and
+//! with it auto-vs-fixed optimality and resolved-strategy replay
+//! exactness — is unchanged. Feature rows are written into reusable
+//! buffers ([`SweepScratch`] internally); the sweep allocates nothing per
+//! candidate.
+//!
 //! [`grid_search`] is the paper's measured oracle baseline (§5.3): try every
 //! split with step 8, **measure** each, keep the best. It is not deployable
 //! (minutes of profiling per op) but bounds the achievable speedup.
@@ -47,7 +67,7 @@
 use crate::device::{ClusterId, Device, Processor, SyncMechanism};
 use crate::gbdt::GbdtParams;
 use crate::ops::{ChannelSplit, OpConfig};
-use crate::predictor::{FeatureMode, PredictorSet};
+use crate::predictor::{cpu_features_into, FeatureMode, GpuBatchScratch, PredictorSet};
 
 /// Planner search granularity in channels (vec4 slices).
 pub const PLAN_STEP: usize = 4;
@@ -354,59 +374,28 @@ impl Planner {
             })
             .collect();
 
-        // One co-executed candidate: a single shared GPU prediction, CPU
-        // predictions only for placements the candidate could still win
-        // for, per-mechanism totals derived from the same base.
-        let consider = |c1: usize, best: &mut Vec<Vec<Plan>>| {
-            if c1 == 0 || c1 >= cout {
-                return;
-            }
-            let split = ChannelSplit::new(c1, cout - c1);
-            let t_gpu = self.predictors.predict_us(
-                &self.device,
-                &op.with_cout(split.c_gpu),
-                Processor::Gpu,
-            );
-            for (pi, &(c, t)) in placements.iter().enumerate() {
-                // dominated-placement prune: t_total >= t_gpu + overhead
-                // for any CPU prediction, so skip the CPU evaluation when
-                // this candidate provably cannot beat placement (c, t)'s
-                // incumbents under any mechanism.
-                if (0..mechs.len()).all(|mi| t_gpu + overheads[mi] > best[pi][mi].t_total_us) {
-                    continue;
-                }
-                let t_cpu = self.predictors.predict_cpu_us(
-                    &self.device,
-                    &op.with_cout(split.c_cpu),
-                    c,
-                    t,
-                );
-                let base = t_cpu.max(t_gpu);
-                for (mi, &m) in mechs.iter().enumerate() {
-                    let total = base + overheads[mi];
-                    if total < best[pi][mi].t_total_us {
-                        best[pi][mi] = Plan {
-                            split,
-                            cluster: c,
-                            threads: t,
-                            mech: m,
-                            t_cpu_us: t_cpu,
-                            t_gpu_us: t_gpu,
-                            t_total_us: total,
-                        };
-                    }
-                }
-            }
-        };
+        // Batched coarse sweep: every (placement, mech) strategy point
+        // participates; candidate order and strict-`<` updates reproduce
+        // the serial scan's first-minimizer tie-breaking exactly (module
+        // docs, "Batched candidate-matrix evaluation").
+        let mut scratch = SweepScratch::default();
 
         const COARSE: usize = 32;
         let coarse = cout > 4 * COARSE;
         let step = if coarse { COARSE } else { PLAN_STEP };
+        scratch.cands.clear();
         let mut c = PLAN_STEP;
         while c < cout {
-            consider(c, &mut best);
+            scratch.cands.push(c);
             c += step;
         }
+        scratch.members.clear();
+        for pi in 0..placements.len() {
+            for mi in 0..mechs.len() {
+                scratch.members.push((pi, mi));
+            }
+        }
+        self.batched_sweep(op, &placements, &mechs, &overheads, &mut best, &mut scratch);
 
         // Refinement is per strategy point: each (placement, mech) point
         // refines around — and is only updated from — its own coarse
@@ -415,8 +404,8 @@ impl Planner {
         // `Auto` result diverge from the fixed plan at its resolved
         // strategy; reproducibility is worth more than that sliver.)
         // Points whose coarse winner is exclusive skip refinement, as in
-        // the fixed search; points sharing a center share one sweep, with
-        // the GPU prediction and per-placement CPU predictions shared.
+        // the fixed search; points sharing a center share one sweep — one
+        // shared GPU matrix, one CPU matrix per member placement.
         if coarse {
             let mut windows: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
             for (pi, row) in best.iter().enumerate() {
@@ -433,49 +422,15 @@ impl Planner {
             for (center, members) in windows {
                 let lo = center.saturating_sub(COARSE).max(PLAN_STEP);
                 let hi = (center + COARSE).min(cout - 1);
+                scratch.cands.clear();
                 let mut c1 = lo / PLAN_STEP * PLAN_STEP;
                 while c1 <= hi {
-                    let split = ChannelSplit::new(c1, cout - c1);
-                    let t_gpu = self.predictors.predict_us(
-                        &self.device,
-                        &op.with_cout(split.c_gpu),
-                        Processor::Gpu,
-                    );
-                    let mut cpu_memo: Vec<(usize, f64)> = Vec::new();
-                    for &(pi, mi) in &members {
-                        if t_gpu + overheads[mi] > best[pi][mi].t_total_us {
-                            continue; // provably cannot beat this incumbent
-                        }
-                        let t_cpu = match cpu_memo.iter().position(|&(i, _)| i == pi) {
-                            Some(hit) => cpu_memo[hit].1,
-                            None => {
-                                let (c, t) = placements[pi];
-                                let v = self.predictors.predict_cpu_us(
-                                    &self.device,
-                                    &op.with_cout(split.c_cpu),
-                                    c,
-                                    t,
-                                );
-                                cpu_memo.push((pi, v));
-                                v
-                            }
-                        };
-                        let total = t_cpu.max(t_gpu) + overheads[mi];
-                        if total < best[pi][mi].t_total_us {
-                            let (c, t) = placements[pi];
-                            best[pi][mi] = Plan {
-                                split,
-                                cluster: c,
-                                threads: t,
-                                mech: mechs[mi],
-                                t_cpu_us: t_cpu,
-                                t_gpu_us: t_gpu,
-                                t_total_us: total,
-                            };
-                        }
-                    }
+                    scratch.cands.push(c1);
                     c1 += PLAN_STEP;
                 }
+                scratch.members.clear();
+                scratch.members.extend_from_slice(&members);
+                self.batched_sweep(op, &placements, &mechs, &overheads, &mut best, &mut scratch);
             }
         }
 
@@ -488,6 +443,110 @@ impl Planner {
             }
         }
         winner
+    }
+
+    /// One batched candidate sweep (coarse pass or one refinement
+    /// window): evaluate `scratch.cands` against the `scratch.members`
+    /// strategy points and fold improvements into `best`.
+    ///
+    /// One grouped GPU batch serves every placement and both mechanisms;
+    /// each member placement gets a prune mask over the candidates, one
+    /// flat CPU feature matrix for the survivors, and one packed batch
+    /// walk. Updates scan survivors in ascending candidate order with
+    /// strict `<`, so results match the serial per-candidate scan
+    /// bit-for-bit (module docs).
+    fn batched_sweep(
+        &self,
+        op: &OpConfig,
+        placements: &[(ClusterId, usize)],
+        mechs: &[SyncMechanism],
+        overheads: &[f64],
+        best: &mut [Vec<Plan>],
+        s: &mut SweepScratch,
+    ) {
+        let cout = op.cout();
+        if s.cands.is_empty() || s.members.is_empty() {
+            return;
+        }
+        // the shared GPU sweep: one feature matrix for all candidates
+        s.gpu_ops.clear();
+        for &c1 in &s.cands {
+            s.gpu_ops.push(op.with_cout(cout - c1));
+        }
+        self.predictors.gpu.predict_batch_us_into(
+            &self.device,
+            &s.gpu_ops,
+            &mut s.gpu,
+            &mut s.t_gpu,
+        );
+
+        // distinct member placements, preserving member order
+        s.pis.clear();
+        for k in 0..s.members.len() {
+            let pi = s.members[k].0;
+            if !s.pis.contains(&pi) {
+                s.pis.push(pi);
+            }
+        }
+
+        for pii in 0..s.pis.len() {
+            let pi = s.pis[pii];
+            let (cl, th) = placements[pi];
+            // dominated-placement prune as a mask *before* matrix
+            // assembly: t_total >= t_gpu + overhead for any CPU
+            // prediction, so a candidate earns a CPU feature row only if
+            // some member point of this placement could still be improved
+            // by it. Masking against the incumbents as of sweep entry
+            // evaluates a superset of the serial evolving prune; the
+            // extras provably cannot win, so `best` ends up identical.
+            s.kept.clear();
+            s.cpu_feats.clear();
+            for ci in 0..s.cands.len() {
+                let live = s.members.iter().any(|&(p, mi)| {
+                    p == pi && s.t_gpu[ci] + overheads[mi] <= best[pi][mi].t_total_us
+                });
+                if !live {
+                    continue;
+                }
+                s.kept.push(ci as u32);
+                cpu_features_into(&op.with_cout(s.cands[ci]), &mut s.cpu_feats);
+            }
+            if s.kept.is_empty() {
+                continue;
+            }
+            self.predictors.predict_cpu_batch_us_into(
+                &self.device,
+                &s.cpu_feats,
+                s.kept.len(),
+                cl,
+                th,
+                &mut s.t_cpu,
+            );
+            for k in 0..s.kept.len() {
+                let ci = s.kept[k] as usize;
+                let c1 = s.cands[ci];
+                let (t_gpu, t_cpu) = (s.t_gpu[ci], s.t_cpu[k]);
+                let split = ChannelSplit::new(c1, cout - c1);
+                let base = t_cpu.max(t_gpu);
+                for &(p, mi) in s.members.iter() {
+                    if p != pi {
+                        continue;
+                    }
+                    let total = base + overheads[mi];
+                    if total < best[pi][mi].t_total_us {
+                        best[pi][mi] = Plan {
+                            split,
+                            cluster: cl,
+                            threads: th,
+                            mech: mechs[mi],
+                            t_cpu_us: t_cpu,
+                            t_gpu_us: t_gpu,
+                            t_total_us: total,
+                        };
+                    }
+                }
+            }
+        }
     }
 
     /// Measured latency of executing a plan on the device (the evaluation
@@ -503,6 +562,32 @@ impl Planner {
             trials,
         )
     }
+}
+
+/// Reusable buffers for one [`Planner::plan_request`] call's batched
+/// sweeps: candidate lists, the shared GPU sweep, and per-placement CPU
+/// candidate matrices. Nothing in a sweep allocates per candidate.
+#[derive(Default)]
+struct SweepScratch {
+    /// Candidate CPU-channel counts for the current sweep, ascending.
+    cands: Vec<usize>,
+    /// `(placement index, mechanism index)` strategy points the sweep may
+    /// update (all of them for the coarse pass, a window's members during
+    /// refinement).
+    members: Vec<(usize, usize)>,
+    /// Distinct member placements, in member order.
+    pis: Vec<usize>,
+    /// GPU-side ops of the shared sweep (`cout - c1` channels each).
+    gpu_ops: Vec<OpConfig>,
+    gpu: GpuBatchScratch,
+    /// Shared GPU predictions, one per candidate.
+    t_gpu: Vec<f64>,
+    /// Indices into `cands` that survived the pre-assembly prune mask.
+    kept: Vec<u32>,
+    /// Flat row-major CPU feature matrix for the surviving candidates.
+    cpu_feats: Vec<f64>,
+    /// CPU predictions, one per surviving candidate.
+    t_cpu: Vec<f64>,
 }
 
 /// The paper's measured grid-search oracle: step-8 sweep, every candidate

@@ -56,17 +56,21 @@ pub fn feature_names(kind: &str, mode: FeatureMode) -> Vec<&'static str> {
     names
 }
 
-/// Basic (shape-only) features of an op.
-pub fn basic_features(op: &OpConfig) -> Vec<f64> {
+/// Basic (shape-only) features of an op, appended to `out`.
+///
+/// All `*_into` variants in this module *append* (they never clear), so
+/// the planner's batched search can assemble a flat row-major candidate
+/// matrix in one reusable buffer with zero per-candidate allocation.
+pub fn basic_features_into(op: &OpConfig, out: &mut Vec<f64>) {
     match op {
-        OpConfig::Linear(c) => vec![
+        OpConfig::Linear(c) => out.extend_from_slice(&[
             c.l as f64,
             c.cin as f64,
             c.cout as f64,
             c.flops(),
             c.bytes(),
-        ],
-        OpConfig::Conv(c) => vec![
+        ]),
+        OpConfig::Conv(c) => out.extend_from_slice(&[
             c.h as f64,
             c.w as f64,
             c.cin as f64,
@@ -76,13 +80,20 @@ pub fn basic_features(op: &OpConfig) -> Vec<f64> {
             c.out_positions() as f64,
             c.flops(),
             c.bytes(),
-        ],
+        ]),
     }
 }
 
-/// Dispatch feature block from a delegate decision.
-pub fn dispatch_features(d: &GpuDispatch) -> Vec<f64> {
-    vec![
+/// Basic (shape-only) features of an op.
+pub fn basic_features(op: &OpConfig) -> Vec<f64> {
+    let mut f = Vec::new();
+    basic_features_into(op, &mut f);
+    f
+}
+
+/// Dispatch feature block from a delegate decision, appended to `out`.
+pub fn dispatch_features_into(d: &GpuDispatch, out: &mut Vec<f64>) {
+    out.extend_from_slice(&[
         d.kernel.id() as f64,
         d.wg_x as f64,
         d.wg_y as f64,
@@ -92,30 +103,50 @@ pub fn dispatch_features(d: &GpuDispatch) -> Vec<f64> {
         d.out_slices as f64,
         d.row_tiles as f64,
         d.waste,
-    ]
+    ]);
+}
+
+/// Dispatch feature block from a delegate decision.
+pub fn dispatch_features(d: &GpuDispatch) -> Vec<f64> {
+    let mut f = Vec::new();
+    dispatch_features_into(d, &mut f);
+    f
+}
+
+/// GPU-predictor features for an op on a device, appended to `out`.
+pub fn gpu_features_into(device: &Device, op: &OpConfig, mode: FeatureMode, out: &mut Vec<f64>) {
+    basic_features_into(op, out);
+    if mode == FeatureMode::Augmented {
+        dispatch_features_into(&device.gpu_dispatch(op), out);
+    }
 }
 
 /// GPU-predictor features for an op on a device.
 pub fn gpu_features(device: &Device, op: &OpConfig, mode: FeatureMode) -> Vec<f64> {
-    let mut f = basic_features(op);
-    if mode == FeatureMode::Augmented {
-        f.extend(dispatch_features(&device.gpu_dispatch(op)));
-    }
+    let mut f = Vec::new();
+    gpu_features_into(device, op, mode, &mut f);
     f
 }
 
-/// CPU-predictor features (shape features + XNNPACK tile-grid terms; the
-/// CPU side has no dispatch heuristics, so there is no augmented variant —
-/// matching the paper, whose augmentation concerns GPU kernels only).
-pub fn cpu_features(op: &OpConfig) -> Vec<f64> {
+/// CPU-predictor features appended to `out` (shape features + XNNPACK
+/// tile-grid terms; the CPU side has no dispatch heuristics, so there is
+/// no augmented variant — matching the paper, whose augmentation concerns
+/// GPU kernels only).
+pub fn cpu_features_into(op: &OpConfig, out: &mut Vec<f64>) {
     use crate::device::cpu::{MR, NR};
-    let mut f = basic_features(op);
+    basic_features_into(op, out);
     let (m, n) = match op {
         OpConfig::Linear(c) => (c.l, c.cout),
         OpConfig::Conv(c) => (c.out_positions(), c.cout),
     };
-    f.push(m.div_ceil(MR) as f64);
-    f.push(n.div_ceil(NR) as f64);
+    out.push(m.div_ceil(MR) as f64);
+    out.push(n.div_ceil(NR) as f64);
+}
+
+/// CPU-predictor features.
+pub fn cpu_features(op: &OpConfig) -> Vec<f64> {
+    let mut f = Vec::new();
+    cpu_features_into(op, &mut f);
     f
 }
 

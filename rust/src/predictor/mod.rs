@@ -18,7 +18,9 @@
 
 pub mod features;
 
-pub use features::{cpu_features, feature_names, gpu_features, FeatureMode};
+pub use features::{
+    cpu_features, cpu_features_into, feature_names, gpu_features, gpu_features_into, FeatureMode,
+};
 
 use crate::device::{ClusterId, Device, Processor};
 use crate::gbdt::{Gbdt, GbdtParams};
@@ -85,17 +87,74 @@ impl GpuPredictor {
 
     /// Predicted GPU latency (µs).
     pub fn predict_us(&self, device: &Device, op: &OpConfig) -> f64 {
+        let model = self.model_for(device, op);
+        model.predict(&gpu_features(device, op, self.mode)).exp()
+    }
+
+    /// The per-kernel-impl model serving `op` (any model as fallback for
+    /// an impl unseen at training time).
+    fn model_for(&self, device: &Device, op: &OpConfig) -> &Gbdt {
         let key = match self.mode {
             FeatureMode::Basic => 0,
             FeatureMode::Augmented => device.gpu_dispatch(op).kernel.id(),
         };
-        let model = self
-            .models
+        self.model_by_key(key)
+    }
+
+    fn model_by_key(&self, key: usize) -> &Gbdt {
+        self.models
             .get(&key)
             // an unseen kernel impl at plan time: fall back to any model
             .or_else(|| self.models.values().next())
-            .expect("predictor has at least one model");
-        model.predict(&gpu_features(device, op, self.mode)).exp()
+            .expect("predictor has at least one model")
+    }
+
+    /// Batched GPU predictions for a sweep of same-kind ops, one entry per
+    /// op in input order.
+    ///
+    /// Rows are grouped by kernel impl (each impl owns its own model in
+    /// Augmented mode, and neighbouring couts can hop between impls), and
+    /// each group runs one tree-major [`crate::gbdt::PackedForest`] batch
+    /// walk over a flat feature matrix assembled in `scratch` — so a
+    /// planner sweep pays zero per-candidate allocation and the result is
+    /// bit-identical to calling [`GpuPredictor::predict_us`] per op.
+    pub fn predict_batch_us_into(
+        &self,
+        device: &Device,
+        ops: &[OpConfig],
+        scratch: &mut GpuBatchScratch,
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        out.resize(ops.len(), 0.0);
+        scratch.keyed.clear();
+        for (i, op) in ops.iter().enumerate() {
+            let key = match self.mode {
+                FeatureMode::Basic => 0,
+                FeatureMode::Augmented => device.gpu_dispatch(op).kernel.id(),
+            };
+            scratch.keyed.push((key, i as u32));
+        }
+        // contiguous per-impl groups; (key, index) pairs are unique so the
+        // unstable sort is deterministic
+        scratch.keyed.sort_unstable();
+        let mut g = 0;
+        while g < scratch.keyed.len() {
+            let key = scratch.keyed[g].0;
+            let mut h = g;
+            scratch.feats.clear();
+            while h < scratch.keyed.len() && scratch.keyed[h].0 == key {
+                let op = &ops[scratch.keyed[h].1 as usize];
+                gpu_features_into(device, op, self.mode, &mut scratch.feats);
+                h += 1;
+            }
+            let model = self.model_by_key(key);
+            model.predict_batch_into(&scratch.feats, h - g, &mut scratch.preds);
+            for (k, &p) in (g..h).zip(scratch.preds.iter()) {
+                out[scratch.keyed[k].1 as usize] = p.exp();
+            }
+            g = h;
+        }
     }
 
     /// MAPE on held-out ops.
@@ -132,6 +191,20 @@ impl GpuPredictor {
     }
 }
 
+/// Reusable buffers for [`GpuPredictor::predict_batch_us_into`]: the
+/// per-impl row grouping, one group's flat feature matrix, and one
+/// group's raw predictions. Create once per planner sweep, reuse across
+/// every batch.
+#[derive(Default)]
+pub struct GpuBatchScratch {
+    /// (kernel-impl key, input row index), sorted to form groups.
+    keyed: Vec<(usize, u32)>,
+    /// One group's flat row-major feature matrix.
+    feats: Vec<f64>,
+    /// One group's log-space predictions.
+    preds: Vec<f64>,
+}
+
 /// GBDT latency predictor for the CPU at a fixed `(cluster, threads)`
 /// placement.
 pub struct CpuPredictor {
@@ -164,6 +237,16 @@ impl CpuPredictor {
 
     pub fn predict_us(&self, op: &OpConfig) -> f64 {
         self.model.predict(&cpu_features(op)).exp()
+    }
+
+    /// Batched predictions (µs) over a pre-assembled flat row-major
+    /// [`cpu_features`] matrix — one packed tree-major walk for the whole
+    /// candidate sweep, bit-identical to per-op [`CpuPredictor::predict_us`].
+    pub fn predict_batch_us_into(&self, flat: &[f64], n_rows: usize, out: &mut Vec<f64>) {
+        self.model.predict_batch_into(flat, n_rows, out);
+        for y in out.iter_mut() {
+            *y = y.exp();
+        }
     }
 
     pub fn evaluate(&self, device: &Device, ops: &[OpConfig]) -> f64 {
@@ -336,6 +419,31 @@ impl PredictorSet {
         self.placement(&cell, device, (cluster, threads)).predict_us(op)
     }
 
+    /// Batched CPU predictions at a placement over a pre-assembled flat
+    /// row-major [`cpu_features`] matrix, training that placement's model
+    /// on first use (same lazy single-flight semantics as
+    /// [`PredictorSet::predict_cpu_us`]).
+    pub fn predict_cpu_batch_us_into(
+        &self,
+        device: &Device,
+        flat: &[f64],
+        n_rows: usize,
+        cluster: ClusterId,
+        threads: usize,
+        out: &mut Vec<f64>,
+    ) {
+        let cell = self.placement_cell((cluster, threads));
+        self.placement(&cell, device, (cluster, threads))
+            .predict_batch_us_into(flat, n_rows, out);
+    }
+
+    /// Train one placement's model now if it is missing (idempotent;
+    /// concurrent callers for the same placement block on one training).
+    pub fn train_placement(&self, device: &Device, key: (ClusterId, usize)) {
+        let cell = self.placement_cell(key);
+        self.placement(&cell, device, key);
+    }
+
     /// Train every placement of every cluster the device exposes that has
     /// no model yet. The serving layer calls this from its background
     /// pre-warm so a cold cluster-`Auto` request never pays GBDT training
@@ -343,10 +451,25 @@ impl PredictorSet {
     pub fn prewarm_placements(&self, device: &Device) {
         for cl in &device.spec.cpu.clusters {
             for t in 1..=cl.max_threads() {
-                let cell = self.placement_cell((cl.id, t));
-                self.placement(&cell, device, (cl.id, t));
+                self.train_placement(device, (cl.id, t));
             }
         }
+    }
+
+    /// Placements of the device's clusters that have no trained model yet
+    /// — the work list the serving layer fans out across its worker pool
+    /// the first time a cluster-`Auto` request arrives before the
+    /// background pre-warm has finished.
+    pub fn untrained_placements(&self, device: &Device) -> Vec<(ClusterId, usize)> {
+        let map = self.cpu.read().unwrap_or_else(|p| p.into_inner());
+        device
+            .spec
+            .cpu
+            .clusters
+            .iter()
+            .flat_map(|cl| (1..=cl.max_threads()).map(move |t| (cl.id, t)))
+            .filter(|key| map.get(key).map_or(true, |c| c.get().is_none()))
+            .collect()
     }
 
     /// Placements with a trained model right now (telemetry/tests).
@@ -455,6 +578,47 @@ mod tests {
             "dispatch features carry no gain ({:.3})",
             dispatch / total
         );
+    }
+
+    #[test]
+    fn batched_predictions_match_serial_exactly() {
+        let device = Device::pixel5();
+        let (train, _) = dataset::training_split("linear", 900, 13);
+        let set = PredictorSet::train(&device, &train, FeatureMode::Augmented, &quick_params());
+        let sweep: Vec<OpConfig> = (1..40)
+            .map(|i| OpConfig::Linear(LinearConfig::new(50, 768, i * 77)))
+            .collect();
+        // GPU: grouped-by-impl batch == per-op serial, in input order
+        let mut scratch = GpuBatchScratch::default();
+        let mut out = Vec::new();
+        set.gpu.predict_batch_us_into(&device, &sweep, &mut scratch, &mut out);
+        for (op, &b) in sweep.iter().zip(&out) {
+            assert_eq!(b, set.gpu.predict_us(&device, op));
+        }
+        // CPU: flat-matrix batch == per-op serial
+        let mut flat = Vec::new();
+        for op in &sweep {
+            features::cpu_features_into(op, &mut flat);
+        }
+        let mut cpu_out = Vec::new();
+        set.predict_cpu_batch_us_into(&device, &flat, sweep.len(), ClusterId::Prime, 2, &mut cpu_out);
+        for (op, &b) in sweep.iter().zip(&cpu_out) {
+            assert_eq!(b, set.predict_cpu_us(&device, op, ClusterId::Prime, 2));
+        }
+    }
+
+    #[test]
+    fn untrained_placements_lists_cold_keys_only() {
+        let device = Device::pixel5();
+        let (train, _) = dataset::training_split("linear", 700, 14);
+        let set = PredictorSet::train(&device, &train, FeatureMode::Augmented, &quick_params());
+        let cold = set.untrained_placements(&device);
+        // eager training covered the prime budget; everything else is cold
+        assert!(!cold.is_empty());
+        assert!(cold.iter().all(|&(c, _)| c != ClusterId::Prime));
+        let key = cold[0];
+        set.train_placement(&device, key);
+        assert!(!set.untrained_placements(&device).contains(&key));
     }
 
     #[test]

@@ -415,13 +415,19 @@ impl PlanCache {
     /// Cached plan for a fully resolved `key`, or `compute` it under the
     /// shard lock and remember it.
     pub fn get_or_insert_with<F: FnOnce() -> Plan>(&self, key: PlanKey, compute: F) -> Plan {
+        self.get_or_insert_traced(key, compute).0
+    }
+
+    /// [`PlanCache::get_or_insert_with`] that also reports whether the
+    /// plan was served from cache.
+    fn get_or_insert_traced<F: FnOnce() -> Plan>(&self, key: PlanKey, compute: F) -> (Plan, bool) {
         let (plan, hit) = self.plans.get_or_insert_with(key, compute);
         if hit {
             self.hits.inc();
         } else {
             self.misses.inc();
         }
-        plan
+        (plan, hit)
     }
 
     /// The serving-layer entry point: plan `op` through `planner` for an
@@ -434,15 +440,51 @@ impl PlanCache {
         op: &OpConfig,
         req: PlanRequest,
     ) -> Plan {
+        self.get_or_plan_request_traced(planner, op, req).0
+    }
+
+    /// [`PlanCache::get_or_plan_request`] that also reports whether the
+    /// request was served warm (`true`) or paid a planner run (`false`) —
+    /// the serving layer splits its `plan.hit` / `plan.miss` latency
+    /// percentiles on this flag. The flag mirrors the hit/miss counters
+    /// exactly: a warm `Auto` resolution whose plan was evicted re-plans
+    /// and reports a miss.
+    pub fn get_or_plan_request_traced(
+        &self,
+        planner: &Planner,
+        op: &OpConfig,
+        req: PlanRequest,
+    ) -> (Plan, bool) {
+        self.get_or_plan_request_precomputed(planner, op, req, None)
+    }
+
+    /// [`PlanCache::get_or_plan_request_traced`] with an optional plan
+    /// precomputed for exactly this `(op, req)`: the parallel
+    /// `PLAN_MODEL`/`PLAN_BATCH` paths raw-plan their cold shapes across
+    /// the worker pool first, then merge here — so hit/miss accounting,
+    /// single flight, and auto resolution behave exactly as in the serial
+    /// path (a warm entry discards the precomputed plan; racing
+    /// duplicates still produce one miss then hits). Sound because
+    /// planning is deterministic: `pre` must equal what
+    /// `planner.plan_request(op, req)` returns, and the planner
+    /// reproduces an `Auto` plan exactly when re-run at its resolved
+    /// strategy.
+    pub fn get_or_plan_request_precomputed(
+        &self,
+        planner: &Planner,
+        op: &OpConfig,
+        req: PlanRequest,
+        pre: Option<Plan>,
+    ) -> (Plan, bool) {
         let device = planner.device.name();
         let epoch = planner.device.epoch;
         let req = req.normalized(&planner.device.spec.cpu);
         if let (Choice::Fixed(cluster), Choice::Fixed(threads), Choice::Fixed(mech)) =
             (req.cluster, req.threads, req.mech)
         {
-            return self.get_or_insert_with(
+            return self.get_or_insert_traced(
                 PlanKey { device, epoch, op: *op, cluster, threads, mech },
-                || planner.plan_request(op, req),
+                || pre.unwrap_or_else(|| planner.plan_request(op, req)),
             );
         }
         let akey = AutoKey { device, epoch, op: *op, req };
@@ -453,7 +495,7 @@ impl PlanCache {
             // guarantees the fixed search at an `Auto` plan's resolved
             // strategy reproduces it exactly, at a fraction of the joint
             // search's cost.
-            return self.get_or_insert_with(
+            return self.get_or_insert_traced(
                 PlanKey {
                     device,
                     epoch,
@@ -462,7 +504,14 @@ impl PlanCache {
                     threads: s.threads,
                     mech: s.mech,
                 },
-                || planner.plan_request(op, PlanRequest::fixed_on(s.cluster, s.threads, s.mech)),
+                || {
+                    pre.unwrap_or_else(|| {
+                        planner.plan_request(
+                            op,
+                            PlanRequest::fixed_on(s.cluster, s.threads, s.mech),
+                        )
+                    })
+                },
             );
         }
         // Cold auto request: resolve under the auto-shard lock (single
@@ -471,7 +520,7 @@ impl PlanCache {
         // equivalent fixed request — and racing auto requests — hit it.
         let mut computed: Option<Plan> = None;
         let (strategy, _) = self.auto.get_or_insert_with(akey, || {
-            let plan = planner.plan_request(op, req);
+            let plan = pre.unwrap_or_else(|| planner.plan_request(op, req));
             self.misses.inc();
             self.plans.publish(
                 PlanKey {
@@ -488,10 +537,10 @@ impl PlanCache {
             plan.strategy()
         });
         match computed {
-            Some(plan) => plan,
+            Some(plan) => (plan, false),
             // lost the single-flight race: the resolver published the plan
             // (re-plan at the resolved strategy if it was already evicted)
-            None => self.get_or_insert_with(
+            None => self.get_or_insert_traced(
                 PlanKey {
                     device,
                     epoch,
@@ -501,10 +550,16 @@ impl PlanCache {
                     mech: strategy.mech,
                 },
                 || {
-                    planner.plan_request(
-                        op,
-                        PlanRequest::fixed_on(strategy.cluster, strategy.threads, strategy.mech),
-                    )
+                    pre.unwrap_or_else(|| {
+                        planner.plan_request(
+                            op,
+                            PlanRequest::fixed_on(
+                                strategy.cluster,
+                                strategy.threads,
+                                strategy.mech,
+                            ),
+                        )
+                    })
                 },
             ),
         }
@@ -694,6 +749,32 @@ mod tests {
         assert_eq!(first, second);
         assert_eq!(first, p.plan_with_threads(&op, 3));
         assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn traced_flag_mirrors_hit_and_miss_counters() {
+        let p = planner();
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::vit_fc1());
+        // fixed: cold then warm
+        let (_, hit) = cache.get_or_plan_request_traced(
+            &p,
+            &op,
+            PlanRequest::fixed(3, SyncMechanism::SvmPolling),
+        );
+        assert!(!hit);
+        let (_, hit) = cache.get_or_plan_request_traced(
+            &p,
+            &op,
+            PlanRequest::fixed(3, SyncMechanism::SvmPolling),
+        );
+        assert!(hit);
+        // auto: cold resolution is a miss, the warm resolution a hit
+        let (_, hit) = cache.get_or_plan_request_traced(&p, &op, PlanRequest::auto());
+        assert!(!hit);
+        let (_, hit) = cache.get_or_plan_request_traced(&p, &op, PlanRequest::auto());
+        assert!(hit);
+        assert_eq!((cache.hits(), cache.misses()), (2, 2), "flags mirror counters");
     }
 
     #[test]

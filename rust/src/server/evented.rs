@@ -831,6 +831,8 @@ mod imp {
                 state.cache.record_probe_hits(1);
                 let _ = writeln!(conn.wbuf, "OK {}", PlanBody(&plan));
                 ep.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+                // probe hits are warm by construction: feed plan.hit too
+                state.record_plan_outcome(true, t0);
                 true
             }
             b"PLAN_BATCH" => {

@@ -235,7 +235,7 @@ pub mod pool;
 pub use self::evented::DEFAULT_MAX_CONNS;
 
 use self::cache::PlanCache;
-use self::pool::WorkerPool;
+use self::pool::{fan_out, WorkerPool};
 use crate::calibration::{fit_spec, SampleSet};
 use crate::device::{
     intern_device_name, validate_device_name, ClusterId, Device, Processor, SocSpec,
@@ -247,6 +247,7 @@ use crate::ops::{ConvConfig, LinearConfig, OpConfig};
 use crate::partition::{Choice, Plan, PlanRequest, Planner};
 use crate::scheduler::{pool_gpu_us, strategy_distribution, ModelScheduler};
 use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock, RwLockReadGuard};
@@ -330,6 +331,21 @@ struct DeviceEntry {
     key: &'static str,
     device: Device,
     planners: OnceLock<DevicePlanners>,
+    /// One-shot gate for [`ServerState::prewarm_cluster_placements`]: the
+    /// first cluster-`Auto` request swaps this and kicks the background
+    /// placement fan-out; every later request skips it for free.
+    placements_prewarmed: std::sync::atomic::AtomicBool,
+}
+
+impl DeviceEntry {
+    fn build(key: &'static str, device: Device) -> Self {
+        Self {
+            key,
+            device,
+            planners: OnceLock::new(),
+            placements_prewarmed: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
 }
 
 impl DeviceEntry {
@@ -382,6 +398,14 @@ const VERBS: [(&str, &str); 10] = [
 /// Metrics key collecting unrecognized verbs (reported last by `STATS`).
 const OTHER_KEY: &str = "other";
 
+/// Synthetic sub-endpoints splitting the `PLAN` verb's latency by cache
+/// outcome: a warm hit is a ~µs lookup while a cold miss pays a full
+/// planner sweep, so one blended `plan.p50/p95` hides both populations.
+/// Reported directly after `plan` in `STATS` ([`OTHER_KEY`] must stay
+/// last — [`ServerMetrics::endpoint`] falls back to the final entry).
+const PLAN_HIT_KEY: &str = "plan.hit";
+const PLAN_MISS_KEY: &str = "plan.miss";
+
 /// The op-spec grammar, quoted by every malformed-op-spec error (one
 /// copy, so the self-describing errors cannot drift from each other).
 const OP_SPEC_USAGE: &str = "bad op spec (expected: \
@@ -394,14 +418,19 @@ const MODEL_SPEC_USAGE: &str =
 
 impl ServerMetrics {
     fn new() -> Self {
-        Self {
-            endpoints: VERBS
-                .iter()
-                .map(|(_, key)| *key)
-                .chain([OTHER_KEY])
-                .map(|k| (k, EndpointStats::new()))
-                .collect(),
+        let mut endpoints: Vec<(&'static str, EndpointStats)> = Vec::new();
+        for (_, key) in VERBS.iter() {
+            endpoints.push((*key, EndpointStats::new()));
+            if *key == "plan" {
+                // hit/miss sub-endpoints ride directly behind their verb
+                // so STATS stays position-ordered; `other` stays last
+                // (the endpoint() fallback indexes the final entry)
+                endpoints.push((PLAN_HIT_KEY, EndpointStats::new()));
+                endpoints.push((PLAN_MISS_KEY, EndpointStats::new()));
+            }
         }
+        endpoints.push((OTHER_KEY, EndpointStats::new()));
+        Self { endpoints }
     }
 
     /// Stats for a verb key (`"plan"`, ...); unknown keys land in `other`.
@@ -475,6 +504,13 @@ pub struct ServerState {
     /// request does not pay multi-second GBDT training on a pool worker.
     /// Off by default: embedders and tests control their own training.
     prewarm_calibrated: std::sync::atomic::AtomicBool,
+    /// Set once by [`Server::new`]: the worker pool the multi-op planning
+    /// verbs (`PLAN_MODEL`, cold `PLAN_BATCH`) and the background
+    /// placement prewarm fan their independent planner sweeps across (via
+    /// [`pool::fan_out`] — the coordinating request always participates,
+    /// so a saturated pool degrades to the serial path, never deadlocks).
+    /// Unset (embedders, pool-less tests): every path stays serial.
+    planning_pool: OnceLock<Arc<WorkerPool>>,
     pub cache: PlanCache,
     pub metrics: ServerMetrics,
 }
@@ -495,11 +531,7 @@ impl ServerState {
     pub fn new_lazy(device: Device, n_train: usize, seed: u64) -> Self {
         let mut registry: Vec<DeviceEntry> = DEVICES
             .iter()
-            .map(|(key, _, ctor)| DeviceEntry {
-                key: *key,
-                device: ctor(),
-                planners: OnceLock::new(),
-            })
+            .map(|(key, _, ctor)| DeviceEntry::build(key, ctor()))
             .collect();
         let default_device = match registry
             .iter()
@@ -512,7 +544,7 @@ impl ServerState {
             }
             None => {
                 let key = device.spec.name;
-                registry.push(DeviceEntry { key, device, planners: OnceLock::new() });
+                registry.push(DeviceEntry::build(key, device));
                 key
             }
         };
@@ -522,6 +554,7 @@ impl ServerState {
             n_train,
             seed,
             prewarm_calibrated: std::sync::atomic::AtomicBool::new(false),
+            planning_pool: OnceLock::new(),
             cache: PlanCache::default(),
             metrics: ServerMetrics::new(),
         }
@@ -588,9 +621,132 @@ impl ServerState {
 
     /// Plan an op for the session's device through the cache.
     pub fn plan_cached(&self, session: &Session, op: &OpConfig, req: PlanRequest) -> Plan {
+        self.plan_cached_traced(session, op, req).0
+    }
+
+    /// [`ServerState::plan_cached`] that also reports whether the plan
+    /// was served warm — the `PLAN` verb splits its latency telemetry
+    /// into `plan.hit` / `plan.miss` on this flag.
+    pub fn plan_cached_traced(
+        &self,
+        session: &Session,
+        op: &OpConfig,
+        req: PlanRequest,
+    ) -> (Plan, bool) {
         let entry = self.session_entry(session);
+        if req.cluster == Choice::Auto {
+            self.prewarm_cluster_placements(&entry);
+        }
         let planners = self.planners_for(&entry);
-        self.cache.get_or_plan_request(planners.for_op(op), op, req)
+        self.cache.get_or_plan_request_traced(planners.for_op(op), op, req)
+    }
+
+    /// Credit one request to the `plan.hit` / `plan.miss` sub-endpoint
+    /// (cache-outcome-split latency percentiles for the `PLAN` verb; the
+    /// blended `plan.*` block is recorded by `handle_timed` as for every
+    /// verb). Also called by the evented fast path, whose probe hits are
+    /// `hit` by construction.
+    pub fn record_plan_outcome(&self, hit: bool, t0: Instant) {
+        let ep = self.metrics.endpoint(if hit { PLAN_HIT_KEY } else { PLAN_MISS_KEY });
+        ep.requests.inc();
+        ep.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+    }
+
+    /// Raw-plan the *distinct, cold* specs of a multi-op request across
+    /// the worker pool, returning `(op, request) -> plan` for the merge
+    /// pass. Planning is deterministic and side-effect-free, so the
+    /// fan-out tasks touch no shared state — each captures only the
+    /// device entry — and the caller merges the results through
+    /// [`PlanCache::get_or_plan_request_precomputed`], which preserves
+    /// the serial path's hit/miss accounting, single-flight dedup, and
+    /// auto-resolution sharing exactly. Empty when no pool is attached or
+    /// fewer than two specs are cold: the serial path is already optimal
+    /// there.
+    fn preplan_parallel(
+        &self,
+        entry: &Arc<DeviceEntry>,
+        specs: &[(OpConfig, PlanRequest)],
+    ) -> HashMap<(OpConfig, PlanRequest), Plan> {
+        let mut out = HashMap::new();
+        let Some(pool) = self.planning_pool.get() else { return out };
+        let (name, epoch) = (entry.device.name(), entry.device.epoch);
+        let cpu = &entry.device.spec.cpu;
+        let mut cold: Vec<(OpConfig, PlanRequest)> = Vec::new();
+        for spec in specs {
+            if !cold.contains(spec)
+                && self.cache.probe_request(name, epoch, cpu, &spec.0, spec.1).is_none()
+            {
+                cold.push(*spec);
+            }
+        }
+        if cold.len() < 2 {
+            return out;
+        }
+        // train planners once, here, so the fan-out tasks never stack up
+        // behind the training OnceLock
+        self.planners_for(entry);
+        let task_entry = entry.clone();
+        let (n_train, seed) = (self.n_train, self.seed);
+        let task_specs = cold.clone();
+        let plans = fan_out(Some(pool.as_ref()), cold.len(), move |i| {
+            let planners = task_entry.planners(n_train, seed);
+            let (op, req) = task_specs[i];
+            planners.for_op(&op).plan_request(&op, req)
+        });
+        out.extend(cold.into_iter().zip(plans));
+        out
+    }
+
+    /// Kick off background training of every untrained CPU-cluster
+    /// placement predictor for `entry`, fanned out across the worker
+    /// pool — so the first cluster-`Auto` request stops paying the
+    /// gold/silver (and per-thread-count) GBDT training serially on its
+    /// own critical path. One-shot per entry (swap-gated); a full queue
+    /// re-arms the gate and leaves training lazy, exactly as before. The
+    /// training cells are `OnceLock`-single-flight, so a foreground
+    /// request racing the prewarm blocks only on cells still in flight.
+    fn prewarm_cluster_placements(&self, entry: &Arc<DeviceEntry>) {
+        use std::sync::atomic::Ordering;
+        let Some(pool) = self.planning_pool.get() else { return };
+        if entry.placements_prewarmed.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        let task_pool = pool.clone();
+        let task_entry = entry.clone();
+        let (n_train, seed) = (self.n_train, self.seed);
+        let submitted = pool.try_submit(Box::new(move || {
+            let planners = task_entry.planners(n_train, seed);
+            // (is_linear, placement key) worklist over both op kinds
+            let work: Vec<(bool, (ClusterId, usize))> = planners
+                .linear
+                .predictors
+                .untrained_placements(&task_entry.device)
+                .into_iter()
+                .map(|k| (true, k))
+                .chain(
+                    planners
+                        .conv
+                        .predictors
+                        .untrained_placements(&task_entry.device)
+                        .into_iter()
+                        .map(|k| (false, k)),
+                )
+                .collect();
+            if work.is_empty() {
+                return;
+            }
+            let n = work.len();
+            let fan_entry = task_entry.clone();
+            fan_out(Some(task_pool.as_ref()), n, move |i| {
+                let planners = fan_entry.planners(n_train, seed);
+                let (is_linear, key) = work[i];
+                let p = if is_linear { &planners.linear } else { &planners.conv };
+                p.predictors.train_placement(&fan_entry.device, key);
+            });
+        }));
+        if submitted.is_err() {
+            entry.placements_prewarmed.store(false, Ordering::Relaxed);
+        }
     }
 
     /// Record a request shed before reaching [`Self::handle`] (pool full or
@@ -669,8 +825,10 @@ impl ServerState {
                 "bad calibration (expected: CALIBRATE <name> [base=<device>] [<key>=<value> ...])"
             )),
             ["PLAN", rest @ ..] => {
+                let t0 = Instant::now();
                 let (op, req) = self.parse_op(session, rest)?;
-                let plan = self.plan_cached(session, &op, req);
+                let (plan, hit) = self.plan_cached_traced(session, &op, req);
+                self.record_plan_outcome(hit, t0);
                 Ok(plan_body(&plan))
             }
             ["RUN", rest @ ..] => {
@@ -736,8 +894,26 @@ impl ServerState {
             conv_planner: &planners.conv,
             req,
         };
+        // Pre-plan the model's cold layer shapes across the worker pool,
+        // then merge through the cache in layer order — byte-identical to
+        // the serial pass (planning is deterministic), but the dominant
+        // cold cost (one full planner sweep per distinct shape) runs
+        // wall-clock-parallel instead of layer-after-layer.
+        if req.cluster == Choice::Auto {
+            self.prewarm_cluster_placements(&entry);
+        }
+        let specs: Vec<(OpConfig, PlanRequest)> =
+            model.layers.iter().filter_map(|l| l.op()).map(|op| (op, req)).collect();
+        let pre = self.preplan_parallel(&entry, &specs);
         let schedule = sched.plan_via(&model, |op, req| {
-            self.cache.get_or_plan_request(planners.for_op(op), op, req)
+            self.cache
+                .get_or_plan_request_precomputed(
+                    planners.for_op(op),
+                    op,
+                    req,
+                    pre.get(&(*op, req)).copied(),
+                )
+                .0
         });
         let planned = schedule.iter().filter(|ls| ls.plan.is_some()).count();
         let coexec = schedule
@@ -795,15 +971,36 @@ impl ServerState {
                 batches.len()
             ));
         }
-        let lines: Vec<String> = batches
+        // Parse everything first (errors stay in-band, in order), pre-plan
+        // the distinct cold specs across the worker pool, then merge
+        // through the cache in request order — the reply is byte-identical
+        // to the serial pass and the hit/miss counters are exact, but a
+        // cold batch pays max(plan) wall-clock instead of sum(plan).
+        let parsed: Vec<std::result::Result<(OpConfig, PlanRequest), String>> = batches
             .iter()
-            .map(|parts| {
-                match self.parse_op(session, parts).map(|(op, req)| {
-                    plan_body(&self.plan_cached(session, &op, req))
-                }) {
-                    Ok(body) => format!("OK {body}"),
-                    Err(e) => format!("ERR {e}"),
+            .map(|parts| self.parse_op(session, parts).map_err(|e| e.to_string()))
+            .collect();
+        let entry = self.session_entry(session);
+        let ok_specs: Vec<(OpConfig, PlanRequest)> =
+            parsed.iter().filter_map(|r| r.as_ref().ok().copied()).collect();
+        if ok_specs.iter().any(|(_, req)| req.cluster == Choice::Auto) {
+            self.prewarm_cluster_placements(&entry);
+        }
+        let pre = self.preplan_parallel(&entry, &ok_specs);
+        let planners = self.planners_for(&entry);
+        let lines: Vec<String> = parsed
+            .into_iter()
+            .map(|r| match r {
+                Ok((op, req)) => {
+                    let (plan, _) = self.cache.get_or_plan_request_precomputed(
+                        planners.for_op(&op),
+                        &op,
+                        req,
+                        pre.get(&(op, req)).copied(),
+                    );
+                    format!("OK {}", plan_body(&plan))
                 }
+                Err(e) => format!("ERR {e}"),
             })
             .collect();
         Ok(format!("n={}\n{}", lines.len(), lines.join("\n")))
@@ -1076,7 +1273,7 @@ impl ServerState {
             device.spec.name = slot.device.name();
             let name = device.spec.name;
             let key = slot.key;
-            *slot = Arc::new(DeviceEntry { key, device, planners: OnceLock::new() });
+            *slot = Arc::new(DeviceEntry::build(key, device));
             return Ok(name);
         }
         if registry.len() >= MAX_DEVICES {
@@ -1084,7 +1281,7 @@ impl ServerState {
         }
         let key = intern_device_name(key);
         device.spec.name = key;
-        registry.push(Arc::new(DeviceEntry { key, device, planners: OnceLock::new() }));
+        registry.push(Arc::new(DeviceEntry::build(key, device)));
         Ok(key)
     }
 }
@@ -1254,12 +1451,11 @@ impl Server {
             .cache
             .ttl()
             .map(|ttl| CacheSweeper::spawn(state.clone(), sweep_interval(ttl)));
-        Self {
-            state,
-            pool: Arc::new(WorkerPool::new(config.workers, config.queue_cap)),
-            max_conns: DEFAULT_MAX_CONNS,
-            sweeper,
-        }
+        let pool = Arc::new(WorkerPool::new(config.workers, config.queue_cap));
+        // attach the pool for parallel planning fan-out; a state shared
+        // with an earlier Server keeps its first pool
+        let _ = state.planning_pool.set(pool.clone());
+        Self { state, pool, max_conns: DEFAULT_MAX_CONNS, sweeper }
     }
 
     /// Whether a background TTL sweeper is running (telemetry/tests).

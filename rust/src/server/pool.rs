@@ -171,6 +171,138 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Run `task(0..n)` cooperatively across the pool and the calling thread,
+/// returning results in index order.
+///
+/// This is the serving layer's planning fan-out: `PLAN_MODEL` and cold
+/// `PLAN_BATCH` coordinators call it *from a pool worker*, so the design
+/// must never wait on queue capacity:
+///
+/// * The coordinator always participates — it claims indices from a
+///   shared atomic counter like any helper, so the fan-out completes even
+///   if no helper ever runs.
+/// * Helpers are enlisted opportunistically via [`WorkerPool::try_submit`]
+///   (at most `min(n-1, worker_count)`); `Busy`/`Shutdown` just means
+///   fewer helpers, never an error and never a deadlock. A helper job
+///   that only starts after all indices are claimed exits immediately.
+/// * The coordinator never blocks on a *queued* helper: it waits only for
+///   indices a helper has already claimed, and a claimed index belongs to
+///   a running thread.
+/// * If a helper's task panics (the pool's `catch_unwind` contains it),
+///   the index is marked abandoned and the coordinator re-runs it, so a
+///   poisoned task degrades to coordinator-side execution instead of a
+///   hang. A panic on the coordinator's own thread propagates to the
+///   caller as usual.
+///
+/// With `pool` = `None` every index runs inline on the caller — the
+/// serial fallback for pool-less [`super::ServerState`]s.
+pub fn fan_out<T, F>(pool: Option<&WorkerPool>, n: usize, task: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(usize) -> T + Send + Sync + 'static,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let shared = Arc::new(FanShared {
+        task,
+        n,
+        next: AtomicUsize::new(0),
+        done: Mutex::new(FanDone {
+            results: (0..n).map(|_| None).collect(),
+            completed: 0,
+            abandoned: Vec::new(),
+        }),
+        cv: Condvar::new(),
+    });
+    if let Some(pool) = pool {
+        let helpers = (n - 1).min(pool.worker_count());
+        for _ in 0..helpers {
+            let s = shared.clone();
+            if pool.try_submit(Box::new(move || run_fan_tasks(&s))).is_err() {
+                break; // shed helpers are simply not enlisted
+            }
+        }
+    }
+    run_fan_tasks(&shared);
+    let mut done = shared.done.lock().unwrap();
+    loop {
+        // adopt indices helpers abandoned by panicking
+        while let Some(i) = done.abandoned.pop() {
+            drop(done);
+            let v = (shared.task)(i);
+            done = shared.done.lock().unwrap();
+            if done.results[i].is_none() {
+                done.results[i] = Some(v);
+                done.completed += 1;
+            }
+        }
+        if done.completed >= n {
+            break;
+        }
+        done = shared.cv.wait(done).unwrap();
+    }
+    let results = std::mem::take(&mut done.results);
+    drop(done);
+    results
+        .into_iter()
+        .map(|r| r.expect("fan_out: every index completed"))
+        .collect()
+}
+
+struct FanDone<T> {
+    results: Vec<Option<T>>,
+    completed: usize,
+    /// Indices whose task panicked on a helper; re-run by the coordinator.
+    abandoned: Vec<usize>,
+}
+
+struct FanShared<T, F> {
+    task: F,
+    n: usize,
+    next: AtomicUsize,
+    done: Mutex<FanDone<T>>,
+    cv: Condvar,
+}
+
+/// Marks a claimed index abandoned if the task unwinds before completing.
+struct AbandonGuard<'a, T, F> {
+    shared: &'a FanShared<T, F>,
+    idx: usize,
+    armed: bool,
+}
+
+impl<T, F> Drop for AbandonGuard<'_, T, F> {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut done = self.shared.done.lock().unwrap();
+            done.abandoned.push(self.idx);
+            drop(done);
+            self.shared.cv.notify_all();
+        }
+    }
+}
+
+fn run_fan_tasks<T, F: Fn(usize) -> T>(shared: &FanShared<T, F>) {
+    loop {
+        let i = shared.next.fetch_add(1, Ordering::Relaxed);
+        if i >= shared.n {
+            return;
+        }
+        let mut guard = AbandonGuard { shared, idx: i, armed: true };
+        let v = (shared.task)(i);
+        guard.armed = false;
+        drop(guard);
+        let mut done = shared.done.lock().unwrap();
+        if done.results[i].is_none() {
+            done.results[i] = Some(v);
+            done.completed += 1;
+        }
+        drop(done);
+        shared.cv.notify_all();
+    }
+}
+
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
@@ -263,6 +395,66 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         pool.submit(Box::new(move || tx.send(()).unwrap())).unwrap();
         rx.recv().unwrap();
+    }
+
+    #[test]
+    fn fan_out_returns_ordered_results_without_a_pool() {
+        let out = fan_out(None, 8, |i| i * i);
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+        assert!(fan_out(None, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn fan_out_spreads_work_across_workers() {
+        let pool = WorkerPool::new(4, 64);
+        let seen = Arc::new(Mutex::new(std::collections::HashSet::new()));
+        let s = seen.clone();
+        let out = fan_out(Some(&pool), 64, move |i| {
+            s.lock().unwrap().insert(std::thread::current().name().map(str::to_string));
+            // a little spin so helpers actually get scheduled
+            std::hint::black_box((0..5_000).sum::<u64>());
+            i + 1
+        });
+        assert_eq!(out, (1..=64).collect::<Vec<_>>());
+        // not asserting >1 thread (scheduling-dependent), but the name set
+        // must at least contain the coordinator
+        assert!(!seen.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn fan_out_survives_a_saturated_pool() {
+        let pool = WorkerPool::new(1, 1);
+        // occupy the single worker and fill the queue: every helper
+        // submission sheds, the coordinator runs all indices itself
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        pool.try_submit(Box::new(move || {
+            started_tx.send(()).unwrap();
+            release_rx.recv().unwrap();
+        }))
+        .unwrap();
+        started_rx.recv().unwrap();
+        pool.try_submit(Box::new(|| {})).unwrap(); // queue full
+        let out = fan_out(Some(&pool), 6, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4, 6, 8, 10]);
+        release_tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn fan_out_recovers_when_a_helper_panics() {
+        let pool = WorkerPool::new(2, 16);
+        // tasks panic on pool workers (names "serve-worker-*") but succeed
+        // on the coordinator: abandoned indices must be adopted and re-run
+        let out = fan_out(Some(&pool), 16, |i| {
+            let on_worker = std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("serve-worker"));
+            if on_worker {
+                panic!("helper dies");
+            }
+            i + 100
+        });
+        assert_eq!(out, (100..116).collect::<Vec<_>>());
     }
 
     #[test]

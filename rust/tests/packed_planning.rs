@@ -1,0 +1,188 @@
+//! Loopback tests for the parallel cold-planning paths and the
+//! `plan.hit` / `plan.miss` telemetry split.
+//!
+//! The worker-pool fan-out behind `PLAN_MODEL` and cold `PLAN_BATCH`
+//! must be *invisible* except in wall-clock time: replies byte-identical
+//! to a pool-less (serial) state handling the same lines, cache counters
+//! exact, and the `STATS` grammar stable. These tests pin that by
+//! running every request against two identically constructed states —
+//! one driven directly (no pool attached, so planning is serial) and one
+//! served over loopback through the evented front-end (pool attached, so
+//! cold multi-op requests fan out).
+
+use mobile_coexec::device::Device;
+use mobile_coexec::server::{Server, ServerConfig, ServerState};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+fn spawn(state: Arc<ServerState>) -> SocketAddr {
+    Server::new(state, ServerConfig::default()).spawn_ephemeral().expect("spawn server")
+}
+
+/// Persistent-connection client: sends one line, reads one reply line.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Self { stream, reader }
+    }
+
+    fn request(&mut self, line: &str) -> String {
+        self.stream.write_all(line.as_bytes()).expect("write");
+        self.stream.write_all(b"\n").expect("write nl");
+        self.read_line()
+    }
+
+    fn read_line(&mut self) -> String {
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read");
+        reply.trim().to_string()
+    }
+
+    /// Send a `PLAN_BATCH` line; return all reply lines including the
+    /// `OK n=<k>` framing header.
+    fn request_batch(&mut self, line: &str) -> Vec<String> {
+        let header = self.request(line);
+        let n: usize = header
+            .strip_prefix("OK n=")
+            .unwrap_or_else(|| panic!("bad batch header: {header}"))
+            .parse()
+            .expect("batch count");
+        let mut lines = vec![header];
+        lines.extend((0..n).map(|_| self.read_line()));
+        lines
+    }
+}
+
+fn stat(reply: &str, key: &str) -> String {
+    reply
+        .split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v.to_string())
+        .unwrap_or_else(|| panic!("missing {key} in: {reply}"))
+}
+
+/// `PLAN_MODEL` through the pool-backed server fans its cold layer
+/// shapes across workers; the reply and the cache counters must be
+/// byte-for-byte what the serial path produces, cold and warm.
+#[test]
+fn plan_model_parallel_fan_out_matches_serial_byte_for_byte() {
+    // serial reference: no pool attached, planning happens inline
+    let serial = ServerState::new(Device::pixel5(), 500, 7);
+    let mut session = serial.session();
+    let serial_cold = serial.handle(&mut session, "PLAN_MODEL resnet18 2");
+    assert!(serial_cold.starts_with("OK model=resnet18"), "unexpected: {serial_cold}");
+    let serial_counters = (serial.cache.hits(), serial.cache.misses());
+    let serial_warm = serial.handle(&mut session, "PLAN_MODEL resnet18 2");
+    assert_eq!(serial_cold, serial_warm, "serial replan must be cache-stable");
+
+    // parallel: identical state, served through the evented front-end
+    // with the worker pool attached
+    let parallel = Arc::new(ServerState::new(Device::pixel5(), 500, 7));
+    let addr = spawn(parallel.clone());
+    let mut client = Client::connect(&addr);
+    let par_cold = client.request("PLAN_MODEL resnet18 2");
+    assert_eq!(par_cold, serial_cold, "parallel cold PLAN_MODEL diverged from serial");
+    let (hits_cold, misses_cold) = (parallel.cache.hits(), parallel.cache.misses());
+    assert_eq!((hits_cold, misses_cold), serial_counters, "cold-pass counters diverged");
+
+    let par_warm = client.request("PLAN_MODEL resnet18 2");
+    assert_eq!(par_warm, serial_cold, "parallel warm PLAN_MODEL diverged");
+    assert_eq!(parallel.cache.misses(), misses_cold, "warm replan must not miss");
+    assert!(parallel.cache.hits() > hits_cold, "warm replan must hit");
+}
+
+/// A cold `PLAN_BATCH` with distinct shapes (including an `auto` axis and
+/// an in-band parse error) fans out; the per-op lines, their order, and
+/// the hit/miss counters must match the serial path exactly.
+#[test]
+fn plan_batch_cold_fan_out_matches_serial_byte_for_byte() {
+    const BATCH: &str = "PLAN_BATCH linear 50 768 3072 2; conv 56 56 64 128 3 1 2; \
+                         linear 197 768 3072 4; conv 28 28 128 256 3 1 auto; \
+                         linear 1 512 1000 2; bogus spec; linear 50 768 3072 2";
+
+    let serial = ServerState::new(Device::pixel5(), 500, 7);
+    let mut session = serial.session();
+    let serial_lines: Vec<String> =
+        serial.handle(&mut session, BATCH).lines().map(str::to_string).collect();
+
+    let parallel = Arc::new(ServerState::new(Device::pixel5(), 500, 7));
+    let addr = spawn(parallel.clone());
+    let mut client = Client::connect(&addr);
+    let par_lines = client.request_batch(BATCH);
+
+    assert_eq!(par_lines, serial_lines, "parallel PLAN_BATCH diverged from serial");
+    assert_eq!(
+        (parallel.cache.hits(), parallel.cache.misses()),
+        (serial.cache.hits(), serial.cache.misses()),
+        "parallel PLAN_BATCH counters diverged from serial"
+    );
+    // the trailing repeat of the first spec must have been a warm hit,
+    // not a second plan
+    assert_eq!(par_lines.last(), Some(&par_lines[1]));
+    assert!(par_lines[6].starts_with("ERR "), "in-band error lost: {}", par_lines[6]);
+
+    // replaying the whole batch is all-warm: zero new misses either way
+    let misses = parallel.cache.misses();
+    let replay = client.request_batch(BATCH);
+    assert_eq!(replay, par_lines);
+    assert_eq!(parallel.cache.misses(), misses);
+}
+
+/// Satellite telemetry: the `PLAN` verb's latency splits into `plan.hit`
+/// and `plan.miss` sub-endpoints so the ~µs warm population stops hiding
+/// the planner-sweep cold population (and vice versa) in one blended
+/// percentile. The split blocks ride between `plan.*` and
+/// `plan_batch.*` in `STATS`, and the evented fast path feeds the hit
+/// side too.
+#[test]
+fn stats_split_plan_latency_by_cache_outcome() {
+    let state = Arc::new(ServerState::new(Device::pixel5(), 500, 11));
+    let addr = spawn(state.clone());
+    let mut client = Client::connect(&addr);
+
+    let stats0 = client.request("STATS");
+    assert_eq!(stat(&stats0, "plan.hit.req"), "0");
+    assert_eq!(stat(&stats0, "plan.miss.req"), "0");
+
+    let cold = client.request("PLAN linear 50 768 1024 2");
+    assert!(cold.starts_with("OK "), "unexpected: {cold}");
+    let stats1 = client.request("STATS");
+    assert_eq!(stat(&stats1, "plan.miss.req"), "1");
+    assert_eq!(stat(&stats1, "plan.hit.req"), "0");
+
+    // warm repeats are served by the evented fast path, which must feed
+    // plan.hit (the pool path's traced planner would, too)
+    let w1 = client.request("PLAN linear 50 768 1024 2");
+    let w2 = client.request("PLAN linear 50 768 1024 2");
+    assert_eq!(w1, cold);
+    assert_eq!(w2, cold);
+    let stats2 = client.request("STATS");
+    assert_eq!(stat(&stats2, "plan.miss.req"), "1");
+    assert_eq!(stat(&stats2, "plan.hit.req"), "2");
+    assert_eq!(stat(&stats2, "plan.hit.err"), "0");
+    assert_eq!(stat(&stats2, "plan.miss.err"), "0");
+
+    // grammar: the split blocks sit between plan.* and plan_batch.*
+    let pos = |k: &str| stats2.find(k).unwrap_or_else(|| panic!("missing {k}"));
+    assert!(pos("plan.req=") < pos("plan.hit.req="));
+    assert!(pos("plan.hit.req=") < pos("plan.miss.req="));
+    assert!(pos("plan.miss.req=") < pos("plan_batch.req="));
+
+    // a full-auto request (which also kicks the background placement
+    // prewarm off the critical path) stays deterministic: the warm
+    // repeat is byte-identical and lands on the hit side
+    let a1 = client.request("PLAN linear 64 512 2048 auto cluster=auto");
+    let a2 = client.request("PLAN linear 64 512 2048 auto cluster=auto");
+    assert_eq!(a1, a2, "cluster-auto replan diverged");
+    let stats3 = client.request("STATS");
+    assert_eq!(stat(&stats3, "plan.miss.req"), "2");
+    assert_eq!(stat(&stats3, "plan.hit.req"), "3");
+}

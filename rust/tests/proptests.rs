@@ -601,6 +601,68 @@ fn prop_fit_round_trips_random_specs() {
     }
 }
 
+/// Property: the packed SoA forest is a faithful re-encoding of the
+/// Node-enum trees. For random regression problems, the packed walker
+/// ([`Gbdt::predict`], which delegates to it) agrees with the enum
+/// reference ([`Gbdt::predict_unpacked`]) on essentially every row —
+/// thresholds are quantized f64 -> f32, so only a feature value inside
+/// the ~2^-24 relative rounding gap of a split midpoint may legally take
+/// the other branch — and the tree-major batched walk over a flat
+/// row-major matrix is *bit-identical* to the single-row packed walk.
+#[test]
+fn prop_packed_forest_matches_enum_reference() {
+    let mut rng = SplitMix64::new(21);
+    for case in 0..8 {
+        let n = rng.gen_range(80, 300);
+        let d = rng.gen_range(2, 6);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.next_f64() * 200.0 - 100.0).collect())
+            .collect();
+        let y: Vec<f64> = rows
+            .iter()
+            .map(|r| {
+                r.iter().enumerate().map(|(j, v)| (j as f64 + 1.0) * v).sum::<f64>().abs() + 1.0
+            })
+            .collect();
+        let params = GbdtParams { n_estimators: 40, ..Default::default() };
+        let m = Gbdt::fit(&rows, &y, &params);
+        assert!(m.packed().n_trees() > 0, "case {case}: empty packed forest");
+        assert!(m.packed().n_nodes() >= m.packed().n_trees(), "case {case}: node pool too small");
+
+        // packed vs enum reference, row by row
+        let mut flips = 0usize;
+        for r in &rows {
+            let p = m.predict(r);
+            let u = m.predict_unpacked(r);
+            assert!(p.is_finite() && u.is_finite(), "case {case}: non-finite prediction");
+            if (p - u).abs() / u.abs().max(1e-12) > 1e-6 {
+                flips += 1;
+            }
+        }
+        assert!(
+            flips * 100 <= n,
+            "case {case}: {flips}/{n} rows diverged beyond f32-threshold quantization"
+        );
+
+        // the batched tree-major walk is bit-identical to single-row packed
+        let flat: Vec<f64> = rows.iter().flatten().copied().collect();
+        let batch = m.packed().predict_batch(&flat, n);
+        assert_eq!(batch.len(), n);
+        for (i, r) in rows.iter().enumerate() {
+            assert!(
+                batch[i] == m.packed().predict(r),
+                "case {case} row {i}: batched walk not bit-identical to single-row"
+            );
+        }
+        // and the model-level batch entry points agree with themselves
+        let via_model = m.predict_batch(&rows);
+        let mut via_into = Vec::new();
+        m.predict_batch_into(&flat, n, &mut via_into);
+        assert_eq!(via_model, batch, "case {case}: Gbdt::predict_batch diverged");
+        assert_eq!(via_into, batch, "case {case}: Gbdt::predict_batch_into diverged");
+    }
+}
+
 /// Property: measurement noise is unbiased (mean factor ~1) and
 /// deterministic per trial key.
 #[test]

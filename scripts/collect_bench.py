@@ -22,6 +22,7 @@ output filename (BENCH_<n>.json) when it matches. `--note` records a free
 """
 
 import json
+import os
 import re
 import sys
 
@@ -41,6 +42,37 @@ def collect(lines):
             if m:
                 stats[m.group(1)] = float(m.group(2))
     return benches
+
+
+def print_deltas(benches, dst):
+    """Per-metric deltas vs the previous PR's committed snapshot.
+
+    The predecessor is `BENCH_<n-1>.json` next to the output file; when it
+    does not exist (first PR, or a non-numbered output name) this prints
+    nothing. Deltas are informational — the perf gates live in the benches
+    themselves — but they make regressions visible in the CI log without
+    downloading artifacts.
+    """
+    m = OUT_ISSUE.search(dst)
+    if not m:
+        return
+    prev_path = os.path.join(
+        os.path.dirname(dst) or ".", f"BENCH_{int(m.group(1)) - 1}.json"
+    )
+    if not os.path.exists(prev_path):
+        return
+    with open(prev_path) as f:
+        prev = json.load(f).get("benches", {})
+    print(f"deltas vs {prev_path}:")
+    for name in sorted(benches):
+        for metric in sorted(benches[name]):
+            now = benches[name][metric]
+            was = prev.get(name, {}).get(metric)
+            if was is None:
+                print(f"  {name}.{metric}: {now:.4g} (new)")
+            elif was != 0:
+                pct = (now - was) / abs(was) * 100.0
+                print(f"  {name}.{metric}: {was:.4g} -> {now:.4g} ({pct:+.1f}%)")
 
 
 def main(argv):
@@ -75,6 +107,7 @@ def main(argv):
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {dst}: {len(benches)} benches")
+    print_deltas(benches, dst)
 
 
 if __name__ == "__main__":
