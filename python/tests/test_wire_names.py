@@ -1,0 +1,58 @@
+"""Wire-name sync: the serving protocol's kernel-implementation vocabulary
+(`impl=` on PLAN/RUN/FIT lines, defined by `ReqImpl::wire()` in
+rust/src/device/gpu.rs) must stay in lockstep with the Pallas kernel
+variants under python/compile/kernels/.
+
+Pure-stdlib source parsing — no jax import — so this check runs even on a
+box without the accelerator stack.
+"""
+
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+GPU_RS = REPO / "rust" / "src" / "device" / "gpu.rs"
+KERNELS = REPO / "python" / "compile" / "kernels"
+
+# Which Pallas kernel module implements each forced wire name. `default`
+# is the delegate's own heuristic: it has no forced python variant.
+WIRE_TO_MODULE = {
+    "direct": "conv2d",  # im2col + GEMM, the conv_generic analogue
+    "tiled_4x4": "matmul",  # MXU-tiled GEMM (vec4-style tiling)
+    "winograd": "winograd",  # F(2x2,3x3) transform-domain GEMM
+}
+
+
+def rust_wire_names():
+    """The `ReqImpl::<Variant> => "<wire>"` arms of `ReqImpl::wire()`."""
+    src = GPU_RS.read_text()
+    names = re.findall(r'ReqImpl::\w+ => "([a-z0-9_]+)"', src)
+    assert names, f"no ReqImpl wire arms found in {GPU_RS}"
+    return set(names)
+
+
+def test_rust_wire_vocabulary_is_exactly_the_five_axis_set():
+    assert rust_wire_names() == {"default", "direct", "winograd", "tiled_4x4"}
+
+
+def test_every_forced_wire_name_has_a_pallas_kernel_module():
+    forced = rust_wire_names() - {"default"}
+    assert forced == set(WIRE_TO_MODULE), (
+        "update WIRE_TO_MODULE when the Rust impl axis grows or shrinks"
+    )
+    for wire, module in WIRE_TO_MODULE.items():
+        path = KERNELS / f"{module}.py"
+        assert path.is_file(), f"impl={wire} maps to missing kernel {path}"
+
+
+def test_kernel_package_exports_every_mapped_module():
+    init = (KERNELS / "__init__.py").read_text()
+    exported = set()
+    for line in init.splitlines():
+        m = re.match(r"from \. import (.+?)(?:\s*#.*)?$", line.strip())
+        if m:
+            exported.update(n.strip() for n in m.group(1).split(","))
+    for wire, module in WIRE_TO_MODULE.items():
+        assert module in exported, (
+            f"impl={wire}: kernels/__init__.py must export {module}"
+        )

@@ -3,19 +3,21 @@
 //! measured grid-search oracle cost both replace.
 //!
 //! Gates: a fully `Auto` plan (3 thread counts x 2 mechanisms on the big
-//! cluster) must stay within 4x the cost of a fixed plan, and a 4-axis
+//! cluster) must stay within 4x the cost of a fixed plan, a 4-axis
 //! cluster-`Auto` plan (every cluster x its thread budget x 2
 //! mechanisms — 10 placements on pixel5) within the same 4x multiple of
-//! the `Auto` plan. Shared GPU predictions, the analytic mechanism
-//! prune, and the per-candidate dominated-placement prune (see
-//! `partition` module docs) keep both there: each extra strategy point
-//! costs at most one extra (usually pruned) CPU GBDT evaluation per
-//! candidate split, never its own split sweep.
+//! the `Auto` plan, and the full 5-axis plan (kernel-impl axis on top)
+//! within 2x the 4-axis plan. Shared GPU predictions, the analytic
+//! mechanism prune, the per-candidate dominated-placement prune, and
+//! per-op impl-eligibility pruning (see `partition` module docs) keep
+//! all three there: each extra strategy point costs at most one extra
+//! (usually pruned) GBDT evaluation per candidate split, never its own
+//! split sweep.
 
 use mobile_coexec::benchutil::{bench, report_scalar};
-use mobile_coexec::device::{ClusterId, Device, SyncMechanism};
+use mobile_coexec::device::{ClusterId, Device, ReqImpl, SyncMechanism};
 use mobile_coexec::ops::{LinearConfig, OpConfig};
-use mobile_coexec::partition::{grid_search, PlanRequest, Planner};
+use mobile_coexec::partition::{grid_search, Choice, PlanRequest, Planner};
 
 fn main() {
     let device = Device::pixel5();
@@ -60,6 +62,41 @@ fn main() {
     assert!(
         cratio <= 4.0,
         "acceptance: the 4-axis search must stay within 4x the auto plan ({cratio:.2}x)"
+    );
+
+    // the 5-axis gate: the kernel-impl axis on top of cluster-auto.
+    // Eligibility pruning caps the sweep at the impls this op admits
+    // (default/direct/tiled_4x4 for a vec4-aligned linear); the warm-up
+    // iterations absorb the lazy per-impl predictor training
+    let impl_auto = bench("plan_impl_auto_cout3072", 2, 30, || {
+        std::hint::black_box(
+            planner.plan_request(&op, PlanRequest::cluster_auto().with_impl(Choice::Auto)),
+        );
+    });
+    let iratio = impl_auto.mean_us / cluster_auto.mean_us;
+    report_scalar("plan_impl_auto", "impl_auto_over_cluster_auto_cost", iratio);
+    report_scalar(
+        "plan_impl_auto",
+        "impl_auto_over_fixed_cost",
+        impl_auto.mean_us / fixed.mean_us,
+    );
+    assert!(
+        iratio <= 2.0,
+        "acceptance: the 5-axis search must stay within 2x the 4-axis plan ({iratio:.2}x)"
+    );
+    // per-impl sweep: a forced impl re-plans at fixed-plan cost (one
+    // strategy point), proving the axis is free unless searched
+    let forced = bench("plan_fixed_impl_tiled4x4_cout3072", 2, 30, || {
+        std::hint::black_box(planner.plan_request(
+            &op,
+            PlanRequest::fixed(3, SyncMechanism::SvmPolling)
+                .with_impl(Choice::Fixed(ReqImpl::Tiled4x4)),
+        ));
+    });
+    report_scalar(
+        "partition_search",
+        "forced_impl_over_fixed_cost",
+        forced.mean_us / fixed.mean_us,
     );
 
     // the oracle the planner replaces (simulated measurements, step 8)

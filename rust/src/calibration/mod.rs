@@ -18,9 +18,11 @@
 //! * `solver.rs` — per-parameter-group least squares against the analytic
 //!   cost models: per-cluster CPU throughput / thread-efficiency tables /
 //!   bandwidth / launch cost on `cpu_model_us` residuals, the GPU's
-//!   continuous kernel/dispatch constants, and sync overheads read off
-//!   paired co-execution samples; robust (median/MAD) outlier rejection
-//!   throughout.
+//!   continuous kernel/dispatch constants (plus, when impl-tagged
+//!   samples arrive, each forced kernel implementation's `gpu.<impl>.*`
+//!   cost factors — untagged batches never grow extra groups), and sync
+//!   overheads read off paired co-execution samples; robust (median/MAD)
+//!   outlier rejection throughout.
 //! * [`fit_spec`] — orchestrates the groups and produces a [`FitReport`]:
 //!   per-group residuals and coverage, with under-sampled or
 //!   ill-conditioned groups *falling back to the base spec* instead of
@@ -51,14 +53,14 @@ mod solver;
 pub use sample::{Placement, Sample, SampleSet, MAX_FIT_SAMPLES};
 pub use solver::{MAX_GROUP_RESID, MIN_GROUP_SAMPLES};
 
-use crate::device::{ClusterId, SocSpec};
+use crate::device::{ClusterId, ReqImpl, SocSpec};
 use crate::ops::OpConfig;
 use anyhow::{ensure, Result};
 
 /// One parameter group's fitting outcome.
 #[derive(Debug, Clone)]
 pub struct GroupFit {
-    /// Group name: `cpu.<cluster>`, `gpu`, or `sync`.
+    /// Group name: `cpu.<cluster>`, `gpu`, `gpu.<impl>`, or `sync`.
     pub group: String,
     /// Samples addressed to this group.
     pub n_samples: usize,
@@ -78,7 +80,9 @@ pub struct GroupFit {
 /// The result of fitting a [`SampleSet`] against a base [`SocSpec`].
 #[derive(Debug, Clone)]
 pub struct FitReport {
-    /// Per-group outcomes, in spec order (CPU clusters, GPU, sync).
+    /// Per-group outcomes, in spec order (CPU clusters, GPU, per-impl
+    /// GPU groups — present only when impl-tagged samples arrived —
+    /// then sync).
     pub groups: Vec<GroupFit>,
     /// The base spec with every *fitted* group's parameters applied
     /// through the calibration surface and re-validated. Groups that
@@ -166,6 +170,9 @@ pub fn fit_spec(base: &SocSpec, set: &SampleSet) -> Result<FitReport> {
         base.cpu.clusters.iter().map(|c| (c.id, Vec::new())).collect();
     let mut orphans: Vec<(ClusterId, usize)> = Vec::new();
     let mut gpu: Vec<(OpConfig, f64)> = Vec::new();
+    // per-impl groups materialize only when a tagged sample arrives, so
+    // untagged batches keep the exact historical group list
+    let mut gpu_impls: Vec<(ReqImpl, Vec<(OpConfig, f64)>)> = Vec::new();
     let mut coexec: Vec<solver::CoexecSample> = Vec::new();
     for s in set.samples() {
         match s.placement {
@@ -178,12 +185,19 @@ pub fn fit_spec(base: &SocSpec, set: &SampleSet) -> Result<FitReport> {
                     },
                 }
             }
-            Placement::Gpu => gpu.push((s.op, s.observed_us)),
+            Placement::Gpu => match s.imp {
+                ReqImpl::Default => gpu.push((s.op, s.observed_us)),
+                imp => match gpu_impls.iter_mut().find(|(i, _)| *i == imp) {
+                    Some((_, v)) => v.push((s.op, s.observed_us)),
+                    None => gpu_impls.push((imp, vec![(s.op, s.observed_us)])),
+                },
+            },
             Placement::Coexec { c_cpu, cluster, threads, mech } => {
-                coexec.push((s.op, c_cpu, cluster, threads, mech, s.observed_us));
+                coexec.push((s.op, c_cpu, cluster, threads, mech, s.imp, s.observed_us));
             }
         }
     }
+    gpu_impls.sort_by_key(|(i, _)| i.index());
 
     let mut groups: Vec<GroupFit> = Vec::new();
     for (id, samples) in &cpu {
@@ -204,6 +218,17 @@ pub fn fit_spec(base: &SocSpec, set: &SampleSet) -> Result<FitReport> {
         });
     }
     groups.push(solver::fit_gpu(&base.gpu, &gpu));
+
+    // per-impl cost constants are fitted against the *fitted* shared GPU
+    // microarchitecture, so each group absorbs only what distinguishes
+    // its forced kernel from the generic path
+    for (imp, samples) in &gpu_impls {
+        let mut scratch = base.clone();
+        let so_far: Vec<(String, f64)> =
+            groups.iter().filter(|g| g.fitted).flat_map(|g| g.params.clone()).collect();
+        scratch.apply_params(&so_far)?;
+        groups.push(solver::fit_gpu_impl(&scratch.gpu, *imp, samples));
+    }
 
     // sync overheads are read off coexec samples *after* the compute
     // halves are fitted: apply what we have so far to a scratch spec
@@ -349,6 +374,7 @@ mod tests {
             set.push(Sample {
                 op: OpConfig::Linear(crate::ops::LinearConfig::new(i, 64 * i, 128 * i)),
                 placement: Placement::Cpu { cluster: ClusterId::Prime, threads: 1 + i % 3 },
+                imp: ReqImpl::Default,
                 observed_us: if i % 2 == 0 { 1.0 } else { 1e6 },
             })
             .unwrap();
@@ -376,6 +402,61 @@ mod tests {
         // and sigmas are never fitted
         assert_eq!(rebuilt.cpu.noise_sigma, base.cpu.noise_sigma);
         assert!(report.overrides().iter().all(|(k, _)| !k.contains("noise_sigma")));
+    }
+
+    #[test]
+    fn untagged_batches_keep_the_historical_group_list() {
+        let report =
+            fit_spec(&SocSpec::pixel5(), &SampleSet::synthesize(&Device::pixel5(), 2)).unwrap();
+        assert_eq!(report.groups.len(), 5, "{}", report.render());
+        assert!(
+            report.groups.iter().all(|g| !g.group.starts_with("gpu.")),
+            "no per-impl group without a tagged sample:\n{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn impl_tagged_fit_recovers_per_impl_constants() {
+        // a device whose forced kernels are mis-calibrated relative to
+        // the base spec: winograd 3x as expensive per MAC, direct with a
+        // heavy per-dispatch cost, tiled_4x4 mildly slower
+        let mut truth = SocSpec::pixel5();
+        truth
+            .apply_params(&[
+                ("gpu.winograd.cost_factor", 3.0),
+                ("gpu.direct.dispatch_us", 200.0),
+                ("gpu.tiled_4x4.cost_factor", 1.8),
+                ("cpu.noise_sigma", 0.0),
+                ("gpu.noise_sigma", 0.0),
+                ("sync.noise_sigma", 0.0),
+            ])
+            .unwrap();
+        let device = Device::new(truth);
+        let mut set = SampleSet::synthesize(&device, 1);
+        for s in SampleSet::synthesize_impls(&device, 1).samples() {
+            set.push(*s).unwrap();
+        }
+        let report = fit_spec(&SocSpec::pixel5(), &set).unwrap();
+        // 3 clusters + gpu + 3 per-impl groups + sync
+        assert_eq!(report.groups.len(), 8, "{}", report.render());
+        let within = |key: &str, want: f64, tol: f64| {
+            let got = report
+                .overrides()
+                .iter()
+                .find(|(k, _)| k.as_str() == key)
+                .unwrap_or_else(|| panic!("{key} not fitted:\n{}", report.render()))
+                .1;
+            assert!(
+                (got / want - 1.0).abs() < tol,
+                "{key}: fitted {got:.4}, truth {want} (tol {tol}):\n{}",
+                report.render()
+            );
+        };
+        within("gpu.winograd.cost_factor", 3.0, 0.05);
+        within("gpu.direct.dispatch_us", 200.0, 0.10);
+        within("gpu.tiled_4x4.cost_factor", 1.8, 0.05);
+        report.spec.validate().unwrap();
     }
 
     #[test]

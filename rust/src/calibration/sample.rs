@@ -14,22 +14,30 @@
 //!
 //! ```text
 //! sample   = "cpu"    op-shape cluster threads t_us
-//!          | "gpu"    op-shape t_us
-//!          | "coexec" op-shape c_cpu cluster threads mech t_us
+//!          | "gpu"    op-shape ["impl=" impl] t_us
+//!          | "coexec" op-shape c_cpu cluster threads mech ["impl=" impl] t_us
 //! op-shape = "linear" l cin cout | "conv" h w cin cout k s
 //! cluster  = "prime" | "gold" | "silver"
 //! mech     = "svm_polling" | "event_wait"
+//! impl     = "default" | "direct" | "winograd" | "tiled_4x4"
 //! t_us     = observed mean latency in microseconds (positive float)
 //! ```
 //!
 //! `coexec` samples must genuinely split (`0 < c_cpu < cout`): exclusive
 //! runs carry no sync overhead, so they belong in `cpu`/`gpu` records.
+//! `gpu` and `coexec` records may tag which kernel implementation the GPU
+//! ran; an untagged record keeps its historical meaning — the default
+//! (delegate-heuristic) implementation — so pre-impl `FIT` lines fit the
+//! exact same constants they always did. `auto` is not a valid sample tag
+//! (a measurement observed *some specific* kernel), and a tag must be
+//! eligible for the op's shape (winograd: 3x3 stride-1 conv only;
+//! tiled_4x4: conv or vec4-aligned linear).
 //! [`Sample::wire`] renders exactly this grammar, so a profiling client
 //! (or [`SampleSet::synthesize`], the simulator's stand-in for one) can
 //! build `FIT` lines without string-formatting knowledge of its own.
 
 use crate::device::cpu::MAX_CLUSTER_THREADS;
-use crate::device::{ClusterId, Device, SyncMechanism};
+use crate::device::{ClusterId, Device, ReqImpl, SyncMechanism};
 use crate::ops::{ChannelSplit, ConvConfig, LinearConfig, OpConfig};
 use anyhow::{anyhow, ensure, Result};
 
@@ -68,6 +76,10 @@ pub enum Placement {
 pub struct Sample {
     pub op: OpConfig,
     pub placement: Placement,
+    /// Which kernel implementation the GPU (or the GPU half of a coexec
+    /// run) executed. `Default` for untagged records and for `cpu`
+    /// placements, which have no GPU half.
+    pub imp: ReqImpl,
     /// Observed (mean) latency, microseconds.
     pub observed_us: f64,
 }
@@ -119,16 +131,22 @@ fn parse_op_shape<'a>(parts: &'a [&'a str]) -> Result<(OpConfig, &'a [&'a str])>
 }
 
 impl Sample {
-    /// Render this sample in the wire grammar (module docs).
+    /// Render this sample in the wire grammar (module docs). The impl tag
+    /// is emitted only when it carries information — the default impl
+    /// renders as the historical untagged line, byte for byte.
     pub fn wire(&self) -> String {
         let op = op_wire(&self.op);
+        let tag = match self.imp {
+            ReqImpl::Default => String::new(),
+            i => format!("impl={} ", i.wire()),
+        };
         match self.placement {
             Placement::Cpu { cluster, threads } => {
                 format!("cpu {op} {} {threads} {:.3}", cluster.wire(), self.observed_us)
             }
-            Placement::Gpu => format!("gpu {op} {:.3}", self.observed_us),
+            Placement::Gpu => format!("gpu {op} {tag}{:.3}", self.observed_us),
             Placement::Coexec { c_cpu, cluster, threads, mech } => format!(
-                "coexec {op} {c_cpu} {} {threads} {} {:.3}",
+                "coexec {op} {c_cpu} {} {threads} {} {tag}{:.3}",
                 cluster.wire(),
                 mech.wire(),
                 self.observed_us
@@ -150,6 +168,17 @@ impl Sample {
         let threads_of = |tok: &str| -> Result<usize> {
             tok.parse().map_err(|_| anyhow!("bad sample: malformed threads {tok}"))
         };
+        // Optional `impl=<name>` tag before the latency; absent ⇒ Default.
+        let impl_tag = |rest: &'_ [&str]| -> Result<(ReqImpl, usize)> {
+            match rest.first().and_then(|tok| tok.strip_prefix("impl=")) {
+                Some(name) => ReqImpl::parse(name)
+                    .map(|i| (i, 1))
+                    .ok_or_else(|| {
+                        anyhow!("bad sample: unknown impl {name} (default|direct|winograd|tiled_4x4)")
+                    }),
+                None => Ok((ReqImpl::Default, 0)),
+            }
+        };
         match parts.as_slice() {
             ["cpu", rest @ ..] => {
                 let (op, rest) = parse_op_shape(rest)?;
@@ -160,6 +189,7 @@ impl Sample {
                             cluster: cluster_of(cl)?,
                             threads: threads_of(t)?,
                         },
+                        imp: ReqImpl::Default,
                         observed_us: observed(us)?,
                     }),
                     _ => Err(anyhow!(
@@ -169,29 +199,46 @@ impl Sample {
             }
             ["gpu", rest @ ..] => {
                 let (op, rest) = parse_op_shape(rest)?;
-                match rest {
-                    [us] => Ok(Sample { op, placement: Placement::Gpu, observed_us: observed(us)? }),
-                    _ => Err(anyhow!("bad sample: expected gpu <op-shape> <t_us>")),
+                let (imp, skip) = impl_tag(rest)?;
+                match &rest[skip..] {
+                    [us] => Ok(Sample {
+                        op,
+                        placement: Placement::Gpu,
+                        imp,
+                        observed_us: observed(us)?,
+                    }),
+                    _ => Err(anyhow!("bad sample: expected gpu <op-shape> [impl=<i>] <t_us>")),
                 }
             }
             ["coexec", rest @ ..] => {
                 let (op, rest) = parse_op_shape(rest)?;
                 match rest {
-                    [c_cpu, cl, t, mech, us] => Ok(Sample {
-                        op,
-                        placement: Placement::Coexec {
-                            c_cpu: threads_of(c_cpu)
-                                .map_err(|_| anyhow!("bad sample: malformed c_cpu {c_cpu}"))?,
-                            cluster: cluster_of(cl)?,
-                            threads: threads_of(t)?,
-                            mech: SyncMechanism::parse(mech).ok_or_else(|| {
-                                anyhow!("bad sample: unknown mech {mech} (svm_polling|event_wait)")
-                            })?,
-                        },
-                        observed_us: observed(us)?,
-                    }),
+                    [c_cpu, cl, t, mech, rest @ ..] => {
+                        let (imp, skip) = impl_tag(rest)?;
+                        let [us] = &rest[skip..] else {
+                            return Err(anyhow!(
+                                "bad sample: expected coexec <op-shape> <c_cpu> <cluster> <threads> <mech> [impl=<i>] <t_us>"
+                            ));
+                        };
+                        Ok(Sample {
+                            op,
+                            placement: Placement::Coexec {
+                                c_cpu: threads_of(c_cpu)
+                                    .map_err(|_| anyhow!("bad sample: malformed c_cpu {c_cpu}"))?,
+                                cluster: cluster_of(cl)?,
+                                threads: threads_of(t)?,
+                                mech: SyncMechanism::parse(mech).ok_or_else(|| {
+                                    anyhow!(
+                                        "bad sample: unknown mech {mech} (svm_polling|event_wait)"
+                                    )
+                                })?,
+                            },
+                            imp,
+                            observed_us: observed(us)?,
+                        })
+                    }
                     _ => Err(anyhow!(
-                        "bad sample: expected coexec <op-shape> <c_cpu> <cluster> <threads> <mech> <t_us>"
+                        "bad sample: expected coexec <op-shape> <c_cpu> <cluster> <threads> <mech> [impl=<i>] <t_us>"
                     )),
                 }
             }
@@ -231,6 +278,10 @@ impl SampleSet {
                     threads_ok(threads),
                     "bad sample: threads {threads} out of range (1..={MAX_CLUSTER_THREADS})"
                 );
+                ensure!(
+                    s.imp == ReqImpl::Default,
+                    "bad sample: cpu placements take no impl tag"
+                );
             }
             Placement::Gpu => {}
             Placement::Coexec { c_cpu, threads, .. } => {
@@ -245,6 +296,15 @@ impl SampleSet {
                 );
             }
         }
+        // An ineligible impl tag is a client-side labeling error; reject
+        // it here so the analytic models (which panic on ineligible
+        // combinations, by design) never see one during fitting.
+        ensure!(
+            s.imp.eligible(&s.op),
+            "bad sample: impl {} is not eligible for this op \
+             (winograd: 3x3 stride-1 conv only; tiled_4x4: conv or vec4-aligned linear)",
+            s.imp.wire()
+        );
         self.samples.push(s);
         Ok(())
     }
@@ -311,6 +371,7 @@ impl SampleSet {
                     add(Sample {
                         op: *op,
                         placement: Placement::Cpu { cluster: cl.id, threads },
+                        imp: ReqImpl::Default,
                         observed_us: device.measure_cpu_mean(op, cl.id, threads, trials),
                     });
                 }
@@ -333,6 +394,7 @@ impl SampleSet {
             add(Sample {
                 op: *op,
                 placement: Placement::Gpu,
+                imp: ReqImpl::Default,
                 observed_us: device.measure_gpu_mean(op, trials),
             });
         }
@@ -351,12 +413,79 @@ impl SampleSet {
                     add(Sample {
                         op,
                         placement: Placement::Coexec { c_cpu: c1, cluster, threads: 1, mech },
+                        imp: ReqImpl::Default,
                         observed_us: device.measure_coexec_mean(
                             &op,
                             ChannelSplit::new(c1, op.cout() - c1),
                             cluster,
                             1,
                             mech,
+                            trials,
+                        ),
+                    });
+                }
+            }
+        }
+        set
+    }
+
+    /// The per-implementation extension of [`Self::synthesize`]: a GPU
+    /// sweep that pins each non-default kernel implementation over its
+    /// eligible shapes — large compute-bound ops (cost factor) plus
+    /// dispatch-dominated tiny ops (per-dispatch overhead) so both
+    /// constants of every `gpu.<impl>.*` group are identifiable — and a
+    /// pair of tagged strict-coexec records per impl so the co-execution
+    /// path of the per-impl model is exercised too. Combine with
+    /// [`Self::synthesize`] for a full campaign; alone, it only
+    /// identifies the per-impl groups.
+    pub fn synthesize_impls(device: &Device, trials: u64) -> SampleSet {
+        let mut set = SampleSet::default();
+        let mut add = |s: Sample| set.push(s).expect("synthesized campaign stays in bounds");
+
+        let gpu_ops = [
+            OpConfig::Linear(LinearConfig::new(50, 768, 3072)), // vec4-aligned
+            OpConfig::Linear(LinearConfig::new(64, 2048, 2048)),
+            OpConfig::Linear(LinearConfig::new(1, 16, 32)), // dispatch-bound
+            // six 3x3 stride-1 convs: the winograd group sees only these,
+            // and a fittable group needs MIN_GROUP_SAMPLES of them
+            OpConfig::Conv(ConvConfig::new(32, 32, 128, 256, 3, 1)),
+            OpConfig::Conv(ConvConfig::new(56, 56, 64, 128, 3, 1)),
+            OpConfig::Conv(ConvConfig::new(28, 28, 96, 96, 3, 1)),
+            OpConfig::Conv(ConvConfig::new(16, 16, 32, 64, 3, 1)),
+            OpConfig::Conv(ConvConfig::new(12, 12, 24, 48, 3, 1)),
+            OpConfig::Conv(ConvConfig::new(8, 8, 16, 32, 3, 1)), // dispatch-bound
+            OpConfig::Conv(ConvConfig::new(64, 64, 128, 512, 3, 2)), // stride 2
+        ];
+        for imp in [ReqImpl::Direct, ReqImpl::Winograd, ReqImpl::Tiled4x4] {
+            for op in gpu_ops.iter().filter(|op| imp.eligible(op)) {
+                add(Sample {
+                    op: *op,
+                    placement: Placement::Gpu,
+                    imp,
+                    observed_us: device.measure_gpu_impl_mean(op, imp, trials),
+                });
+            }
+        }
+
+        let cluster = device.spec.cpu.default_cluster_id();
+        let coexec_ops: [(OpConfig, usize); 2] = [
+            (OpConfig::Linear(LinearConfig::new(4, 32, 64)), 16),
+            (OpConfig::Conv(ConvConfig::new(8, 8, 16, 48, 3, 1)), 16),
+        ];
+        for imp in [ReqImpl::Direct, ReqImpl::Winograd, ReqImpl::Tiled4x4] {
+            for &(op, c_cpu) in coexec_ops.iter().filter(|(op, _)| imp.eligible(op)) {
+                for mech in SyncMechanism::ALL {
+                    add(Sample {
+                        op,
+                        placement: Placement::Coexec { c_cpu, cluster, threads: 1, mech },
+                        imp,
+                        observed_us: device.measure_coexec_impl_mean(
+                            &op,
+                            ChannelSplit::new(c_cpu, op.cout() - c_cpu),
+                            cluster,
+                            1,
+                            mech,
+                            imp,
                             trials,
                         ),
                     });
@@ -384,11 +513,17 @@ mod tests {
             "gpu conv 64 64 128 512 3 2 8000.000",
             "coexec linear 4 32 64 16 prime 1 svm_polling 151.500",
             "coexec conv 8 8 16 48 16 gold 2 event_wait 310.000",
+            "gpu linear 50 768 3072 impl=tiled_4x4 2480.125",
+            "gpu conv 56 56 64 128 3 1 impl=winograd 1234.000",
+            "gpu conv 64 64 128 512 3 2 impl=direct 8000.000",
+            "coexec conv 8 8 16 48 16 gold 2 event_wait impl=winograd 310.000",
         ] {
             let s = sample(line);
             assert_eq!(s.wire(), line, "wire() must reproduce the grammar");
             assert_eq!(sample(&s.wire()), s);
         }
+        // untagged lines parse to (and render from) the default impl
+        assert_eq!(sample("gpu linear 50 768 3072 2480.125").imp, ReqImpl::Default);
     }
 
     #[test]
@@ -406,6 +541,10 @@ mod tests {
             "gpu linear 1 1 8 fast",               // malformed latency
             "coexec linear 1 1 8 4 prime 1 tls 5", // unknown mech
             "coexec linear 1 1 8 4 prime 1 5.0",   // missing mech
+            "gpu linear 1 1 8 impl=im2col 5.0",    // unknown impl
+            "gpu linear 1 1 8 impl=auto 5.0",      // auto is not a sample tag
+            "gpu linear 1 1 8 impl=direct",        // tag but missing latency
+            "cpu linear 1 1 8 prime 1 impl=direct 5.0", // cpu takes no impl
         ] {
             assert!(Sample::parse(bad).is_err(), "{bad:?} must be rejected");
         }
@@ -425,6 +564,11 @@ mod tests {
             "cpu linear 8 64 128 prime 99 42.0",
             "coexec linear 8 64 128 128 prime 1 svm_polling 42.0", // not a split
             "coexec linear 8 64 128 200 prime 1 svm_polling 42.0",
+            "gpu linear 8 64 128 impl=winograd 42.0", // winograd never fits linear
+            "gpu linear 8 63 128 impl=tiled_4x4 42.0", // cin not vec4-aligned
+            "gpu conv 8 8 16 32 5 1 impl=winograd 42.0", // 5x5 kernel
+            "gpu conv 8 8 16 32 3 2 impl=winograd 42.0", // stride 2
+            "coexec conv 8 8 16 32 3 2 8 prime 1 svm_polling impl=winograd 42.0", // stride 2
         ] {
             let s = Sample::parse(bad).expect("parses; push rejects");
             assert!(set.push(s).is_err(), "{bad:?} must be rejected by push");
@@ -482,5 +626,38 @@ mod tests {
         // every synthesized sample survives the wire round trip
         let replayed = SampleSet::parse_segments(set.wire().split(';')).unwrap();
         assert_eq!(replayed.len(), set.len());
+        // the default campaign stays untagged — its FIT lines (and the
+        // parameter groups they identify) are byte-identical to pre-impl
+        assert!(set.samples().iter().all(|s| s.imp == ReqImpl::Default));
+    }
+
+    #[test]
+    fn synthesized_impl_campaign_covers_every_impl() {
+        let device = Device::pixel5();
+        let set = SampleSet::synthesize_impls(&device, 4);
+        assert!(set.len() <= MAX_FIT_SAMPLES, "{} samples", set.len());
+        for imp in [ReqImpl::Direct, ReqImpl::Winograd, ReqImpl::Tiled4x4] {
+            assert!(
+                set.samples()
+                    .iter()
+                    .any(|s| s.imp == imp && s.placement == Placement::Gpu),
+                "no gpu sample pinned to {imp:?}"
+            );
+            assert!(
+                set.samples()
+                    .iter()
+                    .any(|s| s.imp == imp
+                        && matches!(s.placement, Placement::Coexec { .. })),
+                "no coexec sample pinned to {imp:?}"
+            );
+        }
+        assert!(set.samples().iter().all(|s| s.imp != ReqImpl::Default));
+        // tagged lines survive the wire round trip too (latencies render
+        // at 3 decimals, so compare everything but the observed value)
+        let replayed = SampleSet::parse_segments(set.wire().split(';')).unwrap();
+        assert_eq!(replayed.len(), set.len());
+        for (a, b) in replayed.samples().iter().zip(set.samples()) {
+            assert_eq!((a.op, a.placement, a.imp), (b.op, b.placement, b.imp));
+        }
     }
 }

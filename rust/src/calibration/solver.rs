@@ -36,7 +36,7 @@
 
 use super::GroupFit;
 use crate::device::soc::MAX_CALIBRATED_EFF;
-use crate::device::{ClusterId, ClusterSpec, GpuSpec, SocSpec, SyncMechanism};
+use crate::device::{ClusterId, ClusterSpec, GpuSpec, ImplCost, ReqImpl, SocSpec, SyncMechanism};
 use crate::ops::OpConfig;
 
 /// Fewest usable samples a group may be fitted from.
@@ -330,6 +330,24 @@ fn gpu_model_us(g: &GpuSpec, op: &OpConfig) -> f64 {
     }
 }
 
+/// GPU latency under a requested implementation. `Default` is exactly
+/// [`gpu_model_us`]; eligibility is guaranteed by `SampleSet::push`.
+fn gpu_model_us_impl(g: &GpuSpec, op: &OpConfig, imp: ReqImpl) -> f64 {
+    match op {
+        OpConfig::Linear(c) => g.linear_latency_us_impl(c, imp).0,
+        OpConfig::Conv(c) => g.conv_latency_us_impl(c, imp).0,
+    }
+}
+
+fn impl_cost_mut(g: &mut GpuSpec, imp: ReqImpl) -> &mut ImplCost {
+    match imp {
+        ReqImpl::Direct => &mut g.direct,
+        ReqImpl::Winograd => &mut g.winograd,
+        ReqImpl::Tiled4x4 => &mut g.tiled_4x4,
+        ReqImpl::Default => unreachable!("the default impl has no forced-cost constants"),
+    }
+}
+
 /// Fit the GPU's continuous kernel/dispatch constants from
 /// `(op, observed_us)` samples. The discrete microarchitecture fields
 /// (compute units, wave size, constant memory) stay from the base spec:
@@ -376,6 +394,52 @@ pub(crate) fn fit_gpu(base: &GpuSpec, samples: &[(OpConfig, f64)]) -> GroupFit {
     finish_group(group, samples.len(), inliers.len(), mape, String::new(), &params, &fitted_gpu)
 }
 
+/// Fit one forced kernel implementation's `gpu.<impl>.*` cost constants
+/// (relative cycles-per-MAC and per-dispatch overhead) from impl-tagged
+/// `(op, observed_us)` GPU samples. The shared microarchitecture
+/// (per-CU throughput, bandwidth) is taken from `base` as-is — callers
+/// fit the untagged `gpu` group first, then each tagged group against
+/// that result, so the two constants here absorb exactly what
+/// distinguishes the forced kernel from the generic path.
+pub(crate) fn fit_gpu_impl(
+    base: &GpuSpec,
+    imp: ReqImpl,
+    samples: &[(OpConfig, f64)],
+) -> GroupFit {
+    let group = format!("gpu.{}", imp.wire());
+    if samples.len() < MIN_GROUP_SAMPLES {
+        return GroupFit {
+            group,
+            n_samples: samples.len(),
+            n_used: 0,
+            resid_mape: 0.0,
+            fitted: false,
+            note: format!("under-sampled ({} samples, need {MIN_GROUP_SAMPLES})", samples.len()),
+            params: Vec::new(),
+        };
+    }
+    let base_cost = base.impl_cost(imp).expect("per-impl groups exist only for forced impls");
+    let mut params: Vec<Param<GpuSpec>> = Vec::new();
+    let b = base_cost.cost_factor;
+    params.push(Param {
+        key: format!("gpu.{}.cost_factor", imp.wire()),
+        get: Box::new(move |g: &GpuSpec| g.impl_cost(imp).unwrap().cost_factor),
+        set: Box::new(move |g: &mut GpuSpec, v| impl_cost_mut(g, imp).cost_factor = v),
+        bracket: Box::new(move |_| scalar_bracket(b)),
+    });
+    let b = base_cost.dispatch_us;
+    params.push(Param {
+        key: format!("gpu.{}.dispatch_us", imp.wire()),
+        get: Box::new(move |g: &GpuSpec| g.impl_cost(imp).unwrap().dispatch_us),
+        set: Box::new(move |g: &mut GpuSpec, v| impl_cost_mut(g, imp).dispatch_us = v),
+        bracket: Box::new(move |_| scalar_bracket(b)),
+    });
+    let model = move |g: &GpuSpec, s: &(OpConfig, f64)| gpu_model_us_impl(g, &s.0, imp);
+    let obs = |s: &(OpConfig, f64)| s.1;
+    let (fitted_gpu, inliers, mape) = descend(base, &params, samples, &model, &obs);
+    finish_group(group, samples.len(), inliers.len(), mape, String::new(), &params, &fitted_gpu)
+}
+
 /// Shared tail: read the fitted values back out through the param list
 /// and apply the ill-conditioned gate.
 fn finish_group<M>(
@@ -413,8 +477,10 @@ fn finish_group<M>(
     }
 }
 
-/// One coexec sample as the sync solver consumes it.
-pub(crate) type CoexecSample = (OpConfig, usize, ClusterId, usize, SyncMechanism, f64);
+/// One coexec sample as the sync solver consumes it: the GPU half ran
+/// the tagged kernel implementation (`Default` for untagged records).
+pub(crate) type CoexecSample =
+    (OpConfig, usize, ClusterId, usize, SyncMechanism, ReqImpl, f64);
 
 /// Derive the four sync-overhead constants from paired co-execution
 /// samples, given a spec whose CPU/GPU halves are already fitted: each
@@ -432,7 +498,7 @@ pub(crate) fn fit_sync(spec: &SocSpec, samples: &[CoexecSample]) -> GroupFit {
         for kind in ["linear", "conv"] {
             // (observed overhead, observed total, modeled halves)
             let mut bucket: Vec<(f64, f64, f64)> = Vec::new();
-            for (op, c_cpu, cluster, threads, m, obs) in samples {
+            for (op, c_cpu, cluster, threads, m, imp, obs) in samples {
                 if *m != mech || op.kind() != kind {
                     continue;
                 }
@@ -445,7 +511,7 @@ pub(crate) fn fit_sync(spec: &SocSpec, samples: &[CoexecSample]) -> GroupFit {
                     OpConfig::Linear(c) => spec.cpu.linear_latency_us(&c, *cluster, *threads),
                     OpConfig::Conv(c) => spec.cpu.conv_latency_us(&c, *cluster, *threads),
                 };
-                let t_gpu = gpu_model_us(&spec.gpu, &op.with_cout(op.cout() - c_cpu));
+                let t_gpu = gpu_model_us_impl(&spec.gpu, &op.with_cout(op.cout() - c_cpu), *imp);
                 bucket.push((obs - t_cpu.max(t_gpu), *obs, t_cpu.max(t_gpu)));
             }
             let wire_key = format!(

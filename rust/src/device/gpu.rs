@@ -25,7 +25,7 @@
 //! augmented predictors consume — identical information to what the paper
 //! extracts from TFLite source (its Section 3.2 "feature augmentation").
 
-use crate::ops::{ConvConfig, LinearConfig};
+use crate::ops::{ConvConfig, LinearConfig, OpConfig};
 
 /// Vec4 channel packing: TFLite GPU stores tensors as 4-channel slices.
 pub const CHANNEL_SLICE: usize = 4;
@@ -84,6 +84,97 @@ impl KernelImpl {
     }
 }
 
+/// A *requested* kernel implementation: the planner-facing strategy axis.
+///
+/// `Default` is the delegate's own heuristic selection ([`KernelImpl`] via
+/// `select_conv_kernel` / the linear alignment rule) — omitting `impl=` on
+/// the wire means exactly the pre-impl behavior. The three forced variants
+/// override the heuristic and are priced with their own calibrated
+/// [`ImplCost`] constants (`gpu.<impl>.*` in `CALIBRATION_KEYS`), mirroring
+/// the named kernel variants under `python/compile/kernels/`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ReqImpl {
+    /// Delegate heuristic (legacy behavior; the only impl before PR 8).
+    #[default]
+    Default,
+    /// Direct (im2col-style) kernel: always eligible, loses vectorized
+    /// tiling (`python/compile/kernels/conv2d.py`).
+    Direct,
+    /// Winograd F(2x2,3x3): 3x3 stride-1 convs only
+    /// (`python/compile/kernels/winograd.py`).
+    Winograd,
+    /// 4x4-tiled GEMM path: vec4 channel packing
+    /// (`python/compile/kernels/matmul.py`).
+    Tiled4x4,
+}
+
+impl ReqImpl {
+    /// Every requestable implementation, `Default` first — the planner's
+    /// candidate order for `impl=auto` (ties resolve to `Default`, keeping
+    /// legacy replays exact).
+    pub const ALL: [ReqImpl; 4] =
+        [ReqImpl::Default, ReqImpl::Direct, ReqImpl::Winograd, ReqImpl::Tiled4x4];
+
+    /// Wire name, shared verbatim with `python/compile/kernels/` variants.
+    pub fn wire(&self) -> &'static str {
+        match self {
+            ReqImpl::Default => "default",
+            ReqImpl::Direct => "direct",
+            ReqImpl::Winograd => "winograd",
+            ReqImpl::Tiled4x4 => "tiled_4x4",
+        }
+    }
+
+    /// Parse a wire name (exact, lowercase). `auto` is not an impl — the
+    /// request layer maps it to `Choice::Auto` before reaching here.
+    pub fn parse(s: &str) -> Option<ReqImpl> {
+        Self::ALL.into_iter().find(|i| i.wire() == s)
+    }
+
+    /// Stable small integer for noise-stream tagging and wire summaries.
+    pub fn index(&self) -> usize {
+        match self {
+            ReqImpl::Default => 0,
+            ReqImpl::Direct => 1,
+            ReqImpl::Winograd => 2,
+            ReqImpl::Tiled4x4 => 3,
+        }
+    }
+
+    /// Can this implementation run `op` at all?
+    ///
+    /// Deliberately *split-invariant*: the answer may not depend on `cout`,
+    /// because the planner's split sweep re-prices `op.with_cout(c)` for
+    /// every candidate and an impl that flickered in and out of eligibility
+    /// across splits would make `impl=auto` unreproducible at its resolved
+    /// strategy. (That is why Tiled4x4 on linear checks `cin` alignment
+    /// only: a ragged *output* is padded by the forced kernel and shows up
+    /// as modeled waste, not ineligibility.)
+    pub fn eligible(&self, op: &OpConfig) -> bool {
+        match (self, op) {
+            (ReqImpl::Default | ReqImpl::Direct, _) => true,
+            (ReqImpl::Tiled4x4, OpConfig::Linear(l)) => l.cin % CHANNEL_SLICE == 0,
+            (ReqImpl::Tiled4x4, OpConfig::Conv(_)) => true,
+            (ReqImpl::Winograd, OpConfig::Conv(c)) => {
+                c.k == 3 && c.kw == 3 && c.stride == 1
+            }
+            (ReqImpl::Winograd, OpConfig::Linear(_)) => false,
+        }
+    }
+}
+
+/// Calibrated cost constants of one *forced* implementation (the `Default`
+/// heuristic prices through the per-[`KernelImpl`] factors instead).
+/// Exposed as `gpu.<impl>.cost_factor` / `gpu.<impl>.dispatch_us`
+/// calibration keys so `FIT` can recover them from impl-tagged samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ImplCost {
+    /// Relative cycles-per-MAC (1.0 = the generic path).
+    pub cost_factor: f64,
+    /// Kernel dispatch/launch overhead in microseconds.
+    pub dispatch_us: f64,
+}
+
 /// One GPU's microarchitectural parameters (calibrated per device — see
 /// `soc.rs` and DESIGN.md §Hardware-Adaptation: values target the paper's
 /// *relative* CPU/GPU performance, not vendor peak numbers).
@@ -104,8 +195,28 @@ pub struct GpuSpec {
     pub dispatch_us: f64,
     /// Constant-memory budget in KiB (conv_constant eligibility).
     pub const_mem_kb: usize,
+    /// Forced direct-kernel constants (`gpu.direct.*`).
+    pub direct: ImplCost,
+    /// Forced winograd-kernel constants (`gpu.winograd.*`).
+    pub winograd: ImplCost,
+    /// Forced tiled-4x4-kernel constants (`gpu.tiled_4x4.*`).
+    pub tiled_4x4: ImplCost,
     /// Measurement noise sigma (multiplicative lognormal).
     pub noise_sigma: f64,
+}
+
+impl ImplCost {
+    /// Uncalibrated defaults for a device with base dispatch overhead
+    /// `dispatch_us`: the forced path prices like the delegate's own
+    /// kernel, except `direct` which loses the tuned tiling (~35%
+    /// cycles/MAC, same penalty as the scalar linear tail).
+    pub fn defaults_for(dispatch_us: f64) -> (ImplCost, ImplCost, ImplCost) {
+        (
+            ImplCost { cost_factor: 1.35, dispatch_us }, // direct
+            ImplCost { cost_factor: 1.0, dispatch_us },  // winograd
+            ImplCost { cost_factor: 1.0, dispatch_us },  // tiled_4x4
+        )
+    }
 }
 
 /// The delegate's dispatch decision — everything the augmented predictor is
@@ -184,7 +295,8 @@ impl GpuSpec {
         cycles / (self.clock_ghz * 1e3)
     }
 
-    /// Generic grid pricing shared by all kernels.
+    /// Generic grid pricing shared by all kernels (delegate-heuristic
+    /// cost constants).
     fn price(
         &self,
         kernel: KernelImpl,
@@ -193,14 +305,39 @@ impl GpuSpec {
         macs_per_thread: f64,
         bytes: f64,
     ) -> (f64, GpuDispatch) {
+        self.price_with(
+            kernel,
+            grid_x,
+            grid_y,
+            macs_per_thread,
+            bytes,
+            kernel.cost_factor(),
+            self.dispatch_us,
+        )
+    }
+
+    /// Grid pricing with explicit cost constants — the forced-impl paths
+    /// substitute their calibrated [`ImplCost`] here; `price` delegates
+    /// with the per-[`KernelImpl`] defaults so the heuristic path is
+    /// byte-identical to the pre-impl model.
+    #[allow(clippy::too_many_arguments)]
+    fn price_with(
+        &self,
+        kernel: KernelImpl,
+        grid_x: usize,
+        grid_y: usize,
+        macs_per_thread: f64,
+        bytes: f64,
+        cost_factor: f64,
+        dispatch_us: f64,
+    ) -> (f64, GpuDispatch) {
         let (wg_x, wg_y) = choose_workgroup(grid_x, grid_y);
         let wg_count = grid_x.div_ceil(wg_x) * grid_y.div_ceil(wg_y);
         let waves = wg_count.div_ceil(self.compute_units);
-        let wg_time =
-            self.wg_time_us(wg_x * wg_y, macs_per_thread, kernel.cost_factor());
+        let wg_time = self.wg_time_us(wg_x * wg_y, macs_per_thread, cost_factor);
         let compute_us = waves as f64 * wg_time;
         let memory_us = bytes / self.mem_bw_gbps * 1e-3; // bytes/(GB/s) -> us
-        let lat = self.dispatch_us + compute_us.max(memory_us);
+        let lat = dispatch_us + compute_us.max(memory_us);
         let dispatch = GpuDispatch {
             kernel,
             wg_x,
@@ -288,6 +425,104 @@ impl GpuSpec {
             _ => unreachable!("linear kernels are not conv selections"),
         }
     }
+
+    /// Cost constants of a forced implementation; `None` for the delegate
+    /// heuristic (which prices through per-[`KernelImpl`] factors).
+    pub fn impl_cost(&self, imp: ReqImpl) -> Option<ImplCost> {
+        match imp {
+            ReqImpl::Default => None,
+            ReqImpl::Direct => Some(self.direct),
+            ReqImpl::Winograd => Some(self.winograd),
+            ReqImpl::Tiled4x4 => Some(self.tiled_4x4),
+        }
+    }
+
+    /// Linear-layer latency under a *requested* implementation. `Default`
+    /// is exactly [`GpuSpec::linear_latency_us`]; the caller must have
+    /// checked [`ReqImpl::eligible`] for the rest.
+    pub fn linear_latency_us_impl(
+        &self,
+        cfg: &LinearConfig,
+        imp: ReqImpl,
+    ) -> (f64, GpuDispatch) {
+        let Some(cost) = self.impl_cost(imp) else {
+            return self.linear_latency_us(cfg);
+        };
+        let os = cfg.cout.div_ceil(CHANNEL_SLICE);
+        let rt = cfg.l.div_ceil(TILE_ROWS);
+        // The forced tiled path always runs the vec4 kernel (padding a
+        // ragged output slice — the waste is in the grid model); direct
+        // always runs the scalar-tail shape.
+        let kernel = match imp {
+            ReqImpl::Direct => KernelImpl::LinearScalar,
+            ReqImpl::Tiled4x4 => KernelImpl::LinearVec4,
+            _ => panic!("impl {} is not eligible for linear ops", imp.wire()),
+        };
+        let macs_per_thread = (cfg.cin * TILE_ROWS * CHANNEL_SLICE) as f64;
+        self.price_with(
+            kernel,
+            os,
+            rt,
+            macs_per_thread,
+            cfg.bytes(),
+            cost.cost_factor,
+            cost.dispatch_us,
+        )
+    }
+
+    /// Convolution latency under a *requested* implementation. `Default`
+    /// is exactly [`GpuSpec::conv_latency_us`]; the caller must have
+    /// checked [`ReqImpl::eligible`] for the rest.
+    pub fn conv_latency_us_impl(
+        &self,
+        cfg: &ConvConfig,
+        imp: ReqImpl,
+    ) -> (f64, GpuDispatch) {
+        let Some(cost) = self.impl_cost(imp) else {
+            return self.conv_latency_us(cfg);
+        };
+        let os = cfg.cout.div_ceil(CHANNEL_SLICE);
+        let macs_direct =
+            (cfg.k * cfg.kw * cfg.cin * TILE_ROWS * CHANNEL_SLICE) as f64;
+        match imp {
+            ReqImpl::Winograd => {
+                assert!(
+                    cfg.k == 3 && cfg.kw == 3 && cfg.stride == 1,
+                    "winograd requires a 3x3 stride-1 conv"
+                );
+                // Same F(2x2,3x3) analytic arm as the heuristic path, with
+                // this impl's calibrated constants.
+                let tiles = cfg.h_out().div_ceil(2) * cfg.w_out().div_ceil(2);
+                let macs_per_thread = macs_direct / 2.25;
+                let transform_bytes =
+                    (16 * tiles * (cfg.cin + cfg.cout)) as f64 * 4.0;
+                let (lat, d) = self.price_with(
+                    KernelImpl::Winograd,
+                    os,
+                    tiles.div_ceil(TILE_ROWS),
+                    macs_per_thread,
+                    cfg.bytes() + transform_bytes,
+                    cost.cost_factor,
+                    cost.dispatch_us,
+                );
+                let transform_us = transform_bytes / self.mem_bw_gbps * 1e-3;
+                (lat + transform_us, d)
+            }
+            ReqImpl::Direct | ReqImpl::Tiled4x4 => {
+                let pt = cfg.out_positions().div_ceil(TILE_ROWS);
+                self.price_with(
+                    KernelImpl::ConvGeneric,
+                    os,
+                    pt,
+                    macs_direct,
+                    cfg.bytes(),
+                    cost.cost_factor,
+                    cost.dispatch_us,
+                )
+            }
+            ReqImpl::Default => unreachable!("handled by impl_cost above"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -295,6 +530,7 @@ mod tests {
     use super::*;
 
     fn spec() -> GpuSpec {
+        let (direct, winograd, tiled_4x4) = ImplCost::defaults_for(35.0);
         GpuSpec {
             compute_units: 12,
             wave_size: 64,
@@ -303,6 +539,9 @@ mod tests {
             mem_bw_gbps: 40.0,
             dispatch_us: 35.0,
             const_mem_kb: 32,
+            direct,
+            winograd,
+            tiled_4x4,
             noise_sigma: 0.0,
         }
     }
@@ -392,5 +631,100 @@ mod tests {
         let (wx, wy) = choose_workgroup(9, 3);
         assert!(waste_of(9, 3, (wx, wy)) >= 0.0);
         assert_eq!(waste_of(64, 4, (64, 2)), 0.0);
+    }
+
+    #[test]
+    fn req_impl_wire_roundtrips_and_rejects_unknown() {
+        for imp in ReqImpl::ALL {
+            assert_eq!(ReqImpl::parse(imp.wire()), Some(imp));
+        }
+        assert_eq!(ReqImpl::parse("auto"), None, "auto is a Choice, not an impl");
+        assert_eq!(ReqImpl::parse("Winograd"), None, "wire names are lowercase");
+        assert_eq!(ReqImpl::parse("im2col"), None);
+    }
+
+    #[test]
+    fn impl_eligibility_is_split_invariant() {
+        use crate::ops::OpConfig;
+        // winograd: 3x3 stride-1 conv only, regardless of channel counts
+        let wino_ok = OpConfig::Conv(ConvConfig::new(64, 64, 128, 192, 3, 1));
+        let strided = OpConfig::Conv(ConvConfig::new(64, 64, 128, 192, 3, 2));
+        let lin = OpConfig::Linear(LinearConfig::new(50, 768, 3072));
+        assert!(ReqImpl::Winograd.eligible(&wino_ok));
+        assert!(!ReqImpl::Winograd.eligible(&strided));
+        assert!(!ReqImpl::Winograd.eligible(&lin));
+        // tiled_4x4 on linear: reduction alignment only — never cout, so
+        // eligibility cannot flicker across the planner's split sweep
+        let ragged_cin = OpConfig::Linear(LinearConfig::new(50, 770, 3072));
+        assert!(ReqImpl::Tiled4x4.eligible(&lin));
+        assert!(!ReqImpl::Tiled4x4.eligible(&ragged_cin));
+        for op in [&wino_ok, &strided, &lin, &ragged_cin] {
+            assert!(ReqImpl::Default.eligible(op));
+            assert!(ReqImpl::Direct.eligible(op));
+            for imp in ReqImpl::ALL {
+                for cout in [4, 96, 256, 3072] {
+                    assert_eq!(
+                        imp.eligible(op),
+                        imp.eligible(&op.with_cout(cout)),
+                        "{} must not depend on cout",
+                        imp.wire()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_impl_prices_identically_to_the_heuristic() {
+        let s = spec();
+        let lin = LinearConfig::new(50, 768, 3072);
+        assert_eq!(
+            s.linear_latency_us_impl(&lin, ReqImpl::Default),
+            s.linear_latency_us(&lin)
+        );
+        let conv = ConvConfig::fig6b(256);
+        assert_eq!(
+            s.conv_latency_us_impl(&conv, ReqImpl::Default),
+            s.conv_latency_us(&conv)
+        );
+    }
+
+    #[test]
+    fn forced_impl_matching_the_heuristic_prices_identically() {
+        // Uncalibrated ImplCost defaults are chosen so that forcing the
+        // impl the delegate would pick anyway changes nothing — that makes
+        // Default-first tie-breaking resolve auto to Default on legacy ops.
+        let s = spec();
+        let wino_op = ConvConfig::fig6b(256);
+        assert_eq!(s.select_conv_kernel(&wino_op), KernelImpl::Winograd);
+        assert_eq!(
+            s.conv_latency_us_impl(&wino_op, ReqImpl::Winograd).0,
+            s.conv_latency_us(&wino_op).0
+        );
+        let lin = LinearConfig::new(50, 768, 3072); // vec4-aligned
+        assert_eq!(
+            s.linear_latency_us_impl(&lin, ReqImpl::Tiled4x4).0,
+            s.linear_latency_us(&lin).0
+        );
+    }
+
+    #[test]
+    fn forced_impl_constants_reach_the_price() {
+        let mut s = spec();
+        let conv = ConvConfig::fig6b(256);
+        let base = s.conv_latency_us_impl(&conv, ReqImpl::Winograd).0;
+        s.winograd.cost_factor = 3.0;
+        let degraded = s.conv_latency_us_impl(&conv, ReqImpl::Winograd).0;
+        assert!(degraded > base, "cost_factor must scale the forced price");
+        // ...and only that impl's price moves
+        assert_eq!(
+            s.conv_latency_us_impl(&conv, ReqImpl::Direct).0,
+            spec().conv_latency_us_impl(&conv, ReqImpl::Direct).0
+        );
+        let lin = LinearConfig::new(50, 768, 3072);
+        let base = s.linear_latency_us_impl(&lin, ReqImpl::Direct).0;
+        s.direct.dispatch_us += 40.0;
+        let bumped = s.linear_latency_us_impl(&lin, ReqImpl::Direct).0;
+        assert!((bumped - base - 40.0).abs() < 1e-9, "dispatch_us is additive");
     }
 }

@@ -17,7 +17,7 @@ pub mod soc;
 pub mod sync_model;
 
 pub use cpu::{ClusterId, ClusterSpec, CpuSpec};
-pub use gpu::{GpuDispatch, GpuSpec, KernelImpl};
+pub use gpu::{GpuDispatch, GpuSpec, ImplCost, KernelImpl, ReqImpl};
 pub use soc::{validate_device_name, SocSpec, CALIBRATION_KEYS};
 pub use sync_model::{SyncMechanism, SyncSpec};
 
@@ -160,6 +160,20 @@ impl Device {
         self.gpu_model_us(op).1
     }
 
+    /// Model GPU latency (µs) and dispatch under a requested kernel
+    /// implementation. `ReqImpl::Default` is exactly [`Device::gpu_model_us`].
+    pub fn gpu_model_us_for(&self, op: &OpConfig, imp: ReqImpl) -> (f64, GpuDispatch) {
+        match op {
+            OpConfig::Linear(c) => self.spec.gpu.linear_latency_us_impl(c, imp),
+            OpConfig::Conv(c) => self.spec.gpu.conv_latency_us_impl(c, imp),
+        }
+    }
+
+    /// Dispatch decision only, under a requested implementation.
+    pub fn gpu_dispatch_for(&self, op: &OpConfig, imp: ReqImpl) -> GpuDispatch {
+        self.gpu_model_us_for(op, imp).1
+    }
+
     // ---- noisy measurements ----
 
     /// One noisy CPU latency measurement (µs) on a cluster.
@@ -176,8 +190,31 @@ impl Device {
 
     /// One noisy GPU latency measurement (µs).
     pub fn measure_gpu(&self, op: &OpConfig, trial: u64) -> f64 {
-        let (model, _) = self.gpu_model_us(op);
-        model * lognormal_factor(self.op_key(op, 200, trial), self.spec.gpu.noise_sigma)
+        self.measure_gpu_impl(op, ReqImpl::Default, trial)
+    }
+
+    /// Noise-stream tag for a GPU measurement under an implementation.
+    /// `Default` keeps the pre-impl tag 200, reproducing every legacy
+    /// measurement bit-for-bit; forced impls draw independent streams.
+    fn gpu_proc_tag(imp: ReqImpl) -> u64 {
+        match imp {
+            ReqImpl::Default => 200,
+            ReqImpl::Direct => 210,
+            ReqImpl::Winograd => 211,
+            ReqImpl::Tiled4x4 => 212,
+        }
+    }
+
+    /// One noisy GPU measurement (µs) under a requested implementation.
+    pub fn measure_gpu_impl(&self, op: &OpConfig, imp: ReqImpl, trial: u64) -> f64 {
+        let (model, _) = self.gpu_model_us_for(op, imp);
+        let key = self.op_key(op, Self::gpu_proc_tag(imp), trial);
+        model * lognormal_factor(key, self.spec.gpu.noise_sigma)
+    }
+
+    /// Mean of `n` GPU measurements under a requested implementation.
+    pub fn measure_gpu_impl_mean(&self, op: &OpConfig, imp: ReqImpl, n: u64) -> f64 {
+        (0..n).map(|t| self.measure_gpu_impl(op, imp, t)).sum::<f64>() / n as f64
     }
 
     /// One noisy measurement on a given processor (µs); `Cpu(t)` runs on
@@ -233,17 +270,34 @@ impl Device {
         mech: SyncMechanism,
         trial: u64,
     ) -> f64 {
+        self.measure_coexec_impl(op, split, cluster, threads, mech, ReqImpl::Default, trial)
+    }
+
+    /// Co-execution measurement with the GPU half pinned to a requested
+    /// kernel implementation. `ReqImpl::Default` reproduces
+    /// [`Device::measure_coexec`] bit-for-bit (same model, same noise tags).
+    #[allow(clippy::too_many_arguments)]
+    pub fn measure_coexec_impl(
+        &self,
+        op: &OpConfig,
+        split: ChannelSplit,
+        cluster: ClusterId,
+        threads: usize,
+        mech: SyncMechanism,
+        imp: ReqImpl,
+        trial: u64,
+    ) -> f64 {
         assert_eq!(split.total(), op.cout());
         if split.c_gpu == 0 {
             return self.measure_cpu(op, cluster, threads, trial);
         }
         if split.c_cpu == 0 {
-            return self.measure_gpu(op, trial);
+            return self.measure_gpu_impl(op, imp, trial);
         }
         let cpu_part = op.with_cout(split.c_cpu);
         let gpu_part = op.with_cout(split.c_gpu);
         let t_cpu = self.measure_cpu(&cpu_part, cluster, threads, trial);
-        let t_gpu = self.measure_gpu(&gpu_part, trial);
+        let t_gpu = self.measure_gpu_impl(&gpu_part, imp, trial);
         let overhead = self.sync_overhead_us(mech, op.kind())
             * lognormal_factor(self.op_key(op, 300, trial), self.spec.sync.noise_sigma);
         overhead + t_cpu.max(t_gpu)
@@ -261,6 +315,24 @@ impl Device {
     ) -> f64 {
         (0..n)
             .map(|t| self.measure_coexec(op, split, cluster, threads, mech, t))
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// Mean of `n` impl-pinned co-execution measurements.
+    #[allow(clippy::too_many_arguments)]
+    pub fn measure_coexec_impl_mean(
+        &self,
+        op: &OpConfig,
+        split: ChannelSplit,
+        cluster: ClusterId,
+        threads: usize,
+        mech: SyncMechanism,
+        imp: ReqImpl,
+        n: u64,
+    ) -> f64 {
+        (0..n)
+            .map(|t| self.measure_coexec_impl(op, split, cluster, threads, mech, imp, t))
             .sum::<f64>()
             / n as f64
     }
@@ -350,6 +422,39 @@ mod tests {
             best < gpu_only * 0.8,
             "coexec {best:.1} vs gpu {gpu_only:.1}"
         );
+    }
+
+    #[test]
+    fn impl_measurements_default_is_legacy_forced_are_independent() {
+        let d = Device::pixel5();
+        let op = OpConfig::Conv(ConvConfig::fig6b(256));
+        // Default routes through the legacy tag: bit-identical streams
+        assert_eq!(d.measure_gpu_impl(&op, ReqImpl::Default, 3), d.measure_gpu(&op, 3));
+        assert_eq!(
+            d.measure_coexec_impl(
+                &op,
+                ChannelSplit::new(64, 192),
+                ClusterId::Prime,
+                2,
+                SyncMechanism::SvmPolling,
+                ReqImpl::Default,
+                0,
+            ),
+            d.measure_coexec(
+                &op,
+                ChannelSplit::new(64, 192),
+                ClusterId::Prime,
+                2,
+                SyncMechanism::SvmPolling,
+                0,
+            )
+        );
+        // Forced winograd's analytic model ties the heuristic on this op
+        // (the delegate picks winograd at cout=256), but it must draw its
+        // own noise stream, not reuse the delegate's.
+        let wino = d.measure_gpu_impl(&op, ReqImpl::Winograd, 3);
+        assert_ne!(wino, d.measure_gpu(&op, 3), "per-impl noise streams");
+        assert!((wino / d.gpu_model_us_for(&op, ReqImpl::Winograd).0 - 1.0).abs() < 0.2);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! to wake, so launch-bound ops can genuinely prefer them.
 
 use super::cpu::{ClusterId, ClusterSpec, CpuSpec, MAX_CLUSTER_THREADS};
-use super::gpu::GpuSpec;
+use super::gpu::{GpuSpec, ImplCost, ReqImpl};
 use super::sync_model::SyncSpec;
 use anyhow::{anyhow, ensure, Result};
 
@@ -53,7 +53,13 @@ pub struct SocSpec {
 ///
 /// Kept in one table so the parser, the validator, and the protocol docs
 /// cannot drift apart.
-pub const CALIBRATION_KEYS: [&str; 37] = [
+/// GPU keys also come in an impl-qualified layer: `gpu.<impl>.<field>`
+/// (`direct`/`winograd`/`tiled_4x4`) addresses one *forced* kernel
+/// implementation's [`ImplCost`] constants — the per-impl strategy axis's
+/// calibration surface, recoverable by `FIT` from impl-tagged samples.
+/// The delegate-heuristic (`default`) impl prices through the flat `gpu.*`
+/// keys and has no qualified entries.
+pub const CALIBRATION_KEYS: [&str; 43] = [
     "cpu.gmacs_per_thread",
     "cpu.eff2",
     "cpu.eff3",
@@ -85,6 +91,12 @@ pub const CALIBRATION_KEYS: [&str; 37] = [
     "gpu.mem_bw_gbps",
     "gpu.dispatch_us",
     "gpu.const_mem_kb",
+    "gpu.direct.cost_factor",
+    "gpu.direct.dispatch_us",
+    "gpu.winograd.cost_factor",
+    "gpu.winograd.dispatch_us",
+    "gpu.tiled_4x4.cost_factor",
+    "gpu.tiled_4x4.dispatch_us",
     "gpu.noise_sigma",
     "sync.polling_linear_us",
     "sync.polling_conv_us",
@@ -162,6 +174,15 @@ impl SocSpec {
             if let Some((cl, field)) = rest.split_once('.') {
                 if let Some(id) = ClusterId::parse(cl) {
                     return self.set_cluster_param(id, field, value, key);
+                }
+            }
+        }
+        // impl-qualified GPU keys: gpu.<direct|winograd|tiled_4x4>.<field>
+        // (`default` has no qualified keys — it prices through flat gpu.*)
+        if let Some(rest) = key.strip_prefix("gpu.") {
+            if let Some((name, field)) = rest.split_once('.') {
+                if let Some(imp) = ReqImpl::parse(name).filter(|i| *i != ReqImpl::Default) {
+                    return self.set_impl_param(imp, field, value, key);
                 }
             }
         }
@@ -256,6 +277,33 @@ impl SocSpec {
         Ok(())
     }
 
+    /// One forced implementation's [`ImplCost`] calibration field.
+    fn set_impl_param(
+        &mut self,
+        imp: ReqImpl,
+        field: &str,
+        value: f64,
+        key: &str,
+    ) -> Result<()> {
+        let cost = match imp {
+            ReqImpl::Direct => &mut self.gpu.direct,
+            ReqImpl::Winograd => &mut self.gpu.winograd,
+            ReqImpl::Tiled4x4 => &mut self.gpu.tiled_4x4,
+            ReqImpl::Default => unreachable!("filtered by set_param"),
+        };
+        match field {
+            "cost_factor" => cost.cost_factor = positive(value, key)?,
+            "dispatch_us" => cost.dispatch_us = positive(value, key)?,
+            _ => {
+                return Err(anyhow!(
+                    "unknown calibration key {key} (valid: {})",
+                    CALIBRATION_KEYS.join(", ")
+                ))
+            }
+        }
+        Ok(())
+    }
+
     /// Apply a sequence of `(key, value)` overrides through
     /// [`SocSpec::set_param`], then [`SocSpec::validate`] the result —
     /// the one code path every calibration producer (the `CALIBRATE`
@@ -317,6 +365,15 @@ impl SocSpec {
         positive(self.gpu.macs_per_cu_cycle, "gpu.macs_per_cu_cycle")?;
         positive(self.gpu.mem_bw_gbps, "gpu.mem_bw_gbps")?;
         positive(self.gpu.dispatch_us, "gpu.dispatch_us")?;
+        for (imp, cost) in [
+            (ReqImpl::Direct, self.gpu.direct),
+            (ReqImpl::Winograd, self.gpu.winograd),
+            (ReqImpl::Tiled4x4, self.gpu.tiled_4x4),
+        ] {
+            let w = imp.wire();
+            positive(cost.cost_factor, &format!("gpu.{w}.cost_factor"))?;
+            positive(cost.dispatch_us, &format!("gpu.{w}.dispatch_us"))?;
+        }
         sigma(self.gpu.noise_sigma, "gpu.noise_sigma")?;
         positive(self.sync.polling_linear_us, "sync.polling_linear_us")?;
         positive(self.sync.polling_conv_us, "sync.polling_conv_us")?;
@@ -370,6 +427,9 @@ impl SocSpec {
                 mem_bw_gbps: 14.0,
                 dispatch_us: 90.0,
                 const_mem_kb: 32,
+                direct: ImplCost { cost_factor: 1.35, dispatch_us: 90.0 },
+                winograd: ImplCost { cost_factor: 1.0, dispatch_us: 90.0 },
+                tiled_4x4: ImplCost { cost_factor: 1.0, dispatch_us: 90.0 },
                 noise_sigma: 0.03,
             },
             sync: SyncSpec {
@@ -407,6 +467,9 @@ impl SocSpec {
                 mem_bw_gbps: 10.0,
                 dispatch_us: 110.0,
                 const_mem_kb: 32,
+                direct: ImplCost { cost_factor: 1.35, dispatch_us: 110.0 },
+                winograd: ImplCost { cost_factor: 1.0, dispatch_us: 110.0 },
+                tiled_4x4: ImplCost { cost_factor: 1.0, dispatch_us: 110.0 },
                 noise_sigma: 0.028,
             },
             sync: SyncSpec {
@@ -441,6 +504,9 @@ impl SocSpec {
                 mem_bw_gbps: 33.0,
                 dispatch_us: 45.0,
                 const_mem_kb: 45,
+                direct: ImplCost { cost_factor: 1.35, dispatch_us: 45.0 },
+                winograd: ImplCost { cost_factor: 1.0, dispatch_us: 45.0 },
+                tiled_4x4: ImplCost { cost_factor: 1.0, dispatch_us: 45.0 },
                 noise_sigma: 0.03,
             },
             sync: SyncSpec {
@@ -477,6 +543,9 @@ impl SocSpec {
                 mem_bw_gbps: 45.0,
                 dispatch_us: 35.0,
                 const_mem_kb: 45,
+                direct: ImplCost { cost_factor: 1.35, dispatch_us: 35.0 },
+                winograd: ImplCost { cost_factor: 1.0, dispatch_us: 35.0 },
+                tiled_4x4: ImplCost { cost_factor: 1.0, dispatch_us: 35.0 },
                 noise_sigma: 0.028,
             },
             sync: SyncSpec {
@@ -590,6 +659,27 @@ mod tests {
         assert!(spec.set_param("bogus.key", 1.0).is_err());
         assert!(spec.set_param("cpu.mega.launch_us", 1.0).is_err(), "unknown cluster");
         assert!(spec.set_param("cpu.prime.bogus", 1.0).is_err());
+    }
+
+    #[test]
+    fn impl_qualified_gpu_keys_reach_the_forced_constants() {
+        let mut spec = SocSpec::pixel5();
+        spec.set_param("gpu.winograd.cost_factor", 3.0).unwrap();
+        spec.set_param("gpu.direct.dispatch_us", 55.0).unwrap();
+        spec.set_param("gpu.tiled_4x4.cost_factor", 0.9).unwrap();
+        assert_eq!(spec.gpu.winograd.cost_factor, 3.0);
+        assert_eq!(spec.gpu.direct.dispatch_us, 55.0);
+        assert_eq!(spec.gpu.tiled_4x4.cost_factor, 0.9);
+        spec.validate().unwrap();
+        // flat gpu.* fields untouched by the qualified layer
+        assert_eq!(spec.gpu.dispatch_us, 110.0);
+        // `default` is not a qualified key, unknown fields/impls reject,
+        // and values stay range-checked
+        assert!(spec.set_param("gpu.default.cost_factor", 1.0).is_err());
+        assert!(spec.set_param("gpu.winograd.bogus", 1.0).is_err());
+        assert!(spec.set_param("gpu.im2col.cost_factor", 1.0).is_err());
+        assert!(spec.set_param("gpu.winograd.cost_factor", 0.0).is_err());
+        spec.validate().expect("rejected params must not corrupt the spec");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! repro sync                                 §4 sync-overhead comparison
 //! repro plan  --device <name> --linear L,CIN,COUT [--threads N|auto]
 //!             [--cluster prime|gold|silver|auto]
+//!             [--impl default|direct|winograd|tiled_4x4|auto]
 //! repro fit   --samples <file> --device <name>
 //!                                            fit a SocSpec from profiling
 //!                                            samples (one per line, same
@@ -29,7 +30,7 @@
 //!
 //! (Hand-rolled argument parsing: the offline build has no clap.)
 
-use mobile_coexec::device::{ClusterId, Device, SyncMechanism};
+use mobile_coexec::device::{ClusterId, Device, ReqImpl, SyncMechanism};
 use mobile_coexec::experiments::{figures, tables, Scale};
 use mobile_coexec::ops::{LinearConfig, OpConfig};
 use mobile_coexec::partition::{Choice, PlanRequest, Planner};
@@ -116,6 +117,19 @@ fn main() {
                 }
             };
             let op = OpConfig::Linear(LinearConfig::new(d[0], d[1], d[2]));
+            let req = match get("--impl") {
+                None => req,
+                Some(i) if i.eq_ignore_ascii_case("auto") => req.with_impl(Choice::Auto),
+                Some(i) => {
+                    let imp = ReqImpl::parse(&i).unwrap_or_else(|| {
+                        usage("--impl must be default|direct|winograd|tiled_4x4|auto")
+                    });
+                    if !imp.eligible(&op) {
+                        usage(&format!("impl {} is not eligible for {op}", imp.wire()));
+                    }
+                    req.with_impl(Choice::Fixed(imp))
+                }
+            };
             eprintln!("training planner for {} ...", device.name());
             let planner = Planner::train_for_kind(&device, "linear", scale.train_n, 42);
             let plan = planner.plan_request(&op, req);
@@ -123,7 +137,7 @@ fn main() {
             let gpu_only =
                 device.measure_mean(&op, mobile_coexec::device::Processor::Gpu, 16);
             println!(
-                "{op} on {} ({} request):\n  plan: CPU {} ch | GPU {} ch, {} threads on the {} cluster, {} sync (predicted {:.1} us)\n  measured co-exec {:.1} us vs GPU-only {:.1} us -> {:.2}x speedup",
+                "{op} on {} ({} request):\n  plan: CPU {} ch | GPU {} ch, {} threads on the {} cluster, {} sync, {} kernel (predicted {:.1} us)\n  measured co-exec {:.1} us vs GPU-only {:.1} us -> {:.2}x speedup",
                 device.name(),
                 if req.is_fixed() { "fixed" } else { "auto" },
                 plan.split.c_cpu,
@@ -131,6 +145,7 @@ fn main() {
                 plan.threads,
                 plan.cluster,
                 mech_wire(plan.mech),
+                plan.imp.wire(),
                 plan.t_total_us,
                 measured,
                 gpu_only,
@@ -233,7 +248,7 @@ fn main() {
                 "repro — CPU-GPU co-execution reproduction (EPEW 2025)\n\n\
                  usage:\n  repro fig   --id 2|3|5|6a|6b|7 [--quick]\n  \
                  repro table --id 1|2|3|4 [--quick]\n  repro sync\n  \
-                 repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto] [--cluster prime|gold|silver|auto]\n  \
+                 repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto] [--cluster prime|gold|silver|auto] [--impl default|direct|winograd|tiled_4x4|auto]\n  \
                  repro fit --samples FILE --device <name>\n  \
                  repro coexec [--c1 N]\n  \
                  repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N] [--ttl SECS] [--max-conns N]\n  \

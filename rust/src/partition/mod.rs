@@ -18,10 +18,14 @@
 //! of implementations and parallelism level" — so the split is only one
 //! axis of the decision. On a real SoC there is a third CPU axis: *which
 //! cluster* (prime/gold/silver, [`crate::device::ClusterId`]) runs the
-//! CPU half. [`Planner::plan_request`] searches the full strategy space:
-//! a [`PlanRequest`] pins or frees each of the cluster, the thread count,
-//! and the sync mechanism, and the search jointly minimizes the predicted
-//! total over `(split × cluster × threads × mechanism)`. Three structural
+//! CPU half, and a GPU axis: *which kernel implementation*
+//! ([`crate::device::ReqImpl`] — the delegate's own heuristic choice,
+//! direct, winograd, or the tiled-4x4 path) runs the GPU half.
+//! [`Planner::plan_request`] searches the full strategy space: a
+//! [`PlanRequest`] pins or frees each of the cluster, the thread count,
+//! the sync mechanism, and the kernel implementation, and the search
+//! jointly minimizes the predicted total over
+//! `(split × cluster × threads × mechanism × impl)`. Four structural
 //! facts keep the joint search within a small multiple of a fixed plan:
 //!
 //! * **The mechanism axis is pruned analytically.** Sync overhead is an
@@ -37,8 +41,15 @@
 //!   changed the result, so an `Auto` plan is *never worse* than any
 //!   fixed `(cluster, threads, mech)` plan (a property-tested invariant).
 //! * **GPU predictions are shared across the whole strategy grid** — one
-//!   GPU evaluation per candidate split serves every placement and both
-//!   mechanisms.
+//!   GPU evaluation per `(candidate, impl)` serves every placement and
+//!   both mechanisms; the CPU side is impl-invariant, so the impl axis
+//!   multiplies only the (cheap, shared) GPU batches, never the
+//!   per-placement CPU GBDT evaluations that dominate search cost.
+//! * **Ineligible impls are pruned before feature assembly.** Eligibility
+//!   ([`crate::device::ReqImpl::eligible`]) depends only on the op's
+//!   split-invariant fields (kernel size, stride, `cin` alignment), so an
+//!   impl ineligible for the full op is dropped from the candidate set
+//!   once, up front — it never earns a feature row.
 //!
 //! ## Batched candidate-matrix evaluation
 //!
@@ -64,7 +75,7 @@
 //! split with step 8, **measure** each, keep the best. It is not deployable
 //! (minutes of profiling per op) but bounds the achievable speedup.
 
-use crate::device::{ClusterId, Device, Processor, SyncMechanism};
+use crate::device::{ClusterId, Device, ReqImpl, SyncMechanism};
 use crate::gbdt::GbdtParams;
 use crate::ops::{ChannelSplit, OpConfig};
 use crate::predictor::{cpu_features_into, FeatureMode, GpuBatchScratch, PredictorSet};
@@ -83,13 +94,15 @@ pub enum Choice<T> {
 }
 
 /// A fully resolved execution strategy: which CPU cluster runs the CPU
-/// side, how many of its threads it uses, and which rendezvous mechanism
-/// synchronizes the two sides.
+/// side, how many of its threads it uses, which rendezvous mechanism
+/// synchronizes the two sides, and which GPU kernel implementation runs
+/// the GPU side ([`ReqImpl::Default`] = the delegate's own heuristic).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Strategy {
     pub cluster: ClusterId,
     pub threads: usize,
     pub mech: SyncMechanism,
+    pub imp: ReqImpl,
 }
 
 /// What a client asks the planner for: each strategy axis is either fixed
@@ -99,6 +112,10 @@ pub struct PlanRequest {
     pub cluster: Choice<ClusterId>,
     pub threads: Choice<usize>,
     pub mech: Choice<SyncMechanism>,
+    /// GPU kernel implementation. Every pre-impl constructor pins this to
+    /// [`ReqImpl::Default`], so legacy requests compare, hash, and plan
+    /// exactly as before the axis existed.
+    pub imp: Choice<ReqImpl>,
 }
 
 impl PlanRequest {
@@ -114,6 +131,7 @@ impl PlanRequest {
             cluster: Choice::Fixed(cluster),
             threads: Choice::Fixed(threads),
             mech: Choice::Fixed(mech),
+            imp: Choice::Fixed(ReqImpl::Default),
         }
     }
 
@@ -125,12 +143,19 @@ impl PlanRequest {
             cluster: Choice::Fixed(ClusterId::Prime),
             threads: Choice::Auto,
             mech: Choice::Auto,
+            imp: Choice::Fixed(ReqImpl::Default),
         }
     }
 
-    /// The full 4-axis search: split × cluster × threads × mechanism.
+    /// The 4-axis search: split × cluster × threads × mechanism (impl
+    /// pinned to the delegate's default choice).
     pub fn cluster_auto() -> Self {
-        Self { cluster: Choice::Auto, threads: Choice::Auto, mech: Choice::Auto }
+        Self {
+            cluster: Choice::Auto,
+            threads: Choice::Auto,
+            mech: Choice::Auto,
+            imp: Choice::Fixed(ReqImpl::Default),
+        }
     }
 
     /// This request with a different cluster choice (the serving layer's
@@ -139,11 +164,17 @@ impl PlanRequest {
         Self { cluster, ..self }
     }
 
+    /// This request with a different kernel-implementation choice (the
+    /// serving layer's `impl=` parameter).
+    pub fn with_impl(self, imp: Choice<ReqImpl>) -> Self {
+        Self { imp, ..self }
+    }
+
     /// True iff no axis needs searching.
     pub fn is_fixed(&self) -> bool {
         matches!(
-            (self.cluster, self.threads, self.mech),
-            (Choice::Fixed(_), Choice::Fixed(_), Choice::Fixed(_))
+            (self.cluster, self.threads, self.mech, self.imp),
+            (Choice::Fixed(_), Choice::Fixed(_), Choice::Fixed(_), Choice::Fixed(_))
         )
     }
 
@@ -181,6 +212,9 @@ pub struct Plan {
     pub cluster: ClusterId,
     pub threads: usize,
     pub mech: SyncMechanism,
+    /// GPU kernel implementation the GPU side runs with (`Default` for
+    /// every pre-impl request).
+    pub imp: ReqImpl,
     /// Predicted CPU-side latency (µs, 0 if no CPU work).
     pub t_cpu_us: f64,
     /// Predicted GPU-side latency (µs, 0 if no GPU work).
@@ -190,10 +224,15 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// The resolved (cluster, threads, mech) strategy this plan executes
-    /// with.
+    /// The resolved (cluster, threads, mech, impl) strategy this plan
+    /// executes with.
     pub fn strategy(&self) -> Strategy {
-        Strategy { cluster: self.cluster, threads: self.threads, mech: self.mech }
+        Strategy {
+            cluster: self.cluster,
+            threads: self.threads,
+            mech: self.mech,
+            imp: self.imp,
+        }
     }
 }
 
@@ -244,8 +283,11 @@ impl Planner {
                 0.0
             },
             if split.c_gpu > 0 {
-                self.predictors
-                    .predict_us(&self.device, &op.with_cout(split.c_gpu), Processor::Gpu)
+                self.predictors.predict_gpu_us(
+                    &self.device,
+                    &op.with_cout(split.c_gpu),
+                    strategy.imp,
+                )
             } else {
                 0.0
             },
@@ -260,6 +302,7 @@ impl Planner {
             cluster: strategy.cluster,
             threads: strategy.threads,
             mech: strategy.mech,
+            imp: strategy.imp,
             t_cpu_us: t_cpu,
             t_gpu_us: t_gpu,
             t_total_us: t_cpu.max(t_gpu) + overhead,
@@ -280,8 +323,8 @@ impl Planner {
     }
 
     /// Solve over the requested strategy space: jointly minimize predicted
-    /// `t_total_us` over `(split × cluster × threads × mechanism)`, where
-    /// each axis is either pinned by `req` or searched.
+    /// `t_total_us` over `(split × cluster × threads × mechanism × impl)`,
+    /// where each axis is either pinned by `req` or searched.
     ///
     /// Per strategy point this is the same coarse-to-fine split search as
     /// a fixed plan: a stride-32 sweep finds the basin, then a
@@ -295,12 +338,18 @@ impl Planner {
     /// a 4-axis cluster-`Auto` plan within ~4x of that (both bench-gated
     /// in `benches/partition_search.rs` — the extra multiple is the extra
     /// placements), and the result is exactly `min` over every fixed
-    /// strategy's plan. Ties resolve to the first placement in device
-    /// cluster order (prime first) at the lowest thread count, with
-    /// `SvmPolling` preferred.
+    /// strategy's plan. Freeing the impl axis on top
+    /// (`impl=auto`) multiplies only the shared GPU batches by the number
+    /// of *eligible* impls — the dominant per-placement CPU evaluations
+    /// are impl-invariant and stay shared — so a full 5-axis plan is
+    /// bench-gated at ≤ 2x the 4-axis cluster-`Auto` plan. Ties resolve
+    /// to the first placement in device cluster order (prime first) at
+    /// the lowest thread count, with `SvmPolling` preferred, then the
+    /// delegate's `Default` impl.
     ///
-    /// Panics if `req` pins a cluster the device does not expose (the
-    /// serving layer validates cluster choices per device before planning).
+    /// Panics if `req` pins a cluster the device does not expose, or an
+    /// impl the op is not eligible for (the serving layer validates both
+    /// per device/op before planning).
     pub fn plan_request(&self, op: &OpConfig, req: PlanRequest) -> Plan {
         let cpu_spec = &self.device.spec.cpu;
         // the (cluster, threads) placement grid, in device cluster order
@@ -327,39 +376,68 @@ impl Planner {
             Choice::Fixed(m) => vec![m],
             Choice::Auto => vec![SyncMechanism::SvmPolling, SyncMechanism::EventWait],
         };
-        let overheads: Vec<f64> =
-            mechs.iter().map(|&m| self.device.sync_overhead_us(m, op.kind())).collect();
+        // Eligible kernel implementations, `Default` first so single-impl
+        // legacy requests and tie-breaking reduce to the pre-impl search.
+        // Eligibility is split-invariant (module docs), so the ineligible
+        // prune happens once, on the full op.
+        let impls: Vec<ReqImpl> = match req.imp {
+            Choice::Fixed(i) => {
+                assert!(
+                    i.eligible(op),
+                    "impl {} is not eligible for {op} (the serving layer validates impl \
+                     choices per op before planning)",
+                    i.wire()
+                );
+                vec![i]
+            }
+            Choice::Auto => ReqImpl::ALL.iter().copied().filter(|i| i.eligible(op)).collect(),
+        };
+        // Strategy "modes" = mech-major × impl-minor pairs; with the
+        // single Default impl this is exactly the legacy mech list, so
+        // every pre-impl request walks the identical mode order.
+        let modes: Vec<(SyncMechanism, usize)> = mechs
+            .iter()
+            .flat_map(|&m| (0..impls.len()).map(move |ii| (m, ii)))
+            .collect();
+        let overheads: Vec<f64> = modes
+            .iter()
+            .map(|&(m, _)| self.device.sync_overhead_us(m, op.kind()))
+            .collect();
         let cout = op.cout();
 
-        // Incumbent per (placement, mech) strategy point, seeded with the
+        // Incumbent per (placement, mode) strategy point, seeded with the
         // exclusive assignments exactly like the fixed search. Exclusive
         // predictions are shared: GPU-only latency is invariant in every
-        // CPU axis, CPU-only is per placement, and neither pays sync
-        // overhead, so one GPU eval + one CPU eval per placement seed the
-        // whole grid.
-        let t_gpu_full = self.predictors.predict_us(&self.device, op, Processor::Gpu);
+        // CPU axis (one eval per impl), CPU-only is per placement and
+        // impl-invariant, and neither pays sync overhead.
+        let t_gpu_full: Vec<f64> = impls
+            .iter()
+            .map(|&i| self.predictors.predict_gpu_us(&self.device, op, i))
+            .collect();
         let mut best: Vec<Vec<Plan>> = placements
             .iter()
             .map(|&(c, t)| {
                 let t_cpu_full =
                     self.predictors.predict_cpu_us(&self.device, op, c, t);
-                mechs
+                modes
                     .iter()
-                    .map(|&m| {
+                    .map(|&(m, ii)| {
                         let gpu = Plan {
                             split: ChannelSplit::gpu_only(cout),
                             cluster: c,
                             threads: t,
                             mech: m,
+                            imp: impls[ii],
                             t_cpu_us: 0.0,
-                            t_gpu_us: t_gpu_full,
-                            t_total_us: 0.0f64.max(t_gpu_full),
+                            t_gpu_us: t_gpu_full[ii],
+                            t_total_us: 0.0f64.max(t_gpu_full[ii]),
                         };
                         let cpu = Plan {
                             split: ChannelSplit::cpu_only(cout),
                             cluster: c,
                             threads: t,
                             mech: m,
+                            imp: impls[ii],
                             t_cpu_us: t_cpu_full,
                             t_gpu_us: 0.0,
                             t_total_us: t_cpu_full.max(0.0),
@@ -374,7 +452,7 @@ impl Planner {
             })
             .collect();
 
-        // Batched coarse sweep: every (placement, mech) strategy point
+        // Batched coarse sweep: every (placement, mode) strategy point
         // participates; candidate order and strict-`<` updates reproduce
         // the serial scan's first-minimizer tie-breaking exactly (module
         // docs, "Batched candidate-matrix evaluation").
@@ -391,13 +469,13 @@ impl Planner {
         }
         scratch.members.clear();
         for pi in 0..placements.len() {
-            for mi in 0..mechs.len() {
+            for mi in 0..modes.len() {
                 scratch.members.push((pi, mi));
             }
         }
-        self.batched_sweep(op, &placements, &mechs, &overheads, &mut best, &mut scratch);
+        self.batched_sweep(op, &placements, &modes, &impls, &overheads, &mut best, &mut scratch);
 
-        // Refinement is per strategy point: each (placement, mech) point
+        // Refinement is per strategy point: each (placement, mode) point
         // refines around — and is only updated from — its own coarse
         // winner, exactly like a fixed-strategy search. (Cross-window
         // updates would occasionally find better plans, but would make an
@@ -430,7 +508,9 @@ impl Planner {
                 }
                 scratch.members.clear();
                 scratch.members.extend_from_slice(&members);
-                self.batched_sweep(op, &placements, &mechs, &overheads, &mut best, &mut scratch);
+                self.batched_sweep(
+                    op, &placements, &modes, &impls, &overheads, &mut best, &mut scratch,
+                );
             }
         }
 
@@ -449,17 +529,22 @@ impl Planner {
     /// window): evaluate `scratch.cands` against the `scratch.members`
     /// strategy points and fold improvements into `best`.
     ///
-    /// One grouped GPU batch serves every placement and both mechanisms;
-    /// each member placement gets a prune mask over the candidates, one
-    /// flat CPU feature matrix for the survivors, and one packed batch
-    /// walk. Updates scan survivors in ascending candidate order with
-    /// strict `<`, so results match the serial per-candidate scan
+    /// One grouped GPU batch *per member impl* serves every placement and
+    /// both mechanisms (all impls share the one `gpu_ops` candidate
+    /// matrix); each member placement gets a prune mask over the
+    /// candidates, one flat CPU feature matrix for the survivors — the
+    /// CPU side is impl-invariant, so it is assembled and walked once per
+    /// placement regardless of how many impls compete — and one packed
+    /// batch walk. Updates scan survivors in ascending candidate order
+    /// with strict `<`, so results match the serial per-candidate scan
     /// bit-for-bit (module docs).
+    #[allow(clippy::too_many_arguments)]
     fn batched_sweep(
         &self,
         op: &OpConfig,
         placements: &[(ClusterId, usize)],
-        mechs: &[SyncMechanism],
+        modes: &[(SyncMechanism, usize)],
+        impls: &[ReqImpl],
         overheads: &[f64],
         best: &mut [Vec<Plan>],
         s: &mut SweepScratch,
@@ -468,17 +553,33 @@ impl Planner {
         if s.cands.is_empty() || s.members.is_empty() {
             return;
         }
-        // the shared GPU sweep: one feature matrix for all candidates
+        // the shared GPU sweep: one feature matrix for all candidates,
+        // one batch walk per impl any member actually references (a
+        // refinement window only re-predicts its winners' impls)
         s.gpu_ops.clear();
         for &c1 in &s.cands {
             s.gpu_ops.push(op.with_cout(cout - c1));
         }
-        self.predictors.gpu.predict_batch_us_into(
-            &self.device,
-            &s.gpu_ops,
-            &mut s.gpu,
-            &mut s.t_gpu,
-        );
+        s.iis.clear();
+        for &(_, mi) in s.members.iter() {
+            let ii = modes[mi].1;
+            if !s.iis.contains(&ii) {
+                s.iis.push(ii);
+            }
+        }
+        while s.t_gpu.len() < impls.len() {
+            s.t_gpu.push(Vec::new());
+        }
+        for &ii in &s.iis {
+            let (gpu, t_gpu) = (&mut s.gpu, &mut s.t_gpu[ii]);
+            self.predictors.predict_gpu_batch_us_into(
+                &self.device,
+                &s.gpu_ops,
+                impls[ii],
+                gpu,
+                t_gpu,
+            );
+        }
 
         // distinct member placements, preserving member order
         s.pis.clear();
@@ -503,7 +604,8 @@ impl Planner {
             s.cpu_feats.clear();
             for ci in 0..s.cands.len() {
                 let live = s.members.iter().any(|&(p, mi)| {
-                    p == pi && s.t_gpu[ci] + overheads[mi] <= best[pi][mi].t_total_us
+                    p == pi
+                        && s.t_gpu[modes[mi].1][ci] + overheads[mi] <= best[pi][mi].t_total_us
                 });
                 if !live {
                     continue;
@@ -525,20 +627,22 @@ impl Planner {
             for k in 0..s.kept.len() {
                 let ci = s.kept[k] as usize;
                 let c1 = s.cands[ci];
-                let (t_gpu, t_cpu) = (s.t_gpu[ci], s.t_cpu[k]);
+                let t_cpu = s.t_cpu[k];
                 let split = ChannelSplit::new(c1, cout - c1);
-                let base = t_cpu.max(t_gpu);
                 for &(p, mi) in s.members.iter() {
                     if p != pi {
                         continue;
                     }
-                    let total = base + overheads[mi];
+                    let (mech, ii) = modes[mi];
+                    let t_gpu = s.t_gpu[ii][ci];
+                    let total = t_cpu.max(t_gpu) + overheads[mi];
                     if total < best[pi][mi].t_total_us {
                         best[pi][mi] = Plan {
                             split,
                             cluster: cl,
                             threads: th,
-                            mech: mechs[mi],
+                            mech,
+                            imp: impls[ii],
                             t_cpu_us: t_cpu,
                             t_gpu_us: t_gpu,
                             t_total_us: total,
@@ -553,12 +657,13 @@ impl Planner {
     /// the paper reports in Table 2: plans are chosen by prediction but
     /// *scored* by measurement). The plan carries its own strategy.
     pub fn measure_plan_us(&self, op: &OpConfig, plan: &Plan, trials: u64) -> f64 {
-        self.device.measure_coexec_mean(
+        self.device.measure_coexec_impl_mean(
             op,
             plan.split,
             plan.cluster,
             plan.threads,
             plan.mech,
+            plan.imp,
             trials,
         )
     }
@@ -571,20 +676,23 @@ impl Planner {
 struct SweepScratch {
     /// Candidate CPU-channel counts for the current sweep, ascending.
     cands: Vec<usize>,
-    /// `(placement index, mechanism index)` strategy points the sweep may
+    /// `(placement index, mode index)` strategy points the sweep may
     /// update (all of them for the coarse pass, a window's members during
-    /// refinement).
+    /// refinement); a mode is a `(mechanism, impl)` pair.
     members: Vec<(usize, usize)>,
     /// Distinct member placements, in member order.
     pis: Vec<usize>,
+    /// Distinct member impl indices, in member order.
+    iis: Vec<usize>,
     /// GPU-side ops of the shared sweep (`cout - c1` channels each).
     gpu_ops: Vec<OpConfig>,
     gpu: GpuBatchScratch,
-    /// Shared GPU predictions, one per candidate.
-    t_gpu: Vec<f64>,
+    /// Shared GPU predictions, one row per impl, one entry per candidate.
+    t_gpu: Vec<Vec<f64>>,
     /// Indices into `cands` that survived the pre-assembly prune mask.
     kept: Vec<u32>,
-    /// Flat row-major CPU feature matrix for the surviving candidates.
+    /// Flat row-major CPU feature matrix for the surviving candidates
+    /// (impl-invariant: assembled once per placement).
     cpu_feats: Vec<f64>,
     /// CPU predictions, one per surviving candidate.
     t_cpu: Vec<f64>,
@@ -622,7 +730,8 @@ pub fn grid_search(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::LinearConfig;
+    use crate::device::Processor;
+    use crate::ops::{ConvConfig, LinearConfig};
 
     fn planner(device: Device) -> Planner {
         Planner::train_for_kind(&device, "linear", 3000, 77)
@@ -751,6 +860,77 @@ mod tests {
                 p.plan_request(&op, PlanRequest::fixed_on(s.cluster, s.threads, s.mech));
             assert_eq!(replay, auto, "{op}: cluster-auto plan not reproducible");
         }
+    }
+
+    #[test]
+    fn impl_auto_minimizes_over_every_eligible_impl() {
+        let device = Device::pixel5();
+        let p = Planner::train_for_kind(&device, "conv", 1500, 78);
+        let op = OpConfig::Conv(ConvConfig::fig6b(256)); // 3x3 stride-1: all impls eligible
+        let auto = p.plan_request(&op, PlanRequest::cluster_auto().with_impl(Choice::Auto));
+        let mut grid_best = f64::MAX;
+        for &i in ReqImpl::ALL.iter() {
+            assert!(i.eligible(&op));
+            for cl in &device.spec.cpu.clusters {
+                for t in 1..=cl.max_threads() {
+                    for m in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+                        let fixed = p.plan_request(
+                            &op,
+                            PlanRequest::fixed_on(cl.id, t, m).with_impl(Choice::Fixed(i)),
+                        );
+                        assert_eq!(fixed.imp, i);
+                        grid_best = grid_best.min(fixed.t_total_us);
+                    }
+                }
+            }
+        }
+        assert!(
+            auto.t_total_us <= grid_best + 1e-9,
+            "5-axis auto {:.2} worse than best fixed {:.2}",
+            auto.t_total_us,
+            grid_best
+        );
+        // exactness: replaying the resolved 5-axis strategy reproduces it
+        let s = auto.strategy();
+        let replay = p.plan_request(
+            &op,
+            PlanRequest::fixed_on(s.cluster, s.threads, s.mech).with_impl(Choice::Fixed(s.imp)),
+        );
+        assert_eq!(replay, auto, "5-axis auto plan not reproducible");
+    }
+
+    #[test]
+    fn impl_axis_defaults_are_legacy_and_auto_prunes_ineligible() {
+        let device = Device::pixel5();
+        let p = planner(device);
+        let op = OpConfig::Linear(LinearConfig::new(64, 512, 900));
+        // every pre-impl request resolves to the Default impl
+        let legacy = p.plan_request(&op, PlanRequest::auto());
+        assert_eq!(legacy.imp, ReqImpl::Default);
+        // freeing the axis on a linear op prunes winograd (ineligible)
+        // and is never worse than the Default-pinned plan
+        let auto = p.plan_request(&op, PlanRequest::auto().with_impl(Choice::Auto));
+        assert_ne!(auto.imp, ReqImpl::Winograd);
+        assert!(auto.t_total_us <= legacy.t_total_us + 1e-9);
+        let s = auto.strategy();
+        let replay = p.plan_request(
+            &op,
+            PlanRequest::fixed_on(s.cluster, s.threads, s.mech).with_impl(Choice::Fixed(s.imp)),
+        );
+        assert_eq!(replay, auto);
+    }
+
+    #[test]
+    #[should_panic(expected = "not eligible")]
+    fn pinning_an_ineligible_impl_panics() {
+        let device = Device::pixel5();
+        let p = Planner::train_for(&device, 400, 79);
+        let op = OpConfig::Linear(LinearConfig::new(64, 512, 900));
+        let _ = p.plan_request(
+            &op,
+            PlanRequest::fixed(2, SyncMechanism::SvmPolling)
+                .with_impl(Choice::Fixed(ReqImpl::Winograd)),
+        );
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //!   delegate runs; conv predictors are additionally *split per kernel
 //!   implementation* (paper §3.2 point (1)).
 
-use crate::device::{Device, GpuDispatch};
+use crate::device::{Device, GpuDispatch, ReqImpl};
 use crate::ops::OpConfig;
 
 /// Predictor input-feature mode.
@@ -128,6 +128,33 @@ pub fn gpu_features(device: &Device, op: &OpConfig, mode: FeatureMode) -> Vec<f6
     f
 }
 
+/// GPU-predictor features under a requested kernel implementation,
+/// appended to `out`. [`ReqImpl::Default`] is exactly
+/// [`gpu_features_into`] — byte-identical rows for every legacy caller —
+/// while a forced impl swaps in that implementation's dispatch block.
+pub fn gpu_features_into_for(
+    device: &Device,
+    op: &OpConfig,
+    imp: ReqImpl,
+    mode: FeatureMode,
+    out: &mut Vec<f64>,
+) {
+    if imp == ReqImpl::Default {
+        return gpu_features_into(device, op, mode, out);
+    }
+    basic_features_into(op, out);
+    if mode == FeatureMode::Augmented {
+        dispatch_features_into(&device.gpu_dispatch_for(op, imp), out);
+    }
+}
+
+/// GPU-predictor features under a requested kernel implementation.
+pub fn gpu_features_for(device: &Device, op: &OpConfig, imp: ReqImpl, mode: FeatureMode) -> Vec<f64> {
+    let mut f = Vec::new();
+    gpu_features_into_for(device, op, imp, mode, &mut f);
+    f
+}
+
 /// CPU-predictor features appended to `out` (shape features + XNNPACK
 /// tile-grid terms; the CPU side has no dispatch heuristics, so there is
 /// no augmented variant — matching the paper, whose augmentation concerns
@@ -196,6 +223,29 @@ mod tests {
         let distinct: std::collections::HashSet<u64> =
             all.iter().map(|f| f[waves_idx] as u64).collect();
         assert!(distinct.len() > 1, "waves never change over the sweep");
+    }
+
+    #[test]
+    fn impl_features_default_is_legacy_forced_swap_dispatch() {
+        let d = Device::pixel5();
+        let conv = OpConfig::Conv(ConvConfig::fig6b(256));
+        for mode in [FeatureMode::Basic, FeatureMode::Augmented] {
+            // Default routes through the exact legacy function
+            assert_eq!(
+                gpu_features_for(&d, &conv, ReqImpl::Default, mode),
+                gpu_features(&d, &conv, mode)
+            );
+        }
+        // fig6b(256) resolves to winograd under the heuristic, so forcing
+        // winograd reproduces the default dispatch block...
+        let def = gpu_features(&d, &conv, FeatureMode::Augmented);
+        let wino = gpu_features_for(&d, &conv, ReqImpl::Winograd, FeatureMode::Augmented);
+        assert_eq!(wino, def);
+        // ...while forcing direct changes it (kernel_impl id at minimum)
+        let direct = gpu_features_for(&d, &conv, ReqImpl::Direct, FeatureMode::Augmented);
+        assert_ne!(direct, def);
+        let n_basic = basic_names("conv").len();
+        assert_eq!(&direct[..n_basic], &def[..n_basic], "basic block is impl-invariant");
     }
 
     #[test]

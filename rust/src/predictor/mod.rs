@@ -19,10 +19,11 @@
 pub mod features;
 
 pub use features::{
-    cpu_features, cpu_features_into, feature_names, gpu_features, gpu_features_into, FeatureMode,
+    cpu_features, cpu_features_into, feature_names, gpu_features, gpu_features_for,
+    gpu_features_into, gpu_features_into_for, FeatureMode,
 };
 
-use crate::device::{ClusterId, Device, Processor};
+use crate::device::{ClusterId, Device, Processor, ReqImpl};
 use crate::gbdt::{Gbdt, GbdtParams};
 use crate::metrics::mape;
 use crate::ops::OpConfig;
@@ -36,27 +37,42 @@ pub const TRAIN_TRIALS: u64 = 5;
 /// GBDT latency predictor for the GPU delegate.
 pub struct GpuPredictor {
     pub mode: FeatureMode,
+    /// Kernel implementation this predictor is trained for.
+    /// [`ReqImpl::Default`] means the delegate's own heuristic choice —
+    /// exactly the pre-impl-axis predictor.
+    pub imp: ReqImpl,
     /// kernel-impl id -> model. Basic mode stores a single model at key 0.
     models: HashMap<usize, Gbdt>,
 }
 
 impl GpuPredictor {
-    /// Train from ops measured on `device`.
+    /// Train from ops measured on `device` (the delegate's default
+    /// implementation choice per op).
     pub fn train(
         device: &Device,
         ops: &[OpConfig],
         mode: FeatureMode,
         params: &GbdtParams,
     ) -> Self {
+        Self::train_impl(device, ops, ReqImpl::Default, mode, params)
+    }
+
+    /// Train from ops measured on `device` under a requested kernel
+    /// implementation. Every op must be eligible for `imp`
+    /// ([`ReqImpl::eligible`]); callers filter first.
+    pub fn train_impl(
+        device: &Device,
+        ops: &[OpConfig],
+        imp: ReqImpl,
+        mode: FeatureMode,
+        params: &GbdtParams,
+    ) -> Self {
         // measure targets
         let lat: Vec<f64> = ops
             .iter()
-            .map(|op| {
-                (0..TRAIN_TRIALS).map(|t| device.measure_gpu(op, t)).sum::<f64>()
-                    / TRAIN_TRIALS as f64
-            })
+            .map(|op| device.measure_gpu_impl_mean(op, imp, TRAIN_TRIALS))
             .collect();
-        Self::train_with_latencies(device, ops, &lat, mode, params)
+        Self::train_with_latencies_impl(device, ops, &lat, imp, mode, params)
     }
 
     /// Train from pre-measured latencies (µs).
@@ -67,28 +83,40 @@ impl GpuPredictor {
         mode: FeatureMode,
         params: &GbdtParams,
     ) -> Self {
+        Self::train_with_latencies_impl(device, ops, lat, ReqImpl::Default, mode, params)
+    }
+
+    /// Train from pre-measured latencies (µs) taken under `imp`.
+    pub fn train_with_latencies_impl(
+        device: &Device,
+        ops: &[OpConfig],
+        lat: &[f64],
+        imp: ReqImpl,
+        mode: FeatureMode,
+        params: &GbdtParams,
+    ) -> Self {
         assert_eq!(ops.len(), lat.len());
         let mut groups: HashMap<usize, (Vec<Vec<f64>>, Vec<f64>)> = HashMap::new();
         for (op, &y) in ops.iter().zip(lat) {
             let key = match mode {
                 FeatureMode::Basic => 0,
-                FeatureMode::Augmented => device.gpu_dispatch(op).kernel.id(),
+                FeatureMode::Augmented => device.gpu_dispatch_for(op, imp).kernel.id(),
             };
             let entry = groups.entry(key).or_default();
-            entry.0.push(gpu_features(device, op, mode));
+            entry.0.push(gpu_features_for(device, op, imp, mode));
             entry.1.push(y.ln());
         }
         let models = groups
             .into_iter()
             .map(|(k, (x, y))| (k, Gbdt::fit(&x, &y, params)))
             .collect();
-        Self { mode, models }
+        Self { mode, imp, models }
     }
 
     /// Predicted GPU latency (µs).
     pub fn predict_us(&self, device: &Device, op: &OpConfig) -> f64 {
         let model = self.model_for(device, op);
-        model.predict(&gpu_features(device, op, self.mode)).exp()
+        model.predict(&gpu_features_for(device, op, self.imp, self.mode)).exp()
     }
 
     /// The per-kernel-impl model serving `op` (any model as fallback for
@@ -96,7 +124,7 @@ impl GpuPredictor {
     fn model_for(&self, device: &Device, op: &OpConfig) -> &Gbdt {
         let key = match self.mode {
             FeatureMode::Basic => 0,
-            FeatureMode::Augmented => device.gpu_dispatch(op).kernel.id(),
+            FeatureMode::Augmented => device.gpu_dispatch_for(op, self.imp).kernel.id(),
         };
         self.model_by_key(key)
     }
@@ -131,7 +159,7 @@ impl GpuPredictor {
         for (i, op) in ops.iter().enumerate() {
             let key = match self.mode {
                 FeatureMode::Basic => 0,
-                FeatureMode::Augmented => device.gpu_dispatch(op).kernel.id(),
+                FeatureMode::Augmented => device.gpu_dispatch_for(op, self.imp).kernel.id(),
             };
             scratch.keyed.push((key, i as u32));
         }
@@ -145,7 +173,7 @@ impl GpuPredictor {
             scratch.feats.clear();
             while h < scratch.keyed.len() && scratch.keyed[h].0 == key {
                 let op = &ops[scratch.keyed[h].1 as usize];
-                gpu_features_into(device, op, self.mode, &mut scratch.feats);
+                gpu_features_into_for(device, op, self.imp, self.mode, &mut scratch.feats);
                 h += 1;
             }
             let model = self.model_by_key(key);
@@ -157,12 +185,14 @@ impl GpuPredictor {
         }
     }
 
-    /// MAPE on held-out ops.
+    /// MAPE on held-out ops (measured under this predictor's impl).
     pub fn evaluate(&self, device: &Device, ops: &[OpConfig]) -> f64 {
         let actual: Vec<f64> = ops
             .iter()
             .map(|op| {
-                (0..TRAIN_TRIALS).map(|t| device.measure_gpu(op, 1000 + t)).sum::<f64>()
+                (0..TRAIN_TRIALS)
+                    .map(|t| device.measure_gpu_impl(op, self.imp, 1000 + t))
+                    .sum::<f64>()
                     / TRAIN_TRIALS as f64
             })
             .collect();
@@ -329,6 +359,10 @@ fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
 /// holding the placement map's lock for the multi-second GBDT fit.
 type PlacementCell = Arc<OnceLock<CpuPredictor>>;
 
+/// A lazily trained forced-impl GPU model, with the same single-flight
+/// cold-training semantics as [`PlacementCell`].
+type GpuCell = Arc<OnceLock<GpuPredictor>>;
+
 /// Predict latency for any processor placement on one device.
 ///
 /// CPU models are keyed by `(cluster, threads)`. The default (prime)
@@ -342,6 +376,11 @@ type PlacementCell = Arc<OnceLock<CpuPredictor>>;
 pub struct PredictorSet {
     pub gpu: GpuPredictor,
     cpu: RwLock<HashMap<(ClusterId, usize), PlacementCell>>,
+    /// Forced-impl GPU models, keyed by [`ReqImpl`]; trained lazily on
+    /// first prediction from the retained training set, exactly like cold
+    /// CPU placements. [`ReqImpl::Default`] never lands here — it is the
+    /// eagerly trained `gpu` field, so every pre-impl caller is untouched.
+    gpus: RwLock<HashMap<ReqImpl, GpuCell>>,
     /// Retained §5.2 training sample for lazy placement training.
     train_ops: Vec<OpConfig>,
     params: GbdtParams,
@@ -368,6 +407,7 @@ impl PredictorSet {
         Self {
             gpu,
             cpu: RwLock::new(cpu),
+            gpus: RwLock::new(HashMap::new()),
             train_ops: ops.to_vec(),
             params: *params,
         }
@@ -437,6 +477,93 @@ impl PredictorSet {
             .predict_batch_us_into(flat, n_rows, out);
     }
 
+    /// The forced-impl GPU cell, creating an empty one if the key is new;
+    /// the map lock is only ever held for the lookup/insert, never
+    /// training.
+    fn gpu_cell(&self, imp: ReqImpl) -> GpuCell {
+        if let Some(cell) = self.gpus.read().unwrap_or_else(|p| p.into_inner()).get(&imp) {
+            return cell.clone();
+        }
+        let mut map = self.gpus.write().unwrap_or_else(|p| p.into_inner());
+        map.entry(imp).or_default().clone()
+    }
+
+    /// The forced-impl GPU model, training it on first use from the
+    /// retained ops *eligible* for `imp` (winograd cannot featurize a 5x5
+    /// conv). If the training set has no eligible shape at all — only
+    /// possible with a degenerate training set, since the planner only
+    /// requests impls eligible for the op being planned — it falls back to
+    /// a default-impl model so prediction stays panic-free.
+    fn gpu_impl<'a>(&self, cell: &'a GpuCell, device: &Device, imp: ReqImpl) -> &'a GpuPredictor {
+        cell.get_or_init(|| {
+            let ops: Vec<OpConfig> =
+                self.train_ops.iter().filter(|op| imp.eligible(op)).cloned().collect();
+            if ops.is_empty() {
+                GpuPredictor::train_impl(
+                    device,
+                    &self.train_ops,
+                    ReqImpl::Default,
+                    self.gpu.mode,
+                    &self.params,
+                )
+            } else {
+                GpuPredictor::train_impl(device, &ops, imp, self.gpu.mode, &self.params)
+            }
+        })
+    }
+
+    /// Predicted GPU latency (µs) under a requested kernel
+    /// implementation, training that impl's model on first use.
+    /// [`ReqImpl::Default`] is the eagerly trained predictor — identical
+    /// to `self.gpu.predict_us`.
+    pub fn predict_gpu_us(&self, device: &Device, op: &OpConfig, imp: ReqImpl) -> f64 {
+        if imp == ReqImpl::Default {
+            return self.gpu.predict_us(device, op);
+        }
+        let cell = self.gpu_cell(imp);
+        self.gpu_impl(&cell, device, imp).predict_us(device, op)
+    }
+
+    /// Batched GPU predictions under a requested implementation over a
+    /// sweep of same-kind ops (same lazy single-flight semantics as
+    /// [`PredictorSet::predict_gpu_us`]; `Default` is the eager
+    /// predictor's batch path, bit-identical to the pre-impl planner).
+    pub fn predict_gpu_batch_us_into(
+        &self,
+        device: &Device,
+        ops: &[OpConfig],
+        imp: ReqImpl,
+        scratch: &mut GpuBatchScratch,
+        out: &mut Vec<f64>,
+    ) {
+        if imp == ReqImpl::Default {
+            return self.gpu.predict_batch_us_into(device, ops, scratch, out);
+        }
+        let cell = self.gpu_cell(imp);
+        self.gpu_impl(&cell, device, imp).predict_batch_us_into(device, ops, scratch, out);
+    }
+
+    /// Train one forced-impl GPU model now if it is missing (idempotent;
+    /// concurrent callers for the same impl block on one training).
+    /// `Default` is always trained; this is a no-op for it.
+    pub fn train_gpu_impl(&self, device: &Device, imp: ReqImpl) {
+        if imp == ReqImpl::Default {
+            return;
+        }
+        let cell = self.gpu_cell(imp);
+        self.gpu_impl(&cell, device, imp);
+    }
+
+    /// Forced-impl GPU models trained right now (telemetry/tests);
+    /// `Default` is always trained and not listed.
+    pub fn trained_impls(&self) -> Vec<ReqImpl> {
+        let map = self.gpus.read().unwrap_or_else(|p| p.into_inner());
+        let mut keys: Vec<_> =
+            map.iter().filter(|(_, c)| c.get().is_some()).map(|(k, _)| *k).collect();
+        keys.sort_unstable();
+        keys
+    }
+
     /// Train one placement's model now if it is missing (idempotent;
     /// concurrent callers for the same placement block on one training).
     pub fn train_placement(&self, device: &Device, key: (ClusterId, usize)) {
@@ -486,7 +613,7 @@ impl PredictorSet {
 mod tests {
     use super::*;
     use crate::dataset;
-    use crate::ops::LinearConfig;
+    use crate::ops::{ConvConfig, LinearConfig};
 
     fn quick_params() -> GbdtParams {
         GbdtParams { n_estimators: 120, max_leaves: 64, ..Default::default() }
@@ -605,6 +732,48 @@ mod tests {
         for (op, &b) in sweep.iter().zip(&cpu_out) {
             assert_eq!(b, set.predict_cpu_us(&device, op, ClusterId::Prime, 2));
         }
+    }
+
+    #[test]
+    fn forced_impl_gpu_models_train_lazily_and_deterministically() {
+        let device = Device::pixel5();
+        let (train, _) = dataset::training_split("conv", 900, 15);
+        let set = PredictorSet::train(&device, &train, FeatureMode::Augmented, &quick_params());
+        assert!(set.trained_impls().is_empty());
+        let op = OpConfig::Conv(ConvConfig::fig6b(256));
+        // Default routes through the eager predictor bit-for-bit
+        assert_eq!(
+            set.predict_gpu_us(&device, &op, ReqImpl::Default),
+            set.gpu.predict_us(&device, &op)
+        );
+        assert!(set.trained_impls().is_empty(), "Default must not train an impl model");
+        // a forced impl trains on demand...
+        let p = set.predict_gpu_us(&device, &op, ReqImpl::Winograd);
+        assert!(p.is_finite() && p > 0.0);
+        assert_eq!(set.trained_impls(), vec![ReqImpl::Winograd]);
+        // ...from exactly the eligible subset, matching a directly trained
+        // model bit-for-bit (determinism)
+        let eligible: Vec<OpConfig> =
+            train.iter().filter(|o| ReqImpl::Winograd.eligible(o)).cloned().collect();
+        assert!(!eligible.is_empty() && eligible.len() < train.len());
+        let direct = GpuPredictor::train_impl(
+            &device,
+            &eligible,
+            ReqImpl::Winograd,
+            FeatureMode::Augmented,
+            &quick_params(),
+        );
+        assert_eq!(p, direct.predict_us(&device, &op));
+        // batch path agrees with serial per-op predictions, in input order
+        let sweep: Vec<OpConfig> =
+            (1..12).map(|i| OpConfig::Conv(ConvConfig::fig6b(i * 32))).collect();
+        let mut scratch = GpuBatchScratch::default();
+        let mut out = Vec::new();
+        set.predict_gpu_batch_us_into(&device, &sweep, ReqImpl::Direct, &mut scratch, &mut out);
+        for (op, &b) in sweep.iter().zip(&out) {
+            assert_eq!(b, set.predict_gpu_us(&device, op, ReqImpl::Direct));
+        }
+        assert_eq!(set.trained_impls(), vec![ReqImpl::Direct, ReqImpl::Winograd]);
     }
 
     #[test]

@@ -3,15 +3,16 @@
 //! For every partitionable layer the planner's offline decision is applied;
 //! pooling stays on the GPU. Scheduling is strategy-space-aware: the
 //! scheduler carries a [`PlanRequest`], and with `Auto` axes every layer
-//! independently gets its own winning `(split, cluster, threads, mech)`
-//! strategy — a big early layer may saturate 3 prime threads while a
-//! launch-bound late layer drops to the silver cluster or stays GPU-only.
+//! independently gets its own winning `(split, cluster, threads, mech,
+//! impl)` strategy — a big early layer may saturate 3 prime threads with
+//! a winograd GPU half while a launch-bound late layer drops to the
+//! silver cluster or stays GPU-only.
 //! End-to-end latency adds an inter-layer memory handoff
 //! term (the paper observes end-to-end speedups slightly below the sum of
 //! individual ops, "potentially due to memory access overhead between
 //! layers").
 
-use crate::device::{ClusterId, Device, SyncMechanism};
+use crate::device::{ClusterId, Device, ReqImpl, SyncMechanism};
 use crate::models::{Layer, Model};
 use crate::ops::OpConfig;
 use crate::partition::{Plan, PlanRequest, Planner};
@@ -25,13 +26,15 @@ pub struct LayerSchedule {
 }
 
 /// How often each CPU cluster (prime first), each thread count
-/// (ascending), and each sync mechanism were chosen across a model's
-/// planned layers. Only chosen values appear.
+/// (ascending), each sync mechanism, and each GPU kernel implementation
+/// were chosen across a model's planned layers. Only chosen values
+/// appear.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StrategyDist {
     pub clusters: Vec<(ClusterId, usize)>,
     pub threads: Vec<(usize, usize)>,
     pub mechs: Vec<(SyncMechanism, usize)>,
+    pub impls: Vec<(ReqImpl, usize)>,
 }
 
 /// Distribution of chosen strategies over a schedule's planned layers.
@@ -50,9 +53,14 @@ pub fn strategy_distribution(schedule: &[LayerSchedule]) -> StrategyDist {
             Some(i) => dist.mechs[i].1 += 1,
             None => dist.mechs.push((plan.mech, 1)),
         }
+        match dist.impls.iter().position(|(k, _)| *k == plan.imp) {
+            Some(i) => dist.impls[i].1 += 1,
+            None => dist.impls.push((plan.imp, 1)),
+        }
     }
     dist.clusters.sort_unstable_by_key(|(c, _)| c.index());
     dist.threads.sort_unstable_by_key(|(t, _)| *t);
+    dist.impls.sort_unstable_by_key(|(k, _)| k.index());
     dist
 }
 
@@ -179,12 +187,13 @@ impl<'a> ModelScheduler<'a> {
                     let op = ls.layer.op().unwrap();
                     let gpu_only =
                         self.device.measure_mean(&op, crate::device::Processor::Gpu, E2E_TRIALS);
-                    let co = self.device.measure_coexec_mean(
+                    let co = self.device.measure_coexec_impl_mean(
                         &op,
                         plan.split,
                         plan.cluster,
                         plan.threads,
                         plan.mech,
+                        plan.imp,
                         E2E_TRIALS,
                     );
                     baseline_us += gpu_only;
@@ -293,6 +302,10 @@ mod tests {
         assert_eq!(dist.clusters.iter().map(|(_, n)| n).sum::<usize>(), planned);
         assert_eq!(dist.threads.iter().map(|(_, n)| n).sum::<usize>(), planned);
         assert_eq!(dist.mechs.iter().map(|(_, n)| n).sum::<usize>(), planned);
+        assert_eq!(dist.impls.iter().map(|(_, n)| n).sum::<usize>(), planned);
+        // auto() pins the impl axis to the default kernels, so the impl
+        // dist is degenerate; impls are reported in ReqImpl::ALL order.
+        assert_eq!(dist.impls, vec![(ReqImpl::Default, planned)]);
         // auto() stays on the big cluster: a degenerate cluster dist
         assert_eq!(dist.clusters, vec![(crate::device::ClusterId::Prime, planned)]);
         // threads are reported in ascending order, each at most once
@@ -305,6 +318,19 @@ mod tests {
         assert_eq!(fixed_dist.clusters, vec![(crate::device::ClusterId::Prime, planned)]);
         assert_eq!(fixed_dist.threads, vec![(2, planned)]);
         assert_eq!(fixed_dist.mechs, vec![(SyncMechanism::SvmPolling, planned)]);
+        assert_eq!(fixed_dist.impls, vec![(ReqImpl::Default, planned)]);
+        // an impl-auto schedule's impl dist still covers every layer
+        let iauto_dist = strategy_distribution(
+            &scheduler(
+                &device,
+                &lp,
+                &cp,
+                PlanRequest::auto().with_impl(crate::partition::Choice::Auto),
+            )
+            .plan(&m),
+        );
+        assert_eq!(iauto_dist.impls.iter().map(|(_, n)| n).sum::<usize>(), planned);
+        assert!(iauto_dist.impls.windows(2).all(|w| w[0].0.index() < w[1].0.index()));
         // a cluster-auto schedule's cluster dist still covers every layer
         let cauto_dist = strategy_distribution(
             &scheduler(&device, &lp, &cp, PlanRequest::cluster_auto()).plan(&m),

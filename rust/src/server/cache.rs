@@ -10,11 +10,11 @@
 //! Two maps back the cache:
 //!
 //! * **plans** — `(device, calibration epoch, op, cluster, threads,
-//!   mech)` ([`PlanKey`], fully resolved) → [`Plan`]. Every cached plan
-//!   lives here.
+//!   mech, impl)` ([`PlanKey`], fully resolved) → [`Plan`]. Every cached
+//!   plan lives here.
 //! * **auto resolutions** — `(device, epoch, op, normalized request)`
-//!   ([`AutoKey`], at least one `Auto` axis — cluster, threads, or
-//!   mechanism) → the winning [`Strategy`]. An `Auto` request resolves
+//!   ([`AutoKey`], at least one `Auto` axis — cluster, threads,
+//!   mechanism, or kernel impl) → the winning [`Strategy`]. An `Auto` request resolves
 //!   once, then indexes into **plans** under its resolved key — so the
 //!   `auto` request and the equivalent fixed request share one cache
 //!   entry and hit each other, across the cluster axis too.
@@ -58,7 +58,7 @@
 //! and plain `FLUSH`), while [`PlanCache::flush`] keeps the old global
 //! behavior (`FLUSH all`).
 
-use crate::device::{ClusterId, CpuSpec, SyncMechanism};
+use crate::device::{ClusterId, CpuSpec, ReqImpl, SyncMechanism};
 use crate::metrics::Counter;
 use crate::ops::OpConfig;
 use crate::partition::{Choice, Plan, PlanRequest, Planner, Strategy};
@@ -86,6 +86,9 @@ pub struct PlanKey {
     pub cluster: ClusterId,
     pub threads: usize,
     pub mech: SyncMechanism,
+    /// GPU kernel implementation the plan runs its GPU half with
+    /// ([`ReqImpl::Default`] for every pre-impl request).
+    pub imp: ReqImpl,
 }
 
 /// Cache key for a plan request with at least one `Auto` axis, after
@@ -479,11 +482,15 @@ impl PlanCache {
         let device = planner.device.name();
         let epoch = planner.device.epoch;
         let req = req.normalized(&planner.device.spec.cpu);
-        if let (Choice::Fixed(cluster), Choice::Fixed(threads), Choice::Fixed(mech)) =
-            (req.cluster, req.threads, req.mech)
+        if let (
+            Choice::Fixed(cluster),
+            Choice::Fixed(threads),
+            Choice::Fixed(mech),
+            Choice::Fixed(imp),
+        ) = (req.cluster, req.threads, req.mech, req.imp)
         {
             return self.get_or_insert_traced(
-                PlanKey { device, epoch, op: *op, cluster, threads, mech },
+                PlanKey { device, epoch, op: *op, cluster, threads, mech, imp },
                 || pre.unwrap_or_else(|| planner.plan_request(op, req)),
             );
         }
@@ -503,12 +510,14 @@ impl PlanCache {
                     cluster: s.cluster,
                     threads: s.threads,
                     mech: s.mech,
+                    imp: s.imp,
                 },
                 || {
                     pre.unwrap_or_else(|| {
                         planner.plan_request(
                             op,
-                            PlanRequest::fixed_on(s.cluster, s.threads, s.mech),
+                            PlanRequest::fixed_on(s.cluster, s.threads, s.mech)
+                                .with_impl(Choice::Fixed(s.imp)),
                         )
                     })
                 },
@@ -530,6 +539,7 @@ impl PlanCache {
                     cluster: plan.cluster,
                     threads: plan.threads,
                     mech: plan.mech,
+                    imp: plan.imp,
                 },
                 plan,
             );
@@ -548,6 +558,7 @@ impl PlanCache {
                     cluster: strategy.cluster,
                     threads: strategy.threads,
                     mech: strategy.mech,
+                    imp: strategy.imp,
                 },
                 || {
                     pre.unwrap_or_else(|| {
@@ -557,7 +568,8 @@ impl PlanCache {
                                 strategy.cluster,
                                 strategy.threads,
                                 strategy.mech,
-                            ),
+                            )
+                            .with_impl(Choice::Fixed(strategy.imp)),
                         )
                     })
                 },
@@ -593,10 +605,16 @@ impl PlanCache {
         req: PlanRequest,
     ) -> Option<Plan> {
         let req = req.normalized(cpu);
-        if let (Choice::Fixed(cluster), Choice::Fixed(threads), Choice::Fixed(mech)) =
-            (req.cluster, req.threads, req.mech)
+        if let (
+            Choice::Fixed(cluster),
+            Choice::Fixed(threads),
+            Choice::Fixed(mech),
+            Choice::Fixed(imp),
+        ) = (req.cluster, req.threads, req.mech, req.imp)
         {
-            return self.plans.get(&PlanKey { device, epoch, op: *op, cluster, threads, mech });
+            return self
+                .plans
+                .get(&PlanKey { device, epoch, op: *op, cluster, threads, mech, imp });
         }
         let s = self.auto.get(&AutoKey { device, epoch, op: *op, req })?;
         self.plans.get(&PlanKey {
@@ -606,6 +624,7 @@ impl PlanCache {
             cluster: s.cluster,
             threads: s.threads,
             mech: s.mech,
+            imp: s.imp,
         })
     }
 
@@ -961,6 +980,7 @@ mod tests {
             cluster: auto.cluster,
             threads: auto.threads,
             mech: auto.mech,
+            imp: auto.imp,
         };
         assert!(cache.peek(&key).is_none(), "plan entry must be evicted");
 
@@ -1131,6 +1151,44 @@ mod tests {
     }
 
     #[test]
+    fn impl_requests_get_distinct_keys_and_share_auto_entries() {
+        let p = planner();
+        let cache = PlanCache::default();
+        let op = OpConfig::Linear(LinearConfig::new(50, 768, 1024));
+        // same strategy, two impls: two distinct entries
+        let fixed = PlanRequest::fixed(2, SyncMechanism::SvmPolling);
+        cache.get_or_plan_request(&p, &op, fixed);
+        cache.get_or_plan_request(&p, &op, fixed.with_impl(Choice::Fixed(ReqImpl::Direct)));
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 2, 2));
+        // an impl-auto request resolves once; its fixed equivalent hits
+        // the published entry and a replayed auto request hits too
+        let auto =
+            cache.get_or_plan_request(&p, &op, PlanRequest::cluster_auto().with_impl(Choice::Auto));
+        let s = auto.strategy();
+        let equivalent = cache.get_or_plan_request(
+            &p,
+            &op,
+            PlanRequest::fixed_on(s.cluster, s.threads, s.mech).with_impl(Choice::Fixed(s.imp)),
+        );
+        assert_eq!(equivalent, auto);
+        let replays =
+            cache.get_or_plan_request(&p, &op, PlanRequest::cluster_auto().with_impl(Choice::Auto));
+        assert_eq!(replays, auto);
+        // the impl-auto resolution is indexed separately from the
+        // default-impl cluster_auto request
+        let akey = AutoKey {
+            device: p.device.name(),
+            epoch: 0,
+            op,
+            req: PlanRequest::cluster_auto().with_impl(Choice::Auto),
+        };
+        assert_eq!(cache.peek_resolution(&akey), Some(s));
+        let default_akey =
+            AutoKey { device: p.device.name(), epoch: 0, op, req: PlanRequest::cluster_auto() };
+        assert!(cache.peek_resolution(&default_akey).is_none());
+    }
+
+    #[test]
     fn probe_serves_warm_entries_without_counting() {
         let p = planner();
         let cache = PlanCache::default();
@@ -1181,6 +1239,7 @@ mod tests {
             cluster: plan_a.cluster,
             threads: 1,
             mech: SyncMechanism::SvmPolling,
+            imp: ReqImpl::Default,
         };
         assert!(cache.peek(&key_a).is_some());
         assert_eq!(cache.sweep_expired(), live, "sweep drops every expired plan");

@@ -833,6 +833,9 @@ mod imp {
                 ep.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
                 // probe hits are warm by construction: feed plan.hit too
                 state.record_plan_outcome(true, t0);
+                // telemetry must match the slow path exactly: the PLAN
+                // verb credits its resolved impl on both paths
+                state.metrics.record_plan_impl(plan.imp);
                 true
             }
             b"PLAN_BATCH" => {
@@ -886,14 +889,17 @@ mod imp {
     /// Zero-allocation parsing of the hot verbs' op-specs, straight from
     /// the receive buffer. Deliberately *stricter* than the slow parser:
     /// it accepts only the canonical ASCII grammar (plain decimal
-    /// fields, in-range values, known clusters) and reports anything
-    /// else as "not mine", so the authoritative slow path — and its
-    /// exact error strings — still covers every divergent input.
+    /// fields, in-range values, known clusters/impls, canonical
+    /// `cluster=`-then-`impl=` token order) and reports anything else as
+    /// "not mine", so the authoritative slow path — and its exact error
+    /// strings — still covers every divergent input. Strategy-token
+    /// recognition itself is `crate::server::tokens`, the same helper
+    /// the slow parser consults — the two grammars cannot drift.
     mod fastparse {
-        use crate::device::{ClusterId, CpuSpec, SyncMechanism};
+        use crate::device::{CpuSpec, ReqImpl, SyncMechanism};
         use crate::ops::{ConvConfig, LinearConfig, OpConfig};
         use crate::partition::{Choice, PlanRequest};
-        use crate::server::MAX_FIELD;
+        use crate::server::tokens;
 
         /// Iterator over ASCII-whitespace-separated tokens; [`rest`]
         /// exposes the unconsumed tail (for `;`-separated batches).
@@ -935,44 +941,18 @@ mod imp {
             }
         }
 
-        /// Strict decimal numeric field within the protocol bound.
-        fn field(tok: &[u8]) -> Option<usize> {
-            if tok.is_empty() || tok.len() > 6 {
-                return None; // 6 digits cover every value <= MAX_FIELD
-            }
-            let mut v: usize = 0;
-            for &b in tok {
-                if !b.is_ascii_digit() {
-                    return None;
-                }
-                v = v * 10 + (b - b'0') as usize;
-            }
-            (v <= MAX_FIELD).then_some(v)
-        }
-
         /// A non-zero field (the slow path rejects zero-sized shapes and
         /// zero threads with dedicated errors — not ours to produce).
         fn nz(toks: &mut Tokens<'_>) -> Option<usize> {
-            let v = field(toks.next()?)?;
+            let v = tokens::field(toks.next()?)?;
             (v > 0).then_some(v)
         }
 
-        fn cluster_id(v: &[u8]) -> Option<ClusterId> {
-            if v.eq_ignore_ascii_case(b"prime") {
-                Some(ClusterId::Prime)
-            } else if v.eq_ignore_ascii_case(b"gold") {
-                Some(ClusterId::Gold)
-            } else if v.eq_ignore_ascii_case(b"silver") {
-                Some(ClusterId::Silver)
-            } else {
-                None
-            }
-        }
-
         /// Parse one op-spec (everything after the verb): shape fields,
-        /// `<threads|auto>`, optional `cluster=`. Mirrors
-        /// `ServerState::parse_op` + `parse_request` for inputs both
-        /// accept; anything this returns `None` for goes to the pool.
+        /// `<threads|auto>`, optional `cluster=`, optional `impl=` — the
+        /// canonical token order. Mirrors `ServerState::parse_op` +
+        /// `parse_request` for inputs both accept; anything this returns
+        /// `None` for goes to the pool.
         pub fn op_spec(
             cpu: &CpuSpec,
             kind: &[u8],
@@ -990,36 +970,51 @@ mod imp {
                 }
                 _ => return None,
             };
-            let thr = toks.next()?;
-            let req = if thr.eq_ignore_ascii_case(b"auto") {
-                PlanRequest::auto()
-            } else {
-                PlanRequest::fixed(nz_tok(thr)?, SyncMechanism::SvmPolling)
-            };
-            let cluster = match toks.next() {
-                None => Choice::Fixed(cpu.default_cluster_id()),
-                Some(tok) => {
-                    let v = tok.strip_prefix(b"cluster=")?;
-                    if v.eq_ignore_ascii_case(b"auto") {
-                        Choice::Auto
-                    } else {
-                        let id = cluster_id(v)?;
-                        // a cluster the device lacks is a semantic error
-                        // with its own message: slow path's job
-                        cpu.cluster(id)?;
-                        Choice::Fixed(id)
-                    }
+            let req = match tokens::threads(toks.next()?)? {
+                tokens::ThreadsTok::Auto => PlanRequest::auto(),
+                tokens::ThreadsTok::Fixed(t) => {
+                    PlanRequest::fixed(t, SyncMechanism::SvmPolling)
                 }
             };
+            let mut cluster = Choice::Fixed(cpu.default_cluster_id());
+            let mut imp = Choice::Fixed(ReqImpl::Default);
+            // canonical order only: [cluster=<c>] [impl=<i>]; the slow
+            // path additionally accepts them swapped
+            let mut tok = toks.next();
+            if let Some(t) = tok {
+                if let tokens::KeyTok::Cluster(v) = tokens::classify(t) {
+                    cluster = match tokens::cluster_value(v)? {
+                        tokens::ClusterVal::Auto => Choice::Auto,
+                        tokens::ClusterVal::Fixed(id) => {
+                            // a cluster the device lacks is a semantic
+                            // error with its own message: slow path's job
+                            cpu.cluster(id)?;
+                            Choice::Fixed(id)
+                        }
+                    };
+                    tok = toks.next();
+                }
+            }
+            if let Some(t) = tok {
+                let tokens::KeyTok::Impl(v) = tokens::classify(t) else {
+                    return None;
+                };
+                imp = match tokens::impl_value(v)? {
+                    tokens::ImplVal::Auto => Choice::Auto,
+                    // a pinned impl the op's shape is not eligible for is
+                    // a semantic error with its own message: slow path
+                    tokens::ImplVal::Fixed(i) => {
+                        if !i.eligible(&op) {
+                            return None;
+                        }
+                        Choice::Fixed(i)
+                    }
+                };
+            }
             if toks.next().is_some() {
                 return None; // trailing tokens: slow path decides
             }
-            Some((op, req.with_cluster(cluster)))
-        }
-
-        fn nz_tok(tok: &[u8]) -> Option<usize> {
-            let v = field(tok)?;
-            (v > 0).then_some(v)
+            Some((op, req.with_cluster(cluster).with_impl(imp)))
         }
     }
 
@@ -1047,6 +1042,12 @@ mod imp {
                 "linear 50 768 3072 3 cluster=gold",
                 "linear 50 768 3072 auto cluster=auto",
                 "conv 7 7 64 128 3 1 2 cluster=silver",
+                "linear 50 768 3072 3 impl=default",
+                "linear 50 768 3072 3 impl=direct",
+                "linear 50 768 3072 auto impl=tiled_4x4",
+                "linear 50 768 3072 auto cluster=auto impl=auto",
+                "conv 7 7 64 128 3 1 2 cluster=gold impl=winograd",
+                "conv 7 7 64 128 3 1 auto impl=auto",
             ] {
                 let parts: Vec<&str> = spec.split_whitespace().collect();
                 let (slow_op, slow_req) = st
@@ -1080,6 +1081,14 @@ mod imp {
                 "linear 50 768 3072 3 gold",  // missing cluster= prefix
                 "matmul 50 768 3072 3",       // unknown op kind
                 "conv 7 7 64 128 3 4",        // conv with too few fields
+                "linear 50 768 3072 3 impl=im2col", // unknown impl
+                "linear 50 768 3072 3 winograd", // missing impl= prefix
+                "linear 50 768 3072 3 impl=winograd", // ineligible: linear
+                "conv 7 7 64 128 3 2 2 impl=winograd", // ineligible: stride 2
+                "conv 7 7 64 127 5 1 2 impl=winograd", // ineligible: 5x5
+                "linear 50 767 3072 3 impl=tiled_4x4", // ineligible: cin%4
+                "linear 50 768 3072 3 impl=direct cluster=gold", // swapped order
+                "linear 50 768 3072 3 impl=direct impl=direct", // duplicate key
             ] {
                 let mut toks = fastparse::tokens(spec.as_bytes());
                 let kind = toks.next().unwrap();

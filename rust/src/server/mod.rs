@@ -63,7 +63,7 @@
 //! ping       = "PING"                     ; -> OK pong
 //! plan       = "PLAN" op-spec             ; -> OK c_cpu c_gpu t_pred_us
 //!                                         ;      threads=<t> mech=<mech>
-//!                                         ;      cluster=<cluster>
+//!                                         ;      cluster=<cluster> impl=<i>
 //! plan-batch = "PLAN_BATCH" op-spec *(";" op-spec)
 //!                                         ; at most 64 op-specs per line
 //!                                         ; -> OK n=<k> header, then one
@@ -72,6 +72,7 @@
 //! run        = "RUN" op-spec              ; -> OK t_coexec_us t_gpu_us
 //!                                         ;      speedup threads=<t>
 //!                                         ;      mech=<mech> cluster=<cluster>
+//!                                         ;      impl=<i>
 //! device     = "DEVICE" name              ; -> OK device <name>
 //! calibrate  = "CALIBRATE" name *(param "=" value)
 //!                                         ; -> OK calibrated <name> flushed=<n>
@@ -83,22 +84,27 @@
 //!                                         ;      samples=<used>/<n>
 //!                                         ;      resid=<x> flushed=<k>
 //! sample     = "cpu" op-shape cluster threads t_us
-//!            | "gpu" op-shape t_us
-//!            | "coexec" op-shape c_cpu cluster threads mech t_us
+//!            | "gpu" op-shape ["impl=" impl] t_us
+//!            | "coexec" op-shape c_cpu cluster threads mech ["impl=" impl] t_us
 //! op-shape   = "linear" l cin cout | "conv" h w cin cout k s
 //! plan-model = "PLAN_MODEL" model threads ["cluster=" cluster-req]
+//!              ["impl=" impl-req]
 //!                                         ; -> OK model=<m> layers=<n>
 //!                                         ;      planned=<n> coexec=<n>
 //!                                         ;      threads=<t:n,...>
 //!                                         ;      mechs=<mech:n,...>
 //!                                         ;      t_pred_ms=<x>
 //!                                         ;      clusters=<cluster:n,...>
+//!                                         ;      impls=<i:n,...>
 //! flush      = "FLUSH" ["all"]            ; -> OK flushed=<n>
 //! stats      = "STATS"                    ; -> OK hits= misses= entries=
 //!                                         ;      evictions= expired=
 //!                                         ;      <verb>.req= .err= .p50_us= .p95_us= ...
+//!                                         ;      plan.impl.<i>= ...
 //! op-spec    = "linear" l cin cout threads ["cluster=" cluster-req]
+//!              ["impl=" impl-req]
 //!            | "conv" h w cin cout k s threads ["cluster=" cluster-req]
+//!              ["impl=" impl-req]
 //! name       = "pixel4" | "pixel5" | "moto2022" | "oneplus11"   ; + aliases moto, oneplus
 //!            | custom-name               ; 1-32 of [a-z0-9_-], letter first
 //! param      = "base"                     ; spec to start from (device name)
@@ -116,6 +122,13 @@
 //!                                         ; behavior); "auto" adds the
 //!                                         ; cluster to the joint search
 //! cluster    = "prime" | "gold" | "silver"
+//! impl-req   = impl | "auto"              ; omitted => "default" (the
+//!                                         ; delegate's own heuristic
+//!                                         ; pick, the pre-impl
+//!                                         ; behavior); "auto" adds the
+//!                                         ; kernel implementation to
+//!                                         ; the joint search
+//! impl       = "default" | "direct" | "winograd" | "tiled_4x4"
 //! mech       = "svm_polling" | "event_wait"
 //! ```
 //!
@@ -164,6 +177,21 @@
 //! unchanged; replies simply append the resolved `cluster=<c>` field.
 //! Requesting a cluster the session device does not expose is an error.
 //!
+//! The optional `impl=` parameter — last on the op-spec, after
+//! `cluster=` — picks the GPU kernel implementation the plan's GPU half
+//! runs (`default`/`direct`/`winograd`/`tiled_4x4`, or `auto` to let the
+//! planner search the implementation jointly with the other four axes).
+//! Omitting it pins `default` — the delegate's own heuristic pick — so
+//! every pre-impl request line, cache key, and plan is unchanged;
+//! replies simply append the resolved `impl=<i>` field. Pinning an
+//! implementation the op's shape is not eligible for (winograd needs a
+//! 3x3 stride-1 conv; `tiled_4x4` needs a conv or a vec4-aligned linear)
+//! is an error; `impl=auto` prunes ineligible implementations instead of
+//! erroring. Per-impl cost constants come from calibration
+//! (`gpu.<impl>.*` keys, fittable from impl-tagged `FIT` samples); a
+//! device without fitted per-impl constants serves `impl=` requests from
+//! the analytic defaults.
+//!
 //! `FLUSH` drops the *session device's* cached plans and `auto`
 //! resolutions — for when one device's calibration changed out of band;
 //! `FLUSH all` keeps the old global behavior. All numeric fields
@@ -189,24 +217,30 @@
 //! > DEVICE pixel5
 //! < OK device pixel5
 //! > PLAN linear 50 768 3072 3
-//! < OK 592 2480 1628.4 threads=3 mech=svm_polling cluster=prime
+//! < OK 592 2480 1628.4 threads=3 mech=svm_polling cluster=prime impl=default
 //! > PLAN linear 50 768 3072 auto
-//! < OK 592 2480 1628.4 threads=3 mech=svm_polling cluster=prime
+//! < OK 592 2480 1628.4 threads=3 mech=svm_polling cluster=prime impl=default
 //!                                                   (auto resolved; cached
 //!                                                    once, shared with the
 //!                                                    fixed request above)
 //! > PLAN linear 2 16 24 auto cluster=auto
-//! < OK 24 0 11.2 threads=1 mech=svm_polling cluster=silver
+//! < OK 24 0 11.2 threads=1 mech=svm_polling cluster=silver impl=default
 //!                                                   (4-axis search: a
 //!                                                    launch-bound op lands
 //!                                                    on the little cores)
+//! > PLAN conv 56 56 64 128 3 1 auto cluster=auto impl=auto
+//! < OK 24 104 403.9 threads=3 mech=svm_polling cluster=prime impl=winograd
+//!                                                   (full 5-axis search:
+//!                                                    the kernel impl joins
+//!                                                    the joint minimum)
 //! > PLAN_BATCH linear 50 768 3072 3; linear 0 768 3072 3
 //! < OK n=2
-//! < OK 592 2480 1628.4 threads=3 mech=svm_polling cluster=prime
+//! < OK 592 2480 1628.4 threads=3 mech=svm_polling cluster=prime impl=default
 //! < ERR zero-sized shape
 //! > PLAN_MODEL resnet18 auto
 //! < OK model=resnet18 layers=<n> planned=<n> coexec=<n> threads=<t:n,...>
 //!      mechs=<mech:n,...> t_pred_ms=<x> clusters=<cluster:n,...>
+//!      impls=<i:n,...>
 //! > CALIBRATE lab_phone base=pixel5 gpu.clock_ghz=0.71 sync.polling_linear_us=7.5
 //! < OK calibrated lab_phone flushed=0
 //! > DEVICE lab_phone
@@ -231,6 +265,7 @@
 pub mod cache;
 mod evented;
 pub mod pool;
+mod tokens;
 
 pub use self::evented::DEFAULT_MAX_CONNS;
 
@@ -238,7 +273,7 @@ use self::cache::PlanCache;
 use self::pool::{fan_out, WorkerPool};
 use crate::calibration::{fit_spec, SampleSet};
 use crate::device::{
-    intern_device_name, validate_device_name, ClusterId, Device, Processor, SocSpec,
+    intern_device_name, validate_device_name, ClusterId, Device, Processor, ReqImpl, SocSpec,
     SyncMechanism,
 };
 use crate::metrics::{Counter, LatencyRecorder};
@@ -377,6 +412,12 @@ impl EndpointStats {
 /// Per-verb serving telemetry, rendered by the `STATS` verb.
 pub struct ServerMetrics {
     endpoints: Vec<(&'static str, EndpointStats)>,
+    /// Resolved kernel implementation of every `PLAN` reply (slow path
+    /// and evented fast path alike): serving-level visibility into how
+    /// often the impl axis actually deviates from the delegate default.
+    /// Indexed by [`ReqImpl::index`]; rendered at the very end of the
+    /// `STATS` line so every pre-impl field keeps its position.
+    plan_impls: [Counter; ReqImpl::ALL.len()],
 }
 
 /// The protocol's verbs: wire token -> metrics key. Single source of
@@ -409,12 +450,12 @@ const PLAN_MISS_KEY: &str = "plan.miss";
 /// The op-spec grammar, quoted by every malformed-op-spec error (one
 /// copy, so the self-describing errors cannot drift from each other).
 const OP_SPEC_USAGE: &str = "bad op spec (expected: \
-    linear <l> <cin> <cout> <threads|auto> [cluster=<c>|auto] | \
-    conv <h> <w> <cin> <cout> <k> <s> <threads|auto> [cluster=<c>|auto])";
+    linear <l> <cin> <cout> <threads|auto> [cluster=<c>|auto] [impl=<i>|auto] | \
+    conv <h> <w> <cin> <cout> <k> <s> <threads|auto> [cluster=<c>|auto] [impl=<i>|auto])";
 
 /// The `PLAN_MODEL` grammar, quoted by its malformed-spec errors.
-const MODEL_SPEC_USAGE: &str =
-    "bad model spec (expected: PLAN_MODEL <model> <threads> [cluster=<c>|auto])";
+const MODEL_SPEC_USAGE: &str = "bad model spec (expected: \
+    PLAN_MODEL <model> <threads> [cluster=<c>|auto] [impl=<i>|auto])";
 
 impl ServerMetrics {
     fn new() -> Self {
@@ -430,7 +471,12 @@ impl ServerMetrics {
             }
         }
         endpoints.push((OTHER_KEY, EndpointStats::new()));
-        Self { endpoints }
+        Self { endpoints, plan_impls: std::array::from_fn(|_| Counter::new()) }
+    }
+
+    /// Credit one `PLAN` reply to its resolved implementation's counter.
+    pub fn record_plan_impl(&self, imp: ReqImpl) {
+        self.plan_impls[imp.index()].inc();
     }
 
     /// Stats for a verb key (`"plan"`, ...); unknown keys land in `other`.
@@ -461,6 +507,15 @@ impl ServerMetrics {
                 ep.errors.get(),
                 s.p50_us,
                 s.p95_us
+            ));
+        }
+        // the impl breakdown is appended after every per-verb block so
+        // pre-impl clients' field positions are untouched
+        for imp in ReqImpl::ALL {
+            out.push_str(&format!(
+                " plan.impl.{}={}",
+                imp.wire(),
+                self.plan_impls[imp.index()].get()
             ));
         }
         out
@@ -829,6 +884,7 @@ impl ServerState {
                 let (op, req) = self.parse_op(session, rest)?;
                 let (plan, hit) = self.plan_cached_traced(session, &op, req);
                 self.record_plan_outcome(hit, t0);
+                self.metrics.record_plan_impl(plan.imp);
                 Ok(plan_body(&plan))
             }
             ["RUN", rest @ ..] => {
@@ -839,18 +895,18 @@ impl ServerState {
                 let t_co = planner.measure_plan_us(&op, &plan, 8);
                 let t_gpu = entry.device.measure_mean(&op, Processor::Gpu, 8);
                 Ok(format!(
-                    "{:.1} {:.1} {:.3} threads={} mech={} cluster={}",
+                    "{:.1} {:.1} {:.3} threads={} mech={} cluster={} impl={}",
                     t_co,
                     t_gpu,
                     t_gpu / t_co,
                     plan.threads,
                     mech_wire(plan.mech),
-                    plan.cluster.wire()
+                    plan.cluster.wire(),
+                    plan.imp.wire()
                 ))
             }
-            ["PLAN_MODEL", model, threads] => self.plan_model(session, model, threads, None),
-            ["PLAN_MODEL", model, threads, cluster] => {
-                self.plan_model(session, model, threads, Some(cluster))
+            ["PLAN_MODEL", model, threads, rest @ ..] if rest.len() <= 2 => {
+                self.plan_model(session, model, threads, rest)
             }
             ["PLAN_MODEL", ..] => Err(anyhow!(MODEL_SPEC_USAGE)),
             ["FLUSH"] => {
@@ -879,14 +935,27 @@ impl ServerState {
         session: &Session,
         name: &str,
         threads: &str,
-        cluster: Option<&str>,
+        trailing: &[&str],
     ) -> Result<String> {
         let entry = self.session_entry(session);
-        if cluster.is_some_and(|c| !c.starts_with("cluster=")) {
-            return Err(anyhow!(MODEL_SPEC_USAGE));
-        }
-        let req = self.parse_request(&entry, threads, cluster)?;
+        let req = self.parse_request(&entry, threads, trailing, MODEL_SPEC_USAGE)?;
         let model = model_by_name(name).ok_or_else(|| anyhow!("unknown model {name}"))?;
+        // a pinned non-default impl must be eligible for every
+        // partitionable layer (the planner treats pinned-ineligible as a
+        // caller bug); impl=auto prunes per layer instead
+        if let Choice::Fixed(imp) = req.imp {
+            if imp != ReqImpl::Default {
+                for op in model.layers.iter().filter_map(|l| l.op()) {
+                    if !imp.eligible(&op) {
+                        return Err(anyhow!(
+                            "impl {} is not eligible for every layer of {} (use impl=auto)",
+                            imp.wire(),
+                            model.name
+                        ));
+                    }
+                }
+            }
+        }
         let planners = self.planners_for(&entry);
         let sched = ModelScheduler {
             device: &entry.device,
@@ -934,16 +1003,19 @@ impl ServerState {
             dist.mechs.iter().map(|(m, n)| format!("{}:{n}", mech_wire(*m))).collect();
         let clusters_s: Vec<String> =
             dist.clusters.iter().map(|(c, n)| format!("{}:{n}", c.wire())).collect();
-        // clusters= is appended *after* the pre-cluster fields so replies
-        // stay position-compatible for existing clients
+        let impls_s: Vec<String> =
+            dist.impls.iter().map(|(i, n)| format!("{}:{n}", i.wire())).collect();
+        // clusters= and impls= are appended *after* the pre-existing
+        // fields so replies stay position-compatible for existing clients
         Ok(format!(
-            "model={} layers={} planned={planned} coexec={coexec} threads={} mechs={} t_pred_ms={:.2} clusters={}",
+            "model={} layers={} planned={planned} coexec={coexec} threads={} mechs={} t_pred_ms={:.2} clusters={} impls={}",
             model.name,
             model.layers.len(),
             threads_s.join(","),
             mechs_s.join(","),
             t_pred_us / 1e3,
-            clusters_s.join(",")
+            clusters_s.join(","),
+            impls_s.join(",")
         ))
     }
 
@@ -1009,7 +1081,7 @@ impl ServerState {
     fn parse_op(&self, session: &Session, parts: &[&str]) -> Result<(OpConfig, PlanRequest)> {
         let entry = self.session_entry(session);
         match parts {
-            ["linear", l, cin, cout, thr, cl @ ..] if cl.len() <= 1 => {
+            ["linear", l, cin, cout, thr, tail @ ..] if tail.len() <= 2 => {
                 let cfg = LinearConfig::new(
                     field(l, "l")?,
                     field(cin, "cin")?,
@@ -1018,10 +1090,12 @@ impl ServerState {
                 if cfg.l == 0 || cfg.cin == 0 || cfg.cout == 0 {
                     return Err(anyhow!("zero-sized shape"));
                 }
-                let req = self.parse_request(&entry, thr, cl.first().copied())?;
-                Ok((OpConfig::Linear(cfg), req))
+                let req = self.parse_request(&entry, thr, tail, OP_SPEC_USAGE)?;
+                let op = OpConfig::Linear(cfg);
+                validate_impl(&op, &req)?;
+                Ok((op, req))
             }
-            ["conv", h, w, cin, cout, k, s, thr, cl @ ..] if cl.len() <= 1 => {
+            ["conv", h, w, cin, cout, k, s, thr, tail @ ..] if tail.len() <= 2 => {
                 let cfg = ConvConfig::new(
                     field(h, "h")?,
                     field(w, "w")?,
@@ -1039,8 +1113,10 @@ impl ServerState {
                 {
                     return Err(anyhow!("zero-sized shape"));
                 }
-                let req = self.parse_request(&entry, thr, cl.first().copied())?;
-                Ok((OpConfig::Conv(cfg), req))
+                let req = self.parse_request(&entry, thr, tail, OP_SPEC_USAGE)?;
+                let op = OpConfig::Conv(cfg);
+                validate_impl(&op, &req)?;
+                Ok((op, req))
             }
             [kind, ..] if *kind != "linear" && *kind != "conv" => {
                 Err(anyhow!("unknown op kind {kind}"))
@@ -1053,47 +1129,79 @@ impl ServerState {
     /// free the thread and mechanism axes; a number pins
     /// `(threads, SvmPolling)` (0 is an error; anything above the chosen
     /// cluster's budget clamps to it — a client asking for 99 threads
-    /// must not make the cost model extrapolate nonsense). The optional
-    /// `cluster=` token pins a cluster the session device must expose, or
-    /// frees the cluster axis with `cluster=auto`; omitted means prime —
-    /// the exact pre-cluster behavior.
+    /// must not make the cost model extrapolate nonsense). The trailing
+    /// `key=value` tokens pin or free the cluster (`cluster=`) and
+    /// kernel-implementation (`impl=`) axes; omitted they default to
+    /// prime / the delegate's default impl — the exact pre-impl behavior.
+    /// Token recognition is shared with the evented fast path
+    /// ([`tokens`]), which defers anything non-canonical here for the
+    /// rich errors; `usage` is the grammar quoted for unrecognized or
+    /// duplicated trailing tokens (op-spec vs `PLAN_MODEL`).
     fn parse_request(
         &self,
         entry: &DeviceEntry,
         tok: &str,
-        cluster_tok: Option<&str>,
+        trailing: &[&str],
+        usage: &'static str,
     ) -> Result<PlanRequest> {
-        let cluster = match cluster_tok {
-            None => Choice::Fixed(entry.device.spec.cpu.default_cluster_id()),
-            Some(ctok) => {
-                let v = ctok
-                    .strip_prefix("cluster=")
-                    .ok_or_else(|| anyhow!(OP_SPEC_USAGE))?;
-                if v.eq_ignore_ascii_case("auto") {
-                    Choice::Auto
-                } else {
-                    let id = ClusterId::parse(v).ok_or_else(|| {
-                        anyhow!("unknown cluster {v} (prime|gold|silver|auto)")
-                    })?;
-                    if entry.device.spec.cpu.cluster(id).is_none() {
-                        return Err(anyhow!("device {} has no {id} cluster", entry.key));
-                    }
-                    Choice::Fixed(id)
+        let mut cluster: Option<Choice<ClusterId>> = None;
+        let mut imp: Option<Choice<ReqImpl>> = None;
+        for t in trailing {
+            match tokens::classify(t.as_bytes()) {
+                tokens::KeyTok::Cluster(v) if cluster.is_none() => {
+                    cluster = Some(match tokens::cluster_value(v) {
+                        Some(tokens::ClusterVal::Auto) => Choice::Auto,
+                        Some(tokens::ClusterVal::Fixed(id)) => {
+                            if entry.device.spec.cpu.cluster(id).is_none() {
+                                return Err(anyhow!("device {} has no {id} cluster", entry.key));
+                            }
+                            Choice::Fixed(id)
+                        }
+                        None => {
+                            return Err(anyhow!(
+                                "unknown cluster {} (prime|gold|silver|auto)",
+                                String::from_utf8_lossy(v)
+                            ))
+                        }
+                    });
                 }
+                tokens::KeyTok::Impl(v) if imp.is_none() => {
+                    imp = Some(match tokens::impl_value(v) {
+                        Some(tokens::ImplVal::Auto) => Choice::Auto,
+                        Some(tokens::ImplVal::Fixed(i)) => Choice::Fixed(i),
+                        None => {
+                            return Err(anyhow!(
+                                "unknown impl {} (default|direct|winograd|tiled_4x4|auto)",
+                                String::from_utf8_lossy(v)
+                            ))
+                        }
+                    });
+                }
+                // unrecognized or duplicated tokens quote the grammar,
+                // exactly as the pre-impl parsers did
+                _ => return Err(anyhow!(usage)),
             }
-        };
-        let req = if tok.eq_ignore_ascii_case("auto") {
-            PlanRequest::auto()
-        } else {
-            let t: usize = field(tok, "threads")?;
-            if t == 0 {
-                return Err(anyhow!("threads must be >= 1"));
+        }
+        let req = match tokens::threads(tok.as_bytes()) {
+            Some(tokens::ThreadsTok::Auto) => PlanRequest::auto(),
+            Some(tokens::ThreadsTok::Fixed(t)) => PlanRequest::fixed(t, SyncMechanism::SvmPolling),
+            None => {
+                // non-canonical spellings (`+3`, out-of-range, garbage)
+                // keep the lenient legacy parse and its field errors
+                let t: usize = field(tok, "threads")?;
+                if t == 0 {
+                    return Err(anyhow!("threads must be >= 1"));
+                }
+                PlanRequest::fixed(t, SyncMechanism::SvmPolling)
             }
-            PlanRequest::fixed(t, SyncMechanism::SvmPolling)
         };
         // normalization (per-cluster thread clamping) happens in the
         // cache, against the same CpuSpec every planner sees
-        Ok(req.with_cluster(cluster))
+        let cluster =
+            cluster.unwrap_or(Choice::Fixed(entry.device.spec.cpu.default_cluster_id()));
+        Ok(req
+            .with_cluster(cluster)
+            .with_impl(imp.unwrap_or(Choice::Fixed(ReqImpl::Default))))
     }
 
     /// Resolve a client-supplied device name to its registry entry:
@@ -1286,11 +1394,28 @@ impl ServerState {
     }
 }
 
+/// A pinned (non-`auto`) impl must be eligible for the op's shape: the
+/// planner documents pinned-ineligible requests as a caller bug (it
+/// panics), so the serving layer rejects them here with a protocol
+/// error. `impl=auto` never reaches this — the planner prunes ineligible
+/// implementations from the search instead.
+fn validate_impl(op: &OpConfig, req: &PlanRequest) -> Result<()> {
+    match req.imp {
+        Choice::Fixed(i) if !i.eligible(op) => Err(anyhow!(
+            "impl {} is not eligible for this op \
+             (winograd: 3x3 stride-1 conv only; tiled_4x4: conv or vec4-aligned linear)",
+            i.wire()
+        )),
+        _ => Ok(()),
+    }
+}
+
 /// The `PLAN` reply body for a resolved plan: split, predicted total, and
-/// the chosen strategy (`cluster=` appended last so pre-cluster clients
-/// keep their field positions). One `Display` impl serves both the slow
-/// path (via [`plan_body`]) and the evented fast path, which formats
-/// straight into a connection's reply buffer — the two can't drift.
+/// the chosen strategy (`cluster=` and then `impl=` appended last so
+/// pre-cluster and pre-impl clients keep their field positions). One
+/// `Display` impl serves both the slow path (via [`plan_body`]) and the
+/// evented fast path, which formats straight into a connection's reply
+/// buffer — the two can't drift.
 struct PlanBody<'a>(&'a Plan);
 
 impl std::fmt::Display for PlanBody<'_> {
@@ -1298,13 +1423,14 @@ impl std::fmt::Display for PlanBody<'_> {
         let plan = self.0;
         write!(
             f,
-            "{} {} {:.1} threads={} mech={} cluster={}",
+            "{} {} {:.1} threads={} mech={} cluster={} impl={}",
             plan.split.c_cpu,
             plan.split.c_gpu,
             plan.t_total_us,
             plan.threads,
             mech_wire(plan.mech),
-            plan.cluster.wire()
+            plan.cluster.wire(),
+            plan.imp.wire()
         )
     }
 }

@@ -1,0 +1,136 @@
+//! Byte-level strategy-token grammar shared by the slow parser
+//! ([`super::ServerState`]'s `parse_request`) and the evented fast path
+//! (`super::evented`'s `fastparse`).
+//!
+//! The `<threads|auto>`, `cluster=`, and `impl=` token rules used to be
+//! spelled out twice — once per parser — which is exactly how the two
+//! drift apart. This module is the single copy. Everything here is
+//! policy-free: helpers classify and parse, returning `None` for
+//! anything non-canonical. The fast path treats `None` as "defer to the
+//! pool" (the slow path's replies are authoritative); the slow path maps
+//! `None` to its rich protocol errors (or, for the threads token, falls
+//! back to its lenient legacy numeric parse so `+3`-style spellings keep
+//! their exact historical behavior and error strings).
+
+use crate::device::{ClusterId, ReqImpl};
+use crate::server::MAX_FIELD;
+
+/// Strict decimal numeric field within the protocol bound: ASCII digits
+/// only, at most 6 of them (6 digits cover every value <= [`MAX_FIELD`]).
+pub(crate) fn field(tok: &[u8]) -> Option<usize> {
+    if tok.is_empty() || tok.len() > 6 {
+        return None;
+    }
+    let mut v: usize = 0;
+    for &b in tok {
+        if !b.is_ascii_digit() {
+            return None;
+        }
+        v = v * 10 + (b - b'0') as usize;
+    }
+    (v <= MAX_FIELD).then_some(v)
+}
+
+/// The `<threads|auto>` token, canonically spelled.
+pub(crate) enum ThreadsTok {
+    Auto,
+    Fixed(usize),
+}
+
+/// Parse the `<threads|auto>` token: `auto` (any case) or a strict
+/// positive decimal. Zero, non-decimal spellings, and out-of-range
+/// values return `None`.
+pub(crate) fn threads(tok: &[u8]) -> Option<ThreadsTok> {
+    if tok.eq_ignore_ascii_case(b"auto") {
+        return Some(ThreadsTok::Auto);
+    }
+    let v = field(tok)?;
+    (v > 0).then_some(ThreadsTok::Fixed(v))
+}
+
+/// A trailing strategy token split at its `key=` prefix. Both parsers
+/// accept the same key set by construction.
+pub(crate) enum KeyTok<'a> {
+    Cluster(&'a [u8]),
+    Impl(&'a [u8]),
+    Other,
+}
+
+pub(crate) fn classify(tok: &[u8]) -> KeyTok<'_> {
+    if let Some(v) = tok.strip_prefix(b"cluster=") {
+        KeyTok::Cluster(v)
+    } else if let Some(v) = tok.strip_prefix(b"impl=") {
+        KeyTok::Impl(v)
+    } else {
+        KeyTok::Other
+    }
+}
+
+/// A `cluster=` value: `auto` frees the axis, a name pins it. Whether
+/// the session device actually exposes the cluster is the caller's
+/// (policy) check.
+pub(crate) enum ClusterVal {
+    Auto,
+    Fixed(ClusterId),
+}
+
+pub(crate) fn cluster_value(v: &[u8]) -> Option<ClusterVal> {
+    if v.eq_ignore_ascii_case(b"auto") {
+        return Some(ClusterVal::Auto);
+    }
+    ClusterId::ALL
+        .into_iter()
+        .find(|c| v.eq_ignore_ascii_case(c.wire().as_bytes()))
+        .map(ClusterVal::Fixed)
+}
+
+/// An `impl=` value: `auto` frees the axis, a kernel-implementation wire
+/// name pins it. Whether the impl is eligible for the op's shape is the
+/// caller's (policy) check.
+pub(crate) enum ImplVal {
+    Auto,
+    Fixed(ReqImpl),
+}
+
+pub(crate) fn impl_value(v: &[u8]) -> Option<ImplVal> {
+    if v.eq_ignore_ascii_case(b"auto") {
+        return Some(ImplVal::Auto);
+    }
+    ReqImpl::ALL
+        .into_iter()
+        .find(|i| v.eq_ignore_ascii_case(i.wire().as_bytes()))
+        .map(ImplVal::Fixed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_is_strict_decimal_within_bound() {
+        assert_eq!(field(b"3"), Some(3));
+        assert_eq!(field(b"03"), Some(3));
+        assert_eq!(field(b"32768"), Some(MAX_FIELD));
+        for bad in [&b"+3"[..], b"3.5", b"", b"40000", b"1234567", b"3a"] {
+            assert_eq!(field(bad).is_none(), true, "{:?}", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn strategy_tokens_parse_canonically() {
+        assert!(matches!(threads(b"auto"), Some(ThreadsTok::Auto)));
+        assert!(matches!(threads(b"AUTO"), Some(ThreadsTok::Auto)));
+        assert!(matches!(threads(b"3"), Some(ThreadsTok::Fixed(3))));
+        assert!(threads(b"0").is_none());
+        assert!(matches!(classify(b"cluster=gold"), KeyTok::Cluster(b"gold")));
+        assert!(matches!(classify(b"impl=winograd"), KeyTok::Impl(b"winograd")));
+        assert!(matches!(classify(b"gold"), KeyTok::Other));
+        assert!(matches!(cluster_value(b"SILVER"), Some(ClusterVal::Fixed(ClusterId::Silver))));
+        assert!(matches!(cluster_value(b"auto"), Some(ClusterVal::Auto)));
+        assert!(cluster_value(b"mega").is_none());
+        assert!(matches!(impl_value(b"auto"), Some(ImplVal::Auto)));
+        assert!(matches!(impl_value(b"tiled_4x4"), Some(ImplVal::Fixed(ReqImpl::Tiled4x4))));
+        assert!(matches!(impl_value(b"default"), Some(ImplVal::Fixed(ReqImpl::Default))));
+        assert!(impl_value(b"im2col").is_none());
+    }
+}

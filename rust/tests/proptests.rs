@@ -5,7 +5,7 @@
 //! deterministic, with the failing case printed on assert.
 
 use mobile_coexec::device::noise::SplitMix64;
-use mobile_coexec::device::{ClusterId, Device, SyncMechanism};
+use mobile_coexec::device::{ClusterId, Device, ReqImpl, SyncMechanism};
 use mobile_coexec::gbdt::{Gbdt, GbdtParams};
 use mobile_coexec::metrics;
 use mobile_coexec::ops::{ChannelSplit, ConvConfig, LinearConfig, OpConfig, Partitionable};
@@ -308,6 +308,90 @@ fn prop_cluster_auto_never_worse_than_any_fixed_placement() {
     }
 }
 
+/// Property: a 5-axis `impl=auto` plan's predicted total is never worse
+/// than any fixed `(cluster, threads, mech, impl)` strategy for the same
+/// op — the joint search's impl-eligibility prune must never discard a
+/// kernel implementation that could have won — it is *exactly* the best
+/// of them (equal predicted cost, so the auto axis is a minimization,
+/// not an approximation), and re-planning at its resolved strategy
+/// reproduces the plan bit for bit.
+#[test]
+fn prop_impl_auto_never_worse_than_any_fixed_impl() {
+    use mobile_coexec::partition::{Choice, PlanRequest, Planner};
+
+    let device = Device::pixel5();
+    let linear = Planner::train_for_kind(&device, "linear", 600, 31);
+    let conv = Planner::train_for_kind(&device, "conv", 600, 31);
+    let mut rng = SplitMix64::new(23);
+    for case in 0..8 {
+        // mix random shapes with winograd-friendly 3x3 stride-1 convs so
+        // the impl axis genuinely competes
+        let op = if case % 2 == 0 {
+            OpConfig::Conv(ConvConfig::new(
+                rng.gen_range(8, 64),
+                rng.gen_range(8, 64),
+                rng.gen_range(8, 256),
+                rng.gen_range(8, 256),
+                3,
+                1,
+            ))
+        } else {
+            random_op(&mut rng)
+        };
+        let planner = match op {
+            OpConfig::Linear(_) => &linear,
+            OpConfig::Conv(_) => &conv,
+        };
+        let auto =
+            planner.plan_request(&op, PlanRequest::cluster_auto().with_impl(Choice::Auto));
+        assert!(
+            auto.imp.eligible(&op),
+            "case {case} {op}: auto resolved an ineligible impl {:?}",
+            auto.imp
+        );
+        let mut best_fixed = f64::INFINITY;
+        for cl in &device.spec.cpu.clusters {
+            for threads in 1..=cl.max_threads() {
+                for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
+                    for imp in ReqImpl::ALL {
+                        if !imp.eligible(&op) {
+                            continue;
+                        }
+                        let fixed = planner.plan_request(
+                            &op,
+                            PlanRequest::fixed_on(cl.id, threads, mech)
+                                .with_impl(Choice::Fixed(imp)),
+                        );
+                        best_fixed = best_fixed.min(fixed.t_total_us);
+                        assert!(
+                            auto.t_total_us <= fixed.t_total_us + 1e-9,
+                            "case {case} {op}: impl-auto {:.3}us worse than fixed \
+                             ({}, {threads}, {mech:?}, {imp:?}) {:.3}us",
+                            auto.t_total_us,
+                            cl.id,
+                            fixed.t_total_us
+                        );
+                    }
+                }
+            }
+        }
+        // optimality is exact: auto IS the best fixed strategy's cost
+        assert!(
+            (auto.t_total_us - best_fixed).abs() <= 1e-9,
+            "case {case} {op}: impl-auto {:.6}us != best fixed {:.6}us",
+            auto.t_total_us,
+            best_fixed
+        );
+        // and the plan is exactly reproducible at its resolved strategy
+        let s = auto.strategy();
+        let replay = planner.plan_request(
+            &op,
+            PlanRequest::fixed_on(s.cluster, s.threads, s.mech).with_impl(Choice::Fixed(s.imp)),
+        );
+        assert_eq!(replay, auto, "case {case} {op}: impl-auto plan not reproducible");
+    }
+}
+
 /// Property: the serving layer's plan cache is *transparent* — for random
 /// ops, a cached plan is identical to a freshly computed plan — and cache
 /// keys never collide across distinct `(op, threads, mech)` tuples.
@@ -322,7 +406,7 @@ fn prop_plan_cache_transparent_and_keys_collision_free() {
     let conv = Planner::train_for_kind(&device, "conv", 500, 21);
     let cache = PlanCache::default();
     let mut rng = SplitMix64::new(8);
-    let mut tuples: HashSet<(OpConfig, ClusterId, usize, SyncMechanism)> = HashSet::new();
+    let mut tuples: HashSet<(OpConfig, ClusterId, usize, SyncMechanism, ReqImpl)> = HashSet::new();
     let mut keys: HashSet<PlanKey> = HashSet::new();
     for case in 0..60 {
         let op = random_op(&mut rng);
@@ -337,31 +421,34 @@ fn prop_plan_cache_transparent_and_keys_collision_free() {
         assert_eq!(cached, fresh, "case {case}: cold cache fill diverged for {op}");
         let hit = cache.get_or_plan(planner, &op, threads);
         assert_eq!(hit, fresh, "case {case}: cache hit diverged for {op}");
-        // key uniqueness: one key per distinct tuple, for both mechanisms
-        // and every cluster
+        // key uniqueness: one key per distinct tuple, for both mechanisms,
+        // every cluster, and every kernel implementation
         for mech in [SyncMechanism::SvmPolling, SyncMechanism::EventWait] {
             for cluster in ClusterId::ALL {
-                tuples.insert((op, cluster, threads, mech));
-                keys.insert(PlanKey {
-                    device: device.name(),
-                    epoch: 0,
-                    op,
-                    cluster,
-                    threads,
-                    mech,
-                });
+                for imp in ReqImpl::ALL {
+                    tuples.insert((op, cluster, threads, mech, imp));
+                    keys.insert(PlanKey {
+                        device: device.name(),
+                        epoch: 0,
+                        op,
+                        cluster,
+                        threads,
+                        mech,
+                        imp,
+                    });
+                }
             }
         }
     }
     assert_eq!(
         keys.len(),
         tuples.len(),
-        "distinct (op, cluster, threads, mech) tuples must map to distinct keys"
+        "distinct (op, cluster, threads, mech, impl) tuples must map to distinct keys"
     );
     // and the cache held exactly one entry per distinct (op, threads)
     // (planning above only touched the prime cluster)
     let planned: HashSet<(OpConfig, usize)> =
-        tuples.iter().map(|(op, _, t, _)| (*op, *t)).collect();
+        tuples.iter().map(|(op, _, t, _, _)| (*op, *t)).collect();
     assert_eq!(cache.len(), planned.len());
     assert_eq!(cache.misses() as usize, planned.len());
 }

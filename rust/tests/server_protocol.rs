@@ -311,7 +311,213 @@ fn missing_cluster_on_a_device_is_an_err() {
     assert!(reply.starts_with("ERR device primeonly has no silver cluster"), "{reply}");
     let auto = state.handle(&mut session, "PLAN linear 50 768 1024 auto cluster=auto");
     assert!(auto.starts_with("OK "), "{auto}");
-    assert!(auto.ends_with("cluster=prime"), "only prime exists to resolve to: {auto}");
+    assert_eq!(kv(&auto, "cluster"), "prime", "only prime exists to resolve to: {auto}");
+}
+
+// --------------------------------------------------------------- impl axis --
+
+#[test]
+fn impl_axis_roundtrips_and_shares_the_cache() {
+    // fresh state: this test reasons about exact cache counters
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 500, 101));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    // byte-compat: an explicit impl=default is the same request as the
+    // pre-impl line — one plan entry, the second request is a pure hit
+    let bare = c.request("PLAN linear 50 768 3072 3");
+    assert_eq!(kv(&bare, "impl"), "default");
+    let explicit = c.request("PLAN linear 50 768 3072 3 impl=default");
+    assert_eq!(explicit, bare, "explicit default must be byte-identical");
+    assert_eq!(
+        (state.cache.hits(), state.cache.misses()),
+        (1, 1),
+        "impl=default must share the pre-impl cache entry"
+    );
+
+    // a forced implementation is its own cache entry with its own plan —
+    // and it works on a never-FITted device: the built-in analytic
+    // defaults price forced impls out of the box
+    let tiled = c.request("PLAN linear 50 768 3072 3 impl=tiled_4x4");
+    assert!(tiled.starts_with("OK "), "{tiled}");
+    assert_eq!(kv(&tiled, "impl"), "tiled_4x4");
+    assert_ne!(tiled, bare, "a forced impl must be reported in the reply");
+    assert_eq!(state.cache.misses(), 2, "forced impl must plan its own entry");
+    let wino = c.request("PLAN conv 56 56 64 128 3 1 2 impl=winograd");
+    assert!(wino.starts_with("OK "), "{wino}");
+    assert_eq!(kv(&wino, "impl"), "winograd");
+
+    // the slow parser takes the trailing key=value tokens in either
+    // order; both spellings land on the one cache entry
+    let canonical = c.request("PLAN linear 50 768 3072 3 cluster=gold impl=direct");
+    assert_eq!(kv(&canonical, "cluster"), "gold");
+    assert_eq!(kv(&canonical, "impl"), "direct");
+    let hits = state.cache.hits();
+    let swapped = c.request("PLAN linear 50 768 3072 3 impl=direct cluster=gold");
+    assert_eq!(swapped, canonical, "token order must not change the request");
+    assert_eq!(state.cache.hits(), hits + 1, "swapped order must share the entry");
+
+    // impl=auto resolves the axis and reports the winner; the wire value
+    // is case-insensitive
+    let auto = c.request("PLAN conv 56 56 64 128 3 1 auto cluster=auto impl=auto");
+    assert!(auto.starts_with("OK "), "{auto}");
+    let imp = kv(&auto, "impl").to_string();
+    let cluster = kv(&auto, "cluster").to_string();
+    let threads = kv(&auto, "threads").to_string();
+    let mech = kv(&auto, "mech").to_string();
+    assert!(
+        ["default", "direct", "winograd", "tiled_4x4"].contains(&imp.as_str()),
+        "{auto}"
+    );
+    let hits = state.cache.hits();
+    assert_eq!(c.request("PLAN conv 56 56 64 128 3 1 auto cluster=auto impl=AUTO"), auto);
+    assert_eq!(state.cache.hits(), hits + 1, "warm impl-auto must hit");
+    // the fixed request at the resolved strategy shares the auto entry
+    if mech == "svm_polling" {
+        let fixed = c.request(&format!(
+            "PLAN conv 56 56 64 128 3 1 {threads} cluster={cluster} impl={imp}"
+        ));
+        assert_eq!(plan_nums(&fixed), plan_nums(&auto), "fixed must share the auto entry");
+        assert_eq!(kv(&fixed, "impl"), imp);
+    }
+
+    // impl= flows through RUN, PLAN_BATCH, and PLAN_MODEL
+    let run = c.request("RUN linear 50 768 3072 3 impl=tiled_4x4");
+    assert!(run.starts_with("OK "), "{run}");
+    assert_eq!(kv(&run, "impl"), "tiled_4x4");
+    let lines = c.request_batch(
+        "PLAN_BATCH linear 50 768 3072 3 impl=tiled_4x4; linear 50 768 3072 3 impl=im2col",
+    );
+    assert_eq!(lines.len(), 2);
+    assert_eq!(lines[0], tiled, "batch shares the single-PLAN forced-impl entry");
+    assert!(lines[1].starts_with("ERR unknown impl im2col"), "{}", lines[1]);
+    let pm = c.request("PLAN_MODEL resnet18 3 impl=auto");
+    assert!(pm.starts_with("OK model=resnet18"), "{pm}");
+    let planned: usize = kv(&pm, "planned").parse().unwrap();
+    let total: usize = kv(&pm, "impls")
+        .split(',')
+        .map(|bin| bin.split_once(':').expect("i:count").1.parse::<usize>().unwrap())
+        .sum();
+    assert_eq!(total, planned, "impls distribution covers planned layers");
+
+    // the per-impl PLAN breakdown lands in STATS: the forced and default
+    // requests above must show up under their resolved implementation
+    let stats = c.request("STATS");
+    let default_plans: usize = kv(&stats, "plan.impl.default").parse().unwrap();
+    let tiled_plans: usize = kv(&stats, "plan.impl.tiled_4x4").parse().unwrap();
+    let wino_plans: usize = kv(&stats, "plan.impl.winograd").parse().unwrap();
+    let direct_plans: usize = kv(&stats, "plan.impl.direct").parse().unwrap();
+    assert!(default_plans >= 2, "{stats}");
+    assert!(tiled_plans >= 1, "{stats}");
+    assert!(wino_plans >= 1, "{stats}");
+    assert!(direct_plans >= 2, "{stats}");
+}
+
+/// Satellite byte-compat suite: every pre-impl request line keeps its
+/// exact pre-impl reply prefix — the only change is the appended
+/// `impl=default` (`impls=default:n` for `PLAN_MODEL`) field — and its
+/// cache key, proven by the explicit-`impl=default` spelling hitting the
+/// bare line's entry.
+#[test]
+fn pre_impl_request_lines_are_byte_compatible() {
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 500, 103));
+    let server = Server::new(state.clone(), ServerConfig::default());
+    let addr = server.spawn_ephemeral().unwrap();
+    let mut c = Client::connect(&addr);
+
+    let legacy = [
+        "PLAN linear 50 768 3072 3",
+        "PLAN linear 50 768 3072 auto",
+        "PLAN conv 64 64 128 192 3 1 2",
+        "PLAN conv 32 32 64 128 3 1 auto",
+        "PLAN linear 50 768 3072 3 cluster=silver",
+        "PLAN linear 50 768 3072 auto cluster=auto",
+    ];
+    for req in legacy {
+        let reply = c.request(req);
+        assert!(reply.starts_with("OK "), "{req} -> {reply}");
+        // the impl field is appended last, pinned to the pre-impl default
+        let (prefix, last) = reply.rsplit_once(' ').unwrap();
+        assert_eq!(last, "impl=default", "{req} -> {reply}");
+        assert!(
+            !prefix.contains("impl="),
+            "pre-impl fields must not mention impl: {reply}"
+        );
+        // same line + explicit impl=default: byte-identical, served from
+        // the same cache entry (no new planning miss)
+        let misses = state.cache.misses();
+        let explicit = c.request(&format!("{req} impl=default"));
+        assert_eq!(explicit, reply, "{req}");
+        assert_eq!(state.cache.misses(), misses, "{req} must share its cache key");
+    }
+
+    // PLAN_MODEL appends the impls= distribution after the pre-impl keys
+    let pm = c.request("PLAN_MODEL resnet18 3");
+    assert!(pm.starts_with("OK model=resnet18"), "{pm}");
+    let planned = kv(&pm, "planned");
+    assert_eq!(kv(&pm, "impls"), format!("default:{planned}"), "{pm}");
+    assert_eq!(c.request("PLAN_MODEL resnet18 3 impl=default"), pm);
+
+    // RUN keeps its pre-impl prefix shape too (measured latencies draw
+    // fresh noise, so fields — not bytes — are compared)
+    let run = c.request("RUN linear 50 768 3072 3");
+    assert!(run.starts_with("OK "), "{run}");
+    assert_eq!(run.split_whitespace().count(), 8, "{run}");
+    assert_eq!(kv(&run, "impl"), "default", "{run}");
+}
+
+#[test]
+fn impl_err_paths_over_loopback() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+    let cases = [
+        // unknown implementation names quote the wire vocabulary
+        (
+            "PLAN linear 50 768 3072 3 impl=im2col",
+            "ERR unknown impl im2col (default|direct|winograd|tiled_4x4|auto)",
+        ),
+        ("RUN linear 50 768 3072 auto impl=fft", "ERR unknown impl fft"),
+        ("PLAN_MODEL resnet18 3 impl=im2col", "ERR unknown impl im2col"),
+        // eligibility: winograd needs a 3x3 stride-1 conv, tiled_4x4 a
+        // conv or a vec4-aligned linear
+        (
+            "PLAN linear 50 768 3072 3 impl=winograd",
+            "ERR impl winograd is not eligible for this op",
+        ),
+        (
+            "PLAN conv 64 64 128 192 3 2 2 impl=winograd",
+            "ERR impl winograd is not eligible for this op",
+        ),
+        (
+            "PLAN conv 64 64 128 192 5 1 2 impl=winograd",
+            "ERR impl winograd is not eligible for this op",
+        ),
+        (
+            "PLAN linear 50 767 3072 3 impl=tiled_4x4",
+            "ERR impl tiled_4x4 is not eligible for this op",
+        ),
+        // a model with any ineligible layer rejects a forced impl whole
+        (
+            "PLAN_MODEL resnet18 3 impl=winograd",
+            "ERR impl winograd is not eligible for every layer of resnet18 (use impl=auto)",
+        ),
+        // malformed trailing tokens quote the grammar
+        ("PLAN linear 50 768 3072 3 impl=direct impl=direct", "ERR bad op spec"),
+        ("PLAN linear 50 768 3072 3 impl", "ERR bad op spec"),
+        ("PLAN linear 50 768 3072 3 impls=direct", "ERR bad op spec"),
+        ("PLAN linear 50 768 3072 3 impl=direct extra", "ERR bad op spec"),
+        ("PLAN_MODEL resnet18 3 impl=direct extra", "ERR bad model spec"),
+    ];
+    for (req, want) in cases {
+        let reply = c.request(req);
+        assert!(
+            reply.starts_with(want),
+            "request {req:?}: got {reply:?}, want prefix {want:?}"
+        );
+    }
+    // the connection survives every error
+    assert_eq!(c.request("PING"), "OK pong");
 }
 
 // ------------------------------------------------------------ ERR paths --
@@ -862,6 +1068,76 @@ fn fit_self_calibration_reproduces_plan_replies() {
     assert_eq!(kv(&stats, "fit.err"), "0", "{stats}");
 }
 
+/// The impl-axis acceptance loop: a device registered with one
+/// mis-calibrated per-impl constant pins `impl=auto` to that
+/// implementation; a `FIT` over impl-tagged samples from the real
+/// hardware recovers the constant, and the next `impl=auto` plan
+/// switches implementation accordingly.
+#[test]
+fn fit_impl_tagged_samples_recovers_constant_and_flips_auto_choice() {
+    use mobile_coexec::calibration::SampleSet;
+    let state = Arc::new(ServerState::new_lazy(Device::pixel5(), 600, 107));
+    let mut session = state.session();
+
+    // labphone claims its direct conv kernel runs at a quarter of the
+    // generic path's cycles/MAC — far from pixel5's truth (1.35)
+    let reply = state.handle(
+        &mut session,
+        "CALIBRATE labphone base=pixel5 gpu.direct.cost_factor=0.25",
+    );
+    assert_eq!(reply, "OK calibrated labphone flushed=0");
+    assert_eq!(state.handle(&mut session, "DEVICE labphone"), "OK device labphone");
+
+    // the bogus constant pins the auto choice: a compute-bound 3x3
+    // stride-1 conv (where every implementation is eligible) must pick
+    // the impossibly cheap direct kernel
+    let auto_req = "PLAN conv 56 56 64 128 3 1 2 impl=auto";
+    let before_auto = state.handle(&mut session, auto_req);
+    assert!(before_auto.starts_with("OK "), "{before_auto}");
+    assert_eq!(
+        kv(&before_auto, "impl"),
+        "direct",
+        "the mis-calibrated constant must pin direct: {before_auto}"
+    );
+    let fixed_req = "PLAN conv 56 56 64 128 3 1 2 impl=direct";
+    let before_fixed = plan_nums(&state.handle(&mut session, fixed_req))[2];
+
+    // profile the real phone — impl-tagged GPU and coexec samples ride
+    // along with the untagged campaign — and upload the measurements
+    let truth = Device::pixel5();
+    let line = format!(
+        "FIT labphone; {}; {}",
+        SampleSet::synthesize(&truth, 12).wire(),
+        SampleSet::synthesize_impls(&truth, 12).wire()
+    );
+    assert!(line.len() < (1 << 16), "the tagged campaign must fit the line cap");
+    let reply = state.handle(&mut session, &line);
+    assert!(reply.starts_with("OK fitted labphone "), "{reply}");
+    assert_eq!(
+        kv(&reply, "groups"),
+        "8/8",
+        "tagged samples must fit all three per-impl groups too: {reply}"
+    );
+    let resid: f64 = kv(&reply, "resid").parse().unwrap();
+    assert!(resid < 0.10, "tagged self-fit must be tight: {reply}");
+
+    // the recovered constant makes the forced direct plan honest
+    // (slower) and flips the auto choice away from it
+    let after_fixed = plan_nums(&state.handle(&mut session, fixed_req))[2];
+    assert!(
+        after_fixed > before_fixed * 1.05,
+        "recovering the constant must slow the forced-direct plan: \
+         {before_fixed} -> {after_fixed}"
+    );
+    let after_auto = state.handle(&mut session, auto_req);
+    assert!(after_auto.starts_with("OK "), "{after_auto}");
+    assert_ne!(
+        kv(&after_auto, "impl"),
+        "direct",
+        "auto must switch off the no-longer-cheap impl: {after_auto}"
+    );
+}
+
 // ------------------------------------------------------ format stability --
 
 #[test]
@@ -870,11 +1146,12 @@ fn response_formats_are_stable() {
     let mut c = Client::connect(&addr);
 
     // PLAN: "OK <usize> <usize> <float:.1> threads=<t> mech=<mech>
-    //        cluster=<cluster>" — cluster= is appended last so
-    // pre-cluster clients keep their field positions
+    //        cluster=<cluster> impl=<i>" — cluster= and then impl= are
+    // appended last so pre-cluster/pre-impl clients keep their field
+    // positions
     let plan = c.request("PLAN linear 50 768 1024 2");
     let toks: Vec<&str> = plan.split_whitespace().collect();
-    assert_eq!(toks.len(), 7, "{plan}");
+    assert_eq!(toks.len(), 8, "{plan}");
     assert_eq!(toks[0], "OK");
     toks[1].parse::<usize>().unwrap();
     toks[2].parse::<usize>().unwrap();
@@ -883,15 +1160,18 @@ fn response_formats_are_stable() {
     kv(&plan, "threads").parse::<usize>().unwrap();
     assert!(["svm_polling", "event_wait"].contains(&kv(&plan, "mech")), "{plan}");
     assert_eq!(kv(&plan, "cluster"), "prime", "omitted cluster must pin prime");
-    assert!(toks[6].starts_with("cluster="), "cluster= must come last: {plan}");
+    assert!(toks[6].starts_with("cluster="), "cluster= before impl=: {plan}");
+    assert_eq!(kv(&plan, "impl"), "default", "omitted impl must pin default");
+    assert!(toks[7].starts_with("impl="), "impl= must come last: {plan}");
 
     // RUN: "OK <float:.1> <float:.1> <float:.3> threads=<t> mech=<mech>
-    //       cluster=<cluster>"
+    //       cluster=<cluster> impl=<i>"
     let run = c.request("RUN linear 50 768 1024 2");
     let toks: Vec<&str> = run.split_whitespace().collect();
-    assert_eq!(toks.len(), 7, "{run}");
+    assert_eq!(toks.len(), 8, "{run}");
     assert_eq!(toks[3].split_once('.').unwrap().1.len(), 3, "{run}");
     assert_eq!(kv(&run, "cluster"), "prime", "{run}");
+    assert_eq!(kv(&run, "impl"), "default", "{run}");
 
     // DEVICE: "OK device <canonical>"
     assert_eq!(c.request("DEVICE pixel5"), "OK device pixel5");
@@ -906,13 +1186,17 @@ fn response_formats_are_stable() {
         .collect();
     assert_eq!(
         keys,
-        ["model", "layers", "planned", "coexec", "threads", "mechs", "t_pred_ms", "clusters"]
+        [
+            "model", "layers", "planned", "coexec", "threads", "mechs", "t_pred_ms",
+            "clusters", "impls"
+        ]
     );
     // a fixed request degenerates to one strategy bin covering all layers
     let planned = kv(&pm, "planned");
     assert_eq!(kv(&pm, "threads"), format!("3:{planned}"), "{pm}");
     assert_eq!(kv(&pm, "mechs"), format!("svm_polling:{planned}"), "{pm}");
     assert_eq!(kv(&pm, "clusters"), format!("prime:{planned}"), "{pm}");
+    assert_eq!(kv(&pm, "impls"), format!("default:{planned}"), "{pm}");
 
     // STATS: cache counters then per-verb blocks, in declaration order
     let stats = c.request("STATS");
@@ -946,6 +1230,14 @@ fn response_formats_are_stable() {
             last = pos;
         }
     }
+    // the per-impl PLAN breakdown is appended after every verb block so
+    // pre-impl clients' field positions are untouched
+    for imp in ["default", "direct", "winograd", "tiled_4x4"] {
+        let key = format!("plan.impl.{imp}=");
+        let pos = body.find(&key).unwrap_or_else(|| panic!("missing {key}"));
+        assert!(pos > last, "{key} out of order in {stats}");
+        last = pos;
+    }
 }
 
 // ------------------------------------------------- threads clamp (fix) --
@@ -966,17 +1258,18 @@ fn threads_clamped_to_device_core_count() {
     let device = Device::pixel5().name();
     let mech = mobile_coexec::device::SyncMechanism::SvmPolling;
     let cluster = mobile_coexec::device::ClusterId::Prime;
+    let imp = mobile_coexec::device::ReqImpl::Default;
     assert!(
         state
             .cache
-            .peek(&PlanKey { device, epoch: 0, op, cluster, threads: 3, mech })
+            .peek(&PlanKey { device, epoch: 0, op, cluster, threads: 3, mech, imp })
             .is_some(),
         "clamped request must be cached under threads=3"
     );
     assert!(
         state
             .cache
-            .peek(&PlanKey { device, epoch: 0, op, cluster, threads: 99, mech })
+            .peek(&PlanKey { device, epoch: 0, op, cluster, threads: 99, mech, imp })
             .is_none(),
         "no unclamped key may be created"
     );
@@ -1132,7 +1425,7 @@ fn auto_resolution_survives_plan_eviction() {
 
 #[test]
 fn background_sweeper_reclaims_expired_entries_and_shuts_down() {
-    use mobile_coexec::device::{ClusterId, SyncMechanism};
+    use mobile_coexec::device::{ClusterId, ReqImpl, SyncMechanism};
     use mobile_coexec::server::cache::ManualClock;
     use mobile_coexec::server::CacheSweeper;
     use std::time::Duration;
@@ -1160,6 +1453,7 @@ fn background_sweeper_reclaims_expired_entries_and_shuts_down() {
         cluster: ClusterId::Prime,
         threads: 1,
         mech: SyncMechanism::SvmPolling,
+        imp: ReqImpl::Default,
     };
     assert!(state.cache.peek(&key).is_some(), "plan resident before expiry");
 

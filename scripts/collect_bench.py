@@ -61,14 +61,26 @@ def print_deltas(benches, dst):
     )
     if not os.path.exists(prev_path):
         return
-    with open(prev_path) as f:
-        prev = json.load(f).get("benches", {})
+    # deltas are best-effort: an unreadable or malformed predecessor (or
+    # one that simply lacks a metric a new PR introduces) must not fail
+    # the collection run
+    try:
+        with open(prev_path) as f:
+            prev = json.load(f).get("benches", {})
+    except (OSError, ValueError) as e:
+        print(f"skipping deltas: cannot read {prev_path}: {e}")
+        return
+    if not isinstance(prev, dict):
+        print(f"skipping deltas: {prev_path} has no benches table")
+        return
     print(f"deltas vs {prev_path}:")
     for name in sorted(benches):
         for metric in sorted(benches[name]):
             now = benches[name][metric]
-            was = prev.get(name, {}).get(metric)
-            if was is None:
+            was = prev.get(name, {}).get(metric) if isinstance(
+                prev.get(name, {}), dict
+            ) else None
+            if not isinstance(was, (int, float)):
                 print(f"  {name}.{metric}: {now:.4g} (new)")
             elif was != 0:
                 pct = (now - was) / abs(was) * 100.0
