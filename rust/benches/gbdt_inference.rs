@@ -8,22 +8,45 @@ use mobile_coexec::device::Device;
 use mobile_coexec::gbdt::{Gbdt, GbdtParams};
 use mobile_coexec::ops::{LinearConfig, OpConfig};
 use mobile_coexec::partition::Planner;
-use mobile_coexec::predictor::{gpu_features, FeatureMode};
+use mobile_coexec::predictor::{gpu_features, FeatureMode, PredictorSet};
+use std::time::Instant;
 
 fn main() {
     let device = Device::oneplus11();
     let (train, _) = dataset::training_split("linear", 4000, 42);
 
-    // training throughput
+    // training throughput: the binned fast path (histogram subtraction +
+    // in-place partitioning + leaf-membership residuals)
     let rows: Vec<Vec<f64>> = train
         .iter()
         .map(|op| gpu_features(&device, op, FeatureMode::Augmented))
         .collect();
     let ys: Vec<f64> = train.iter().map(|op| device.measure_gpu(op, 0).ln()).collect();
     let params = GbdtParams::default();
-    bench("gbdt_train_3200rows_300trees", 0, 3, || {
+    let fast = bench("gbdt_train_3200rows_300trees", 0, 3, || {
         std::hint::black_box(Gbdt::fit(&rows, &ys, &params));
     });
+
+    // the exact-scan reference trainer (kept as the equivalence oracle) —
+    // the slow side of the retraining gate
+    let refr = bench("gbdt_train_reference_3200rows_300trees", 0, 3, || {
+        std::hint::black_box(Gbdt::fit_reference(&rows, &ys, &params));
+    });
+    let train_speedup = refr.mean_us / fast.mean_us;
+    report_scalar("gbdt_train", "fast_speedup_vs_reference", train_speedup);
+    assert!(
+        train_speedup >= 3.0,
+        "binned fast-path training must be >= 3x the exact reference, got {train_speedup:.2}x"
+    );
+
+    // cold-model prewarm: eager train, then every lazy placement and every
+    // forced-impl GPU model — the wall-clock the server's background
+    // fan-out hides from the first cluster-Auto / impl= request
+    let t0 = Instant::now();
+    let set = PredictorSet::train(&device, &train, FeatureMode::Augmented, &params);
+    set.prewarm_placements(&device);
+    set.prewarm_impls(&device);
+    report_scalar("predictor_prewarm", "full_device_us", t0.elapsed().as_micros() as f64);
 
     // single prediction (delegates to the packed SoA walker)
     let model = Gbdt::fit(&rows, &ys, &params);

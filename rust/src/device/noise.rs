@@ -37,6 +37,15 @@ impl SplitMix64 {
         lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
     }
 
+    /// Uniform index in [0, n) — the idiom for "pick one of n items",
+    /// without the inclusive-bound arithmetic of [`SplitMix64::gen_range`]
+    /// (and well-defined for `n == 1`). Consumes exactly one `next_u64`
+    /// draw, like `gen_range`.
+    pub fn gen_index(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
     /// Standard normal via Box-Muller.
     pub fn next_gaussian(&mut self) -> f64 {
         let u1 = self.next_f64().max(f64::MIN_POSITIVE);
@@ -86,6 +95,18 @@ mod tests {
             let g = r.gen_range(3, 9);
             assert!((3..=9).contains(&g));
         }
+    }
+
+    #[test]
+    fn gen_index_covers_all_indices() {
+        let mut r = SplitMix64::new(4);
+        let mut seen = [false; 5];
+        for _ in 0..500 {
+            seen[r.gen_index(5)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+        // n == 1 is the degenerate single-choice case
+        assert_eq!(r.gen_index(1), 0);
     }
 
     #[test]

@@ -73,6 +73,9 @@ pub struct BinnedMatrix {
     pub cols: Vec<Vec<u8>>,
     pub bins: Vec<Bins>,
     pub n_rows: usize,
+    /// The `max_bins` this matrix was binned with — callers sharing one
+    /// matrix across trainings check it against their params' `max_bins`.
+    pub max_bins: usize,
 }
 
 impl BinnedMatrix {
@@ -88,7 +91,7 @@ impl BinnedMatrix {
             cols.push(col.iter().map(|&v| b.bin(v)).collect());
             bins.push(b);
         }
-        Self { cols, bins, n_rows: rows.len() }
+        Self { cols, bins, n_rows: rows.len(), max_bins }
     }
 }
 

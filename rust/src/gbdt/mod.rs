@@ -5,18 +5,29 @@
 //! trees, leaf-wise growth, shrinkage, row/feature subsampling, L1/L2
 //! regularization, gain-based feature importance (needed for Fig. 7), and
 //! a random-search tuner over the same ranges the paper lists.
+//!
+//! Training runs on the binned fast path throughout: [`Gbdt::fit`] bins
+//! once and delegates to [`Gbdt::fit_binned`], so callers that already
+//! hold a [`BinnedMatrix`] (the predictor's shared per-device dataset,
+//! the tuner's trials) skip re-binning entirely;
+//! [`Gbdt::fit_binned_rows`] trains on a row subset of a shared matrix
+//! (the per-kernel GPU groups). Per-tree residual updates come from the
+//! trainer's leaf regions for in-bag rows (no traversal) and a binned
+//! u8-compare walk for out-of-bag rows — the raw-feature enum walk over
+//! all rows per tree is gone. [`Gbdt::fit_reference`] keeps the original
+//! exact trainer end-to-end as the equivalence baseline.
 
 pub mod binning;
 pub mod packed;
 pub mod tree;
 pub mod tuner;
 
+pub use binning::BinnedMatrix;
 pub use packed::PackedForest;
 pub use tuner::{tune, TuneRange};
 
 use crate::device::noise::SplitMix64;
-use binning::BinnedMatrix;
-use tree::{Tree, TreeParams};
+use tree::{Node, TrainScratch, Tree, TreeParams};
 
 /// Boosting hyperparameters (ranges follow the paper's §5.2).
 #[derive(Debug, Clone, Copy)]
@@ -72,8 +83,133 @@ pub struct Gbdt {
 }
 
 impl Gbdt {
-    /// Fit on a row-major feature matrix and targets.
+    /// Fit on a row-major feature matrix and targets (bins once, then
+    /// trains on the binned fast path).
     pub fn fit(rows: &[Vec<f64>], targets: &[f64], params: &GbdtParams) -> Gbdt {
+        assert_eq!(rows.len(), targets.len());
+        assert!(!rows.is_empty());
+        let data = BinnedMatrix::fit(rows, params.max_bins);
+        Self::fit_binned(&data, targets, params)
+    }
+
+    /// Fit on an already-binned matrix — `targets[i]` pairs with row `i`.
+    /// Callers holding a shared [`BinnedMatrix`] (one per device/kind
+    /// dataset, reused across placement cells and tuner trials) train
+    /// here without re-binning.
+    pub fn fit_binned(data: &BinnedMatrix, targets: &[f64], params: &GbdtParams) -> Gbdt {
+        let row_ids: Vec<u32> = (0..data.n_rows as u32).collect();
+        Self::fit_on(data, &row_ids, targets, params)
+    }
+
+    /// Fit on a row subset of a shared binned matrix — `targets[k]` pairs
+    /// with matrix row `row_ids[k]`. Used by per-kernel GPU groups that
+    /// partition one cell's dataset.
+    pub fn fit_binned_rows(
+        data: &BinnedMatrix,
+        row_ids: &[u32],
+        targets: &[f64],
+        params: &GbdtParams,
+    ) -> Gbdt {
+        Self::fit_on(data, row_ids, targets, params)
+    }
+
+    fn fit_on(data: &BinnedMatrix, row_ids: &[u32], targets: &[f64], params: &GbdtParams) -> Gbdt {
+        assert_eq!(row_ids.len(), targets.len());
+        assert!(!row_ids.is_empty());
+        debug_assert_eq!(
+            data.max_bins, params.max_bins,
+            "shared BinnedMatrix binned at a different max_bins than the params ask for"
+        );
+        let n = row_ids.len();
+        let n_features = data.cols.len();
+        let base = targets.iter().sum::<f64>() / n as f64;
+        // `pred` is positional (aligned with row_ids/targets); `grad`,
+        // `in_bag`, and `pos` are indexed by global matrix row id, since
+        // the tree trainer sees global row ids.
+        let mut pred = vec![base; n];
+        let mut pos = vec![0u32; data.n_rows];
+        for (k, &r) in row_ids.iter().enumerate() {
+            pos[r as usize] = k as u32;
+        }
+        let mut grad = vec![0.0f64; data.n_rows];
+        let mut in_bag = vec![u32::MAX; data.n_rows];
+        let mut trees = Vec::with_capacity(params.n_estimators);
+        let mut rng = SplitMix64::new(params.seed);
+        let tp = TreeParams {
+            max_leaves: params.max_leaves,
+            max_depth: params.max_depth,
+            min_samples_leaf: params.min_samples_leaf,
+            lambda: params.lambda,
+            alpha: params.alpha,
+        };
+        let mut scratch = TrainScratch::default();
+
+        for e in 0..params.n_estimators {
+            for (k, &r) in row_ids.iter().enumerate() {
+                grad[r as usize] = targets[k] - pred[k];
+            }
+            // row bagging
+            let rows_used: Vec<u32> = if params.subsample < 1.0 {
+                row_ids
+                    .iter()
+                    .copied()
+                    .filter(|_| rng.next_f64() < params.subsample)
+                    .collect()
+            } else {
+                row_ids.to_vec()
+            };
+            if rows_used.len() < 2 * params.min_samples_leaf {
+                continue;
+            }
+            // feature bagging
+            let features: Vec<usize> = if params.feature_subsample < 1.0 {
+                let f: Vec<usize> = (0..n_features)
+                    .filter(|_| rng.next_f64() < params.feature_subsample)
+                    .collect();
+                if f.is_empty() {
+                    vec![rng.gen_index(n_features)]
+                } else {
+                    f
+                }
+            } else {
+                (0..n_features).collect()
+            };
+
+            let t = Tree::fit_with(data, &grad, &rows_used, &features, &tp, &mut scratch);
+            if t.n_leaves() <= 1 {
+                break; // converged: no split improves
+            }
+            // In-bag rows already know their leaf from partitioning: apply
+            // the leaf's shrunken value directly, no traversal.
+            let e32 = e as u32;
+            for &(node, start, end) in &scratch.leaf_regions {
+                let value = match &t.nodes[node] {
+                    Node::Leaf { value } => *value,
+                    Node::Split { .. } => unreachable!("leaf region points at a split"),
+                };
+                let step = params.learning_rate * value;
+                for &r in &scratch.rows[start..end] {
+                    pred[pos[r as usize] as usize] += step;
+                    in_bag[r as usize] = e32;
+                }
+            }
+            // Out-of-bag rows walk the tree on binned columns (u8 compares).
+            for (k, &r) in row_ids.iter().enumerate() {
+                if in_bag[r as usize] != e32 {
+                    pred[k] += params.learning_rate * t.predict_binned(data, r as usize);
+                }
+            }
+            trees.push(t);
+        }
+        let packed = PackedForest::pack(base, params.learning_rate, &trees, n_features);
+        Gbdt { base, learning_rate: params.learning_rate, trees, n_features, packed }
+    }
+
+    /// The original trainer, end to end: re-bins, grows every tree with
+    /// the exact per-node trainer, and updates residuals by walking each
+    /// tree on raw features. Kept as the equivalence/speedup baseline for
+    /// [`Gbdt::fit`] — not used by serving paths.
+    pub fn fit_reference(rows: &[Vec<f64>], targets: &[f64], params: &GbdtParams) -> Gbdt {
         assert_eq!(rows.len(), targets.len());
         assert!(!rows.is_empty());
         let data = BinnedMatrix::fit(rows, params.max_bins);
@@ -113,7 +249,7 @@ impl Gbdt {
                     .filter(|_| rng.next_f64() < params.feature_subsample)
                     .collect();
                 if f.is_empty() {
-                    vec![rng.gen_range(0, n_features - 1)]
+                    vec![rng.gen_index(n_features)]
                 } else {
                     f
                 }
@@ -121,7 +257,7 @@ impl Gbdt {
                 (0..n_features).collect()
             };
 
-            let t = Tree::fit(&data, &grad, &rows_used, &features, &tp);
+            let t = Tree::fit_reference(&data, &grad, &rows_used, &features, &tp);
             if t.n_leaves() <= 1 {
                 break; // converged: no split improves
             }
@@ -264,5 +400,79 @@ mod tests {
                 .sum::<f64>()
         };
         assert!(err(&fast) < err(&slow));
+    }
+
+    /// Regression test for the feature-bagging fallback: with a single
+    /// feature and an aggressive subsample ratio, most epochs select no
+    /// features and must fall back to drawing one valid index.
+    #[test]
+    fn single_feature_matrix_trains() {
+        let rows: Vec<Vec<f64>> = (0..120).map(|i| vec![(i % 40) as f64]).collect();
+        let y: Vec<f64> = rows.iter().map(|r| r[0] * 2.0 + 1.0).collect();
+        let p = GbdtParams { feature_subsample: 0.05, n_estimators: 80, ..Default::default() };
+        let model = Gbdt::fit(&rows, &y, &p);
+        assert!(model.trees.len() > 1, "fallback never trained a tree");
+        let mape: f64 = rows
+            .iter()
+            .zip(&y)
+            .map(|(r, &t)| ((model.predict(r) - t) / t.max(1.0)).abs())
+            .sum::<f64>()
+            / rows.len() as f64;
+        assert!(mape < 0.2, "MAPE {mape}");
+    }
+
+    /// Training on a pre-binned matrix is the same computation as binning
+    /// inside `fit` — bit-equal forests.
+    #[test]
+    fn fit_binned_matches_fit() {
+        let (rows, y) = synth(600);
+        let p = GbdtParams { n_estimators: 40, ..Default::default() };
+        let data = BinnedMatrix::fit(&rows, p.max_bins);
+        let a = Gbdt::fit(&rows, &y, &p);
+        let b = Gbdt::fit_binned(&data, &y, &p);
+        assert_eq!(a.base, b.base);
+        assert_eq!(a.trees.len(), b.trees.len());
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(ta.nodes, tb.nodes);
+        }
+        for r in rows.iter().step_by(17) {
+            assert_eq!(a.predict(r), b.predict(r));
+        }
+    }
+
+    /// A full-row-set `fit_binned_rows` is exactly `fit_binned`.
+    #[test]
+    fn fit_binned_rows_full_set_matches_fit_binned() {
+        let (rows, y) = synth(400);
+        let p = GbdtParams { n_estimators: 25, ..Default::default() };
+        let data = BinnedMatrix::fit(&rows, p.max_bins);
+        let all: Vec<u32> = (0..rows.len() as u32).collect();
+        let a = Gbdt::fit_binned(&data, &y, &p);
+        let b = Gbdt::fit_binned_rows(&data, &all, &y, &p);
+        assert_eq!(a.trees.len(), b.trees.len());
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(ta.nodes, tb.nodes);
+        }
+        for r in rows.iter().step_by(13) {
+            assert_eq!(a.predict(r), b.predict(r));
+        }
+    }
+
+    /// The fast boosting loop reproduces the original trainer bit for bit:
+    /// same RNG draws, same trees, same predictions.
+    #[test]
+    fn fast_fit_matches_reference_fit() {
+        let (rows, y) = synth(500);
+        let p = GbdtParams { n_estimators: 30, ..Default::default() };
+        let fast = Gbdt::fit(&rows, &y, &p);
+        let refr = Gbdt::fit_reference(&rows, &y, &p);
+        assert_eq!(fast.base, refr.base);
+        assert_eq!(fast.trees.len(), refr.trees.len());
+        for (ta, tb) in fast.trees.iter().zip(&refr.trees) {
+            assert_eq!(ta.nodes, tb.nodes);
+        }
+        for r in rows.iter().step_by(11) {
+            assert_eq!(fast.predict(r), refr.predict(r));
+        }
     }
 }

@@ -1,9 +1,45 @@
 //! A single histogram-based regression tree (leaf-wise growth).
+//!
+//! Two trainers share one split definition:
+//!
+//! - [`Tree::fit`] — the fast path: a flat per-tree histogram arena
+//!   (no per-node allocation), histogram subtraction (only the smaller
+//!   child is scanned; the sibling is derived as parent − child), and
+//!   in-place stable row partitioning over one `u32` index buffer held
+//!   in a reusable [`TrainScratch`]. Subtraction accumulates f64
+//!   rounding error in the gradient histograms, so every decision that
+//!   could flip on that error — split viability, the within-node
+//!   argmax, and the leaf-wise frontier selection — carries a
+//!   conservative error bound and falls back to an exact re-scan when
+//!   the margin is inside the bound. The result is bit-identical tree
+//!   structure to the reference trainer (`feature_gain` may differ by
+//!   ulps, since gains of subtraction-derived histograms are recorded
+//!   as evaluated).
+//! - [`Tree::fit_reference`] — the original exact trainer, kept
+//!   verbatim as the equivalence baseline for property tests and the
+//!   bench speedup gate.
+//!
+//! The fast path also records per-leaf row ranges ([`TrainScratch::leaf_regions`])
+//! so the booster can update in-bag residuals without any tree
+//! traversal at all.
 
 use super::binning::BinnedMatrix;
 
+/// Frontier viability threshold — a split must improve the objective by
+/// more than this to be taken (mirrors the reference trainer's filter).
+const GAIN_VIABLE: f64 = 1e-12;
+
+/// Per-subtraction relative error budget: one parent − child pass adds at
+/// most `HIST_SUB_EPS * Σ|grad|` of absolute error across a slot's bins.
+/// f64 has ~1.1e-16 ulp; 1e-14 leaves two orders of margin for the
+/// accumulation inside a bin.
+const HIST_SUB_EPS: f64 = 1e-14;
+
+/// Sentinel for "this candidate holds no histogram slot".
+const NO_SLOT: u32 = u32::MAX;
+
 /// Tree node: either an internal split or a leaf value.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Node {
     Split {
         feature: usize,
@@ -39,6 +75,44 @@ pub struct TreeParams {
     pub alpha: f64,
 }
 
+/// Reusable buffers for [`Tree::fit_with`]; one instance amortizes every
+/// allocation across all trees of a boosting run.
+#[derive(Debug, Default)]
+pub struct TrainScratch {
+    /// The bagged row ids, permuted in place during growth. Leaf regions
+    /// index into this buffer.
+    pub rows: Vec<u32>,
+    /// `(node index, start, end)` per final leaf: rows[start..end] landed
+    /// in that leaf. Covers every row of the last fitted tree exactly once.
+    pub leaf_regions: Vec<(usize, usize, usize)>,
+    tmp: Vec<u32>,
+    hist_g: Vec<f64>,
+    hist_n: Vec<u32>,
+    free_slots: Vec<u32>,
+    layout: Vec<(u32, u32)>,
+}
+
+/// A frontier leaf in the fast trainer: a row range plus its histogram
+/// slot and the error bookkeeping that decides when to re-scan exactly.
+struct FastCand {
+    node_slot: usize,
+    start: usize,
+    end: usize,
+    depth: usize,
+    /// Histogram arena slot id, or [`NO_SLOT`].
+    slot: u32,
+    sum_g: f64,
+    /// Σ|grad| over the node's rows — scales the subtraction error bound.
+    abs_g: f64,
+    /// Bound on the total absolute per-bin gradient error in this slot;
+    /// `0.0` ⇔ the histogram is bit-exact (directly scanned).
+    herr: f64,
+    gain: f64,
+    /// Bound on `|gain − true gain|` (0 when `herr == 0`).
+    err: f64,
+    split: Option<(usize, u8)>, // (feature, bin threshold)
+}
+
 struct Candidate {
     node_slot: usize,
     rows: Vec<u32>,
@@ -61,10 +135,433 @@ fn score(sum_g: f64, n: f64, lambda: f64) -> f64 {
     sum_g * sum_g / (n + lambda)
 }
 
+/// The fast trainer's working state: the scratch buffers split into
+/// disjoint `&mut` fields so histogram, row, and slot bookkeeping can be
+/// borrowed independently.
+struct Grower<'a> {
+    data: &'a BinnedMatrix,
+    grad: &'a [f64],
+    features: &'a [usize],
+    params: &'a TreeParams,
+    rows: &'a mut Vec<u32>,
+    tmp: &'a mut Vec<u32>,
+    hist_g: &'a mut Vec<f64>,
+    hist_n: &'a mut Vec<u32>,
+    free_slots: &'a mut Vec<u32>,
+    /// Per selected feature: (arena offset, n_bins).
+    layout: &'a [(u32, u32)],
+    slot_len: usize,
+}
+
+impl<'a> Grower<'a> {
+    fn alloc_slot(&mut self) -> u32 {
+        if let Some(s) = self.free_slots.pop() {
+            s
+        } else {
+            let s = (self.hist_g.len() / self.slot_len) as u32;
+            let len = self.hist_g.len() + self.slot_len;
+            self.hist_g.resize(len, 0.0);
+            self.hist_n.resize(len, 0);
+            s
+        }
+    }
+
+    fn free_slot(&mut self, s: u32) {
+        if s != NO_SLOT {
+            self.free_slots.push(s);
+        }
+    }
+
+    /// Exact histogram scan of `rows[start..end]` into `slot`. Accumulation
+    /// order (feature-major, then row order) matches the reference trainer
+    /// bit for bit.
+    fn scan_hist(&mut self, slot: u32, start: usize, end: usize) {
+        let base = slot as usize * self.slot_len;
+        self.hist_g[base..base + self.slot_len].fill(0.0);
+        self.hist_n[base..base + self.slot_len].fill(0);
+        let (data, grad, features) = (self.data, self.grad, self.features);
+        for (k, &f) in features.iter().enumerate() {
+            let (off, nb) = self.layout[k];
+            if nb < 2 {
+                continue;
+            }
+            let o = base + off as usize;
+            let col = &data.cols[f];
+            for &r in &self.rows[start..end] {
+                let b = col[r as usize] as usize;
+                self.hist_g[o + b] += grad[r as usize];
+                self.hist_n[o + b] += 1;
+            }
+        }
+    }
+
+    /// `parent ← parent − child`, in place: the parent's slot becomes the
+    /// sibling's histogram. Counts stay exact; gradients pick up at most
+    /// one rounding per bin.
+    fn subtract(&mut self, parent: u32, child: u32) {
+        let p = parent as usize * self.slot_len;
+        let c = child as usize * self.slot_len;
+        for i in 0..self.slot_len {
+            self.hist_g[p + i] -= self.hist_g[c + i];
+            self.hist_n[p + i] -= self.hist_n[c + i];
+        }
+    }
+
+    /// Best and runner-up split gains of `slot` — the same cumulative scan
+    /// as the reference trainer (strict `>` from 0.0, so it is bit-identical
+    /// on an exact histogram), plus top-2 tracking for the argmax margin.
+    fn eval(&self, slot: u32, n: usize, sum_g: f64) -> (f64, f64, Option<(usize, u8)>) {
+        let base = slot as usize * self.slot_len;
+        let parent_score = score(sum_g, n as f64, self.params.lambda);
+        let mut g1 = 0.0f64;
+        let mut g2 = f64::NEG_INFINITY;
+        let mut best: Option<(usize, u8)> = None;
+        for (k, &f) in self.features.iter().enumerate() {
+            let (off, nb) = self.layout[k];
+            let nb = nb as usize;
+            if nb < 2 {
+                continue;
+            }
+            let o = base + off as usize;
+            let mut cum_g = 0.0;
+            let mut cum_n = 0u32;
+            for b in 0..nb - 1 {
+                cum_g += self.hist_g[o + b];
+                cum_n += self.hist_n[o + b];
+                let n_l = cum_n as usize;
+                let n_r = n - n_l;
+                if n_l < self.params.min_samples_leaf || n_r < self.params.min_samples_leaf {
+                    continue;
+                }
+                let gain = score(cum_g, n_l as f64, self.params.lambda)
+                    + score(sum_g - cum_g, n_r as f64, self.params.lambda)
+                    - parent_score;
+                if gain > g1 {
+                    g2 = g1;
+                    g1 = gain;
+                    best = Some((f, b as u8));
+                } else if gain > g2 {
+                    g2 = gain;
+                }
+            }
+        }
+        (g1, g2, best)
+    }
+
+    /// Bound on how far an evaluated gain can sit from the true gain when
+    /// the slot's per-bin gradient error totals `herr`. The gain is a sum
+    /// of `s²/(n+λ)` terms; perturbing the cumulative sums (each within
+    /// `|Σ grads| ≤ abs_g`) by at most `herr` moves it by at most
+    /// `(4·abs_g·herr + 2·herr²) / d`, `d` the smallest child denominator.
+    fn gain_err(&self, herr: f64, abs_g: f64) -> f64 {
+        if herr == 0.0 {
+            return 0.0;
+        }
+        let d = (self.params.min_samples_leaf as f64 + self.params.lambda).max(1e-6);
+        (4.0 * abs_g * herr + 2.0 * herr * herr) / d
+    }
+
+    /// Re-scan the candidate's histogram exactly, clearing its error.
+    fn rebuild(&mut self, c: &mut FastCand) {
+        self.scan_hist(c.slot, c.start, c.end);
+        c.herr = 0.0;
+    }
+
+    /// Evaluate a candidate's best split, re-scanning exactly whenever the
+    /// decision (viability boundary or within-node argmax) is within the
+    /// error bound of flipping.
+    fn settle(&mut self, c: &mut FastCand) {
+        let n = c.end - c.start;
+        if n < 2 * self.params.min_samples_leaf || c.slot == NO_SLOT {
+            c.gain = 0.0;
+            c.err = 0.0;
+            c.split = None;
+            return;
+        }
+        loop {
+            let (g1, g2, best) = self.eval(c.slot, n, c.sum_g);
+            let err = self.gain_err(c.herr, c.abs_g);
+            let ambiguous = c.herr > 0.0
+                && ((g1 >= -err && g1 <= GAIN_VIABLE + err)
+                    || (g2.is_finite() && g1 - g2 <= 2.0 * err));
+            if ambiguous {
+                self.rebuild(c);
+                continue;
+            }
+            if g1 > 0.0 {
+                c.gain = g1;
+                c.split = best;
+            } else {
+                c.gain = 0.0;
+                c.split = None;
+            }
+            c.err = if c.herr > 0.0 { err } else { 0.0 };
+            return;
+        }
+    }
+
+    /// Stable in-place partition of `rows[start..end]` on the split: left
+    /// rows compact forward (accumulating their gradient sum/abs-sum in
+    /// row order, bit-identical to the reference `sum()`), right rows park
+    /// in `tmp` and copy back behind them. Returns `(mid, sum_l, abs_l)`.
+    fn partition(&mut self, feature: usize, thr: u8, start: usize, end: usize) -> (usize, f64, f64) {
+        let (data, grad) = (self.data, self.grad);
+        let col = &data.cols[feature];
+        self.tmp.clear();
+        let mut w = start;
+        let mut sum_l = 0.0;
+        let mut abs_l = 0.0;
+        for i in start..end {
+            let r = self.rows[i];
+            if col[r as usize] <= thr {
+                sum_l += grad[r as usize];
+                abs_l += grad[r as usize].abs();
+                self.rows[w] = r;
+                w += 1;
+            } else {
+                self.tmp.push(r);
+            }
+        }
+        self.rows[w..end].copy_from_slice(&self.tmp[..]);
+        (w, sum_l, abs_l)
+    }
+}
+
 impl Tree {
     /// Fit one tree to gradients (`grad[i]` = residual of row i) over the
     /// rows in `row_set`, optionally restricted to `features`.
+    ///
+    /// Fast path — see the module docs. Produces tree structure
+    /// bit-identical to [`Tree::fit_reference`].
     pub fn fit(
+        data: &BinnedMatrix,
+        grad: &[f64],
+        row_set: &[u32],
+        features: &[usize],
+        params: &TreeParams,
+    ) -> Tree {
+        let mut scratch = TrainScratch::default();
+        Self::fit_with(data, grad, row_set, features, params, &mut scratch)
+    }
+
+    /// [`Tree::fit`] with caller-provided scratch buffers; after the call,
+    /// `scratch.leaf_regions` / `scratch.rows` describe the leaf membership
+    /// of every trained-on row.
+    pub fn fit_with(
+        data: &BinnedMatrix,
+        grad: &[f64],
+        row_set: &[u32],
+        features: &[usize],
+        params: &TreeParams,
+        scratch: &mut TrainScratch,
+    ) -> Tree {
+        let TrainScratch { rows, leaf_regions, tmp, hist_g, hist_n, free_slots, layout } = scratch;
+        rows.clear();
+        rows.extend_from_slice(row_set);
+        tmp.clear();
+        hist_g.clear();
+        hist_n.clear();
+        free_slots.clear();
+        layout.clear();
+        leaf_regions.clear();
+
+        let mut off = 0u32;
+        for &f in features {
+            let nb = data.bins[f].n_bins() as u32;
+            layout.push((off, nb));
+            off += nb;
+        }
+        let slot_len = off as usize;
+
+        let n = rows.len();
+        let mut tree = Tree {
+            nodes: vec![Node::Leaf { value: 0.0 }],
+            feature_gain: vec![0.0; data.cols.len()],
+        };
+        let (mut sum0, mut abs0) = (0.0f64, 0.0f64);
+        for &r in rows.iter() {
+            sum0 += grad[r as usize];
+            abs0 += grad[r as usize].abs();
+        }
+        tree.nodes[0] = Node::Leaf { value: leaf_value(sum0, n, params) };
+
+        let mut g = Grower {
+            data,
+            grad,
+            features,
+            params,
+            rows,
+            tmp,
+            hist_g,
+            hist_n,
+            free_slots,
+            layout,
+            slot_len,
+        };
+
+        let mut root = FastCand {
+            node_slot: 0,
+            start: 0,
+            end: n,
+            depth: 0,
+            slot: NO_SLOT,
+            sum_g: sum0,
+            abs_g: abs0,
+            herr: 0.0,
+            gain: 0.0,
+            err: 0.0,
+            split: None,
+        };
+        if n >= 2 * params.min_samples_leaf && slot_len > 0 {
+            root.slot = g.alloc_slot();
+            g.scan_hist(root.slot, 0, n);
+        }
+        g.settle(&mut root);
+        let mut frontier: Vec<FastCand> = vec![root];
+
+        let mut n_leaves = 1usize;
+        'grow: while n_leaves < params.max_leaves {
+            // Leaf-wise: pick the frontier candidate with the highest gain
+            // (last of equal maxima, like the reference `max_by`). If any
+            // other viable candidate sits within the combined error bound
+            // of the winner, re-scan the contested histograms exactly and
+            // re-select — so the pick always matches the exact trainer.
+            let best_idx = 'select: loop {
+                let mut bi: Option<usize> = None;
+                let (mut bg, mut be) = (0.0f64, 0.0f64);
+                for (i, c) in frontier.iter().enumerate() {
+                    if c.split.is_some() && c.gain > GAIN_VIABLE && (bi.is_none() || c.gain >= bg)
+                    {
+                        bi = Some(i);
+                        bg = c.gain;
+                        be = c.err;
+                    }
+                }
+                let bidx = match bi {
+                    Some(i) => i,
+                    None => break 'grow,
+                };
+                let contested: Vec<usize> = frontier
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, c)| {
+                        i != bidx
+                            && c.split.is_some()
+                            && c.gain > GAIN_VIABLE
+                            && be + c.err > 0.0
+                            && bg - c.gain <= be + c.err
+                    })
+                    .map(|(i, _)| i)
+                    .collect();
+                if contested.is_empty() {
+                    break 'select bidx;
+                }
+                // Each pass rebuilds at least one inexact candidate (a
+                // contested margin requires err > 0 somewhere), so this
+                // terminates within frontier.len() passes.
+                for i in contested.into_iter().chain(std::iter::once(bidx)) {
+                    if frontier[i].herr > 0.0 {
+                        g.rebuild(&mut frontier[i]);
+                        g.settle(&mut frontier[i]);
+                    }
+                }
+            };
+
+            let cand = frontier.swap_remove(best_idx);
+            let (feature, bin_thr) = cand.split.unwrap();
+            let (mid, sum_l, abs_l) = g.partition(feature, bin_thr, cand.start, cand.end);
+            debug_assert!(mid > cand.start && mid < cand.end);
+            let (n_l, n_r) = (mid - cand.start, cand.end - mid);
+            let sum_r = cand.sum_g - sum_l;
+            let abs_r = (cand.abs_g - abs_l).max(0.0);
+
+            let left_slot = tree.nodes.len();
+            tree.nodes.push(Node::Leaf { value: leaf_value(sum_l, n_l, params) });
+            let right_slot = tree.nodes.len();
+            tree.nodes.push(Node::Leaf { value: leaf_value(sum_r, n_r, params) });
+            tree.nodes[cand.node_slot] = Node::Split {
+                feature,
+                threshold: data.bins[feature].threshold(bin_thr),
+                bin_threshold: bin_thr,
+                left: left_slot,
+                right: right_slot,
+            };
+            tree.feature_gain[feature] += cand.gain;
+            n_leaves += 1;
+
+            if cand.depth + 1 < params.max_depth {
+                let mut lc = FastCand {
+                    node_slot: left_slot,
+                    start: cand.start,
+                    end: mid,
+                    depth: cand.depth + 1,
+                    slot: NO_SLOT,
+                    sum_g: sum_l,
+                    abs_g: abs_l,
+                    herr: 0.0,
+                    gain: 0.0,
+                    err: 0.0,
+                    split: None,
+                };
+                let mut rc = FastCand {
+                    node_slot: right_slot,
+                    start: mid,
+                    end: cand.end,
+                    depth: cand.depth + 1,
+                    slot: NO_SLOT,
+                    sum_g: sum_r,
+                    abs_g: abs_r,
+                    herr: 0.0,
+                    gain: 0.0,
+                    err: 0.0,
+                    split: None,
+                };
+                let msl2 = 2 * params.min_samples_leaf;
+                let (l_alive, r_alive) = (n_l >= msl2, n_r >= msl2);
+                if l_alive || r_alive {
+                    // Scan only the smaller child; derive the sibling by
+                    // subtraction in the parent's slot, inheriting the
+                    // parent's error plus one subtraction's worth.
+                    let child_herr = cand.herr + HIST_SUB_EPS * cand.abs_g;
+                    let (sm, big): (&mut FastCand, &mut FastCand) =
+                        if n_l <= n_r { (&mut lc, &mut rc) } else { (&mut rc, &mut lc) };
+                    sm.slot = g.alloc_slot();
+                    g.scan_hist(sm.slot, sm.start, sm.end);
+                    sm.herr = 0.0;
+                    g.subtract(cand.slot, sm.slot);
+                    big.slot = cand.slot;
+                    big.herr = child_herr;
+                    if !l_alive {
+                        g.free_slot(lc.slot);
+                        lc.slot = NO_SLOT;
+                    }
+                    if !r_alive {
+                        g.free_slot(rc.slot);
+                        rc.slot = NO_SLOT;
+                    }
+                } else {
+                    g.free_slot(cand.slot);
+                }
+                g.settle(&mut lc);
+                g.settle(&mut rc);
+                frontier.push(lc);
+                frontier.push(rc);
+            } else {
+                g.free_slot(cand.slot);
+                leaf_regions.push((left_slot, cand.start, mid));
+                leaf_regions.push((right_slot, mid, cand.end));
+            }
+        }
+        for c in &frontier {
+            leaf_regions.push((c.node_slot, c.start, c.end));
+        }
+        tree
+    }
+
+    /// The original exact trainer — per-node histogram Vecs and row-set
+    /// clones. Kept as the equivalence baseline for [`Tree::fit`]
+    /// (property tests, bench speedup gate); not used by serving paths.
+    pub fn fit_reference(
         data: &BinnedMatrix,
         grad: &[f64],
         row_set: &[u32],
@@ -141,7 +638,7 @@ impl Tree {
         tree
     }
 
-    /// Histogram scan for the best split of one node.
+    /// Histogram scan for the best split of one node (reference trainer).
     #[allow(clippy::too_many_arguments)]
     fn best_split(
         data: &BinnedMatrix,
@@ -209,6 +706,22 @@ impl Tree {
         }
     }
 
+    /// Predict a training row by walking the tree on its binned columns
+    /// (u8 compares on `bin_threshold`; no raw-feature lookups). Reaches
+    /// the same leaf as [`Tree::predict`] on the row's raw features,
+    /// because `bin(v) <= b  ⇔  v <= edges[b] = threshold(b)`.
+    pub fn predict_binned(&self, data: &BinnedMatrix, row: usize) -> f64 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, bin_threshold, left, right, .. } => {
+                    i = if data.cols[*feature][row] <= *bin_threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
     pub fn n_leaves(&self) -> usize {
         self.nodes
             .iter()
@@ -233,6 +746,7 @@ impl Tree {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::noise::SplitMix64;
 
     fn params() -> TreeParams {
         TreeParams { max_leaves: 31, max_depth: 8, min_samples_leaf: 2, lambda: 1.0, alpha: 0.0 }
@@ -294,5 +808,96 @@ mod tests {
         let p = TreeParams { alpha: 1.0, ..params() };
         let tree = Tree::fit_all(&data, &y, &p);
         assert_eq!(tree.predict(&[3.0]), 0.0);
+    }
+
+    /// The fast trainer must produce bit-identical tree structure to the
+    /// reference trainer (and ulp-close feature gains) across a spread of
+    /// random problems, feature counts, and subset shapes.
+    #[test]
+    fn fast_matches_reference_structure() {
+        let mut rng = SplitMix64::new(11);
+        for case in 0..24usize {
+            let n = 40 + (case * 37) % 300;
+            let nf = 1 + case % 5;
+            let mut rows = Vec::new();
+            let mut y = Vec::new();
+            for _ in 0..n {
+                let r: Vec<f64> = (0..nf).map(|_| rng.next_f64() * 10.0).collect();
+                let t = r.iter().enumerate().map(|(j, v)| (j + 1) as f64 * v).sum::<f64>()
+                    + if r[0] > 5.0 { 7.0 } else { 0.0 }
+                    + rng.next_f64();
+                rows.push(r);
+                y.push(t);
+            }
+            let data = BinnedMatrix::fit(&rows, 48);
+            let p = TreeParams {
+                max_leaves: 8 + case % 24,
+                max_depth: 3 + case % 7,
+                min_samples_leaf: 1 + case % 4,
+                lambda: [0.0, 1.0, 1e-2][case % 3],
+                alpha: [0.0, 1e-3][case % 2],
+            };
+            // alternate: all rows vs a bagged subset, all features vs a slice
+            let all: Vec<u32> = if case % 2 == 0 {
+                (0..n as u32).collect()
+            } else {
+                (0..n as u32).filter(|_| rng.next_f64() < 0.7).collect()
+            };
+            let feats: Vec<usize> = if case % 3 == 0 && nf > 1 {
+                (0..nf - 1).collect()
+            } else {
+                (0..nf).collect()
+            };
+            let fast = Tree::fit(&data, &y, &all, &feats, &p);
+            let refr = Tree::fit_reference(&data, &y, &all, &feats, &p);
+            assert_eq!(fast.nodes, refr.nodes, "case {case}: trees diverge");
+            for (a, b) in fast.feature_gain.iter().zip(&refr.feature_gain) {
+                assert!(
+                    (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+                    "case {case}: feature gain {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    /// Every trained-on row lands in exactly one leaf region, and the
+    /// region's node agrees with a binned traversal from the root.
+    #[test]
+    fn leaf_regions_cover_rows_and_match_leaves() {
+        let (data, y) = toy();
+        let mut scratch = TrainScratch::default();
+        let all: Vec<u32> = (0..data.n_rows as u32).collect();
+        let feats: Vec<usize> = (0..data.cols.len()).collect();
+        let tree = Tree::fit_with(&data, &y, &all, &feats, &params(), &mut scratch);
+        let mut seen = vec![false; data.n_rows];
+        for &(node, start, end) in &scratch.leaf_regions {
+            let value = match &tree.nodes[node] {
+                Node::Leaf { value } => *value,
+                Node::Split { .. } => panic!("leaf region points at a split node"),
+            };
+            for &r in &scratch.rows[start..end] {
+                assert!(!seen[r as usize], "row {r} appears in two leaf regions");
+                seen[r as usize] = true;
+                assert_eq!(tree.predict_binned(&data, r as usize), value);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some rows missing from leaf regions");
+    }
+
+    /// `predict_binned` on a training row equals `predict` on its raw
+    /// features: `bin(v) <= b ⇔ v <= threshold(b)`.
+    #[test]
+    fn binned_predict_matches_raw_predict() {
+        let mut rng = SplitMix64::new(5);
+        let rows: Vec<Vec<f64>> = (0..150)
+            .map(|_| vec![rng.next_f64() * 50.0, rng.next_f64() * 4.0])
+            .collect();
+        let y: Vec<f64> = rows.iter().map(|r| r[0] * 2.0 + r[1] * r[1]).collect();
+        let data = BinnedMatrix::fit(&rows, 32);
+        let tree = Tree::fit_all(&data, &y, &params());
+        assert!(tree.n_leaves() > 1);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(tree.predict_binned(&data, i), tree.predict(r), "row {i}");
+        }
     }
 }

@@ -6,6 +6,7 @@
 //! on the validation split, and returns the best model + params. Trials run
 //! in parallel with rayon.
 
+use super::binning::BinnedMatrix;
 use super::{Gbdt, GbdtParams};
 use crate::device::noise::SplitMix64;
 use crate::metrics::mape;
@@ -72,6 +73,11 @@ pub fn tune(
         .map(|i| sample(range, &mut rng, seed.wrapping_add(i as u64)))
         .collect();
 
+    // Every trial trains on the same rows, so bin once and share the
+    // matrix; a trial only re-bins if it asks for a different max_bins
+    // (sample() pins 255, so in practice none do).
+    let shared = BinnedMatrix::fit(train_x, 255);
+
     // Trials are independent: run them on scoped worker threads (rayon is
     // unavailable offline; a chunked scope gives the same throughput here).
     let workers = std::thread::available_parallelism().map_or(4, |n| n.get()).min(candidates.len().max(1));
@@ -80,10 +86,15 @@ pub fn tune(
     std::thread::scope(|scope| {
         for (w, chunk) in candidates.chunks(candidates.len().div_ceil(workers)).enumerate() {
             let slot = &results[w];
+            let shared = &shared;
             scope.spawn(move || {
                 let mut out = Vec::new();
                 for p in chunk {
-                    let model = Gbdt::fit(train_x, train_y, p);
+                    let model = if p.max_bins == shared.max_bins {
+                        Gbdt::fit_binned(shared, train_y, p)
+                    } else {
+                        Gbdt::fit(train_x, train_y, p)
+                    };
                     let pred = model.predict_batch(val_x);
                     let err = mape(val_y, &pred);
                     out.push((model, *p, err));

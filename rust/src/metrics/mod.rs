@@ -33,6 +33,32 @@ impl Counter {
     }
 }
 
+/// Process-wide cumulative GBDT training cost: how many predictor models
+/// were trained (lazy placement cells, forced-impl GPU cells, calibration
+/// refits) and the total wall-clock microseconds they took. Surfaced in
+/// the server's `STATS` as `train.count` / `train.us`, so lazy-training
+/// spikes are visible in telemetry instead of only as p95 outliers on the
+/// plan-miss latencies.
+#[derive(Debug, Default)]
+pub struct TrainStats {
+    pub count: Counter,
+    pub us: Counter,
+}
+
+impl TrainStats {
+    /// Record one completed training of `us` microseconds.
+    pub fn record_us(&self, us: u64) {
+        self.count.inc();
+        self.us.add(us);
+    }
+}
+
+/// The process-global [`TrainStats`] every training site reports into.
+pub fn train_stats() -> &'static TrainStats {
+    static STATS: TrainStats = TrainStats { count: Counter::new(), us: Counter::new() };
+    &STATS
+}
+
 /// Point-in-time latency summary from a [`LatencyRecorder`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LatencySnapshot {
@@ -260,6 +286,18 @@ mod tests {
                 "round {round}: a sample was dropped at the ring boundary"
             );
         }
+    }
+
+    #[test]
+    fn train_stats_accumulate_monotonically() {
+        // process-global: other tests may have trained already, so assert
+        // deltas rather than absolute values
+        let ts = train_stats();
+        let (c0, u0) = (ts.count.get(), ts.us.get());
+        ts.record_us(1234);
+        ts.record_us(0);
+        assert_eq!(ts.count.get(), c0 + 2);
+        assert_eq!(ts.us.get(), u0 + 1234);
     }
 
     #[test]

@@ -24,11 +24,12 @@ pub use features::{
 };
 
 use crate::device::{ClusterId, Device, Processor, ReqImpl};
-use crate::gbdt::{Gbdt, GbdtParams};
+use crate::gbdt::{BinnedMatrix, Gbdt, GbdtParams};
 use crate::metrics::mape;
 use crate::ops::OpConfig;
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
 
 /// Number of repeated measurements averaged per training target (the paper
 /// averages repeated on-device runs).
@@ -87,6 +88,12 @@ impl GpuPredictor {
     }
 
     /// Train from pre-measured latencies (µs) taken under `imp`.
+    ///
+    /// The whole cell is featurized and binned **once**; the per-kernel
+    /// groups of Augmented mode train on row subsets of that shared
+    /// [`BinnedMatrix`] instead of each re-binning their own slice. (The
+    /// matrix cannot be hoisted above the impl: [`gpu_features_for`]
+    /// depends on `imp`, so every forced-impl cell has different rows.)
     pub fn train_with_latencies_impl(
         device: &Device,
         ops: &[OpConfig],
@@ -96,20 +103,27 @@ impl GpuPredictor {
         params: &GbdtParams,
     ) -> Self {
         assert_eq!(ops.len(), lat.len());
-        let mut groups: HashMap<usize, (Vec<Vec<f64>>, Vec<f64>)> = HashMap::new();
-        for (op, &y) in ops.iter().zip(lat) {
+        let t0 = Instant::now();
+        let x: Vec<Vec<f64>> =
+            ops.iter().map(|op| gpu_features_for(device, op, imp, mode)).collect();
+        let y: Vec<f64> = lat.iter().map(|v| v.ln()).collect();
+        let data = BinnedMatrix::fit(&x, params.max_bins);
+        let mut groups: HashMap<usize, Vec<u32>> = HashMap::new();
+        for (i, op) in ops.iter().enumerate() {
             let key = match mode {
                 FeatureMode::Basic => 0,
                 FeatureMode::Augmented => device.gpu_dispatch_for(op, imp).kernel.id(),
             };
-            let entry = groups.entry(key).or_default();
-            entry.0.push(gpu_features_for(device, op, imp, mode));
-            entry.1.push(y.ln());
+            groups.entry(key).or_default().push(i as u32);
         }
         let models = groups
             .into_iter()
-            .map(|(k, (x, y))| (k, Gbdt::fit(&x, &y, params)))
+            .map(|(k, rows)| {
+                let ys: Vec<f64> = rows.iter().map(|&r| y[r as usize]).collect();
+                (k, Gbdt::fit_binned_rows(&data, &rows, &ys, params))
+            })
             .collect();
+        crate::metrics::train_stats().record_us(t0.elapsed().as_micros() as u64);
         Self { mode, imp, models }
     }
 
@@ -252,6 +266,25 @@ impl CpuPredictor {
         params: &GbdtParams,
     ) -> Self {
         let x: Vec<Vec<f64>> = ops.iter().map(cpu_features).collect();
+        let data = BinnedMatrix::fit(&x, params.max_bins);
+        Self::train_binned(device, ops, &data, cluster, threads, params)
+    }
+
+    /// Train from a pre-binned [`cpu_features`] matrix of `ops`.
+    /// `cpu_features` depend only on the op — never on the placement — so
+    /// one binned dataset serves every `(cluster, threads)` cell of a
+    /// device; [`PredictorSet`] bins once and routes all eager and lazy
+    /// placement trainings here. Identical computation to
+    /// [`CpuPredictor::train`] (which is this, after binning).
+    pub fn train_binned(
+        device: &Device,
+        ops: &[OpConfig],
+        data: &BinnedMatrix,
+        cluster: ClusterId,
+        threads: usize,
+        params: &GbdtParams,
+    ) -> Self {
+        let t0 = Instant::now();
         let y: Vec<f64> = ops
             .iter()
             .map(|op| {
@@ -262,7 +295,9 @@ impl CpuPredictor {
                 m.ln()
             })
             .collect();
-        Self { cluster, threads, model: Gbdt::fit(&x, &y, params) }
+        let model = Gbdt::fit_binned(data, &y, params);
+        crate::metrics::train_stats().record_us(t0.elapsed().as_micros() as u64);
+        Self { cluster, threads, model }
     }
 
     pub fn predict_us(&self, op: &OpConfig) -> f64 {
@@ -383,6 +418,11 @@ pub struct PredictorSet {
     gpus: RwLock<HashMap<ReqImpl, GpuCell>>,
     /// Retained §5.2 training sample for lazy placement training.
     train_ops: Vec<OpConfig>,
+    /// The CPU training features of `train_ops`, binned once per device:
+    /// `cpu_features` are placement-invariant, so every eager and lazy
+    /// `(cluster, threads)` cell trains from this shared matrix instead of
+    /// re-running `BinnedMatrix::fit` per training.
+    cpu_train: Arc<BinnedMatrix>,
     params: GbdtParams,
 }
 
@@ -396,11 +436,14 @@ impl PredictorSet {
         params: &GbdtParams,
     ) -> Self {
         let gpu = GpuPredictor::train(device, ops, mode, params);
+        let x: Vec<Vec<f64>> = ops.iter().map(cpu_features).collect();
+        let cpu_train = Arc::new(BinnedMatrix::fit(&x, params.max_bins));
         let default = device.spec.cpu.default_cluster();
         let cpu = (1..=default.max_threads())
             .map(|t| {
                 let cell = OnceLock::new();
-                let _ = cell.set(CpuPredictor::train(device, ops, default.id, t, params));
+                let _ = cell
+                    .set(CpuPredictor::train_binned(device, ops, &cpu_train, default.id, t, params));
                 ((default.id, t), Arc::new(cell))
             })
             .collect();
@@ -409,6 +452,7 @@ impl PredictorSet {
             cpu: RwLock::new(cpu),
             gpus: RwLock::new(HashMap::new()),
             train_ops: ops.to_vec(),
+            cpu_train,
             params: *params,
         }
     }
@@ -442,7 +486,14 @@ impl PredictorSet {
         (cluster, threads): (ClusterId, usize),
     ) -> &'a CpuPredictor {
         cell.get_or_init(|| {
-            CpuPredictor::train(device, &self.train_ops, cluster, threads, &self.params)
+            CpuPredictor::train_binned(
+                device,
+                &self.train_ops,
+                &self.cpu_train,
+                cluster,
+                threads,
+                &self.params,
+            )
         })
     }
 
@@ -552,6 +603,33 @@ impl PredictorSet {
         }
         let cell = self.gpu_cell(imp);
         self.gpu_impl(&cell, device, imp);
+    }
+
+    /// Requestable implementations with no trained model yet — the
+    /// forced-impl counterpart of [`PredictorSet::untrained_placements`],
+    /// for the serving layer's background pre-warm fan-out. `Default` is
+    /// always trained; impls for which the training set has no eligible
+    /// shape are skipped (nothing meaningful to pre-train).
+    pub fn untrained_impls(&self) -> Vec<ReqImpl> {
+        let map = self.gpus.read().unwrap_or_else(|p| p.into_inner());
+        ReqImpl::ALL
+            .into_iter()
+            .filter(|&imp| {
+                imp != ReqImpl::Default
+                    && self.train_ops.iter().any(|op| imp.eligible(op))
+                    && map.get(&imp).map_or(true, |c| c.get().is_none())
+            })
+            .collect()
+    }
+
+    /// Train every missing forced-impl GPU model (idempotent). The serving
+    /// layer calls this from its background pre-warm so a cold
+    /// `impl=<forced>` / `impl=auto` request never pays per-impl GBDT
+    /// training on the request path.
+    pub fn prewarm_impls(&self, device: &Device) {
+        for imp in self.untrained_impls() {
+            self.train_gpu_impl(device, imp);
+        }
     }
 
     /// Forced-impl GPU models trained right now (telemetry/tests);
@@ -774,6 +852,48 @@ mod tests {
             assert_eq!(b, set.predict_gpu_us(&device, op, ReqImpl::Direct));
         }
         assert_eq!(set.trained_impls(), vec![ReqImpl::Direct, ReqImpl::Winograd]);
+    }
+
+    /// Training a placement from the set's shared binned matrix must
+    /// produce a forest identical to per-placement binning
+    /// ([`CpuPredictor::train`] bins its own matrix from the same ops).
+    #[test]
+    fn shared_binning_matches_per_placement_binning() {
+        let device = Device::moto2022();
+        let (train, _) = dataset::training_split("linear", 800, 16);
+        let set = PredictorSet::train(&device, &train, FeatureMode::Augmented, &quick_params());
+        let key = set.untrained_placements(&device)[0];
+        set.train_placement(&device, key);
+        let direct = CpuPredictor::train(&device, &train, key.0, key.1, &quick_params());
+        for i in 1..60 {
+            let op = OpConfig::Linear(LinearConfig::new(50, 768, i * 53));
+            assert_eq!(
+                set.predict_cpu_us(&device, &op, key.0, key.1),
+                direct.predict_us(&op),
+                "shared-binning forest diverges at cout {}",
+                i * 53
+            );
+        }
+    }
+
+    #[test]
+    fn untrained_impls_and_prewarm_cover_eligible_forced_impls() {
+        let device = Device::pixel5();
+        let (train, _) = dataset::training_split("conv", 700, 17);
+        let set = PredictorSet::train(&device, &train, FeatureMode::Augmented, &quick_params());
+        let cold = set.untrained_impls();
+        // Default is never listed; every listed impl has eligible shapes
+        assert!(!cold.contains(&ReqImpl::Default));
+        assert!(!cold.is_empty());
+        for &imp in &cold {
+            assert!(train.iter().any(|op| imp.eligible(op)), "{imp:?}");
+        }
+        set.prewarm_impls(&device);
+        assert!(set.untrained_impls().is_empty());
+        assert_eq!(set.trained_impls(), cold, "prewarm trains exactly the cold impls");
+        // prewarm is idempotent
+        set.prewarm_impls(&device);
+        assert_eq!(set.trained_impls(), cold);
     }
 
     #[test]

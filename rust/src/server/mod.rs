@@ -366,10 +366,11 @@ struct DeviceEntry {
     key: &'static str,
     device: Device,
     planners: OnceLock<DevicePlanners>,
-    /// One-shot gate for [`ServerState::prewarm_cluster_placements`]: the
-    /// first cluster-`Auto` request swaps this and kicks the background
-    /// placement fan-out; every later request skips it for free.
-    placements_prewarmed: std::sync::atomic::AtomicBool,
+    /// One-shot gate for [`ServerState::prewarm_cold_models`]: the first
+    /// request that can touch a cold model (cluster-`Auto`, or any
+    /// non-default `impl=`) swaps this and kicks the background training
+    /// fan-out; every later request skips it for free.
+    models_prewarmed: std::sync::atomic::AtomicBool,
 }
 
 impl DeviceEntry {
@@ -378,7 +379,7 @@ impl DeviceEntry {
             key,
             device,
             planners: OnceLock::new(),
-            placements_prewarmed: std::sync::atomic::AtomicBool::new(false),
+            models_prewarmed: std::sync::atomic::AtomicBool::new(false),
         }
     }
 }
@@ -489,7 +490,9 @@ impl ServerMetrics {
     }
 
     /// The `STATS` reply body: cache counters first, then per-verb
-    /// `req/err/p50/p95` in [`VERBS`] order (`other` last).
+    /// `req/err/p50/p95` in [`VERBS`] order (`other` last), the
+    /// `plan.impl.*` breakdown, and finally the cumulative
+    /// `train.count`/`train.us` GBDT training cost.
     fn render(&self, cache: &PlanCache) -> String {
         let mut out = format!(
             "hits={} misses={} entries={} evictions={} expired={}",
@@ -518,6 +521,10 @@ impl ServerMetrics {
                 self.plan_impls[imp.index()].get()
             ));
         }
+        // cumulative predictor-training cost, appended strictly last so
+        // existing clients' field positions are untouched
+        let ts = crate::metrics::train_stats();
+        out.push_str(&format!(" train.count={} train.us={}", ts.count.get(), ts.us.get()));
         out
     }
 }
@@ -621,13 +628,15 @@ impl ServerState {
         self.prewarm_calibrated.store(true, std::sync::atomic::Ordering::Relaxed);
     }
 
-    /// Train one registry entry's planners and every CPU-cluster
-    /// placement predictor (idempotent; `OnceLock`/single-flight make
-    /// concurrent calls cheap).
+    /// Train one registry entry's planners, every CPU-cluster placement
+    /// predictor, and every eligible forced-impl GPU predictor
+    /// (idempotent; `OnceLock`/single-flight make concurrent calls cheap).
     fn prewarm_entry(entry: &DeviceEntry, n_train: usize, seed: u64) {
         let planners = entry.planners(n_train, seed);
         planners.linear.predictors.prewarm_placements(&entry.device);
         planners.conv.predictors.prewarm_placements(&entry.device);
+        planners.linear.predictors.prewarm_impls(&entry.device);
+        planners.conv.predictors.prewarm_impls(&entry.device);
     }
 
     /// Train planners — and every CPU cluster placement's predictors —
@@ -689,11 +698,19 @@ impl ServerState {
         req: PlanRequest,
     ) -> (Plan, bool) {
         let entry = self.session_entry(session);
-        if req.cluster == Choice::Auto {
-            self.prewarm_cluster_placements(&entry);
+        if Self::wants_cold_models(&req) {
+            self.prewarm_cold_models(&entry);
         }
         let planners = self.planners_for(&entry);
         self.cache.get_or_plan_request_traced(planners.for_op(op), op, req)
+    }
+
+    /// Whether serving `req` cold can touch a lazily trained model: a
+    /// cluster-`Auto` request sweeps the per-placement CPU predictors, and
+    /// any non-default `impl=` (fixed or auto) consults forced-impl GPU
+    /// predictors. Such requests trigger the background prewarm fan-out.
+    fn wants_cold_models(req: &PlanRequest) -> bool {
+        req.cluster == Choice::Auto || req.imp != Choice::Fixed(ReqImpl::Default)
     }
 
     /// Credit one request to the `plan.hit` / `plan.miss` sub-endpoint
@@ -752,18 +769,28 @@ impl ServerState {
         out
     }
 
-    /// Kick off background training of every untrained CPU-cluster
-    /// placement predictor for `entry`, fanned out across the worker
-    /// pool — so the first cluster-`Auto` request stops paying the
-    /// gold/silver (and per-thread-count) GBDT training serially on its
-    /// own critical path. One-shot per entry (swap-gated); a full queue
-    /// re-arms the gate and leaves training lazy, exactly as before. The
-    /// training cells are `OnceLock`-single-flight, so a foreground
-    /// request racing the prewarm blocks only on cells still in flight.
-    fn prewarm_cluster_placements(&self, entry: &Arc<DeviceEntry>) {
+    /// Kick off background training of every untrained *cold model* for
+    /// `entry` — CPU-cluster placement predictors and forced-impl GPU
+    /// predictors alike — fanned out across the worker pool, so the first
+    /// cluster-`Auto` / `impl=<forced>` / `impl=auto` request stops
+    /// paying GBDT training serially on its own critical path. One-shot
+    /// per entry (swap-gated); a full queue re-arms the gate and leaves
+    /// training lazy, exactly as before. The training cells are
+    /// `OnceLock`-single-flight, so a foreground request racing the
+    /// prewarm blocks only on cells still in flight.
+    fn prewarm_cold_models(&self, entry: &Arc<DeviceEntry>) {
         use std::sync::atomic::Ordering;
+
+        /// One unit of background training: a CPU placement cell or a
+        /// forced-impl GPU cell.
+        #[derive(Clone, Copy)]
+        enum PrewarmTask {
+            Placement((ClusterId, usize)),
+            Impl(ReqImpl),
+        }
+
         let Some(pool) = self.planning_pool.get() else { return };
-        if entry.placements_prewarmed.swap(true, Ordering::Relaxed) {
+        if entry.models_prewarmed.swap(true, Ordering::Relaxed) {
             return;
         }
         let task_pool = pool.clone();
@@ -771,21 +798,19 @@ impl ServerState {
         let (n_train, seed) = (self.n_train, self.seed);
         let submitted = pool.try_submit(Box::new(move || {
             let planners = task_entry.planners(n_train, seed);
-            // (is_linear, placement key) worklist over both op kinds
-            let work: Vec<(bool, (ClusterId, usize))> = planners
-                .linear
-                .predictors
-                .untrained_placements(&task_entry.device)
+            // (is_linear, task) worklist over both op kinds
+            let cold = |p: &Planner, is_linear: bool| {
+                p.predictors
+                    .untrained_placements(&task_entry.device)
+                    .into_iter()
+                    .map(PrewarmTask::Placement)
+                    .chain(p.predictors.untrained_impls().into_iter().map(PrewarmTask::Impl))
+                    .map(move |t| (is_linear, t))
+                    .collect::<Vec<_>>()
+            };
+            let work: Vec<(bool, PrewarmTask)> = cold(&planners.linear, true)
                 .into_iter()
-                .map(|k| (true, k))
-                .chain(
-                    planners
-                        .conv
-                        .predictors
-                        .untrained_placements(&task_entry.device)
-                        .into_iter()
-                        .map(|k| (false, k)),
-                )
+                .chain(cold(&planners.conv, false))
                 .collect();
             if work.is_empty() {
                 return;
@@ -794,13 +819,20 @@ impl ServerState {
             let fan_entry = task_entry.clone();
             fan_out(Some(task_pool.as_ref()), n, move |i| {
                 let planners = fan_entry.planners(n_train, seed);
-                let (is_linear, key) = work[i];
+                let (is_linear, task) = work[i];
                 let p = if is_linear { &planners.linear } else { &planners.conv };
-                p.predictors.train_placement(&fan_entry.device, key);
+                match task {
+                    PrewarmTask::Placement(key) => {
+                        p.predictors.train_placement(&fan_entry.device, key)
+                    }
+                    PrewarmTask::Impl(imp) => {
+                        p.predictors.train_gpu_impl(&fan_entry.device, imp)
+                    }
+                }
             });
         }));
         if submitted.is_err() {
-            entry.placements_prewarmed.store(false, Ordering::Relaxed);
+            entry.models_prewarmed.store(false, Ordering::Relaxed);
         }
     }
 
@@ -968,8 +1000,8 @@ impl ServerState {
         // the serial pass (planning is deterministic), but the dominant
         // cold cost (one full planner sweep per distinct shape) runs
         // wall-clock-parallel instead of layer-after-layer.
-        if req.cluster == Choice::Auto {
-            self.prewarm_cluster_placements(&entry);
+        if Self::wants_cold_models(&req) {
+            self.prewarm_cold_models(&entry);
         }
         let specs: Vec<(OpConfig, PlanRequest)> =
             model.layers.iter().filter_map(|l| l.op()).map(|op| (op, req)).collect();
@@ -1055,8 +1087,8 @@ impl ServerState {
         let entry = self.session_entry(session);
         let ok_specs: Vec<(OpConfig, PlanRequest)> =
             parsed.iter().filter_map(|r| r.as_ref().ok().copied()).collect();
-        if ok_specs.iter().any(|(_, req)| req.cluster == Choice::Auto) {
-            self.prewarm_cluster_placements(&entry);
+        if ok_specs.iter().any(|(_, req)| Self::wants_cold_models(req)) {
+            self.prewarm_cold_models(&entry);
         }
         let pre = self.preplan_parallel(&entry, &ok_specs);
         let planners = self.planners_for(&entry);

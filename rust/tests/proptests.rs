@@ -750,6 +750,79 @@ fn prop_packed_forest_matches_enum_reference() {
     }
 }
 
+/// Property: the histogram-subtraction fast-path trainer ([`Gbdt::fit`])
+/// is equivalent to the exact-scan reference trainer
+/// ([`Gbdt::fit_reference`]) on random regression problems: same base,
+/// same number of trees, *identical* tree structure node for node
+/// (features, bin thresholds, leaf values — the ambiguity-triggered
+/// exact rebuilds must catch every case where subtraction error could
+/// flip a split decision), bit-equal predictions, and agreeing argmins
+/// over a candidate sweep (the quantity the planner actually consumes).
+#[test]
+fn prop_fast_trainer_matches_reference() {
+    let mut rng = SplitMix64::new(29);
+    for case in 0..10 {
+        let n = rng.gen_range(60, 500);
+        let d = rng.gen_range(1, 7);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.next_f64() * 200.0 - 100.0).collect())
+            .collect();
+        // nonlinear target with interactions + noise so trees go deep and
+        // sibling histograms genuinely differ in size
+        let y: Vec<f64> = rows
+            .iter()
+            .map(|r| {
+                let s: f64 = r.iter().enumerate().map(|(j, v)| (j as f64 + 1.0) * v).sum();
+                s.abs() + 10.0 * (r[0] * 0.05).sin() + rng.next_f64()
+            })
+            .collect();
+        let params = GbdtParams {
+            n_estimators: rng.gen_range(10, 50),
+            max_depth: rng.gen_range(3, 8),
+            max_leaves: rng.gen_range(4, 31),
+            min_samples_leaf: rng.gen_range(2, 6),
+            subsample: 0.6 + 0.4 * rng.next_f64(),
+            feature_subsample: 0.5 + 0.5 * rng.next_f64(),
+            seed: 100 + case as u64,
+            ..Default::default()
+        };
+        let fast = Gbdt::fit(&rows, &y, &params);
+        let refr = Gbdt::fit_reference(&rows, &y, &params);
+        assert_eq!(fast.base, refr.base, "case {case}: base diverged");
+        assert_eq!(fast.trees.len(), refr.trees.len(), "case {case}: tree count diverged");
+        for (ti, (a, b)) in fast.trees.iter().zip(&refr.trees).enumerate() {
+            assert_eq!(a.nodes, b.nodes, "case {case} tree {ti}: structure diverged");
+            for (j, (ga, gb)) in a.feature_gain.iter().zip(&b.feature_gain).enumerate() {
+                assert!(
+                    (ga - gb).abs() <= 1e-6 * gb.abs().max(1.0),
+                    "case {case} tree {ti} feature {j}: gain {ga} vs {gb}"
+                );
+            }
+        }
+        // identical nodes => identical packed forests => bit-equal output
+        for r in rows.iter().take(60) {
+            assert!(
+                fast.predict(r) == refr.predict(r),
+                "case {case}: fast and reference predictions not bit-equal"
+            );
+        }
+        // the serving-relevant property: sweeping a candidate set (the
+        // planner's argmin over strategies) picks the same winner
+        let cands: Vec<Vec<f64>> = (0..64)
+            .map(|_| (0..d).map(|_| rng.next_f64() * 200.0 - 100.0).collect())
+            .collect();
+        let argmin = |m: &Gbdt| {
+            cands
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| m.predict(a).partial_cmp(&m.predict(b)).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        assert_eq!(argmin(&fast), argmin(&refr), "case {case}: candidate argmin diverged");
+    }
+}
+
 /// Property: measurement noise is unbiased (mean factor ~1) and
 /// deterministic per trial key.
 #[test]

@@ -1238,6 +1238,19 @@ fn response_formats_are_stable() {
         assert!(pos > last, "{key} out of order in {stats}");
         last = pos;
     }
+    // cumulative GBDT training cost comes strictly last; the PLANs above
+    // forced at least one lazy predictor training in this process, so the
+    // counters are live (they are process-global — assert floors, not
+    // exact values, since parallel tests also train)
+    for key in ["train.count=", "train.us="] {
+        let pos = body.find(key).unwrap_or_else(|| panic!("missing {key}"));
+        assert!(pos > last, "{key} out of order in {stats}");
+        last = pos;
+    }
+    let train_count: u64 = kv(&stats, "train.count").parse().unwrap();
+    let train_us: u64 = kv(&stats, "train.us").parse().unwrap();
+    assert!(train_count >= 1, "no training recorded: {stats}");
+    assert!(train_us >= 1, "training cost unrecorded: {stats}");
 }
 
 // ------------------------------------------------- threads clamp (fix) --
