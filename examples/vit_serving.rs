@@ -72,9 +72,9 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "steady-state latency: p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms",
-        percentile(steady, 50.0),
-        percentile(steady, 95.0),
-        percentile(steady, 99.0)
+        percentile(steady, 50.0).expect("steady window is non-empty"),
+        percentile(steady, 95.0).expect("steady window is non-empty"),
+        percentile(steady, 99.0).expect("steady window is non-empty")
     );
     println!("numerics verified on {verified} requests (vs fused AOT reference)");
     Ok(())

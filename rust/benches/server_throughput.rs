@@ -115,6 +115,28 @@ fn main() {
         "acceptance: warm-hit p99 must stay under 20ms — one Nagle stall would blow it ({p99_us:.0}us)"
     );
 
+    // tracing overhead: the loop above ran with the trace hub enabled
+    // (its default), so re-running it with tracing off isolates what the
+    // per-hit trace record costs. Budget: <5% of the warm fast path.
+    state.trace.set_enabled(false);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        stream.write_all(b"PLAN linear 50 768 3072 3\n").expect("write");
+        reply.clear();
+        reader.read_line(&mut reply).expect("read");
+        assert!(reply.starts_with("OK "), "{reply}");
+    }
+    let untraced_mean_us = t0.elapsed().as_secs_f64() / n as f64 * 1e6;
+    state.trace.set_enabled(true);
+    let tracing_overhead_pct = (warm_mean_us - untraced_mean_us) / untraced_mean_us * 100.0;
+    report_scalar("loopback_plan_warm", "untraced_mean_us", untraced_mean_us);
+    report_scalar("loopback_plan_warm", "tracing_overhead_pct", tracing_overhead_pct);
+    assert!(
+        tracing_overhead_pct < 5.0,
+        "acceptance: fast-path tracing must cost <5% of the warm loop \
+         (traced {warm_mean_us:.1}us vs untraced {untraced_mean_us:.1}us)"
+    );
+
     // PING is the floor of the protocol: pure front-end round-trip cost
     let t0 = Instant::now();
     for _ in 0..n {

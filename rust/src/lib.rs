@@ -58,6 +58,7 @@ pub mod experiments;
 pub mod gbdt;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod ops;
 pub mod partition;
 pub mod predictor;

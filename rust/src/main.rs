@@ -10,6 +10,10 @@
 //! repro plan  --device <name> --linear L,CIN,COUT [--threads N|auto]
 //!             [--cluster prime|gold|silver|auto]
 //!             [--impl default|direct|winograd|tiled_4x4|auto]
+//!             [--explain]                        also print what the planner
+//!                                            searched: candidate counts per
+//!                                            axis, prune totals, the top-3
+//!                                            strategies, and the win margin
 //! repro fit   --samples <file> --device <name>
 //!                                            fit a SocSpec from profiling
 //!                                            samples (one per line, same
@@ -19,12 +23,16 @@
 //!                                            equivalent CALIBRATE line
 //! repro coexec [--c1 N]                      REAL PJRT co-execution demo
 //! repro serve --device <name> [--addr A] [--workers N] [--queue N] [--ttl SECS]
+//!             [--trace-window N] [--trace-slow-us N]
 //!                                            plan-caching multi-device server
 //!                                            (--ttl expires cached plans, for
 //!                                            long-lived servers on drifting
 //!                                            calibration; clients upload or
 //!                                            recalibrate devices at runtime
-//!                                            with the CALIBRATE verb)
+//!                                            with the CALIBRATE verb;
+//!                                            --trace-window sizes the TRACE
+//!                                            ring, --trace-slow-us arms the
+//!                                            never-evicted slow log)
 //! repro all   [--quick]                      everything, in order
 //! ```
 //!
@@ -151,6 +159,38 @@ fn main() {
                 gpu_only,
                 gpu_only / measured
             );
+            if args.iter().any(|a| a == "--explain") {
+                let ex = planner.explain_request(&op, req);
+                println!(
+                    "  search: {} cluster(s) x {} placement(s), {} mech(s), {}/{} impl(s) -> {} strategy points",
+                    ex.clusters,
+                    ex.placements,
+                    ex.mechs,
+                    ex.impls_eligible,
+                    ex.impls_total,
+                    ex.strategy_points
+                );
+                println!(
+                    "  sweep: {} split candidates, {} evaluated, {} dominance-pruned",
+                    ex.split_candidates, ex.evaluated, ex.pruned
+                );
+                for (i, p) in ex.top.iter().enumerate() {
+                    println!(
+                        "  top{}: CPU {} ch | GPU {} ch, {} threads on {}, {} sync, {} kernel -> cpu {:.1} + gpu {:.1} = {:.1} us",
+                        i + 1,
+                        p.split.c_cpu,
+                        p.split.c_gpu,
+                        p.threads,
+                        p.cluster,
+                        mech_wire(p.mech),
+                        p.imp.wire(),
+                        p.t_cpu_us,
+                        p.t_gpu_us,
+                        p.t_total_us
+                    );
+                }
+                println!("  winner margin: {:.2}%", ex.margin_pct);
+            }
         }
         "fit" => {
             let path = get("--samples").unwrap_or_else(|| usage("fit needs --samples <file>"));
@@ -216,6 +256,20 @@ fn main() {
             if max_conns == 0 {
                 usage("--max-conns must be >= 1");
             }
+            let trace_window: usize = get("--trace-window")
+                .map(|w| {
+                    w.parse().unwrap_or_else(|_| usage("--trace-window must be a number"))
+                })
+                .unwrap_or(mobile_coexec::obs::DEFAULT_TRACE_WINDOW);
+            if trace_window == 0 {
+                usage("--trace-window must be >= 1");
+            }
+            let trace_slow_us: u64 = get("--trace-slow-us")
+                .map(|t| {
+                    t.parse()
+                        .unwrap_or_else(|_| usage("--trace-slow-us must be a number of us"))
+                })
+                .unwrap_or(0);
             eprintln!("training planners (offline compilation step) ...");
             let mut state =
                 mobile_coexec::server::ServerState::new(device, scale.train_n, 42);
@@ -224,6 +278,8 @@ fn main() {
                     std::time::Duration::from_secs(secs),
                 );
             }
+            state.trace = mobile_coexec::obs::TraceHub::new(trace_window);
+            state.trace.set_slow_us(trace_slow_us);
             let state = std::sync::Arc::new(state);
             let config = mobile_coexec::server::ServerConfig { workers, queue_cap };
             let mut server = mobile_coexec::server::Server::new(state, config);
@@ -248,10 +304,10 @@ fn main() {
                 "repro — CPU-GPU co-execution reproduction (EPEW 2025)\n\n\
                  usage:\n  repro fig   --id 2|3|5|6a|6b|7 [--quick]\n  \
                  repro table --id 1|2|3|4 [--quick]\n  repro sync\n  \
-                 repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto] [--cluster prime|gold|silver|auto] [--impl default|direct|winograd|tiled_4x4|auto]\n  \
+                 repro plan --device pixel4|pixel5|moto2022|oneplus11 --linear L,CIN,COUT [--threads N|auto] [--cluster prime|gold|silver|auto] [--impl default|direct|winograd|tiled_4x4|auto] [--explain]\n  \
                  repro fit --samples FILE --device <name>\n  \
                  repro coexec [--c1 N]\n  \
-                 repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N] [--ttl SECS] [--max-conns N]\n  \
+                 repro serve --device <name> [--addr HOST:PORT] [--workers N] [--queue N] [--ttl SECS] [--max-conns N] [--trace-window N] [--trace-slow-us N]\n  \
                  repro all [--quick]"
             );
         }

@@ -3,11 +3,13 @@
 //! Besides the offline statistics the experiment harness uses (MAPE,
 //! percentiles, ...), this module provides the two concurrency-safe
 //! primitives the serving layer composes into per-endpoint telemetry:
-//! [`Counter`] (lock-free event counts) and [`LatencyRecorder`] (a bounded
-//! sample reservoir answering p50/p95 queries).
+//! [`Counter`] (lock-free event counts) and [`LatencyRecorder`] (a
+//! lock-free log-bucket histogram answering p50/p95/p99/max queries over
+//! *all* samples ever recorded — see [`crate::obs::LogHistogram`] for the
+//! ≤ 5 % relative-error bound).
 
+use crate::obs::LogHistogram;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 /// A monotonically increasing event counter, shareable across threads.
 #[derive(Debug, Default)]
@@ -62,73 +64,45 @@ pub fn train_stats() -> &'static TrainStats {
 /// Point-in-time latency summary from a [`LatencyRecorder`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LatencySnapshot {
-    /// Total samples ever recorded (may exceed the retained window).
+    /// Total samples ever recorded.
     pub count: u64,
     pub p50_us: f64,
     pub p95_us: f64,
+    pub p99_us: f64,
+    /// Exact (unbucketed) maximum sample.
+    pub max_us: f64,
 }
 
-/// Thread-safe latency reservoir: keeps the most recent `cap` samples in a
-/// ring and answers percentile queries over that window. Empty recorders
-/// report zero percentiles (a snapshot must never panic mid-serve).
-#[derive(Debug)]
+/// Thread-safe latency summarizer backed by a lock-free log-bucket
+/// histogram ([`crate::obs::LogHistogram`]): every sample ever recorded
+/// contributes to the percentiles, so a burst can no longer bias them
+/// toward the most recent window (the failure mode of the bounded-ring
+/// reservoir this replaced — see the burst-bias regression test in
+/// `crate::obs`). Quantiles carry the histogram's documented ≤ 5 %
+/// relative error; `max_us` is exact. Empty recorders report zero
+/// percentiles (a snapshot must never panic mid-serve).
+#[derive(Debug, Default)]
 pub struct LatencyRecorder {
-    cap: usize,
-    samples: Mutex<Vec<f64>>,
-    count: Counter,
+    hist: LogHistogram,
 }
 
 impl LatencyRecorder {
-    pub fn new(cap: usize) -> Self {
-        assert!(cap > 0, "latency window must hold at least one sample");
-        Self { cap, samples: Mutex::new(Vec::new()), count: Counter::new() }
+    pub fn new() -> Self {
+        Self::default()
     }
 
     pub fn record_us(&self, us: f64) {
-        // The count and the slot it selects must advance together under
-        // the samples lock: with the count taken first, two records racing
-        // across the ring boundary (`len == cap`) could both see a full
-        // ring, compute colliding overwrite indices, and silently drop a
-        // sample while `count` advanced past the retained window.
-        let mut s = self.samples.lock().unwrap();
-        let n = self.count.inc();
-        if s.len() < self.cap {
-            s.push(us);
-        } else {
-            // overwrite the oldest slot (ring indexed by total count)
-            let idx = ((n - 1) as usize) % self.cap;
-            s[idx] = us;
-        }
-    }
-
-    /// Number of samples currently retained: `min(count, cap)` — the
-    /// recorder never drops a sample below capacity.
-    pub fn retained(&self) -> usize {
-        self.samples.lock().unwrap().len()
+        self.hist.record_us(us);
     }
 
     pub fn snapshot(&self) -> LatencySnapshot {
-        // copy under the lock, sort outside it: recorders sit on hot
-        // request paths and must not block on a snapshot's sort
-        let mut sorted = self.samples.lock().unwrap().clone();
-        let count = self.count.get();
-        if sorted.is_empty() {
-            return LatencySnapshot { count, p50_us: 0.0, p95_us: 0.0 };
-        }
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         LatencySnapshot {
-            count,
-            p50_us: percentile_sorted(&sorted, 50.0),
-            p95_us: percentile_sorted(&sorted, 95.0),
+            count: self.hist.count(),
+            p50_us: self.hist.quantile(50.0).unwrap_or(0.0),
+            p95_us: self.hist.quantile(95.0).unwrap_or(0.0),
+            p99_us: self.hist.quantile(99.0).unwrap_or(0.0),
+            max_us: self.hist.max_us(),
         }
-    }
-}
-
-impl Default for LatencyRecorder {
-    /// Window of 4096 samples: enough for stable serving percentiles at a
-    /// few KiB per endpoint.
-    fn default() -> Self {
-        Self::new(4096)
     }
 }
 
@@ -165,24 +139,31 @@ pub fn ci95_halfwidth(xs: &[f64]) -> f64 {
     1.96 * stddev(xs) / (xs.len() as f64).sqrt()
 }
 
-/// `p`-th percentile (0..=100), linear interpolation.
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
+/// `p`-th percentile (0..=100), linear interpolation. `None` on empty
+/// input — callers decide how an absent percentile renders (telemetry
+/// surfaces report 0.0) instead of a deep assert firing mid-serve.
+pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
     let mut s = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     percentile_sorted(&s, p)
 }
 
 /// `p`-th percentile of an already ascending-sorted slice (callers that
-/// query several percentiles sort once and use this).
-pub fn percentile_sorted(s: &[f64], p: f64) -> f64 {
-    assert!(!s.is_empty() && (0.0..=100.0).contains(&p));
+/// query several percentiles sort once and use this). `None` on empty
+/// input; panics only on an out-of-range `p` (a caller bug, not a data
+/// condition).
+pub fn percentile_sorted(s: &[f64], p: f64) -> Option<f64> {
+    assert!((0.0..=100.0).contains(&p), "percentile p={p} out of [0,100]");
+    if s.is_empty() {
+        return None;
+    }
     let pos = p / 100.0 * (s.len() - 1) as f64;
     let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
-    if lo == hi {
+    Some(if lo == hi {
         s[lo]
     } else {
         s[lo] + (s[hi] - s[lo]) * (pos - lo as f64)
-    }
+    })
 }
 
 /// Geometric mean (speedup aggregation alternative).
@@ -212,10 +193,22 @@ mod tests {
     #[test]
     fn percentile_interpolates() {
         let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 5.0);
-        assert_eq!(percentile(&xs, 50.0), 3.0);
-        assert_eq!(percentile(&xs, 25.0), 2.0);
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(5.0));
+        assert_eq!(percentile(&xs, 50.0), Some(3.0));
+        assert_eq!(percentile(&xs, 25.0), Some(2.0));
+    }
+
+    #[test]
+    fn percentile_of_empty_is_none() {
+        assert_eq!(percentile(&[], 50.0), None);
+        assert_eq!(percentile_sorted(&[], 95.0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of [0,100]")]
+    fn percentile_rejects_out_of_range_p() {
+        let _ = percentile(&[1.0], 101.0);
     }
 
     #[test]
@@ -245,47 +238,49 @@ mod tests {
 
     #[test]
     fn latency_recorder_percentiles() {
-        let r = LatencyRecorder::new(100);
-        assert_eq!(r.snapshot(), LatencySnapshot { count: 0, p50_us: 0.0, p95_us: 0.0 });
+        let r = LatencyRecorder::new();
+        assert_eq!(
+            r.snapshot(),
+            LatencySnapshot { count: 0, p50_us: 0.0, p95_us: 0.0, p99_us: 0.0, max_us: 0.0 }
+        );
         for i in 1..=100 {
             r.record_us(i as f64);
         }
         let s = r.snapshot();
         assert_eq!(s.count, 100);
-        assert!((s.p50_us - 50.5).abs() < 1e-9);
-        assert!(s.p95_us > s.p50_us && s.p95_us <= 100.0);
+        // Histogram quantiles carry the documented ≤5% relative error.
+        assert!((s.p50_us / 50.0 - 1.0).abs() < 0.05, "p50={}", s.p50_us);
+        assert!((s.p95_us / 95.0 - 1.0).abs() < 0.05, "p95={}", s.p95_us);
+        assert!((s.p99_us / 99.0 - 1.0).abs() < 0.05, "p99={}", s.p99_us);
+        assert!(s.p50_us < s.p95_us && s.p95_us <= s.p99_us);
+        assert_eq!(s.max_us, 100.0, "max is exact, not bucketed");
     }
 
     #[test]
-    fn concurrent_records_never_drop_samples_at_the_ring_boundary() {
-        // Regression: `count` used to be incremented outside the samples
-        // lock, so two records straddling `len == cap` could collide on
-        // one overwrite index and drop a sample while `count` advanced.
-        // With total records == cap, every sample must be retained.
-        const CAP: usize = 64;
+    fn concurrent_records_are_all_counted() {
+        // The old ring reservoir could drop samples racing across the
+        // ring boundary; the histogram has no boundary — every record is
+        // one atomic bucket increment and must be visible in the count
+        // and the bucket sums.
+        const PER_THREAD: usize = 500;
         const THREADS: usize = 8;
-        for round in 0..50 {
-            let r = std::sync::Arc::new(LatencyRecorder::new(CAP));
-            let handles: Vec<_> = (0..THREADS)
-                .map(|t| {
-                    let r = r.clone();
-                    std::thread::spawn(move || {
-                        for i in 0..CAP / THREADS {
-                            r.record_us((t * CAP + i) as f64);
-                        }
-                    })
+        let r = std::sync::Arc::new(LatencyRecorder::new());
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER_THREAD {
+                        r.record_us((t * PER_THREAD + i) as f64 + 1.0);
+                    }
                 })
-                .collect();
-            for h in handles {
-                h.join().unwrap();
-            }
-            assert_eq!(r.snapshot().count, CAP as u64);
-            assert_eq!(
-                r.retained(),
-                CAP,
-                "round {round}: a sample was dropped at the ring boundary"
-            );
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
         }
+        let s = r.snapshot();
+        assert_eq!(s.count, (THREADS * PER_THREAD) as u64);
+        assert_eq!(s.max_us, (THREADS * PER_THREAD) as f64);
     }
 
     #[test]
@@ -310,16 +305,22 @@ mod tests {
     }
 
     #[test]
-    fn latency_recorder_ring_overwrites() {
-        let r = LatencyRecorder::new(4);
+    fn latency_recorder_survives_bursts_unbiased() {
+        // The scenario that motivated replacing the reservoir: a slow
+        // population followed by a burst of fast samples. The old 4-slot
+        // ring would have reported p50 = p95 = 1.0 here (window bias);
+        // the histogram keeps all 12 samples.
+        let r = LatencyRecorder::new();
         for _ in 0..8 {
             r.record_us(1000.0);
         }
         for _ in 0..4 {
-            r.record_us(1.0); // fills the whole ring
+            r.record_us(1.0);
         }
         let s = r.snapshot();
         assert_eq!(s.count, 12);
-        assert_eq!((s.p50_us, s.p95_us), (1.0, 1.0));
+        assert!((s.p50_us / 1000.0 - 1.0).abs() < 0.05, "p50={}", s.p50_us);
+        assert!((s.p95_us / 1000.0 - 1.0).abs() < 0.05, "p95={}", s.p95_us);
+        assert_eq!(s.max_us, 1000.0);
     }
 }

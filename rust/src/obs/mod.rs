@@ -1,0 +1,859 @@
+//! Observability core: log-bucket histograms, per-request span traces,
+//! and the small atomic primitives (gauges, float accumulators, residual
+//! trackers) the serving layer's `STATS`/`METRICS`/`TRACE` surface is
+//! built from.
+//!
+//! Everything here is designed for the hot path's cost model:
+//!
+//! - [`LogHistogram`] records a latency sample with one `fetch_add` on an
+//!   atomic bucket plus a `fetch_max` for the running maximum — no lock,
+//!   no allocation, no sample retention. Quantiles are answered from the
+//!   bucket counts with a documented **≤ 5 % relative error** (see the
+//!   type docs for the exact bound), and — unlike the reservoir it
+//!   replaces — they summarize *every* sample ever recorded, so a burst
+//!   that would have overwritten a bounded ring cannot bias the
+//!   percentiles toward the most recent window.
+//! - The trace API ([`trace_begin`] / [`span`] / [`count`] /
+//!   [`trace_take`]) keeps the active trace in a thread-local so
+//!   instrumentation points deep in the planner or predictor need no
+//!   plumbed-through context argument. When no trace is active (or
+//!   tracing is disabled on the [`TraceHub`]) every call degrades to a
+//!   thread-local `Option` check.
+//! - [`TraceHub`] retains finished traces in a lock-sharded bounded ring
+//!   (submissions from different requests contend on different shards)
+//!   plus a small never-evicted slow log for requests over the
+//!   `--trace-slow-us` threshold.
+//!
+//! The serving grammar that exposes all of this (`TRACE`, `EXPLAIN`,
+//! `METRICS`, the appended `STATS` fields) lives in [`crate::server`].
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Atomic float helpers
+// ---------------------------------------------------------------------------
+
+/// `f64` with atomic add / max, stored as IEEE-754 bits in an `AtomicU64`.
+///
+/// `add` is a CAS loop (correct for any finite value, including negative
+/// ones — residual bias sums need that); `max` uses integer `fetch_max`
+/// directly, which matches float ordering only for non-negative values,
+/// so it is restricted to non-negative inputs (latencies, |error| %).
+#[derive(Debug, Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub const fn new(v: f64) -> Self {
+        Self(AtomicU64::new(v.to_bits()))
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Raise the stored value to `v` if larger. `v` must be non-negative
+    /// (bit ordering == float ordering only on that half-line).
+    pub fn max(&self, v: f64) {
+        debug_assert!(v >= 0.0);
+        self.0.fetch_max(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Current/peak pair for instantaneous occupancy (connections, queue
+/// depth). `inc`/`dec` are wait-free; the peak is maintained with
+/// `fetch_max` so it never under-reports under concurrency.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    cur: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self { cur: AtomicU64::new(0), peak: AtomicU64::new(0) }
+    }
+
+    pub fn inc(&self) {
+        let now = self.cur.fetch_add(1, Ordering::AcqRel) + 1;
+        self.peak.fetch_max(now, Ordering::AcqRel);
+    }
+
+    /// Saturating decrement: a spurious extra `dec` (e.g. a close path
+    /// reached twice) clamps at zero instead of wrapping to 2^64-1.
+    pub fn dec(&self) {
+        let _ = self
+            .cur
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| v.checked_sub(1));
+    }
+
+    /// Record an externally-observed occupancy level (for gauges whose
+    /// current value lives elsewhere, e.g. the worker-pool queue).
+    pub fn observe(&self, level: u64) {
+        self.peak.fetch_max(level, Ordering::AcqRel);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cur.load(Ordering::Acquire)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Acquire)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Log-bucket histogram
+// ---------------------------------------------------------------------------
+
+/// Geometric bucket growth factor. Bucket `i` (for `i >= 1`) covers
+/// `[GAMMA^(i-1), GAMMA^i)` microseconds.
+pub const GAMMA: f64 = 1.1;
+
+/// Index of the last (overflow) bucket. With γ = 1.1, bucket 219 starts
+/// at 1.1^218 ≈ 1.1e9 µs ≈ 18 minutes — far past any per-request latency
+/// this server can produce — so the overflow clamp is theoretical.
+const LAST: usize = 219;
+const N_BUCKETS: usize = LAST + 1;
+
+/// Lock-free latency histogram with geometric (log-scaled) buckets.
+///
+/// # Error bound
+///
+/// A quantile is answered as the *geometric midpoint* `γ^(i-1/2)` of the
+/// bucket holding the rank-`k` sample. Every sample in bucket `i` lies in
+/// `[γ^(i-1), γ^i)`, so the estimate is within a factor `√γ` of the true
+/// order statistic: with γ = 1.1 the relative error is at most
+/// `√1.1 − 1 ≈ 4.88 % < 5 %` for any sample ≥ 1 µs. Sub-microsecond
+/// samples collapse into the underflow bucket and report as 0.5 µs;
+/// samples past the overflow clamp (≈ 16 minutes) report the clamp. Both
+/// the bound and the quantile "sandwich" it implies are property-tested
+/// in this module and in `rust/tests/server_obs.rs`.
+///
+/// # Cost
+///
+/// `record` is one `fetch_add` on the bucket, one on the count, and one
+/// `fetch_max` for the maximum — no lock, no allocation. The whole
+/// histogram is ~1.8 KiB of atomics.
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            max_bits: AtomicU64::new(0),
+        }
+    }
+
+    fn index(us: f64) -> usize {
+        if !(us >= 1.0) {
+            // NaN and negatives land in the underflow bucket too: a
+            // telemetry sink must never panic on a degenerate sample.
+            return 0;
+        }
+        let i = 1 + (us.ln() / GAMMA.ln()).floor() as usize;
+        i.min(LAST)
+    }
+
+    /// Geometric midpoint of bucket `i`'s value range (µs).
+    fn bucket_mid(i: usize) -> f64 {
+        if i == 0 {
+            return 0.5;
+        }
+        GAMMA.powf(i as f64 - 0.5)
+    }
+
+    pub fn record_us(&self, us: f64) {
+        self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        if us > 0.0 {
+            self.max_bits.fetch_max(us.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Largest sample ever recorded (exact, not bucketed). 0.0 when empty.
+    pub fn max_us(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// `p`-th quantile estimate (0..=100). Returns `None` when empty.
+    ///
+    /// The estimate is the geometric midpoint of the bucket containing
+    /// the rank-`⌈p/100·n⌉` sample; see the type docs for the ≤ 5 %
+    /// relative-error bound that implies.
+    pub fn quantile(&self, p: f64) -> Option<f64> {
+        let total: u64 = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Some(Self::bucket_mid(i));
+            }
+        }
+        unreachable!("rank {rank} <= total {total} must fall in a bucket")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traces
+// ---------------------------------------------------------------------------
+
+/// One timed phase inside a request, relative to the request's clock
+/// origin (its *enqueue* time, so queue wait is visible as a span).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_us: f64,
+    pub dur_us: f64,
+}
+
+/// A finished per-request trace as retained by the [`TraceHub`].
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    /// Hub-assigned submission sequence number (1-based, monotonic).
+    pub seq: u64,
+    /// Endpoint key of the request (`"plan"`, `"run"`, ...).
+    pub verb: &'static str,
+    /// The request line, truncated to [`MAX_TRACE_LINE`] bytes.
+    pub line: String,
+    /// Wall time from enqueue to reply, µs.
+    pub total_us: f64,
+    pub spans: Vec<Span>,
+    /// Named counters attached during the request (sweep candidate /
+    /// prune counts, batch sizes, ...).
+    pub counts: Vec<(&'static str, u64)>,
+}
+
+/// Traced request lines are truncated to this many bytes so a pathological
+/// (but in-limit) 64 KiB request cannot pin 64 KiB per ring slot.
+pub const MAX_TRACE_LINE: usize = 128;
+
+struct ActiveTrace {
+    verb: &'static str,
+    line: String,
+    origin: Instant,
+    spans: Vec<Span>,
+    counts: Vec<(&'static str, u64)>,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<ActiveTrace>> = const { RefCell::new(None) };
+}
+
+fn truncate_line(line: &str) -> String {
+    if line.len() <= MAX_TRACE_LINE {
+        return line.to_string();
+    }
+    let mut end = MAX_TRACE_LINE;
+    while !line.is_char_boundary(end) {
+        end -= 1;
+    }
+    line[..end].to_string()
+}
+
+/// Install a new active trace on this thread. `origin` is the clock zero
+/// all span offsets are measured from — pass the *enqueue* timestamp so
+/// the dequeue delay can be recorded as a `queue_wait` span.
+pub fn trace_begin(verb: &'static str, line: &str, origin: Instant) {
+    ACTIVE.with(|a| {
+        *a.borrow_mut() = Some(ActiveTrace {
+            verb,
+            line: truncate_line(line),
+            origin,
+            spans: Vec::with_capacity(8),
+            counts: Vec::new(),
+        });
+    });
+}
+
+/// RAII guard: times from construction to drop and records the span on
+/// the thread's active trace. A no-op (one TLS check, no allocation)
+/// when no trace is active.
+#[must_use]
+pub struct SpanGuard {
+    name: &'static str,
+    start: Option<(f64, Instant)>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((start_us, t)) = self.start {
+            let dur_us = t.elapsed().as_secs_f64() * 1e6;
+            ACTIVE.with(|a| {
+                if let Some(tr) = a.borrow_mut().as_mut() {
+                    tr.spans.push(Span { name: self.name, start_us, dur_us });
+                }
+            });
+        }
+    }
+}
+
+/// Open a span named `name` on the thread's active trace (no-op guard if
+/// none is active).
+pub fn span(name: &'static str) -> SpanGuard {
+    let start = ACTIVE.with(|a| {
+        a.borrow()
+            .as_ref()
+            .map(|tr| (tr.origin.elapsed().as_secs_f64() * 1e6, Instant::now()))
+    });
+    SpanGuard { name, start }
+}
+
+/// Record an already-measured span (used for phases whose start predates
+/// the trace itself, e.g. queue wait measured from the enqueue stamp).
+pub fn span_closed(name: &'static str, start_us: f64, dur_us: f64) {
+    ACTIVE.with(|a| {
+        if let Some(tr) = a.borrow_mut().as_mut() {
+            tr.spans.push(Span { name, start_us, dur_us });
+        }
+    });
+}
+
+/// Attach (or accumulate into) a named counter on the active trace.
+pub fn count(name: &'static str, n: u64) {
+    ACTIVE.with(|a| {
+        if let Some(tr) = a.borrow_mut().as_mut() {
+            if let Some(c) = tr.counts.iter_mut().find(|(k, _)| *k == name) {
+                c.1 += n;
+            } else {
+                tr.counts.push((name, n));
+            }
+        }
+    });
+}
+
+/// Finish and remove the thread's active trace, stamping `total_us`.
+/// Returns `None` if no trace was active.
+pub fn trace_take() -> Option<TraceRecord> {
+    ACTIVE.with(|a| a.borrow_mut().take()).map(|tr| TraceRecord {
+        seq: 0,
+        verb: tr.verb,
+        line: tr.line,
+        total_us: tr.origin.elapsed().as_secs_f64() * 1e6,
+        spans: tr.spans,
+        counts: tr.counts,
+    })
+}
+
+/// Discard the thread's active trace without recording it (used if a
+/// handler decides mid-flight the request should not be retained).
+pub fn trace_drop() {
+    ACTIVE.with(|a| {
+        *a.borrow_mut() = None;
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Trace hub
+// ---------------------------------------------------------------------------
+
+const SHARDS: usize = 8;
+/// Capacity of the never-evicted slow log (slowest-kept once full).
+pub const SLOW_LOG_CAP: usize = 64;
+/// Default total ring window (`--trace-window`).
+pub const DEFAULT_TRACE_WINDOW: usize = 256;
+
+/// Bounded retention for finished traces.
+///
+/// The recent window is a lock-sharded ring: a submission locks only the
+/// shard its sequence number hashes to, so concurrent workers rarely
+/// contend. Separately, traces whose `total_us` meets the `slow_us`
+/// threshold (0 = disabled) are copied into a bounded slow log that ring
+/// eviction never touches; when the slow log is full the *fastest* entry
+/// is replaced, so it converges on the worst requests ever seen.
+#[derive(Debug)]
+pub struct TraceHub {
+    enabled: AtomicBool,
+    slow_us: AtomicU64,
+    per_shard: usize,
+    shards: [Mutex<VecDeque<Arc<TraceRecord>>>; SHARDS],
+    slow: Mutex<Vec<Arc<TraceRecord>>>,
+    seq: AtomicU64,
+}
+
+impl Default for TraceHub {
+    fn default() -> Self {
+        Self::new(DEFAULT_TRACE_WINDOW)
+    }
+}
+
+impl TraceHub {
+    /// `window` is the total number of recent traces retained across all
+    /// shards (rounded up to a multiple of the shard count, min 1/shard).
+    pub fn new(window: usize) -> Self {
+        Self {
+            enabled: AtomicBool::new(true),
+            slow_us: AtomicU64::new(0),
+            per_shard: window.div_ceil(SHARDS).max(1),
+            shards: std::array::from_fn(|_| Mutex::new(VecDeque::new())),
+            slow: Mutex::new(Vec::new()),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Cheap hot-path check: should requests bother building traces?
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn slow_us(&self) -> u64 {
+        self.slow_us.load(Ordering::Relaxed)
+    }
+
+    /// Threshold (µs) above which a trace is promoted to the slow log;
+    /// 0 disables promotion.
+    pub fn set_slow_us(&self, us: u64) {
+        self.slow_us.store(us, Ordering::Relaxed);
+    }
+
+    /// Total ring capacity across shards.
+    pub fn window(&self) -> usize {
+        self.per_shard * SHARDS
+    }
+
+    /// Traces submitted over the hub's lifetime (survives eviction).
+    pub fn submitted(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Traces currently retained in the recent ring.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entries currently in the slow log.
+    pub fn slow_len(&self) -> usize {
+        self.slow.lock().unwrap().len()
+    }
+
+    pub fn submit(&self, mut rec: TraceRecord) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        rec.seq = seq;
+        let rec = Arc::new(rec);
+        {
+            let mut shard = self.shards[seq as usize % SHARDS].lock().unwrap();
+            shard.push_back(rec.clone());
+            while shard.len() > self.per_shard {
+                shard.pop_front();
+            }
+        }
+        let thr = self.slow_us();
+        if thr > 0 && rec.total_us >= thr as f64 {
+            let mut slow = self.slow.lock().unwrap();
+            if slow.len() < SLOW_LOG_CAP {
+                slow.push(rec);
+            } else if let Some((i, fastest)) = slow
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_us.total_cmp(&b.1.total_us))
+                .map(|(i, r)| (i, r.total_us))
+            {
+                if rec.total_us > fastest {
+                    slow[i] = rec;
+                }
+            }
+        }
+    }
+
+    /// Most recent `n` traces, newest first.
+    pub fn last(&self, n: usize) -> Vec<Arc<TraceRecord>> {
+        let mut all: Vec<Arc<TraceRecord>> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().iter().cloned().collect::<Vec<_>>())
+            .collect();
+        all.sort_by(|a, b| b.seq.cmp(&a.seq));
+        all.truncate(n);
+        all
+    }
+
+    /// Slowest `n` traces, slowest first: the union of the slow log and
+    /// the recent ring, deduplicated by sequence number.
+    pub fn slow(&self, n: usize) -> Vec<Arc<TraceRecord>> {
+        let mut all: Vec<Arc<TraceRecord>> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().iter().cloned().collect::<Vec<_>>())
+            .chain(self.slow.lock().unwrap().iter().cloned())
+            .collect();
+        all.sort_by(|a, b| b.total_us.total_cmp(&a.total_us).then(b.seq.cmp(&a.seq)));
+        all.dedup_by_key(|r| r.seq);
+        all.truncate(n);
+        all
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RUN residuals
+// ---------------------------------------------------------------------------
+
+/// Per-device accumulator of (predicted, measured) co-execution latency
+/// residuals from `RUN` — the drift signal an auto-refit loop will gate
+/// on. All fields are atomics; `record` takes no lock.
+#[derive(Debug, Default)]
+pub struct ResidualStats {
+    count: AtomicU64,
+    sum_abs_pct: AtomicF64,
+    max_abs_pct: AtomicF64,
+    sum_signed_pct: AtomicF64,
+}
+
+/// Point-in-time view of a [`ResidualStats`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidualSnapshot {
+    pub count: u64,
+    /// Mean of |predicted − measured| / measured, percent.
+    pub mean_abs_pct: f64,
+    pub max_abs_pct: f64,
+    /// Mean signed error, percent: positive = predictor over-estimates.
+    pub bias_pct: f64,
+}
+
+impl ResidualStats {
+    /// Record one (predicted, measured) pair in µs. Non-positive measured
+    /// values are skipped (a percentage error against them is undefined).
+    pub fn record(&self, predicted_us: f64, measured_us: f64) {
+        if !(measured_us > 0.0) || !predicted_us.is_finite() {
+            return;
+        }
+        let pct = (predicted_us - measured_us) / measured_us * 100.0;
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_abs_pct.add(pct.abs());
+        self.max_abs_pct.max(pct.abs());
+        self.sum_signed_pct.add(pct);
+    }
+
+    pub fn snapshot(&self) -> ResidualSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let n = count.max(1) as f64;
+        ResidualSnapshot {
+            count,
+            mean_abs_pct: self.sum_abs_pct.get() / n,
+            max_abs_pct: self.max_abs_pct.get(),
+            bias_pct: self.sum_signed_pct.get() / n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_empty_and_single() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(50.0), None);
+        assert_eq!(h.max_us(), 0.0);
+        h.record_us(100.0);
+        let q = h.quantile(50.0).unwrap();
+        assert!((q / 100.0 - 1.0).abs() < 0.05, "q={q}");
+        assert_eq!(h.max_us(), 100.0);
+    }
+
+    /// The documented bound, stated as a sandwich: for any p, at least
+    /// p% of samples are ≤ q·√γ and at least (100−p)% are ≥ q/√γ.
+    #[test]
+    fn histogram_quantile_sandwich_bound() {
+        let h = LogHistogram::new();
+        // Deterministic log-uniform-ish samples over [1µs, ~1s].
+        let mut x: u64 = 0x9e3779b97f4a7c15;
+        let mut samples = Vec::new();
+        for _ in 0..5000 {
+            // SplitMix64 step.
+            x = x.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z ^= z >> 31;
+            let u = (z >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+            let v = 10f64.powf(u * 6.0); // [1, 1e6) µs
+            samples.push(v);
+            h.record_us(v);
+        }
+        let slack = GAMMA.sqrt() + 1e-9;
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let q = h.quantile(p).unwrap();
+            let below = samples.iter().filter(|&&v| v <= q * slack).count() as f64;
+            let above = samples.iter().filter(|&&v| v >= q / slack).count() as f64;
+            let n = samples.len() as f64;
+            assert!(below >= (p / 100.0 * n).floor(), "p{p}: q={q} below={below}");
+            assert!(
+                above >= ((100.0 - p) / 100.0 * n).floor(),
+                "p{p}: q={q} above={above}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_match_exact_within_bound() {
+        let h = LogHistogram::new();
+        let mut samples = Vec::new();
+        for i in 0..2000u32 {
+            // Two latency populations: a fast mode and a slow tail.
+            let v = if i % 10 == 0 { 8000.0 + i as f64 } else { 120.0 + (i % 37) as f64 };
+            samples.push(v);
+            h.record_us(v);
+        }
+        samples.sort_by(f64::total_cmp);
+        for p in [50.0, 90.0, 95.0, 99.0] {
+            let exact = crate::metrics::percentile_sorted(&samples, p).unwrap();
+            let est = h.quantile(p).unwrap();
+            // √γ bucket error plus a little for interpolation mismatch
+            // between order statistics and linear interpolation.
+            assert!(
+                (est / exact - 1.0).abs() < 0.06,
+                "p{p}: est={est} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_underflow_and_degenerate_samples() {
+        let h = LogHistogram::new();
+        h.record_us(0.0);
+        h.record_us(-3.0);
+        h.record_us(f64::NAN);
+        h.record_us(0.25);
+        assert_eq!(h.count(), 4);
+        // Sub-µs (and degenerate) samples report the underflow midpoint.
+        assert_eq!(h.quantile(50.0), Some(0.5));
+    }
+
+    /// The regression the histogram exists for: a bounded ring reservoir
+    /// forgets a slow population once a later burst overwrites the
+    /// window; the histogram keeps every sample.
+    #[test]
+    fn histogram_is_not_window_biased_under_bursts() {
+        // In-test replica of the old LatencyRecorder: a cap-N overwrite
+        // ring indexed by total count.
+        struct Ring {
+            cap: usize,
+            samples: Vec<f64>,
+            count: usize,
+        }
+        impl Ring {
+            fn record(&mut self, v: f64) {
+                if self.samples.len() < self.cap {
+                    self.samples.push(v);
+                } else {
+                    self.samples[self.count % self.cap] = v;
+                }
+                self.count += 1;
+            }
+            fn p95(&self) -> f64 {
+                let mut s = self.samples.clone();
+                s.sort_by(f64::total_cmp);
+                crate::metrics::percentile_sorted(&s, 95.0).unwrap()
+            }
+        }
+        let mut ring = Ring { cap: 8, samples: Vec::new(), count: 0 };
+        let h = LogHistogram::new();
+        for _ in 0..24 {
+            ring.record(1000.0);
+            h.record_us(1000.0);
+        }
+        for _ in 0..8 {
+            ring.record(1.0);
+            h.record_us(1.0);
+        }
+        // 75% of all samples were 1000µs, yet the ring claims p95 = 1µs.
+        assert_eq!(ring.p95(), 1.0);
+        // The histogram remembers the slow population.
+        let p95 = h.quantile(95.0).unwrap();
+        assert!((p95 / 1000.0 - 1.0).abs() < 0.05, "p95={p95}");
+    }
+
+    #[test]
+    fn trace_lifecycle_records_spans_and_counts() {
+        assert!(trace_take().is_none());
+        let t0 = Instant::now();
+        trace_begin("plan", "PLAN linear 50 768 3072 3", t0);
+        span_closed("queue_wait", 0.0, 12.5);
+        {
+            let _g = span("sweep");
+            std::hint::black_box(0);
+        }
+        count("sweep.eval", 40);
+        count("sweep.eval", 2);
+        count("sweep.pruned", 7);
+        let tr = trace_take().expect("active trace");
+        assert_eq!(tr.verb, "plan");
+        assert_eq!(tr.spans[0], Span { name: "queue_wait", start_us: 0.0, dur_us: 12.5 });
+        assert_eq!(tr.spans[1].name, "sweep");
+        assert!(tr.spans[1].dur_us >= 0.0);
+        assert_eq!(tr.counts, vec![("sweep.eval", 42), ("sweep.pruned", 7)]);
+        assert!(tr.total_us >= tr.spans[1].start_us);
+        // Taking consumed it.
+        assert!(trace_take().is_none());
+    }
+
+    #[test]
+    fn span_is_noop_without_active_trace() {
+        let _g = span("orphan");
+        drop(_g);
+        count("orphan", 1);
+        span_closed("orphan", 0.0, 1.0);
+        assert!(trace_take().is_none());
+    }
+
+    #[test]
+    fn trace_line_is_truncated() {
+        let long = "PLAN ".to_string() + &"x".repeat(4096);
+        trace_begin("plan", &long, Instant::now());
+        let tr = trace_take().unwrap();
+        assert_eq!(tr.line.len(), MAX_TRACE_LINE);
+    }
+
+    fn rec(total_us: f64) -> TraceRecord {
+        TraceRecord {
+            seq: 0,
+            verb: "plan",
+            line: String::new(),
+            total_us,
+            spans: Vec::new(),
+            counts: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn hub_ring_evicts_oldest_and_last_is_newest_first() {
+        let hub = TraceHub::new(16);
+        assert_eq!(hub.window(), 16);
+        for i in 0..100 {
+            hub.submit(rec(i as f64));
+        }
+        assert_eq!(hub.submitted(), 100);
+        assert_eq!(hub.len(), 16);
+        let last = hub.last(4);
+        let seqs: Vec<u64> = last.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![100, 99, 98, 97]);
+    }
+
+    #[test]
+    fn hub_slow_log_survives_ring_eviction() {
+        let hub = TraceHub::new(8);
+        hub.set_slow_us(500);
+        hub.submit(rec(900.0)); // promoted
+        for _ in 0..200 {
+            hub.submit(rec(1.0)); // evicts the ring many times over
+        }
+        assert_eq!(hub.slow_len(), 1);
+        let slow = hub.slow(4);
+        assert_eq!(slow[0].total_us, 900.0);
+        assert_eq!(slow[0].seq, 1);
+    }
+
+    #[test]
+    fn hub_slow_log_keeps_the_slowest_when_full() {
+        let hub = TraceHub::new(8);
+        hub.set_slow_us(1);
+        for i in 0..(SLOW_LOG_CAP + 10) {
+            hub.submit(rec(10.0 + i as f64));
+        }
+        assert_eq!(hub.slow_len(), SLOW_LOG_CAP);
+        // The fastest retained slow entry must be from the upper range:
+        // the first 10 (fastest) submissions were displaced.
+        let slow = hub.slow(SLOW_LOG_CAP + 16);
+        let min = slow.iter().map(|r| r.total_us).fold(f64::INFINITY, f64::min);
+        assert!(min >= 20.0, "min retained slow total {min}");
+    }
+
+    #[test]
+    fn hub_disabled_flag_roundtrips() {
+        let hub = TraceHub::default();
+        assert!(hub.enabled());
+        hub.set_enabled(false);
+        assert!(!hub.enabled());
+    }
+
+    #[test]
+    fn residuals_track_bias_and_magnitude() {
+        let r = ResidualStats::default();
+        assert_eq!(r.snapshot().count, 0);
+        r.record(110.0, 100.0); // +10%
+        r.record(80.0, 100.0); // -20%
+        r.record(100.0, 0.0); // skipped
+        r.record(f64::INFINITY, 100.0); // skipped
+        let s = r.snapshot();
+        assert_eq!(s.count, 2);
+        assert!((s.mean_abs_pct - 15.0).abs() < 1e-9);
+        assert!((s.max_abs_pct - 20.0).abs() < 1e-9);
+        assert!((s.bias_pct - -5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gauge_tracks_current_and_peak() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 2);
+        assert_eq!(g.peak(), 3);
+        g.dec();
+        g.dec();
+        g.dec(); // extra dec saturates, never wraps
+        assert_eq!(g.get(), 0);
+        g.observe(17);
+        assert_eq!(g.peak(), 17);
+    }
+
+    #[test]
+    fn atomic_f64_add_handles_negatives() {
+        let a = AtomicF64::new(0.0);
+        a.add(2.5);
+        a.add(-4.0);
+        assert!((a.get() - -1.5).abs() < 1e-12);
+        let m = AtomicF64::new(0.0);
+        m.max(3.0);
+        m.max(1.0);
+        assert_eq!(m.get(), 3.0);
+    }
+}

@@ -77,6 +77,7 @@
 
 use crate::device::{ClusterId, Device, ReqImpl, SyncMechanism};
 use crate::gbdt::GbdtParams;
+use crate::obs;
 use crate::ops::{ChannelSplit, OpConfig};
 use crate::predictor::{cpu_features_into, FeatureMode, GpuBatchScratch, PredictorSet};
 
@@ -236,6 +237,46 @@ impl Plan {
     }
 }
 
+/// What [`Planner::explain_request`] records about one planning run: the
+/// size of each searched axis, how much of the candidate matrix the
+/// dominance prune discarded before any GBDT evaluation, the top
+/// predicted strategies, and the winner's margin over the runner-up.
+///
+/// `top[0]` is exactly the plan [`Planner::plan_request`] returns for the
+/// same `(op, request)`; the remaining entries are the next-best final
+/// incumbents of other `(placement, mode)` strategy points.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanExplain {
+    /// Distinct CPU clusters searched (1 when the axis is pinned).
+    pub clusters: usize,
+    /// `(cluster, threads)` placement grid points.
+    pub placements: usize,
+    /// Sync mechanisms searched.
+    pub mechs: usize,
+    /// Kernel implementations eligible for this op (the searched set).
+    pub impls_eligible: usize,
+    /// Size of the impl axis before eligibility filtering (1 when
+    /// pinned, [`ReqImpl::ALL`] when `auto`).
+    pub impls_total: usize,
+    /// `(mechanism, impl)` mode pairs per placement.
+    pub modes: usize,
+    /// Total strategy points: `placements × modes`.
+    pub strategy_points: usize,
+    /// Split candidates swept (coarse pass plus refinement windows).
+    pub split_candidates: usize,
+    /// CPU candidate rows actually predicted (post-dominance-prune).
+    pub evaluated: u64,
+    /// CPU candidate rows the dominance prune discarded before feature
+    /// assembly.
+    pub pruned: u64,
+    /// Up to the 3 best final strategy incumbents, ascending predicted
+    /// total; `top[0]` is the winning plan.
+    pub top: Vec<Plan>,
+    /// Winner's advantage over the runner-up strategy point, percent of
+    /// the winner's predicted total (0 when only one point competed).
+    pub margin_pct: f64,
+}
+
 /// The partition planner: predictors + overhead model for one device.
 /// Strategy (cluster, thread count, sync mechanism) is per-request, not
 /// per-planner — see [`PlanRequest`].
@@ -351,6 +392,31 @@ impl Planner {
     /// impl the op is not eligible for (the serving layer validates both
     /// per device/op before planning).
     pub fn plan_request(&self, op: &OpConfig, req: PlanRequest) -> Plan {
+        self.plan_request_impl(op, req, None)
+    }
+
+    /// [`plan_request`](Self::plan_request) with the decision recorded:
+    /// runs the identical search (same candidate order, same prunes, same
+    /// tie-breaking — the returned `top[0]` is byte-for-byte the plan
+    /// `plan_request` would return) and reports what the planner
+    /// considered on every axis, the top strategies, and the winner's
+    /// margin. Backs the serving layer's `EXPLAIN` verb and
+    /// `repro plan --explain`.
+    pub fn explain_request(&self, op: &OpConfig, req: PlanRequest) -> PlanExplain {
+        let mut ex = PlanExplain::default();
+        let winner = self.plan_request_impl(op, req, Some(&mut ex));
+        debug_assert_eq!(ex.top.first(), Some(&winner));
+        ex
+    }
+
+    fn plan_request_impl(
+        &self,
+        op: &OpConfig,
+        req: PlanRequest,
+        explain: Option<&mut PlanExplain>,
+    ) -> Plan {
+        let _sweep_span = obs::span("plan_sweep");
+        let assemble_span = obs::span("assemble");
         let cpu_spec = &self.device.spec.cpu;
         // the (cluster, threads) placement grid, in device cluster order
         let placements: Vec<(ClusterId, usize)> = match req.cluster {
@@ -452,11 +518,14 @@ impl Planner {
             })
             .collect();
 
+        drop(assemble_span);
+
         // Batched coarse sweep: every (placement, mode) strategy point
         // participates; candidate order and strict-`<` updates reproduce
         // the serial scan's first-minimizer tie-breaking exactly (module
         // docs, "Batched candidate-matrix evaluation").
         let mut scratch = SweepScratch::default();
+        let mut split_candidates = 0usize;
 
         const COARSE: usize = 32;
         let coarse = cout > 4 * COARSE;
@@ -473,6 +542,7 @@ impl Planner {
                 scratch.members.push((pi, mi));
             }
         }
+        split_candidates += scratch.cands.len();
         self.batched_sweep(op, &placements, &modes, &impls, &overheads, &mut best, &mut scratch);
 
         // Refinement is per strategy point: each (placement, mode) point
@@ -508,6 +578,7 @@ impl Planner {
                 }
                 scratch.members.clear();
                 scratch.members.extend_from_slice(&members);
+                split_candidates += scratch.cands.len();
                 self.batched_sweep(
                     op, &placements, &modes, &impls, &overheads, &mut best, &mut scratch,
                 );
@@ -521,6 +592,44 @@ impl Planner {
                     winner = *p;
                 }
             }
+        }
+        obs::count("sweep.eval", scratch.n_eval);
+        obs::count("sweep.pruned", scratch.n_pruned);
+
+        if let Some(ex) = explain {
+            let mut clusters: Vec<ClusterId> = Vec::new();
+            for &(c, _) in &placements {
+                if !clusters.contains(&c) {
+                    clusters.push(c);
+                }
+            }
+            ex.clusters = clusters.len();
+            ex.placements = placements.len();
+            ex.mechs = mechs.len();
+            ex.impls_eligible = impls.len();
+            ex.impls_total = match req.imp {
+                Choice::Fixed(_) => 1,
+                Choice::Auto => ReqImpl::ALL.len(),
+            };
+            ex.modes = modes.len();
+            ex.strategy_points = placements.len() * modes.len();
+            ex.split_candidates = split_candidates;
+            ex.evaluated = scratch.n_eval;
+            ex.pruned = scratch.n_pruned;
+            // Top strategies: the final incumbent of every (placement,
+            // mode) point, ranked by predicted total. The stable sort
+            // preserves (placement, mode) order among ties, so top[0] is
+            // exactly the winner the fixed tie-breaking rules select.
+            let mut ranked: Vec<Plan> =
+                best.iter().flat_map(|row| row.iter().copied()).collect();
+            ranked.sort_by(|a, b| a.t_total_us.total_cmp(&b.t_total_us));
+            ex.margin_pct = if ranked.len() >= 2 && ranked[0].t_total_us > 0.0 {
+                (ranked[1].t_total_us - ranked[0].t_total_us) / ranked[0].t_total_us * 100.0
+            } else {
+                0.0
+            };
+            ranked.truncate(3);
+            ex.top = ranked;
         }
         winner
     }
@@ -553,6 +662,7 @@ impl Planner {
         if s.cands.is_empty() || s.members.is_empty() {
             return;
         }
+        let _span = obs::span("forest_sweep");
         // the shared GPU sweep: one feature matrix for all candidates,
         // one batch walk per impl any member actually references (a
         // refinement window only re-predicts its winners' impls)
@@ -613,6 +723,8 @@ impl Planner {
                 s.kept.push(ci as u32);
                 cpu_features_into(&op.with_cout(s.cands[ci]), &mut s.cpu_feats);
             }
+            s.n_eval += s.kept.len() as u64;
+            s.n_pruned += (s.cands.len() - s.kept.len()) as u64;
             if s.kept.is_empty() {
                 continue;
             }
@@ -696,6 +808,11 @@ struct SweepScratch {
     cpu_feats: Vec<f64>,
     /// CPU predictions, one per surviving candidate.
     t_cpu: Vec<f64>,
+    /// CPU candidate rows predicted across this call's sweeps (feeds
+    /// [`PlanExplain::evaluated`] and the `sweep.eval` trace counter).
+    n_eval: u64,
+    /// Candidate rows the dominance prune discarded before assembly.
+    n_pruned: u64,
 }
 
 /// The paper's measured grid-search oracle: step-8 sweep, every candidate

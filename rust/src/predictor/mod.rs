@@ -103,6 +103,7 @@ impl GpuPredictor {
         params: &GbdtParams,
     ) -> Self {
         assert_eq!(ops.len(), lat.len());
+        let _span = crate::obs::span("train");
         let t0 = Instant::now();
         let x: Vec<Vec<f64>> =
             ops.iter().map(|op| gpu_features_for(device, op, imp, mode)).collect();
@@ -284,6 +285,7 @@ impl CpuPredictor {
         threads: usize,
         params: &GbdtParams,
     ) -> Self {
+        let _span = crate::obs::span("train");
         let t0 = Instant::now();
         let y: Vec<f64> = ops
             .iter()

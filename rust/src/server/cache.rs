@@ -458,6 +458,7 @@ impl PlanCache {
         op: &OpConfig,
         req: PlanRequest,
     ) -> (Plan, bool) {
+        let _span = crate::obs::span("cache");
         self.get_or_plan_request_precomputed(planner, op, req, None)
     }
 

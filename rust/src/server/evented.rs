@@ -51,6 +51,7 @@
 
 #[cfg(unix)]
 mod imp {
+    use crate::obs;
     use crate::partition::{Plan, PlanRequest};
     use crate::server::pool::{SubmitError, WorkerPool};
     use crate::server::{verb_key, PlanBody, ServerState, Session, MAX_LINE_BYTES};
@@ -624,6 +625,7 @@ mod imp {
             if self.live >= self.max_conns {
                 // over the bound: terse reply, half-close, drop — the
                 // flood connection never touches loop or pool state
+                self.state.record_conn_limit();
                 let mut stream = stream;
                 let _ = stream.write_all(CONN_LIMIT_REPLY);
                 let _ = stream.shutdown(Shutdown::Write);
@@ -653,12 +655,14 @@ mod imp {
                 phase: ConnPhase::Open,
             });
             self.live += 1;
+            self.state.metrics.conns.inc();
         }
 
         fn close(&mut self, id: usize) {
             if self.conns[id].take().is_some() {
                 self.free.push(id);
                 self.live -= 1;
+                self.state.metrics.conns.dec();
             }
         }
 
@@ -826,6 +830,8 @@ mod imp {
                     req,
                 );
                 let Some(plan) = probe else { return false };
+                let traced = state.trace.enabled();
+                let probe_us = if traced { t0.elapsed().as_secs_f64() * 1e6 } else { 0.0 };
                 let ep = state.metrics.endpoint("plan");
                 ep.requests.inc();
                 state.cache.record_probe_hits(1);
@@ -836,6 +842,9 @@ mod imp {
                 // telemetry must match the slow path exactly: the PLAN
                 // verb credits its resolved impl on both paths
                 state.metrics.record_plan_impl(plan.imp);
+                if traced {
+                    submit_fast_trace(state, "plan", line, t0, probe_us);
+                }
                 true
             }
             b"PLAN_BATCH" => {
@@ -872,6 +881,8 @@ mod imp {
                         None => return false,
                     }
                 }
+                let traced = state.trace.enabled();
+                let probe_us = if traced { t0.elapsed().as_secs_f64() * 1e6 } else { 0.0 };
                 let ep = state.metrics.endpoint("plan_batch");
                 ep.requests.inc();
                 state.cache.record_probe_hits(scratch.plans.len() as u64);
@@ -880,10 +891,45 @@ mod imp {
                     let _ = writeln!(conn.wbuf, "OK {}", PlanBody(plan));
                 }
                 ep.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+                if traced {
+                    submit_fast_trace(state, "plan_batch", line, t0, probe_us);
+                }
                 true
             }
             _ => false,
         }
+    }
+
+    /// Two-span trace for fast-path hits. A loop-served request's entire
+    /// life is a cache probe and a buffered reply write, so the record is
+    /// built directly (no TLS span plumbing): `probe` covers parse +
+    /// cache lookup, `write` covers formatting + buffer append. Costs one
+    /// atomic load per hit when tracing is off.
+    fn submit_fast_trace(
+        state: &ServerState,
+        verb: &'static str,
+        line: &[u8],
+        t0: Instant,
+        probe_us: f64,
+    ) {
+        let total_us = t0.elapsed().as_secs_f64() * 1e6;
+        // the line was ASCII-checked on entry, so byte truncation is safe
+        let end = line.len().min(obs::MAX_TRACE_LINE);
+        state.trace.submit(obs::TraceRecord {
+            seq: 0,
+            verb,
+            line: String::from_utf8_lossy(&line[..end]).into_owned(),
+            total_us,
+            spans: vec![
+                obs::Span { name: "probe", start_us: 0.0, dur_us: probe_us },
+                obs::Span {
+                    name: "write",
+                    start_us: probe_us,
+                    dur_us: (total_us - probe_us).max(0.0),
+                },
+            ],
+            counts: Vec::new(),
+        });
     }
 
     /// Zero-allocation parsing of the hot verbs' op-specs, straight from
@@ -1153,15 +1199,18 @@ mod imp {
                     let _ = stream.set_nodelay(true);
                     if live.fetch_add(1, Ordering::AcqRel) >= max_conns {
                         live.fetch_sub(1, Ordering::AcqRel);
+                        state.record_conn_limit();
                         let mut stream = stream;
                         let _ = stream.write_all(CONN_LIMIT_REPLY);
                         let _ = stream.shutdown(Shutdown::Write);
                         continue;
                     }
+                    state.metrics.conns.inc();
                     let (state, pool, live) = (state.clone(), pool.clone(), live.clone());
                     std::thread::spawn(move || {
                         let _ = serve_conn(&state, &pool, stream);
                         live.fetch_sub(1, Ordering::AcqRel);
+                        state.metrics.conns.dec();
                     });
                 }
                 Err(e) => {

@@ -55,11 +55,15 @@
 //! Line-oriented TCP, one request per line, fields space-separated.
 //! Replies are a single line starting `OK ` or `ERR ` — except
 //! `PLAN_BATCH`, whose `OK n=<k>` header line is followed by `k` per-op
-//! lines (each itself `OK ...` or `ERR ...`):
+//! lines (each itself `OK ...` or `ERR ...`); `TRACE`, whose `OK n=<k>`
+//! header is followed by `k` `TR ...` trace lines; and `METRICS`, whose
+//! `OK metrics lines=<k>` header is followed by `k` Prometheus
+//! text-exposition lines:
 //!
 //! ```text
 //! request    = ping | plan | plan-batch | run | device | calibrate
-//!            | fit | plan-model | flush | stats
+//!            | fit | plan-model | flush | stats | trace | explain
+//!            | metrics
 //! ping       = "PING"                     ; -> OK pong
 //! plan       = "PLAN" op-spec             ; -> OK c_cpu c_gpu t_pred_us
 //!                                         ;      threads=<t> mech=<mech>
@@ -101,6 +105,40 @@
 //!                                         ;      evictions= expired=
 //!                                         ;      <verb>.req= .err= .p50_us= .p95_us= ...
 //!                                         ;      plan.impl.<i>= ...
+//!                                         ;      train.count= train.us=
+//!                                         ; then (appended, PR 10):
+//!                                         ;      trace/explain/metrics verb
+//!                                         ;      blocks, <verb>.p99_us=
+//!                                         ;      .max_us= for every verb,
+//!                                         ;      conns.active= conns.peak=
+//!                                         ;      queue.depth= queue.peak=
+//!                                         ;      shed=, and per-device
+//!                                         ;      resid.<dev>.n= .mean_pct=
+//!                                         ;      .max_pct= .bias_pct=
+//! trace      = "TRACE" ["slow" | "last"] [n]
+//!                                         ; default: last 5; n in 1..=64
+//!                                         ; -> OK n=<k> window=<w>
+//!                                         ;      submitted=<n> slow_us=<t>
+//!                                         ;      slow_log=<n> header, then
+//!                                         ;      k "TR seq= verb= total_us=
+//!                                         ;      spans=<name:start:dur,...>
+//!                                         ;      counts=<name:n,...>
+//!                                         ;      line=<req line>" lines,
+//!                                         ;      newest (last) or slowest
+//!                                         ;      (slow) first
+//! explain    = "EXPLAIN" op-spec          ; -> OK explain clusters= placements=
+//!                                         ;      mechs= impls=<elig>/<total>
+//!                                         ;      modes= points= splits=
+//!                                         ;      eval= pruned=
+//!                                         ;      top1..top3=<c_cpu/c_gpu:
+//!                                         ;      cluster:threads:mech:impl:
+//!                                         ;      t_cpu:t_gpu:t_total>
+//!                                         ;      margin_pct=<x>
+//! metrics    = "METRICS"                  ; -> OK metrics lines=<k> header,
+//!                                         ;    then k Prometheus lines
+//!                                         ;    (coexec_* counters, gauges,
+//!                                         ;    latency quantiles, per-device
+//!                                         ;    RUN residuals)
 //! op-spec    = "linear" l cin cout threads ["cluster=" cluster-req]
 //!              ["impl=" impl-req]
 //!            | "conv" h w cin cout k s threads ["cluster=" cluster-req]
@@ -203,6 +241,33 @@
 //! op-specs is rejected whole (`ERR too many ops`) — one request line
 //! must not monopolize a pool worker.
 //!
+//! # Observability
+//!
+//! Every pooled request records a span trace on a monotonic clock with
+//! its enqueue time as origin — `queue_wait`, `parse`, `cache`, the
+//! planner's `assemble`/`forest_sweep` phases (plus `sweep.eval` /
+//! `sweep.pruned` candidate counters), lazy `train`, and `RUN`'s
+//! `run_measure` — retained in [`ServerState::trace`], a bounded
+//! lock-sharded ring (`--trace-window`, default
+//! [`crate::obs::DEFAULT_TRACE_WINDOW`]) served by the `TRACE` verb.
+//! Requests whose total meets `--trace-slow-us` are promoted to a
+//! never-evicted slow log ([`crate::obs::SLOW_LOG_CAP`] entries,
+//! slowest-kept). The evented fast path records a cheap two-span trace
+//! (`probe`, `write`) instead of the full set.
+//!
+//! **Tracing overhead budget:** with tracing enabled (the default), the
+//! warm fast-path round-trip must stay within 5% of the untraced
+//! round-trip — gated in `benches/server_throughput.rs`
+//! (`tracing_overhead_pct`) and snapshotted in `BENCH_10.json`. The
+//! budget is what licenses leaving tracing on in production; flip
+//! [`crate::obs::TraceHub::set_enabled`] off to shed even that cost.
+//!
+//! `METRICS` renders the same telemetry as Prometheus text exposition
+//! (`coexec_*` families) for scraping, including the per-device `RUN`
+//! residual accumulators (predicted vs. measured co-execution latency:
+//! count, mean/max |error| %, signed bias %) that the drift-detection
+//! roadmap item will gate on.
+//!
 //! With `--ttl` the server also runs a background sweeper thread that
 //! periodically drops expired cache entries per shard (counted in the
 //! `expired=` counter like lazy expiry) instead of leaving idle-memory
@@ -278,6 +343,7 @@ use crate::device::{
 };
 use crate::metrics::{Counter, LatencyRecorder};
 use crate::models::{self, Model};
+use crate::obs;
 use crate::ops::{ConvConfig, LinearConfig, OpConfig};
 use crate::partition::{Choice, Plan, PlanRequest, Planner};
 use crate::scheduler::{pool_gpu_us, strategy_distribution, ModelScheduler};
@@ -413,18 +479,30 @@ impl EndpointStats {
 /// Per-verb serving telemetry, rendered by the `STATS` verb.
 pub struct ServerMetrics {
     endpoints: Vec<(&'static str, EndpointStats)>,
+    /// First endpoint index of the post-PR-10 verbs; `endpoints[..new_from]`
+    /// is the legacy (position-frozen) section, whose last entry is
+    /// `other` (the [`Self::endpoint`] fallback).
+    new_from: usize,
     /// Resolved kernel implementation of every `PLAN` reply (slow path
     /// and evented fast path alike): serving-level visibility into how
     /// often the impl axis actually deviates from the delegate default.
-    /// Indexed by [`ReqImpl::index`]; rendered at the very end of the
-    /// `STATS` line so every pre-impl field keeps its position.
+    /// Indexed by [`ReqImpl::index`]; rendered after every legacy
+    /// per-verb block so every pre-impl field keeps its position.
     plan_impls: [Counter; ReqImpl::ALL.len()],
+    /// Active/peak connections across front-ends (evented and fallback).
+    pub conns: obs::Gauge,
+    /// Requests shed before handling: `ERR busy (queue full)`,
+    /// `ERR busy (connection limit)`, and shutdown rejections.
+    pub shed: Counter,
+    /// Per-device `RUN` residual accumulators, in first-seen order
+    /// (appended to `STATS` and exported by `METRICS`).
+    residuals: Mutex<Vec<(&'static str, Arc<obs::ResidualStats>)>>,
 }
 
 /// The protocol's verbs: wire token -> metrics key. Single source of
 /// truth for telemetry bookkeeping and the stable `STATS` reporting
 /// order (dispatch itself lives in `handle_inner`'s match).
-const VERBS: [(&str, &str); 10] = [
+const VERBS: [(&str, &str); 13] = [
     ("PING", "ping"),
     ("PLAN", "plan"),
     ("PLAN_BATCH", "plan_batch"),
@@ -435,7 +513,20 @@ const VERBS: [(&str, &str); 10] = [
     ("PLAN_MODEL", "plan_model"),
     ("FLUSH", "flush"),
     ("STATS", "stats"),
+    // Verbs past LEGACY_VERBS render after the pre-PR-10 STATS fields:
+    // inserting them into the per-verb section would shift every
+    // later field's position and break position-compatible clients.
+    ("TRACE", "trace"),
+    ("EXPLAIN", "explain"),
+    ("METRICS", "metrics"),
 ];
+
+/// How many [`VERBS`] existed before PR 10's observability verbs: the
+/// `STATS` line renders per-verb blocks for exactly these (plus the
+/// `plan.hit`/`plan.miss` sub-endpoints and `other`) in their historical
+/// byte positions; the newer verbs' blocks — and every other new field —
+/// append after `train.us`.
+const LEGACY_VERBS: usize = 10;
 
 /// Metrics key collecting unrecognized verbs (reported last by `STATS`).
 const OTHER_KEY: &str = "other";
@@ -443,8 +534,8 @@ const OTHER_KEY: &str = "other";
 /// Synthetic sub-endpoints splitting the `PLAN` verb's latency by cache
 /// outcome: a warm hit is a ~µs lookup while a cold miss pays a full
 /// planner sweep, so one blended `plan.p50/p95` hides both populations.
-/// Reported directly after `plan` in `STATS` ([`OTHER_KEY`] must stay
-/// last — [`ServerMetrics::endpoint`] falls back to the final entry).
+/// Reported directly after `plan` in `STATS` ([`OTHER_KEY`] must close
+/// the legacy section — [`ServerMetrics::endpoint`] falls back to it).
 const PLAN_HIT_KEY: &str = "plan.hit";
 const PLAN_MISS_KEY: &str = "plan.miss";
 
@@ -461,18 +552,29 @@ const MODEL_SPEC_USAGE: &str = "bad model spec (expected: \
 impl ServerMetrics {
     fn new() -> Self {
         let mut endpoints: Vec<(&'static str, EndpointStats)> = Vec::new();
-        for (_, key) in VERBS.iter() {
+        for (_, key) in VERBS.iter().take(LEGACY_VERBS) {
             endpoints.push((*key, EndpointStats::new()));
             if *key == "plan" {
                 // hit/miss sub-endpoints ride directly behind their verb
-                // so STATS stays position-ordered; `other` stays last
-                // (the endpoint() fallback indexes the final entry)
+                // so STATS stays position-ordered; `other` closes the
+                // legacy section (the endpoint() fallback)
                 endpoints.push((PLAN_HIT_KEY, EndpointStats::new()));
                 endpoints.push((PLAN_MISS_KEY, EndpointStats::new()));
             }
         }
         endpoints.push((OTHER_KEY, EndpointStats::new()));
-        Self { endpoints, plan_impls: std::array::from_fn(|_| Counter::new()) }
+        let new_from = endpoints.len();
+        for (_, key) in VERBS.iter().skip(LEGACY_VERBS) {
+            endpoints.push((*key, EndpointStats::new()));
+        }
+        Self {
+            endpoints,
+            new_from,
+            plan_impls: std::array::from_fn(|_| Counter::new()),
+            conns: obs::Gauge::new(),
+            shed: Counter::new(),
+            residuals: Mutex::new(Vec::new()),
+        }
     }
 
     /// Credit one `PLAN` reply to its resolved implementation's counter.
@@ -486,14 +588,39 @@ impl ServerMetrics {
             .iter()
             .find(|(k, _)| *k == key)
             .map(|(_, e)| e)
-            .unwrap_or(&self.endpoints[self.endpoints.len() - 1].1)
+            .unwrap_or(&self.endpoints[self.new_from - 1].1)
     }
 
-    /// The `STATS` reply body: cache counters first, then per-verb
-    /// `req/err/p50/p95` in [`VERBS`] order (`other` last), the
-    /// `plan.impl.*` breakdown, and finally the cumulative
-    /// `train.count`/`train.us` GBDT training cost.
-    fn render(&self, cache: &PlanCache) -> String {
+    /// The per-device `RUN` residual accumulator for `device` (the
+    /// registry key), created on first use.
+    pub fn residuals_for(&self, device: &'static str) -> Arc<obs::ResidualStats> {
+        let mut all = self.residuals.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some((_, r)) = all.iter().find(|(k, _)| *k == device) {
+            return r.clone();
+        }
+        let r = Arc::new(obs::ResidualStats::default());
+        all.push((device, r.clone()));
+        r
+    }
+
+    /// Devices with residuals recorded, in first-seen order.
+    fn residual_snapshots(&self) -> Vec<(&'static str, obs::ResidualSnapshot)> {
+        let all = self.residuals.lock().unwrap_or_else(|p| p.into_inner());
+        all.iter().map(|(k, r)| (*k, r.snapshot())).collect()
+    }
+
+    /// The `STATS` reply body. Field order is a wire contract
+    /// (`stats_fields_keep_positions_with_new_fields_appended` pins it):
+    /// cache counters, then per-verb `req/err/p50/p95` for the legacy
+    /// verbs in [`VERBS`] order (hit/miss after `plan`, `other` last),
+    /// the `plan.impl.*` breakdown, and `train.count`/`train.us` — all
+    /// byte-position-compatible with pre-PR-10 clients. After that,
+    /// appended in order: the observability verbs' `req/err/p50/p95`
+    /// blocks, `p99_us`/`max_us` for *every* endpoint, the live gauges
+    /// (`conns.active/peak`, `queue.depth/peak`, `shed`), and per-device
+    /// `RUN` residuals. `queue` is the planning pool's (depth, peak), if
+    /// one is attached.
+    fn render(&self, cache: &PlanCache, queue: Option<(usize, usize)>) -> String {
         let mut out = format!(
             "hits={} misses={} entries={} evictions={} expired={}",
             cache.hits(),
@@ -502,7 +629,7 @@ impl ServerMetrics {
             cache.evictions(),
             cache.expired()
         );
-        for (name, ep) in &self.endpoints {
+        let block = |out: &mut String, name: &str, ep: &EndpointStats| {
             let s = ep.latency.snapshot();
             out.push_str(&format!(
                 " {name}.req={} {name}.err={} {name}.p50_us={:.1} {name}.p95_us={:.1}",
@@ -511,6 +638,9 @@ impl ServerMetrics {
                 s.p50_us,
                 s.p95_us
             ));
+        };
+        for (name, ep) in &self.endpoints[..self.new_from] {
+            block(&mut out, name, ep);
         }
         // the impl breakdown is appended after every per-verb block so
         // pre-impl clients' field positions are untouched
@@ -521,10 +651,34 @@ impl ServerMetrics {
                 self.plan_impls[imp.index()].get()
             ));
         }
-        // cumulative predictor-training cost, appended strictly last so
-        // existing clients' field positions are untouched
+        // cumulative predictor-training cost — the last pre-PR-10 field;
+        // everything after this point is append-only
         let ts = crate::metrics::train_stats();
         out.push_str(&format!(" train.count={} train.us={}", ts.count.get(), ts.us.get()));
+        for (name, ep) in &self.endpoints[self.new_from..] {
+            block(&mut out, name, ep);
+        }
+        for (name, ep) in &self.endpoints {
+            let s = ep.latency.snapshot();
+            out.push_str(&format!(
+                " {name}.p99_us={:.1} {name}.max_us={:.1}",
+                s.p99_us, s.max_us
+            ));
+        }
+        let (qdepth, qpeak) = queue.unwrap_or((0, 0));
+        out.push_str(&format!(
+            " conns.active={} conns.peak={} queue.depth={qdepth} queue.peak={qpeak} shed={}",
+            self.conns.get(),
+            self.conns.peak(),
+            self.shed.get()
+        ));
+        for (dev, r) in self.residual_snapshots() {
+            out.push_str(&format!(
+                " resid.{dev}.n={} resid.{dev}.mean_pct={:.2} resid.{dev}.max_pct={:.2} \
+                 resid.{dev}.bias_pct={:.2}",
+                r.count, r.mean_abs_pct, r.max_abs_pct, r.bias_pct
+            ));
+        }
         out
     }
 }
@@ -575,6 +729,10 @@ pub struct ServerState {
     planning_pool: OnceLock<Arc<WorkerPool>>,
     pub cache: PlanCache,
     pub metrics: ServerMetrics,
+    /// Per-request trace retention (the `TRACE` verb's backing store).
+    /// Replaceable before the state is shared (`--trace-window` sizes
+    /// the ring); `--trace-slow-us` arms the slow log at runtime.
+    pub trace: obs::TraceHub,
 }
 
 impl ServerState {
@@ -619,6 +777,7 @@ impl ServerState {
             planning_pool: OnceLock::new(),
             cache: PlanCache::default(),
             metrics: ServerMetrics::new(),
+            trace: obs::TraceHub::default(),
         }
     }
 
@@ -844,6 +1003,14 @@ impl ServerState {
         let ep = self.metrics.endpoint(verb);
         ep.requests.inc();
         ep.errors.inc();
+        self.metrics.shed.inc();
+    }
+
+    /// Record a connection rejected at the accept path's connection
+    /// limit: no request line exists yet, so only the global `shed=`
+    /// counter moves (per-verb counters stay request-scoped).
+    pub fn record_conn_limit(&self) {
+        self.metrics.shed.inc();
     }
 
     /// Record an error for a request whose worker job died mid-flight (the
@@ -867,8 +1034,19 @@ impl ServerState {
     /// exactly when the server is loaded. (Requests shed with `ERR busy`
     /// never reach this and stay excluded from latency, as before.)
     pub fn handle_timed(&self, session: &mut Session, line: &str, t0: Instant) -> String {
-        let ep = self.metrics.endpoint(verb_key(line));
+        let verb = verb_key(line);
+        let ep = self.metrics.endpoint(verb);
         ep.requests.inc();
+        // Tracing: the thread-local active trace collects spans from
+        // anywhere below this frame (parser, cache, planner sweep, lazy
+        // training) with t0 — the *enqueue* stamp — as clock origin, so
+        // the dequeue delay is the first span. Handlers running on
+        // fan-out workers trace only their coordinating thread's share.
+        let traced = self.trace.enabled();
+        if traced {
+            obs::trace_begin(verb, line, t0);
+            obs::span_closed("queue_wait", 0.0, t0.elapsed().as_secs_f64() * 1e6);
+        }
         let reply = match self.handle_inner(session, line) {
             Ok(s) => format!("OK {s}"),
             Err(e) => {
@@ -877,6 +1055,11 @@ impl ServerState {
             }
         };
         ep.latency.record_us(t0.elapsed().as_secs_f64() * 1e6);
+        if traced {
+            if let Some(tr) = obs::trace_take() {
+                self.trace.submit(tr);
+            }
+        }
         reply
     }
 
@@ -924,8 +1107,13 @@ impl ServerState {
                 let entry = self.session_entry(session);
                 let planner = self.planners_for(&entry).for_op(&op);
                 let plan = self.cache.get_or_plan_request(planner, &op, req);
+                let measure_span = obs::span("run_measure");
                 let t_co = planner.measure_plan_us(&op, &plan, 8);
                 let t_gpu = entry.device.measure_mean(&op, Processor::Gpu, 8);
+                drop(measure_span);
+                // Residual feedback: the plan's predicted co-execution
+                // time vs what the same simulator measures end-to-end.
+                self.metrics.residuals_for(entry.key).record(plan.t_total_us, t_co);
                 Ok(format!(
                     "{:.1} {:.1} {:.3} threads={} mech={} cluster={} impl={}",
                     t_co,
@@ -951,11 +1139,218 @@ impl ServerState {
                 Ok(format!("flushed={}", self.cache.flush()))
             }
             ["FLUSH", ..] => Err(anyhow!("bad request (expected: FLUSH [all])")),
-            ["STATS"] => Ok(self.metrics.render(&self.cache)),
+            ["STATS"] => Ok(self.stats_reply()),
             ["STATS", ..] => Err(anyhow!("bad request (expected: STATS)")),
+            ["EXPLAIN", rest @ ..] => self.explain(session, rest),
+            ["TRACE", rest @ ..] => self.trace_reply(rest),
+            ["METRICS"] => Ok(self.metrics_reply()),
+            ["METRICS", ..] => Err(anyhow!("bad request (expected: METRICS)")),
             [other, ..] => Err(anyhow!("unknown command {other}")),
             [] => Err(anyhow!("empty request")),
         }
+    }
+
+    /// The `STATS` reply: cache counters + per-verb telemetry, with the
+    /// planning pool's live queue gauges when a pool is attached (the
+    /// blocking front-end has none — its `queue.*` fields report 0).
+    fn stats_reply(&self) -> String {
+        let queue = self.planning_pool.get().map(|p| (p.queued(), p.queue_peak()));
+        self.metrics.render(&self.cache, queue)
+    }
+
+    /// `EXPLAIN <op-spec>`: run the planner search with the decision
+    /// recorder attached and report what the sweep considered. Reuses
+    /// `parse_op`, so every malformed-spec error is byte-identical to
+    /// `PLAN`'s; unlike `PLAN` it never reads or writes the plan cache —
+    /// the point is to see the search, not its memoization.
+    fn explain(&self, session: &Session, rest: &[&str]) -> Result<String> {
+        if rest.is_empty() {
+            return Err(anyhow!("bad request (expected: EXPLAIN <op-spec>)"));
+        }
+        let (op, req) = self.parse_op(session, rest)?;
+        let entry = self.session_entry(session);
+        let ex = self.planners_for(&entry).for_op(&op).explain_request(&op, req);
+        let mut out = format!(
+            "explain clusters={} placements={} mechs={} impls={}/{} modes={} points={} \
+             splits={} eval={} pruned={}",
+            ex.clusters,
+            ex.placements,
+            ex.mechs,
+            ex.impls_eligible,
+            ex.impls_total,
+            ex.modes,
+            ex.strategy_points,
+            ex.split_candidates,
+            ex.evaluated,
+            ex.pruned
+        );
+        for (i, p) in ex.top.iter().enumerate() {
+            out.push_str(&format!(
+                " top{}={}/{}:{}:{}:{}:{}:{:.1}:{:.1}:{:.1}",
+                i + 1,
+                p.split.c_cpu,
+                p.split.c_gpu,
+                p.cluster.wire(),
+                p.threads,
+                mech_wire(p.mech),
+                p.imp.wire(),
+                p.t_cpu_us,
+                p.t_gpu_us,
+                p.t_total_us
+            ));
+        }
+        out.push_str(&format!(" margin_pct={:.2}", ex.margin_pct));
+        Ok(out)
+    }
+
+    /// `TRACE [slow|last] [n]`: dump retained request traces, newest
+    /// (`last`, the default) or slowest (`slow`: slow log ∪ ring by
+    /// total time) first. Multi-line reply mirroring `PLAN_BATCH`'s
+    /// framing: an `n=<k> ...` header, then `k` `TR` lines. The free-text
+    /// `line=` field is last on each `TR` line because it contains spaces.
+    fn trace_reply(&self, rest: &[&str]) -> Result<String> {
+        const USAGE: &str = "bad request (expected: TRACE [slow|last] [n])";
+        let (mode, count) = match rest {
+            [] => ("last", None),
+            [one] if one.eq_ignore_ascii_case("slow") || one.eq_ignore_ascii_case("last") => {
+                (*one, None)
+            }
+            [one] => ("last", Some(*one)),
+            [mode, count] => (*mode, Some(*count)),
+            _ => return Err(anyhow!(USAGE)),
+        };
+        let slow = if mode.eq_ignore_ascii_case("slow") {
+            true
+        } else if mode.eq_ignore_ascii_case("last") {
+            false
+        } else {
+            return Err(anyhow!(USAGE));
+        };
+        let n = match count {
+            None => 5,
+            Some(s) => match s.parse::<usize>() {
+                Ok(v) if (1..=64).contains(&v) => v,
+                _ => return Err(anyhow!("bad trace count (1..=64)")),
+            },
+        };
+        let traces = if slow { self.trace.slow(n) } else { self.trace.last(n) };
+        let mut out = format!(
+            "n={} window={} submitted={} slow_us={} slow_log={}",
+            traces.len(),
+            self.trace.window(),
+            self.trace.submitted(),
+            self.trace.slow_us(),
+            self.trace.slow_len()
+        );
+        for t in &traces {
+            let spans: Vec<String> = t
+                .spans
+                .iter()
+                .map(|s| format!("{}:{:.1}:{:.1}", s.name, s.start_us, s.dur_us))
+                .collect();
+            let counts: Vec<String> =
+                t.counts.iter().map(|(k, v)| format!("{k}:{v}")).collect();
+            out.push_str(&format!(
+                "\nTR seq={} verb={} total_us={:.1} spans={} counts={} line={}",
+                t.seq,
+                t.verb,
+                t.total_us,
+                if spans.is_empty() { "-".to_string() } else { spans.join(",") },
+                if counts.is_empty() { "-".to_string() } else { counts.join(",") },
+                t.line
+            ));
+        }
+        Ok(out)
+    }
+
+    /// The `METRICS` reply: every counter, gauge, and latency summary in
+    /// Prometheus text exposition format. Multi-line: a `metrics
+    /// lines=<k>` header, then `k` exposition lines (`# TYPE` comments
+    /// count toward `k` — the header frames the transport, not the
+    /// sample count).
+    fn metrics_reply(&self) -> String {
+        let m = &self.metrics;
+        let mut lines: Vec<String> = Vec::new();
+        lines.push("# TYPE coexec_requests_total counter".into());
+        for (name, ep) in &m.endpoints {
+            lines.push(format!("coexec_requests_total{{verb=\"{name}\"}} {}", ep.requests.get()));
+        }
+        lines.push("# TYPE coexec_errors_total counter".into());
+        for (name, ep) in &m.endpoints {
+            lines.push(format!("coexec_errors_total{{verb=\"{name}\"}} {}", ep.errors.get()));
+        }
+        lines.push("# TYPE coexec_latency_us summary".into());
+        for (name, ep) in &m.endpoints {
+            let s = ep.latency.snapshot();
+            for (q, v) in [("0.5", s.p50_us), ("0.95", s.p95_us), ("0.99", s.p99_us)] {
+                lines.push(format!(
+                    "coexec_latency_us{{verb=\"{name}\",quantile=\"{q}\"}} {v:.1}"
+                ));
+            }
+            lines.push(format!("coexec_latency_us_count{{verb=\"{name}\"}} {}", s.count));
+            lines.push(format!("coexec_latency_us_max{{verb=\"{name}\"}} {:.1}", s.max_us));
+        }
+        lines.push("# TYPE coexec_plan_impl_total counter".into());
+        for imp in ReqImpl::ALL {
+            lines.push(format!(
+                "coexec_plan_impl_total{{impl=\"{}\"}} {}",
+                imp.wire(),
+                m.plan_impls[imp.index()].get()
+            ));
+        }
+        let ts = crate::metrics::train_stats();
+        let (qdepth, qpeak) = self
+            .planning_pool
+            .get()
+            .map(|p| (p.queued(), p.queue_peak()))
+            .unwrap_or((0, 0));
+        let mut scalar = |ty: &str, name: &str, val: String| {
+            lines.push(format!("# TYPE {name} {ty}"));
+            lines.push(format!("{name} {val}"));
+        };
+        scalar("counter", "coexec_plan_cache_hits_total", self.cache.hits().to_string());
+        scalar("counter", "coexec_plan_cache_misses_total", self.cache.misses().to_string());
+        scalar("gauge", "coexec_plan_cache_entries", self.cache.len().to_string());
+        scalar("counter", "coexec_plan_cache_evictions_total", self.cache.evictions().to_string());
+        scalar("counter", "coexec_plan_cache_expired_total", self.cache.expired().to_string());
+        scalar("counter", "coexec_train_total", ts.count.get().to_string());
+        scalar("counter", "coexec_train_us_total", ts.us.get().to_string());
+        scalar("gauge", "coexec_connections_active", m.conns.get().to_string());
+        scalar("gauge", "coexec_connections_peak", m.conns.peak().to_string());
+        scalar("gauge", "coexec_queue_depth", qdepth.to_string());
+        scalar("gauge", "coexec_queue_peak", qpeak.to_string());
+        scalar("counter", "coexec_shed_total", m.shed.get().to_string());
+        scalar("counter", "coexec_traces_submitted_total", self.trace.submitted().to_string());
+        scalar("gauge", "coexec_trace_retained", self.trace.len().to_string());
+        scalar("gauge", "coexec_trace_slow_retained", self.trace.slow_len().to_string());
+        scalar("gauge", "coexec_trace_window", self.trace.window().to_string());
+        let resid = m.residual_snapshots();
+        lines.push("# TYPE coexec_run_residual_count counter".into());
+        for (dev, r) in &resid {
+            lines.push(format!("coexec_run_residual_count{{device=\"{dev}\"}} {}", r.count));
+        }
+        lines.push("# TYPE coexec_run_residual_mean_abs_pct gauge".into());
+        for (dev, r) in &resid {
+            lines.push(format!(
+                "coexec_run_residual_mean_abs_pct{{device=\"{dev}\"}} {:.2}",
+                r.mean_abs_pct
+            ));
+        }
+        lines.push("# TYPE coexec_run_residual_max_abs_pct gauge".into());
+        for (dev, r) in &resid {
+            lines.push(format!(
+                "coexec_run_residual_max_abs_pct{{device=\"{dev}\"}} {:.2}",
+                r.max_abs_pct
+            ));
+        }
+        lines.push("# TYPE coexec_run_residual_bias_pct gauge".into());
+        for (dev, r) in &resid {
+            lines.push(format!(
+                "coexec_run_residual_bias_pct{{device=\"{dev}\"}} {:.2}",
+                r.bias_pct
+            ));
+        }
+        format!("metrics lines={}\n{}", lines.len(), lines.join("\n"))
     }
 
     /// Plan every partitionable layer of a named model through the cache
@@ -1111,6 +1506,7 @@ impl ServerState {
     }
 
     fn parse_op(&self, session: &Session, parts: &[&str]) -> Result<(OpConfig, PlanRequest)> {
+        let _span = obs::span("parse");
         let entry = self.session_entry(session);
         match parts {
             ["linear", l, cin, cout, thr, tail @ ..] if tail.len() <= 2 => {

@@ -58,6 +58,9 @@ struct Shared {
     /// readable without it — the evented front-end polls this on every
     /// fast-path request and must not contend with workers for the mutex.
     len: AtomicUsize,
+    /// High-water mark of `queue.jobs.len()`, maintained with `fetch_max`
+    /// at every push (telemetry: `STATS queue.peak=` / `METRICS`).
+    peak: AtomicUsize,
     /// Mirror of `queue.shutdown`, same rationale as `len`.
     shutdown: AtomicBool,
 }
@@ -80,6 +83,7 @@ impl WorkerPool {
             not_full: Condvar::new(),
             cap: queue_cap,
             len: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
         });
         let workers = (0..workers)
@@ -106,6 +110,7 @@ impl WorkerPool {
         }
         q.jobs.push_back(job);
         self.shared.len.store(q.jobs.len(), Ordering::Release);
+        self.shared.peak.fetch_max(q.jobs.len(), Ordering::AcqRel);
         drop(q);
         self.shared.not_empty.notify_one();
         Ok(())
@@ -122,6 +127,7 @@ impl WorkerPool {
         }
         q.jobs.push_back(job);
         self.shared.len.store(q.jobs.len(), Ordering::Release);
+        self.shared.peak.fetch_max(q.jobs.len(), Ordering::AcqRel);
         drop(q);
         self.shared.not_empty.notify_one();
         Ok(())
@@ -130,6 +136,12 @@ impl WorkerPool {
     /// Jobs waiting in the queue (not counting ones being executed).
     pub fn queued(&self) -> usize {
         self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// High-water mark of [`queued`](Self::queued) over the pool's
+    /// lifetime (lock-free read).
+    pub fn queue_peak(&self) -> usize {
+        self.shared.peak.load(Ordering::Acquire)
     }
 
     /// Lock-free view of whether [`WorkerPool::try_submit`] would shed with
@@ -367,6 +379,32 @@ mod tests {
         assert_eq!(pool.try_submit(Box::new(|| {})).unwrap_err(), SubmitError::Busy);
         assert_eq!(pool.queued(), 1);
         release_tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn queue_peak_is_a_high_water_mark() {
+        let pool = WorkerPool::new(1, 4);
+        assert_eq!(pool.queue_peak(), 0);
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        pool.try_submit(Box::new(move || {
+            started_tx.send(()).unwrap();
+            release_rx.recv().unwrap();
+        }))
+        .unwrap();
+        started_rx.recv().unwrap(); // worker busy, queue empty
+        for _ in 0..3 {
+            pool.try_submit(Box::new(|| {})).unwrap();
+        }
+        assert_eq!(pool.queue_peak(), 3, "peak tracks the deepest enqueue");
+        release_tx.send(()).unwrap();
+        // drain completely, then verify the peak does not decay (>= — the
+        // drain itself may race one more enqueue past the old mark)
+        let (tx, rx) = mpsc::channel();
+        pool.submit(Box::new(move || tx.send(()).unwrap())).unwrap();
+        rx.recv().unwrap();
+        assert_eq!(pool.queued(), 0, "queue fully drained");
+        assert!(pool.queue_peak() >= 3, "peak must survive the drain");
     }
 
     #[test]

@@ -193,7 +193,9 @@ fn prop_metrics_agree_with_naive() {
         assert!((metrics::mape(&xs, &ys) - naive).abs() < 1e-12);
         let m = metrics::mean(&xs);
         assert!((m - xs.iter().sum::<f64>() / n as f64).abs() < 1e-12);
-        assert!(metrics::percentile(&xs, 0.0) <= metrics::percentile(&xs, 100.0));
+        let lo = metrics::percentile(&xs, 0.0).expect("non-empty");
+        let hi = metrics::percentile(&xs, 100.0).expect("non-empty");
+        assert!(lo <= hi);
     }
 }
 

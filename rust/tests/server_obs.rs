@@ -1,0 +1,373 @@
+//! Loopback tests for the observability layer: the `TRACE` / `EXPLAIN` /
+//! `METRICS` verbs, the appended `STATS` fields, and their wire contracts.
+//!
+//! Two servers: a shared one (planner training is the expensive part; pay
+//! it once per binary) for the round-trip suites, and a dedicated one for
+//! the assertions that need exact state — error paths must mutate
+//! nothing, and the slow log must contain exactly the requests this test
+//! issued. Tests on the shared server use unique op shapes and
+//! "contains at least" assertions so they tolerate each other.
+
+use mobile_coexec::device::Device;
+use mobile_coexec::server::{Server, ServerConfig, ServerState};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, OnceLock};
+
+fn shared() -> (&'static Arc<ServerState>, SocketAddr) {
+    static STATE: OnceLock<Arc<ServerState>> = OnceLock::new();
+    static ADDR: OnceLock<SocketAddr> = OnceLock::new();
+    let state = STATE.get_or_init(|| Arc::new(ServerState::new(Device::pixel5(), 800, 7)));
+    let addr = *ADDR.get_or_init(|| {
+        Server::new(state.clone(), ServerConfig::default())
+            .spawn_ephemeral()
+            .expect("spawn server")
+    });
+    (state, addr)
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Self { stream, reader }
+    }
+
+    fn request(&mut self, line: &str) -> String {
+        self.stream.write_all(line.as_bytes()).expect("write");
+        self.stream.write_all(b"\n").expect("write nl");
+        self.read_line()
+    }
+
+    fn read_line(&mut self) -> String {
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("read");
+        reply.trim_end().to_string()
+    }
+
+    /// Send a `TRACE` line; return (header, `TR` lines) — the header's
+    /// `n=<k>` frames how many lines follow.
+    fn request_trace(&mut self, line: &str) -> (String, Vec<String>) {
+        let header = self.request(line);
+        let n: usize = kv(&header, "n").parse().expect("trace count");
+        (header.clone(), (0..n).map(|_| self.read_line()).collect())
+    }
+
+    /// Send `METRICS`; return the exposition lines (the header's
+    /// `lines=<k>` frames how many follow).
+    fn request_metrics(&mut self) -> Vec<String> {
+        let header = self.request("METRICS");
+        assert!(header.starts_with("OK metrics lines="), "{header}");
+        let n: usize = kv(&header, "lines").parse().expect("metrics count");
+        (0..n).map(|_| self.read_line()).collect()
+    }
+}
+
+fn kv_fields(reply: &str) -> Vec<(&str, &str)> {
+    reply
+        .split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .collect()
+}
+
+fn kv<'a>(reply: &'a str, key: &str) -> &'a str {
+    kv_fields(reply)
+        .into_iter()
+        .find(|(k, _)| *k == key)
+        .unwrap_or_else(|| panic!("missing {key}= in {reply}"))
+        .1
+}
+
+/// The free-text `line=` field (last on a `TR` line because it contains
+/// spaces).
+fn trace_line_field(tr: &str) -> &str {
+    let at = tr.find(" line=").unwrap_or_else(|| panic!("no line= in {tr}"));
+    &tr[at + " line=".len()..]
+}
+
+// ---------------------------------------------------------------- TRACE --
+
+#[test]
+fn trace_verb_returns_spans_for_slow_and_fast_paths() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+
+    // cold plan: slow path -> TLS trace with queue_wait/parse/cache spans
+    let cold = c.request("PLAN linear 77 768 3072 3");
+    assert!(cold.starts_with("OK "), "{cold}");
+    // same line again: warm now, served on the loop -> two-span trace
+    let warm = c.request("PLAN linear 77 768 3072 3");
+    assert_eq!(warm, cold);
+
+    let (header, lines) = c.request_trace("TRACE last 64");
+    assert!(header.starts_with("OK n="), "{header}");
+    let window: usize = kv(&header, "window").parse().unwrap();
+    assert!(window >= 1, "{header}");
+    let submitted: u64 = kv(&header, "submitted").parse().unwrap();
+    assert!(submitted >= 2, "{header}");
+    assert_eq!(lines.len(), kv(&header, "n").parse::<usize>().unwrap());
+    assert!(!lines.is_empty(), "no traces retained: {header}");
+    for tr in &lines {
+        assert!(tr.starts_with("TR seq="), "{tr}");
+        kv(tr, "seq").parse::<u64>().unwrap();
+        kv(tr, "total_us").parse::<f64>().unwrap();
+        assert!(!kv(tr, "verb").is_empty(), "{tr}");
+    }
+    // newest-first ordering by sequence number
+    let seqs: Vec<u64> = lines.iter().map(|t| kv(t, "seq").parse().unwrap()).collect();
+    assert!(seqs.windows(2).all(|w| w[0] > w[1]), "not newest-first: {seqs:?}");
+
+    let ours: Vec<&String> = lines
+        .iter()
+        .filter(|t| trace_line_field(t) == "PLAN linear 77 768 3072 3")
+        .collect();
+    assert!(ours.len() >= 2, "both paths must leave traces: {lines:?}");
+    let spans_of = |tr: &str| kv_fields(tr).into_iter().find(|(k, _)| *k == "spans").unwrap().1;
+    // the slow-path (older, smaller seq) trace saw the TLS span plumbing...
+    let slow_path = ours.last().unwrap();
+    assert_eq!(kv(slow_path, "verb"), "plan", "{slow_path}");
+    assert!(spans_of(slow_path).contains("queue_wait"), "{slow_path}");
+    assert!(spans_of(slow_path).contains("cache"), "{slow_path}");
+    assert!(spans_of(slow_path).contains("parse"), "{slow_path}");
+    // ...the fast-path one was assembled on the loop: probe + write
+    let fast_path = ours.first().unwrap();
+    assert!(spans_of(fast_path).contains("probe"), "{fast_path}");
+    assert!(spans_of(fast_path).contains("write"), "{fast_path}");
+}
+
+// -------------------------------------------------------------- EXPLAIN --
+
+#[test]
+fn explain_reports_the_search_and_agrees_with_plan() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+
+    let plan = c.request("PLAN linear 78 768 3072 3");
+    let toks: Vec<&str> = plan.split_whitespace().collect();
+    let ex = c.request("EXPLAIN linear 78 768 3072 3");
+    assert!(ex.starts_with("OK explain "), "{ex}");
+
+    // top1 is the winning plan, byte-for-byte the strategy PLAN returned
+    let top1: Vec<&str> = kv(&ex, "top1").split(':').collect();
+    assert_eq!(top1.len(), 8, "{ex}");
+    assert_eq!(top1[0], format!("{}/{}", toks[1], toks[2]), "split differs: {ex} vs {plan}");
+    assert_eq!(top1[1], kv(&plan, "cluster"), "{ex}");
+    assert_eq!(top1[2], kv(&plan, "threads"), "{ex}");
+    assert_eq!(top1[3], kv(&plan, "mech"), "{ex}");
+    assert_eq!(top1[4], kv(&plan, "impl"), "{ex}");
+    assert_eq!(top1[7], toks[3], "predicted total differs: {ex} vs {plan}");
+
+    // a fully pinned request searches one strategy point
+    assert_eq!(kv(&ex, "impls"), "1/1", "{ex}");
+    assert_eq!(kv(&ex, "points").parse::<usize>().unwrap(), 1, "{ex}");
+    assert!(kv(&ex, "eval").parse::<u64>().unwrap() > 0, "{ex}");
+    assert!(kv(&ex, "splits").parse::<usize>().unwrap() > 0, "{ex}");
+    assert_eq!(kv(&ex, "margin_pct"), "0.00", "single point has no runner-up: {ex}");
+
+    // an auto request searches a real grid and reports its win margin
+    let auto = c.request("EXPLAIN linear 78 768 3072 auto");
+    assert!(auto.starts_with("OK explain "), "{auto}");
+    assert!(kv(&auto, "points").parse::<usize>().unwrap() > 1, "{auto}");
+    assert!(kv(&auto, "placements").parse::<usize>().unwrap() > 1, "{auto}");
+    assert!(kv(&auto, "margin_pct").parse::<f64>().unwrap() >= 0.0, "{auto}");
+    // top strategies are in ascending predicted-total order
+    let t = |k: &str| -> Option<f64> {
+        kv_fields(&auto)
+            .into_iter()
+            .find(|(key, _)| *key == k)
+            .map(|(_, v)| v.split(':').last().unwrap().parse().unwrap())
+    };
+    let (t1, t2) = (t("top1").unwrap(), t("top2").unwrap());
+    assert!(t1 <= t2, "top1 must beat top2: {auto}");
+    if let Some(t3) = t("top3") {
+        assert!(t2 <= t3, "top2 must beat top3: {auto}");
+    }
+}
+
+// -------------------------------------------------------------- METRICS --
+
+#[test]
+fn metrics_exposes_prometheus_text_format() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+
+    // drive at least one RUN so per-device residuals exist
+    let run = c.request("RUN linear 79 768 3072 3");
+    assert!(run.starts_with("OK "), "{run}");
+
+    let lines = c.request_metrics();
+    assert!(!lines.is_empty());
+    for line in &lines {
+        if line.starts_with('#') {
+            assert!(line.starts_with("# TYPE coexec_"), "{line}");
+            continue;
+        }
+        // every sample line is `name[{labels}] value`
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line}"));
+        assert!(name.starts_with("coexec_"), "{line}");
+        value.parse::<f64>().unwrap_or_else(|_| panic!("bad value in {line}"));
+    }
+    let sample = |prefix: &str| -> f64 {
+        lines
+            .iter()
+            .find(|l| l.starts_with(prefix))
+            .unwrap_or_else(|| panic!("missing {prefix} in {lines:?}"))
+            .rsplit_once(' ')
+            .unwrap()
+            .1
+            .parse()
+            .unwrap()
+    };
+    assert!(sample("coexec_requests_total{verb=\"plan\"}") >= 0.0);
+    assert!(sample("coexec_requests_total{verb=\"metrics\"}") >= 1.0);
+    assert!(sample("coexec_run_residual_count{device=\"pixel5\"}") >= 1.0);
+    assert!(sample("coexec_run_residual_mean_abs_pct{device=\"pixel5\"}") >= 0.0);
+    assert!(sample("coexec_plan_cache_entries") >= 1.0);
+    assert!(sample("coexec_connections_active") >= 1.0);
+    assert!(sample("coexec_traces_submitted_total") >= 1.0);
+    sample("coexec_queue_depth");
+    sample("coexec_queue_peak");
+    sample("coexec_shed_total");
+    assert!(
+        lines.iter().any(|l| l.starts_with("coexec_latency_us{verb=\"run\",quantile=\"0.99\"}")),
+        "p99 summary missing: {lines:?}"
+    );
+}
+
+// ---------------------------------------------------------------- STATS --
+
+#[test]
+fn stats_fields_keep_positions_with_new_fields_appended() {
+    let (_, addr) = shared();
+    let mut c = Client::connect(&addr);
+    // a RUN guarantees the appended per-device residual block exists
+    let run = c.request("RUN linear 80 768 3072 3");
+    assert!(run.starts_with("OK "), "{run}");
+
+    let stats = c.request("STATS");
+    let body = stats.strip_prefix("OK ").unwrap();
+    let keys: Vec<&str> = body
+        .split_whitespace()
+        .map(|tok| tok.split_once('=').expect("key=value").0)
+        .collect();
+
+    // the pre-observability prefix, frozen byte-position by byte-position:
+    // cache counters, 13 per-verb blocks, the impl breakdown, train costs
+    let mut expect: Vec<String> =
+        ["hits", "misses", "entries", "evictions", "expired"].map(String::from).to_vec();
+    let legacy_verbs = [
+        "ping", "plan", "plan.hit", "plan.miss", "plan_batch", "run", "device", "calibrate",
+        "fit", "plan_model", "flush", "stats", "other",
+    ];
+    for verb in legacy_verbs {
+        for field in ["req", "err", "p50_us", "p95_us"] {
+            expect.push(format!("{verb}.{field}"));
+        }
+    }
+    for imp in ["default", "direct", "winograd", "tiled_4x4"] {
+        expect.push(format!("plan.impl.{imp}"));
+    }
+    expect.push("train.count".into());
+    expect.push("train.us".into());
+    assert!(keys.len() > expect.len(), "appended fields missing: {stats}");
+    assert_eq!(&keys[..expect.len()], &expect[..], "legacy field positions moved");
+
+    // everything after train.us is append-only, in documented order:
+    // new-verb blocks, per-endpoint p99/max, live gauges, residuals
+    let mut rest = keys[expect.len()..].iter();
+    for verb in ["trace", "explain", "metrics"] {
+        for field in ["req", "err", "p50_us", "p95_us"] {
+            assert_eq!(rest.next().copied(), Some(format!("{verb}.{field}").as_str()), "{stats}");
+        }
+    }
+    let all_verbs = legacy_verbs.iter().copied().chain(["trace", "explain", "metrics"]);
+    for verb in all_verbs {
+        for field in ["p99_us", "max_us"] {
+            assert_eq!(rest.next().copied(), Some(format!("{verb}.{field}").as_str()), "{stats}");
+        }
+    }
+    for gauge in ["conns.active", "conns.peak", "queue.depth", "queue.peak", "shed"] {
+        assert_eq!(rest.next().copied(), Some(gauge), "{stats}");
+    }
+    for field in ["n", "mean_pct", "max_pct", "bias_pct"] {
+        assert_eq!(rest.next().copied(), Some(format!("resid.pixel5.{field}").as_str()), "{stats}");
+    }
+
+    // live-gauge sanity: this connection is open, nothing was shed
+    assert!(kv(&stats, "conns.active").parse::<u64>().unwrap() >= 1, "{stats}");
+    assert!(
+        kv(&stats, "conns.peak").parse::<u64>().unwrap()
+            >= kv(&stats, "conns.active").parse::<u64>().unwrap(),
+        "{stats}"
+    );
+    kv(&stats, "queue.depth").parse::<u64>().unwrap();
+    kv(&stats, "queue.peak").parse::<u64>().unwrap();
+    kv(&stats, "shed").parse::<u64>().unwrap();
+    assert!(kv(&stats, "resid.pixel5.n").parse::<u64>().unwrap() >= 1, "{stats}");
+    // histogram-backed percentiles: p50 <= p95 <= p99 <= max for a verb
+    // with traffic
+    let p = |k: &str| kv(&stats, k).parse::<f64>().unwrap();
+    assert!(p("run.p50_us") <= p("run.p95_us"), "{stats}");
+    assert!(p("run.p95_us") <= p("run.p99_us"), "{stats}");
+    assert!(p("run.p99_us") <= p("run.max_us") * 1.05, "{stats}");
+}
+
+// ------------------------------------------- dedicated-server contracts --
+
+/// Error paths must mutate nothing, and the slow log must converge on
+/// exactly the slow requests — both need a server no other test touches.
+#[test]
+fn err_paths_mutate_nothing_and_slow_log_retains_slow_requests() {
+    let state = Arc::new(ServerState::new(Device::pixel5(), 800, 7));
+    let addr = Server::new(state.clone(), ServerConfig::default())
+        .spawn_ephemeral()
+        .expect("spawn server");
+    let mut c = Client::connect(&addr);
+
+    // -- error paths, on a virgin state ------------------------------------
+    const TRACE_USAGE: &str = "ERR bad request (expected: TRACE [slow|last] [n])";
+    assert_eq!(c.request("TRACE bogus 3"), TRACE_USAGE);
+    assert_eq!(c.request("TRACE last 1 2"), TRACE_USAGE);
+    for bad in ["TRACE 0", "TRACE last 0", "TRACE 65", "TRACE last three"] {
+        assert_eq!(c.request(bad), "ERR bad trace count (1..=64)", "{bad}");
+    }
+    assert_eq!(c.request("METRICS now"), "ERR bad request (expected: METRICS)");
+    assert_eq!(c.request("EXPLAIN"), "ERR bad request (expected: EXPLAIN <op-spec>)");
+    // malformed op-specs fail exactly like PLAN's (same parser)
+    let plan_err = c.request("PLAN linear 1 2");
+    assert!(plan_err.starts_with("ERR bad op spec"), "{plan_err}");
+    assert_eq!(c.request("EXPLAIN linear 1 2"), plan_err);
+    assert_eq!(c.request("EXPLAIN bogus 1 2 3 4"), c.request("PLAN bogus 1 2 3 4"));
+    assert_eq!(state.cache.len(), 0, "an error path populated the cache");
+    assert_eq!(state.trace.slow_len(), 0, "slow log armed before a threshold was set");
+
+    // a successful EXPLAIN reports the search without memoizing it
+    let ex = c.request("EXPLAIN linear 40 256 512 2");
+    assert!(ex.starts_with("OK explain "), "{ex}");
+    assert_eq!(state.cache.len(), 0, "EXPLAIN must never populate the plan cache");
+
+    // -- slow log ----------------------------------------------------------
+    // 1us threshold: every traced request qualifies, so the log must hold
+    // exactly the three cold PLANs by the time TRACE builds its reply
+    // (a TRACE's own trace is submitted after its reply).
+    state.trace.set_slow_us(1);
+    for l in [41, 42, 43] {
+        let r = c.request(&format!("PLAN linear {l} 256 512 2"));
+        assert!(r.starts_with("OK "), "{r}");
+    }
+    assert_eq!(state.cache.len(), 3);
+    let (header, lines) = c.request_trace("TRACE slow 64");
+    assert_eq!(kv(&header, "slow_us"), "1", "{header}");
+    assert_eq!(kv(&header, "slow_log"), "3", "{header}");
+    let plans: Vec<&String> =
+        lines.iter().filter(|t| trace_line_field(t).starts_with("PLAN linear 4")).collect();
+    assert_eq!(plans.len(), 3, "all three cold plans must be retained: {lines:?}");
+    // slowest-first ordering by total time
+    let totals: Vec<f64> = lines.iter().map(|t| kv(t, "total_us").parse().unwrap()).collect();
+    assert!(totals.windows(2).all(|w| w[0] >= w[1]), "not slowest-first: {totals:?}");
+}
